@@ -1,0 +1,35 @@
+//! Mini strong-scaling sweep on BTIO (Figure 3(c) shape at laptop scale):
+//! P ∈ {16, 64, 256}, TAM(P_L=256 clamped) vs two-phase.
+//!
+//! ```sh
+//! cargo run --release --example btio_scaling
+//! ```
+
+use tamio::config::RunConfig;
+use tamio::experiments::fig3_series;
+use tamio::metrics::scaling_table;
+use tamio::workloads::WorkloadKind;
+
+fn main() -> tamio::Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.ppn = 16;
+    cfg.workload = WorkloadKind::Btio;
+
+    let procs = [16usize, 64, 256];
+    println!("BTIO strong scaling (ppn={}, budget 100k reqs/run):", cfg.ppn);
+    let series = fig3_series(&cfg, WorkloadKind::Btio, &procs, 100_000)?;
+    print!("{}", scaling_table("btio", &series));
+
+    // The paper's qualitative claim: two-phase degrades with P while TAM
+    // holds (Figure 3c-d).
+    let tam = &series[0].points;
+    let two = &series[1].points;
+    let tam_trend = tam.last().unwrap().1 / tam.first().unwrap().1;
+    let two_trend = two.last().unwrap().1 / two.first().unwrap().1;
+    println!("bandwidth trend P=16 -> P=256:  TAM {tam_trend:.2}x   two-phase {two_trend:.2}x");
+    println!(
+        "TAM / two-phase at P=256: {:.2}x",
+        tam.last().unwrap().1 / two.last().unwrap().1
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Native vs XLA engine on identical aggregation batches: asserts
+//! bit-identical output and reports throughput of the hot path.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example engine_compare
+//! ```
+
+use std::time::Instant;
+
+use tamio::runtime::engine::{NativeEngine, SortEngine, XlaEngine};
+use tamio::util::SplitMix64;
+
+fn workload(n: usize, seed: u64) -> Vec<(u64, u64)> {
+    // A realistic aggregator batch: k interleaved sorted streams with
+    // coalescible neighbours and gaps.
+    let mut rng = SplitMix64::new(seed);
+    let mut pairs = Vec::with_capacity(n);
+    let mut cursor = 0u64;
+    for _ in 0..n {
+        let len = 8 + rng.gen_range(120);
+        let gap = if rng.gen_bool(0.4) { 0 } else { rng.gen_range(256) };
+        cursor += gap;
+        pairs.push((cursor, len));
+        cursor += len;
+    }
+    rng.shuffle(&mut pairs);
+    pairs
+}
+
+fn main() -> tamio::Result<()> {
+    let native = NativeEngine;
+    let xla = match XlaEngine::load_default() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("XLA engine unavailable ({e}); run `make artifacts` first");
+            std::process::exit(2);
+        }
+    };
+    println!("xla engine batch sizes: {:?}", xla.batch_sizes());
+
+    for &n in &[100usize, 1000, 4096, 20_000] {
+        let pairs = workload(n, n as u64);
+        let a = native.merge_coalesce(pairs.clone())?;
+        let t0 = Instant::now();
+        let b = xla.merge_coalesce(pairs.clone())?;
+        let xla_t = t0.elapsed();
+        let t0 = Instant::now();
+        let _ = native.merge_coalesce(pairs)?;
+        let native_t = t0.elapsed();
+        assert_eq!(a, b, "engines disagree at n={n}");
+        println!(
+            "n={n:>6}: identical ({} coalesced)  native {:>10.1?}  xla {:>10.1?}  ({:.0}x)",
+            a.len(),
+            native_t,
+            xla_t,
+            xla_t.as_secs_f64() / native_t.as_secs_f64().max(1e-9),
+        );
+    }
+    println!("engines agree bit-for-bit on all batches");
+    Ok(())
+}

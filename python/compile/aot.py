@@ -1,0 +1,64 @@
+"""AOT-lower the L2 aggregation pipeline to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser on the Rust side reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts --sizes "256 1024 4096"
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import aggregate, example_args  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust's to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_aggregate(n: int) -> str:
+    lowered = jax.jit(aggregate).lower(*example_args(n))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes",
+        default="256 1024 4096",
+        help="space-separated power-of-two batch sizes to lower",
+    )
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split()]
+    os.makedirs(args.out_dir, exist_ok=True)
+    for n in sizes:
+        if n & (n - 1):
+            raise SystemExit(f"batch size must be a power of two, got {n}")
+        path = os.path.join(args.out_dir, f"agg_{n}.hlo.txt")
+        text = lower_aggregate(n)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(f"agg_{n}.hlo.txt {n}" for n in sizes) + "\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""L1 Pallas kernels for the TAM aggregator hot path.
+
+The compute hot-spot of the two-layer aggregation method (TAM) is the
+per-aggregator *merge-sort + coalesce* of file-access requests, each request a
+``(file offset, length)`` pair.  These kernels implement that hot path as
+Pallas kernels (``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls, see /opt/xla-example/README.md):
+
+* :mod:`.bitonic`  — branch-free bitonic sort network over (offset, length)
+  pairs, keyed lexicographically by (offset, length).
+* :mod:`.coalesce` — contiguity mask + segment-id scan over a sorted request
+  list; two requests coalesce when ``off[i] == off[i-1] + len[i-1]``.
+* :mod:`.ref`      — pure-jnp oracle used by pytest/hypothesis.
+
+All kernels operate on fixed power-of-two sizes; shorter batches are padded
+with ``SENTINEL`` offsets (i64 max) which sort to the end and form a single
+zero-length trailing segment.
+"""
+
+from .bitonic import SENTINEL, bitonic_sort_pairs
+from .coalesce import coalesce_segments
+
+__all__ = ["SENTINEL", "bitonic_sort_pairs", "coalesce_segments"]

@@ -1,0 +1,56 @@
+"""Request-coalescing scan as a Pallas kernel.
+
+Input: a request list sorted ascending by file offset (the bitonic kernel's
+output).  Two adjacent requests coalesce when the second starts exactly where
+the first ends: ``off[i] == off[i-1] + len[i-1]``.  The kernel emits, per
+element, the id of the coalesced segment it belongs to (a prefix-sum over the
+"starts a new segment" mask) plus the total segment count.
+
+Padding slots (offset == SENTINEL) all share one trailing segment: the first
+sentinel breaks contiguity with the last real request (a real offset plus its
+length can never reach i64 max — MPI file offsets are < 2^63), and
+sentinel[i] == sentinel[i-1] + 0 keeps subsequent sentinels merged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _coalesce_kernel(off_ref, len_ref, seg_ref, nseg_ref):
+    off = off_ref[...]
+    length = len_ref[...]
+    prev_end = jnp.concatenate(
+        [jnp.full((1,), -1, dtype=off.dtype), off[:-1] + length[:-1]]
+    )
+    # new_segment[i] == 1 iff request i does NOT extend request i-1.
+    new_segment = (off != prev_end).astype(off.dtype)
+    # Element 0 always starts segment 0 (off[0] != -1 for any valid offset),
+    # so the inclusive scan minus one yields 0-based segment ids.
+    seg = jnp.cumsum(new_segment) - 1
+    seg_ref[...] = seg
+    nseg_ref[...] = seg[-1:] + 1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coalesce_segments(sorted_off, sorted_len, interpret=True):
+    """Segment ids + segment count for a sorted request list.
+
+    Returns ``(seg_ids, nseg)`` where ``seg_ids`` is int64[n] of 0-based
+    coalesced-segment ids (nondecreasing, steps of 1) and ``nseg`` is
+    int64[1], the total number of segments including the sentinel segment
+    if any padding is present.
+    """
+    n = sorted_off.shape[0]
+    out_shape = [
+        jax.ShapeDtypeStruct((n,), sorted_off.dtype),
+        jax.ShapeDtypeStruct((1,), sorted_off.dtype),
+    ]
+    seg, nseg = pl.pallas_call(
+        _coalesce_kernel,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(sorted_off, sorted_len)
+    return seg, nseg

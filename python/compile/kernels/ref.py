@@ -1,0 +1,72 @@
+"""Pure-jnp / pure-python oracles for the L1 kernels.
+
+``ref_*`` functions are the ground truth the Pallas kernels are tested
+against (pytest + hypothesis, exact integer equality).  ``py_aggregate`` is a
+plain-python re-statement used to cross-check the jnp oracle itself.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .bitonic import SENTINEL
+
+
+def ref_sort_pairs(keys, vals):
+    """Lexicographic (key, val) ascending sort via jnp.lexsort."""
+    order = jnp.lexsort((vals, keys))
+    return keys[order], vals[order]
+
+
+def ref_coalesce(sorted_off, sorted_len):
+    """Segment ids + count for a sorted request list (jnp oracle)."""
+    off = jnp.asarray(sorted_off)
+    length = jnp.asarray(sorted_len)
+    prev_end = jnp.concatenate(
+        [jnp.full((1,), -1, dtype=off.dtype), off[:-1] + length[:-1]]
+    )
+    new_segment = (off != prev_end).astype(off.dtype)
+    seg = jnp.cumsum(new_segment) - 1
+    return seg, seg[-1:] + 1
+
+
+def ref_aggregate(offsets, lengths):
+    """Full pipeline oracle: sort, coalesce, compact.
+
+    Returns (coal_off, coal_len, nseg) with the same padded layout as the
+    L2 model: arrays of the input length, entries past nseg-1 set to
+    SENTINEL / 0.
+    """
+    n = offsets.shape[0]
+    sk, sv = ref_sort_pairs(offsets, lengths)
+    seg, nseg = ref_coalesce(sk, sv)
+    coal_off = jnp.full((n,), SENTINEL, dtype=sk.dtype)
+    coal_len = jnp.zeros((n,), dtype=sv.dtype)
+    # Segment start offset: minimum offset in segment == first element.
+    coal_off = coal_off.at[seg].min(sk)
+    coal_len = coal_len.at[seg].add(sv)
+    return coal_off, coal_len, nseg
+
+
+def py_aggregate(pairs):
+    """Plain-python ground truth over a list of (offset, length) pairs.
+
+    Sentinel-padded entries must not be included.  Returns the coalesced
+    list of (offset, length) pairs.
+    """
+    out = []
+    for off, ln in sorted(pairs):
+        if out and out[-1][0] + out[-1][1] == off:
+            out[-1] = (out[-1][0], out[-1][1] + ln)
+        else:
+            out.append((off, ln))
+    return out
+
+
+def np_pad(pairs, n):
+    """Pad a python pair list to (offsets, lengths) int64 arrays of size n."""
+    off = np.full(n, int(SENTINEL), dtype=np.int64)
+    ln = np.zeros(n, dtype=np.int64)
+    for i, (o, l) in enumerate(pairs):
+        off[i] = o
+        ln[i] = l
+    return off, ln

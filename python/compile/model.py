@@ -1,0 +1,44 @@
+"""L2: the TAM aggregator compute graph.
+
+The paper's per-aggregator hot path — merge-sort the gathered offset/length
+pairs, then coalesce adjacent contiguous requests (§IV-A/B) — expressed as a
+jax function that calls the L1 Pallas kernels.  ``aggregate`` is what
+``aot.py`` lowers to the HLO-text artifacts the Rust coordinator executes via
+PJRT on the request path.
+
+Layout contract with the Rust side (see rust/src/runtime/):
+
+* inputs:  ``offsets: i64[N]``, ``lengths: i64[N]`` — a batch of up to N
+  requests, padded with ``SENTINEL`` offsets (length 0).
+* outputs: ``(coal_off: i64[N], coal_len: i64[N], nseg: i64[1])`` — the
+  coalesced request list, ascending, padded with SENTINEL/0; ``nseg`` counts
+  all segments *including* the single sentinel segment when padding exists
+  (the consumer drops the trailing entry whose offset == SENTINEL).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import SENTINEL, bitonic_sort_pairs, coalesce_segments  # noqa: E402
+
+
+def aggregate(offsets, lengths):
+    """Sort + coalesce one padded batch of (offset, length) requests."""
+    n = offsets.shape[0]
+    sorted_off, sorted_len = bitonic_sort_pairs(offsets, lengths)
+    seg, nseg = coalesce_segments(sorted_off, sorted_len)
+    # Compact each coalesced segment: start offset = first (minimum) offset
+    # in the segment, length = sum of member lengths.  Sentinel padding forms
+    # one trailing segment with offset SENTINEL and length 0.
+    coal_off = jnp.full((n,), SENTINEL, dtype=sorted_off.dtype).at[seg].min(sorted_off)
+    coal_len = jnp.zeros((n,), dtype=sorted_len.dtype).at[seg].add(sorted_len)
+    return coal_off, coal_len, nseg
+
+
+def example_args(n):
+    """Abstract input signature for AOT lowering at batch size n."""
+    spec = jax.ShapeDtypeStruct((n,), jnp.int64)
+    return spec, spec

@@ -1,0 +1,166 @@
+"""Kernel vs ref correctness — the CORE signal for the L1 Pallas kernels.
+
+Exact integer equality everywhere (the pipeline is pure int64 data movement);
+hypothesis sweeps sizes, value ranges and contiguity structure.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import SENTINEL, bitonic_sort_pairs, coalesce_segments
+from compile.kernels.ref import ref_coalesce, ref_sort_pairs
+
+
+def _np(a):
+    return np.asarray(a)
+
+
+# ---------------------------------------------------------------- bitonic
+
+
+@pytest.mark.parametrize("n", [2, 4, 16, 64, 256])
+def test_bitonic_sorts_random(n):
+    rng = np.random.default_rng(n)
+    keys = rng.integers(0, 1 << 40, n, dtype=np.int64)
+    vals = rng.integers(1, 1 << 20, n, dtype=np.int64)
+    sk, sv = bitonic_sort_pairs(jnp.asarray(keys), jnp.asarray(vals))
+    rk, rv = ref_sort_pairs(jnp.asarray(keys), jnp.asarray(vals))
+    np.testing.assert_array_equal(_np(sk), _np(rk))
+    np.testing.assert_array_equal(_np(sv), _np(rv))
+
+
+def test_bitonic_rejects_non_power_of_two():
+    a = jnp.zeros(6, dtype=jnp.int64)
+    with pytest.raises(ValueError):
+        bitonic_sort_pairs(a, a)
+
+
+def test_bitonic_sorts_with_sentinel_padding():
+    keys = jnp.asarray([int(SENTINEL), 10, int(SENTINEL), 4], dtype=jnp.int64)
+    vals = jnp.asarray([0, 5, 0, 2], dtype=jnp.int64)
+    sk, sv = bitonic_sort_pairs(keys, vals)
+    np.testing.assert_array_equal(_np(sk)[:2], [4, 10])
+    assert _np(sk)[2] == SENTINEL and _np(sk)[3] == SENTINEL
+
+
+def test_bitonic_already_sorted_identity():
+    keys = jnp.arange(64, dtype=jnp.int64) * 7
+    vals = jnp.ones(64, dtype=jnp.int64)
+    sk, sv = bitonic_sort_pairs(keys, vals)
+    np.testing.assert_array_equal(_np(sk), _np(keys))
+    np.testing.assert_array_equal(_np(sv), _np(vals))
+
+
+def test_bitonic_reverse_sorted():
+    keys = jnp.arange(128, dtype=jnp.int64)[::-1]
+    vals = keys * 2
+    sk, sv = bitonic_sort_pairs(keys, vals)
+    np.testing.assert_array_equal(_np(sk), np.arange(128))
+    np.testing.assert_array_equal(_np(sv), np.arange(128) * 2)
+
+
+def test_bitonic_duplicate_keys_tie_break_on_vals():
+    keys = jnp.asarray([5, 5, 5, 5], dtype=jnp.int64)
+    vals = jnp.asarray([9, 1, 7, 3], dtype=jnp.int64)
+    _, sv = bitonic_sort_pairs(keys, vals)
+    np.testing.assert_array_equal(_np(sv), [1, 3, 7, 9])
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(0, 2**50), st.integers(0, 2**30)
+        ),
+        min_size=1,
+        max_size=128,
+    )
+)
+def test_bitonic_matches_ref_hypothesis(pairs):
+    n = 1 << (len(pairs) - 1).bit_length() if len(pairs) > 1 else 2
+    keys = np.full(n, int(SENTINEL), dtype=np.int64)
+    vals = np.zeros(n, dtype=np.int64)
+    for i, (k, v) in enumerate(pairs):
+        keys[i], vals[i] = k, v
+    sk, sv = bitonic_sort_pairs(jnp.asarray(keys), jnp.asarray(vals))
+    rk, rv = ref_sort_pairs(jnp.asarray(keys), jnp.asarray(vals))
+    np.testing.assert_array_equal(_np(sk), _np(rk))
+    np.testing.assert_array_equal(_np(sv), _np(rv))
+
+
+# ---------------------------------------------------------------- coalesce
+
+
+def test_coalesce_all_contiguous():
+    off = jnp.asarray([0, 4, 8, 12], dtype=jnp.int64)
+    ln = jnp.asarray([4, 4, 4, 4], dtype=jnp.int64)
+    seg, nseg = coalesce_segments(off, ln)
+    np.testing.assert_array_equal(_np(seg), [0, 0, 0, 0])
+    assert int(nseg[0]) == 1
+
+
+def test_coalesce_none_contiguous():
+    off = jnp.asarray([0, 5, 11, 100], dtype=jnp.int64)
+    ln = jnp.asarray([4, 4, 4, 4], dtype=jnp.int64)
+    seg, nseg = coalesce_segments(off, ln)
+    np.testing.assert_array_equal(_np(seg), [0, 1, 2, 3])
+    assert int(nseg[0]) == 4
+
+
+def test_coalesce_mixed():
+    off = jnp.asarray([0, 2, 10, 12, 12, 20, 21, 22], dtype=jnp.int64)
+    ln = jnp.asarray([2, 2, 2, 0, 2, 1, 1, 1], dtype=jnp.int64)
+    seg, nseg = coalesce_segments(off, ln)
+    # [0,2)+[2,4) | [10,12)+[12,12)+[12,14) | [20,21)+[21,22)+[22,23)
+    np.testing.assert_array_equal(_np(seg), [0, 0, 1, 1, 1, 2, 2, 2])
+    assert int(nseg[0]) == 3
+
+
+def test_coalesce_sentinel_padding_single_trailing_segment():
+    off = jnp.asarray([0, 4, int(SENTINEL), int(SENTINEL)], dtype=jnp.int64)
+    ln = jnp.asarray([4, 4, 0, 0], dtype=jnp.int64)
+    seg, nseg = coalesce_segments(off, ln)
+    np.testing.assert_array_equal(_np(seg), [0, 0, 1, 1])
+    assert int(nseg[0]) == 2
+
+
+def test_coalesce_overlapping_requests_not_merged():
+    # Overlap (off[i] < off[i-1]+len[i-1]) must NOT coalesce: the I/O phase
+    # handles overlapping writes by order, merging would corrupt lengths.
+    off = jnp.asarray([0, 2, 8, 9], dtype=jnp.int64)
+    ln = jnp.asarray([4, 2, 4, 1], dtype=jnp.int64)
+    seg, nseg = coalesce_segments(off, ln)
+    np.testing.assert_array_equal(_np(seg), [0, 1, 2, 3])
+    assert int(nseg[0]) == 4
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.tuples(st.integers(0, 2**20), st.integers(0, 64)), min_size=2, max_size=64)
+)
+def test_coalesce_matches_ref_hypothesis(pairs):
+    pairs = sorted(pairs)
+    off = np.asarray([p[0] for p in pairs], dtype=np.int64)
+    ln = np.asarray([p[1] for p in pairs], dtype=np.int64)
+    seg, nseg = coalesce_segments(jnp.asarray(off), jnp.asarray(ln))
+    rseg, rnseg = ref_coalesce(off, ln)
+    np.testing.assert_array_equal(_np(seg), _np(rseg))
+    np.testing.assert_array_equal(_np(nseg), _np(rnseg))
+
+
+def test_coalesce_segment_ids_are_monotone_steps_of_one():
+    rng = np.random.default_rng(7)
+    off = np.sort(rng.integers(0, 1000, 32, dtype=np.int64))
+    ln = rng.integers(0, 8, 32, dtype=np.int64)
+    seg, nseg = coalesce_segments(jnp.asarray(off), jnp.asarray(ln))
+    s = _np(seg)
+    assert s[0] == 0
+    d = np.diff(s)
+    assert ((d == 0) | (d == 1)).all()
+    assert int(nseg[0]) == s[-1] + 1

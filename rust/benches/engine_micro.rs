@@ -1,0 +1,79 @@
+//! P1 — hot-path microbenchmark: the aggregator merge+coalesce step as
+//! (a) native sort_unstable+scan, (b) k-way heap merge over pre-sorted
+//! streams, (c) the AOT XLA pipeline (when artifacts exist).  Wall-clock
+//! (not simulated) — this is the §Perf measurement harness.
+//!
+//! `cargo bench --bench engine_micro`
+
+use std::time::Duration;
+
+use tamio::benchkit::{bench, black_box, section};
+use tamio::coordinator::merge::{merge_views, sort_coalesce_pairs};
+use tamio::mpisim::FlatView;
+use tamio::runtime::engine::{SortEngine, XlaEngine};
+use tamio::util::SplitMix64;
+
+/// k sorted, mutually disjoint streams with cross-stream coalescible
+/// structure: one global request sequence dealt round-robin to streams
+/// (overlapping writers are MPI-undefined, so the bench avoids them).
+fn make_streams(k: usize, per: usize, seed: u64) -> Vec<FlatView> {
+    let mut rng = SplitMix64::new(seed);
+    let mut cursor = 0u64;
+    let mut streams: Vec<Vec<(u64, u64)>> = vec![Vec::with_capacity(per); k];
+    for i in 0..k * per {
+        let len = 8 + rng.gen_range(56);
+        cursor += if rng.gen_bool(0.5) { 0 } else { rng.gen_range(512) };
+        streams[i % k].push((cursor, len));
+        cursor += len;
+    }
+    streams
+        .into_iter()
+        .map(|pairs| {
+            FlatView::from_pairs_unchecked(
+                pairs.iter().map(|p| p.0).collect(),
+                pairs.iter().map(|p| p.1).collect(),
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    for (k, per) in [(16usize, 1_000usize), (64, 4_000), (256, 4_000)] {
+        let n = k * per;
+        section(&format!("merge+coalesce of {n} pairs from {k} streams"));
+        let streams = make_streams(k, per, 7);
+        let concat: Vec<(u64, u64)> =
+            streams.iter().flat_map(|v| v.iter()).collect();
+
+        let r = bench("native sort+scan", budget, || {
+            black_box(sort_coalesce_pairs(black_box(concat.clone())));
+        });
+        println!("{r}   ({:.1} Mpairs/s)", r.per_second(n as u64) / 1e6);
+
+        let refs: Vec<&FlatView> = streams.iter().collect();
+        let r = bench("native k-way heap merge", budget, || {
+            black_box(merge_views(black_box(&refs)));
+        });
+        println!("{r}   ({:.1} Mpairs/s)", r.per_second(n as u64) / 1e6);
+    }
+
+    match XlaEngine::load_default() {
+        Ok(xla) => {
+            for n in [256usize, 4096, 16384] {
+                section(&format!("xla AOT pipeline, {n} pairs"));
+                let streams = make_streams(8, n / 8, 11);
+                let concat: Vec<(u64, u64)> =
+                    streams.iter().flat_map(|v| v.iter()).collect();
+                let native_out = sort_coalesce_pairs(concat.clone());
+                let xla_out = xla.merge_coalesce(concat.clone()).expect("xla");
+                assert_eq!(native_out, xla_out, "engine mismatch at n={n}");
+                let r = bench("xla merge_coalesce", budget, || {
+                    black_box(xla.merge_coalesce(black_box(concat.clone())).unwrap());
+                });
+                println!("{r}   ({:.2} Mpairs/s)", r.per_second(n as u64) / 1e6);
+            }
+        }
+        Err(e) => println!("\nxla engine skipped: {e}"),
+    }
+}

@@ -1,0 +1,60 @@
+//! Figure 2 — communication-pattern congestion at the global aggregators:
+//! per-aggregator in-degree for two-phase vs TAM, plus the Figure 1
+//! aggregator-placement examples.
+//!
+//! `cargo bench --bench fig2_congestion`
+
+use tamio::cluster::Topology;
+use tamio::config::RunConfig;
+use tamio::coordinator::placement::{
+    select_global_aggregators, select_local_aggregators, GlobalPlacement,
+};
+use tamio::experiments::fig2_congestion;
+use tamio::metrics::render_table;
+use tamio::workloads::WorkloadKind;
+
+fn main() {
+    // --- Figure 1 placement illustration (exact paper example). ---
+    println!("Figure 1(a): 3 nodes x 8 ppn, c=4 local aggs, 3 global aggs");
+    let topo = Topology::new(3, 8);
+    let locals = select_local_aggregators(&topo, 4);
+    let globals = select_global_aggregators(&topo, 3, GlobalPlacement::Spread);
+    println!("  local aggregators:  {:?}", locals.ranks);
+    println!("  global aggregators: {globals:?}");
+    println!("Figure 1(b): 6 nodes x 8 ppn, c=4, 3 global aggs");
+    let topo_b = Topology::new(6, 8);
+    let globals_b = select_global_aggregators(&topo_b, 3, GlobalPlacement::Spread);
+    println!(
+        "  global aggregators: {globals_b:?} (nodes {:?})",
+        globals_b.iter().map(|&r| topo_b.node_of(r)).collect::<Vec<_>>()
+    );
+
+    // --- Figure 2 congestion comparison. ---
+    for (nodes, ppn) in [(4usize, 16usize), (16, 64)] {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = nodes;
+        cfg.ppn = ppn;
+        cfg.workload = WorkloadKind::E3smG;
+        cfg.scale = tamio::experiments::auto_scale(
+            WorkloadKind::E3smG,
+            nodes * ppn,
+            100_000,
+        );
+        println!("\nFigure 2 @ {} nodes x {} ppn (P={}):", nodes, ppn, nodes * ppn);
+        let rows = fig2_congestion(&cfg).expect("fig2");
+        let headers: Vec<String> =
+            ["algorithm", "max in-degree", "mean msgs/agg", "total inter msgs"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let rows: Vec<Vec<String>> = rows
+            .into_iter()
+            .map(|(a, max, mean, n)| {
+                vec![a, max.to_string(), format!("{mean:.1}"), n.to_string()]
+            })
+            .collect();
+        print!("{}", render_table(&headers, &rows));
+    }
+    println!("\npaper shape: TAM's per-aggregator in-degree is bounded by P_L/P_G,");
+    println!("two-phase grows with P/P_G — the congestion Figure 2 illustrates.");
+}

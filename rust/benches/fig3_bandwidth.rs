@@ -1,0 +1,50 @@
+//! Figure 3 — strong-scaling write bandwidth, TAM(P_L=256) vs two-phase,
+//! for all four paper workloads.
+//!
+//! `cargo bench --bench fig3_bandwidth`
+//! Env: TAMIO_BENCH_FULL=1 for the paper grid P=256..16384 (slow on one
+//! core); default grid is P=256..4096.  TAMIO_BENCH_BUDGET sets the
+//! request budget per run (default 150000).
+
+use tamio::config::RunConfig;
+use tamio::experiments::fig3_series;
+use tamio::metrics::scaling_table;
+use tamio::workloads::WorkloadKind;
+
+fn main() {
+    let full = std::env::var("TAMIO_BENCH_FULL").is_ok_and(|v| v == "1");
+    let budget: u64 = std::env::var("TAMIO_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150_000);
+    let procs: Vec<usize> = if full {
+        vec![256, 1024, 4096, 16384]
+    } else {
+        vec![256, 1024, 4096]
+    };
+    let mut cfg = RunConfig::default();
+    cfg.ppn = 64;
+
+    println!(
+        "Figure 3: strong scaling, ppn=64, stripes 56 x 1 MiB, budget {budget} reqs/run, procs {procs:?}"
+    );
+    for kind in WorkloadKind::paper_set() {
+        // BTIO needs square P: 256, 1024, 4096, 16384 are all squares. OK.
+        let series = match fig3_series(&cfg, kind, &procs, budget) {
+            Ok(s) => s,
+            Err(e) => {
+                println!("\n({kind}) skipped: {e}");
+                continue;
+            }
+        };
+        println!("\nFigure 3 ({kind}):");
+        print!("{}", scaling_table(&kind.to_string(), &series));
+        let tam_last = series[0].points.last().unwrap().1;
+        let two_last = series[1].points.last().unwrap().1;
+        println!(
+            "TAM / two-phase at P={}: {:.1}x (paper: 3x-29x at P=16384)",
+            series[0].points.last().unwrap().0,
+            tam_last / two_last
+        );
+    }
+}

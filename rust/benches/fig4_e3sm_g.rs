@@ -1,0 +1,20 @@
+//! Figure 4 — E3SM G-case timing breakdown vs number of local
+//! aggregators, at increasing node counts (paper panels: 4/16/64/256
+//! nodes × 64 ppn; the right-most bar is two-phase I/O).
+//!
+//! `cargo bench --bench fig4_e3sm_g`
+//! Env: TAMIO_BENCH_FULL=1 adds the 64- and 256-node panels.
+
+use tamio::experiments::run_breakdown_grid;
+use tamio::workloads::WorkloadKind;
+
+fn main() {
+    let full = std::env::var("TAMIO_BENCH_FULL").is_ok_and(|v| v == "1");
+    let nodes: Vec<usize> = if full { vec![4, 16, 64, 256] } else { vec![4, 16] };
+    let budget: u64 = std::env::var("TAMIO_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150_000);
+    println!("Figure 4: E3SM G breakdown (intra components ~1/P_L, inter ~P_L)");
+    run_breakdown_grid(WorkloadKind::E3smG, &nodes, 64, budget).expect("fig4");
+}

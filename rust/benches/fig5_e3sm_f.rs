@@ -1,0 +1,18 @@
+//! Figure 5 — E3SM F-case timing breakdown vs number of local
+//! aggregators (the tiny-request flood: 1.36 G requests of ~11 B).
+//!
+//! `cargo bench --bench fig5_e3sm_f`
+
+use tamio::experiments::run_breakdown_grid;
+use tamio::workloads::WorkloadKind;
+
+fn main() {
+    let full = std::env::var("TAMIO_BENCH_FULL").is_ok_and(|v| v == "1");
+    let nodes: Vec<usize> = if full { vec![4, 16, 64, 256] } else { vec![4, 16] };
+    let budget: u64 = std::env::var("TAMIO_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150_000);
+    println!("Figure 5: E3SM F breakdown (communication-dominated)");
+    run_breakdown_grid(WorkloadKind::E3smF, &nodes, 64, budget).expect("fig5");
+}

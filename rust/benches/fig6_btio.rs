@@ -1,0 +1,22 @@
+//! Figure 6 — BTIO timing breakdown vs number of local aggregators.
+//! The paper highlights the intra-node coalescing here: 335 M / 671 M /
+//! 1.34 G posted requests collapse to 84 M / 43 M / 24 M after
+//! aggregation (16/64/256 nodes); the bench prints the same progression
+//! at its scale.
+//!
+//! `cargo bench --bench fig6_btio`
+
+use tamio::experiments::run_breakdown_grid;
+use tamio::workloads::WorkloadKind;
+
+fn main() {
+    let full = std::env::var("TAMIO_BENCH_FULL").is_ok_and(|v| v == "1");
+    // BTIO needs square P = (nodes*64): nodes 4 -> P=256, 16 -> 1024, ...
+    let nodes: Vec<usize> = if full { vec![4, 16, 64, 256] } else { vec![4, 16] };
+    let budget: u64 = std::env::var("TAMIO_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150_000);
+    println!("Figure 6: BTIO breakdown (block-tridiagonal, high coalesce ratio)");
+    run_breakdown_grid(WorkloadKind::Btio, &nodes, 64, budget).expect("fig6");
+}

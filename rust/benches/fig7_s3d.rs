@@ -1,0 +1,18 @@
+//! Figure 7 — S3D-IO timing breakdown vs number of local aggregators
+//! (block³ checkpoint; most requests coalesce at the local aggregators).
+//!
+//! `cargo bench --bench fig7_s3d`
+
+use tamio::experiments::run_breakdown_grid;
+use tamio::workloads::WorkloadKind;
+
+fn main() {
+    let full = std::env::var("TAMIO_BENCH_FULL").is_ok_and(|v| v == "1");
+    let nodes: Vec<usize> = if full { vec![4, 16, 64, 256] } else { vec![4, 16] };
+    let budget: u64 = std::env::var("TAMIO_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150_000);
+    println!("Figure 7: S3D-IO breakdown (inter-node aggregation dominates)");
+    run_breakdown_grid(WorkloadKind::S3d, &nodes, 64, budget).expect("fig7");
+}

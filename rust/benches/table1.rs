@@ -1,0 +1,41 @@
+//! Table I — dataset request counts and write amounts: paper-scale
+//! analytic figures next to this run's scaled, *measured* numbers.
+//!
+//! `cargo bench --bench table1`
+//! Env: TAMIO_BENCH_P (default 1024), TAMIO_BENCH_BUDGET (default 200000).
+
+use tamio::cluster::Topology;
+use tamio::experiments::table1_rows;
+use tamio::metrics::render_table;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let p = env_usize("TAMIO_BENCH_P", 1024);
+    let ppn = env_usize("TAMIO_BENCH_PPN", 64);
+    let budget = env_usize("TAMIO_BENCH_BUDGET", 200_000) as u64;
+    let topo = Topology::new(p / ppn, ppn);
+    println!("Table I @ P={p} ({} nodes x {ppn} ppn), budget {budget} requests", p / ppn);
+
+    let rows = table1_rows(&topo, budget).expect("table1");
+    let headers: Vec<String> = [
+        "dataset",
+        "paper #reqs",
+        "paper bytes",
+        "run #reqs",
+        "run bytes",
+        "scale",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    print!("{}", render_table(&headers, &rows));
+
+    println!("paper Table I reference:");
+    println!("  E3SM G  1.72e8..1.76e8 reqs   85 GiB");
+    println!("  E3SM F  1.35e9..1.37e9 reqs   14 GiB");
+    println!("  BTIO    512^2*40*sqrt(P) reqs 200 GiB");
+    println!("  S3D-IO  800^2*y*z reqs        61 GiB");
+}

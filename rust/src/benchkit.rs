@@ -1,0 +1,95 @@
+//! Minimal micro-benchmark harness (criterion is not in the image).
+//!
+//! Benches are `harness = false` binaries; they call [`bench`] for
+//! wall-time measurements (engine microbenches, perf pass) and otherwise
+//! print simulated-time tables from the experiment drivers.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Bench label.
+    pub name: String,
+    /// Number of measured iterations.
+    pub iters: usize,
+    /// Minimum iteration time.
+    pub min: Duration,
+    /// Median iteration time.
+    pub median: Duration,
+    /// Mean iteration time.
+    pub mean: Duration,
+    /// Maximum iteration time.
+    pub max: Duration,
+}
+
+impl BenchResult {
+    /// Throughput given items processed per iteration.
+    pub fn per_second(&self, items: u64) -> f64 {
+        items as f64 / self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} iters={:<4} min={:>10.3?} median={:>10.3?} mean={:>10.3?} max={:>10.3?}",
+            self.name, self.iters, self.min, self.median, self.mean, self.max
+        )
+    }
+}
+
+/// Measure `f` with warmup; iteration count adapts to hit ~`budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().max(Duration::from_nanos(1));
+    let iters = (budget.as_secs_f64() / first.as_secs_f64()).clamp(1.0, 1000.0) as usize;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let sum: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        min: samples[0],
+        median: samples[samples.len() / 2],
+        mean: sum / samples.len() as u32,
+        max: *samples.last().unwrap(),
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint wrapper).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a bench-section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", Duration::from_millis(20), || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.iters >= 1);
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert!(r.per_second(10_000) > 0.0);
+    }
+}

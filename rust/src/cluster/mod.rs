@@ -1,0 +1,97 @@
+//! Compute-node topology: ranks ↔ (node, local rank).
+//!
+//! The paper's testbed is `nodes × ppn` MPI ranks with contiguous rank ids
+//! per node (block placement, the ALPS/aprun default on the Cray XC40).
+//! All aggregator-selection policies and the intra-/inter-node distinction
+//! in the network model are defined in terms of this mapping.
+
+/// Cluster topology: `nodes` compute nodes, `ppn` MPI processes per node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Number of compute nodes.
+    pub nodes: usize,
+    /// MPI processes per node (`q` in the paper).
+    pub ppn: usize,
+}
+
+impl Topology {
+    /// Create a topology; panics on zero sizes (a config-layer invariant).
+    pub fn new(nodes: usize, ppn: usize) -> Self {
+        assert!(nodes > 0 && ppn > 0, "topology must be non-empty");
+        Self { nodes, ppn }
+    }
+
+    /// Total number of MPI processes `P`.
+    pub fn nprocs(&self) -> usize {
+        self.nodes * self.ppn
+    }
+
+    /// Node hosting `rank` (block placement: ranks 0..ppn on node 0, …).
+    pub fn node_of(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.nprocs());
+        rank / self.ppn
+    }
+
+    /// Rank's index within its node.
+    pub fn local_rank(&self, rank: usize) -> usize {
+        rank % self.ppn
+    }
+
+    /// Global rank of `(node, local)`.
+    pub fn rank_of(&self, node: usize, local: usize) -> usize {
+        debug_assert!(node < self.nodes && local < self.ppn);
+        node * self.ppn + local
+    }
+
+    /// Whether two ranks share a compute node.
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// All ranks on `node`, ascending.
+    pub fn ranks_on_node(&self, node: usize) -> std::ops::Range<usize> {
+        (node * self.ppn)..((node + 1) * self.ppn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapping_round_trips() {
+        let t = Topology::new(4, 8);
+        assert_eq!(t.nprocs(), 32);
+        for r in 0..t.nprocs() {
+            assert_eq!(t.rank_of(t.node_of(r), t.local_rank(r)), r);
+        }
+    }
+
+    #[test]
+    fn block_placement() {
+        let t = Topology::new(3, 8);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.node_of(8), 1);
+        assert_eq!(t.local_rank(17), 1);
+    }
+
+    #[test]
+    fn same_node_predicate() {
+        let t = Topology::new(2, 4);
+        assert!(t.same_node(0, 3));
+        assert!(!t.same_node(3, 4));
+    }
+
+    #[test]
+    fn ranks_on_node_range() {
+        let t = Topology::new(3, 4);
+        assert_eq!(t.ranks_on_node(1).collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_topology_panics() {
+        Topology::new(0, 4);
+    }
+}

@@ -1,0 +1,161 @@
+//! Key-value parsing: a TOML-subset config-file reader and `--key value`
+//! CLI argument splitting.
+//!
+//! Supported file syntax: `key = value` lines, `[section]` headers
+//! (flattened to `section.key`), `#` comments, blank lines, and quoted
+//! string values.
+
+use crate::error::{Error, Result};
+
+/// Ordered key-value map (insertion order preserved so later keys
+/// override earlier ones when applied sequentially).
+#[derive(Clone, Debug, Default)]
+pub struct KvMap {
+    pairs: Vec<(String, String)>,
+}
+
+impl KvMap {
+    /// Build from explicit pairs.
+    pub fn from_pairs(pairs: Vec<(String, String)>) -> Self {
+        KvMap { pairs }
+    }
+
+    /// Parse a TOML-subset config file.
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_str_contents(&text)
+    }
+
+    /// Parse TOML-subset text.
+    pub fn from_str_contents(text: &str) -> Result<Self> {
+        let mut pairs = Vec::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(Error::config(format!(
+                    "config line {}: expected 'key = value', got '{raw}'",
+                    lineno + 1
+                )));
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = v.trim().trim_matches('"').to_string();
+            pairs.push((key, value));
+        }
+        Ok(KvMap { pairs })
+    }
+
+    /// Parse CLI arguments of the form `--key value` / `--key=value` /
+    /// bare `--flag` (value "true").  Returns the map and any positional
+    /// (non-flag) arguments.
+    pub fn from_cli(args: &[String]) -> Result<(Self, Vec<String>)> {
+        let mut pairs = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    pairs.push((k.to_string(), v.to_string()));
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    pairs.push((flag.to_string(), args[i + 1].clone()));
+                    i += 1;
+                } else {
+                    pairs.push((flag.to_string(), "true".to_string()));
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok((KvMap { pairs }, positional))
+    }
+
+    /// Iterate pairs in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.pairs.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Last value for `key`, if present.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Remove all entries for `key`, returning the last value.
+    pub fn take(&mut self, key: &str) -> Option<String> {
+        let last = self.get(key).map(str::to_string);
+        self.pairs.retain(|(k, _)| k != key);
+        last
+    }
+
+    /// Number of pairs.
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Whether the map is empty.
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_quotes() {
+        let text = r#"
+            # a comment
+            nodes = 4
+            workload = "btio"
+
+            [net]
+            alpha_inter = 2e-6   # inline comment
+        "#;
+        let kv = KvMap::from_str_contents(text).unwrap();
+        assert_eq!(kv.get("nodes"), Some("4"));
+        assert_eq!(kv.get("workload"), Some("btio"));
+        assert_eq!(kv.get("net.alpha_inter"), Some("2e-6"));
+    }
+
+    #[test]
+    fn rejects_garbage_lines() {
+        assert!(KvMap::from_str_contents("what even is this").is_err());
+    }
+
+    #[test]
+    fn cli_forms() {
+        let args: Vec<String> = ["run", "--nodes", "8", "--verify", "--scale=64"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let (kv, pos) = KvMap::from_cli(&args).unwrap();
+        assert_eq!(pos, vec!["run".to_string()]);
+        assert_eq!(kv.get("nodes"), Some("8"));
+        assert_eq!(kv.get("verify"), Some("true"));
+        assert_eq!(kv.get("scale"), Some("64"));
+    }
+
+    #[test]
+    fn take_removes() {
+        let mut kv = KvMap::from_pairs(vec![("a".into(), "1".into()), ("a".into(), "2".into())]);
+        assert_eq!(kv.take("a"), Some("2".to_string()));
+        assert!(kv.is_empty());
+    }
+}

@@ -1,0 +1,184 @@
+//! Run configuration: defaults, a TOML-subset config-file parser, and
+//! CLI-style `--key value` overrides (clap/serde are not in the image).
+
+pub mod kv;
+
+use crate::cluster::Topology;
+use crate::coordinator::breakdown::CpuModel;
+use crate::coordinator::collective::Algorithm;
+use crate::coordinator::placement::GlobalPlacement;
+use crate::error::{Error, Result};
+use crate::lustre::{IoModel, LustreConfig};
+use crate::netmodel::{NetParams, SendMode};
+use crate::runtime::engine::EngineKind;
+use crate::workloads::WorkloadKind;
+
+pub use kv::KvMap;
+
+/// Complete configuration of one simulated collective-I/O run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Compute nodes.
+    pub nodes: usize,
+    /// MPI processes per node.
+    pub ppn: usize,
+    /// Workload.
+    pub workload: WorkloadKind,
+    /// Workload scale divisor (1 = paper scale).
+    pub scale: u64,
+    /// Collective algorithm.
+    pub algorithm: Algorithm,
+    /// Aggregator hot-path engine.
+    pub engine: EngineKind,
+    /// Global-aggregator placement policy.
+    pub placement: GlobalPlacement,
+    /// Lustre stripe geometry.
+    pub lustre: LustreConfig,
+    /// Network model parameters.
+    pub net: NetParams,
+    /// CPU cost model.
+    pub cpu: CpuModel,
+    /// I/O cost model.
+    pub io: IoModel,
+    /// Payload seed.
+    pub seed: u64,
+    /// Verify written bytes by reading back after the collective.
+    pub verify: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            nodes: 4,
+            ppn: 16,
+            workload: WorkloadKind::E3smG,
+            scale: 4096,
+            algorithm: Algorithm::TwoPhase,
+            engine: EngineKind::Native,
+            placement: GlobalPlacement::Spread,
+            lustre: LustreConfig::default(),
+            net: NetParams::default(),
+            cpu: CpuModel::default(),
+            io: IoModel::default(),
+            seed: 42,
+            verify: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Cluster topology.
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.nodes, self.ppn)
+    }
+
+    /// Apply `--key value` overrides (also used for config-file keys).
+    pub fn apply(&mut self, kv: &KvMap) -> Result<()> {
+        for (key, value) in kv.iter() {
+            self.apply_one(key, value)?;
+        }
+        Ok(())
+    }
+
+    fn apply_one(&mut self, key: &str, value: &str) -> Result<()> {
+        let parse_f64 = |v: &str| -> Result<f64> {
+            v.parse()
+                .map_err(|_| Error::config(format!("bad float for {key}: {v}")))
+        };
+        let parse_u64 = |v: &str| -> Result<u64> {
+            v.parse()
+                .map_err(|_| Error::config(format!("bad integer for {key}: {v}")))
+        };
+        match key {
+            "nodes" => self.nodes = parse_u64(value)? as usize,
+            "ppn" => self.ppn = parse_u64(value)? as usize,
+            "workload" => self.workload = value.parse()?,
+            "scale" => self.scale = parse_u64(value)?,
+            "algorithm" | "algo" => self.algorithm = value.parse()?,
+            "engine" => self.engine = value.parse()?,
+            "placement" => {
+                self.placement = match value {
+                    "spread" => GlobalPlacement::Spread,
+                    "cray" | "round-robin" => GlobalPlacement::CrayRoundRobin,
+                    _ => {
+                        return Err(Error::config(format!(
+                            "bad placement '{value}' (spread|cray)"
+                        )))
+                    }
+                }
+            }
+            "stripe_size" => self.lustre.stripe_size = parse_u64(value)?,
+            "stripe_count" => self.lustre.stripe_count = parse_u64(value)? as usize,
+            "send_mode" => {
+                self.net.send_mode = match value {
+                    "isend" => SendMode::Isend,
+                    "issend" => SendMode::Issend,
+                    _ => {
+                        return Err(Error::config(format!(
+                            "bad send_mode '{value}' (isend|issend)"
+                        )))
+                    }
+                }
+            }
+            "net.alpha_inter" => self.net.alpha_inter = parse_f64(value)?,
+            "net.alpha_intra" => self.net.alpha_intra = parse_f64(value)?,
+            "net.beta_inter" => self.net.beta_inter = parse_f64(value)?,
+            "net.beta_intra" => self.net.beta_intra = parse_f64(value)?,
+            "net.recv_overhead" => self.net.recv_overhead = parse_f64(value)?,
+            "net.send_overhead" => self.net.send_overhead = parse_f64(value)?,
+            "net.pending_penalty" => self.net.pending_penalty = parse_f64(value)?,
+            "net.nic_ingest" => self.net.nic_ingest = parse_f64(value)?,
+            "io.seek" => self.io.seek = parse_f64(value)?,
+            "io.ost_bandwidth" => self.io.ost_bandwidth = parse_f64(value)?,
+            "io.lock_penalty" => self.io.lock_penalty = parse_f64(value)?,
+            "cpu.per_req_calc" => self.cpu.per_req_calc = parse_f64(value)?,
+            "cpu.per_cmp_sort" => self.cpu.per_cmp_sort = parse_f64(value)?,
+            "cpu.per_byte_memcpy" => self.cpu.per_byte_memcpy = parse_f64(value)?,
+            "seed" => self.seed = parse_u64(value)?,
+            "verify" => self.verify = value == "true" || value == "1",
+            other => {
+                return Err(Error::config(format!("unknown config key '{other}'")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.topology().nprocs(), 64);
+        assert_eq!(c.lustre.stripe_count, 56);
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = RunConfig::default();
+        let kv = KvMap::from_pairs(vec![
+            ("nodes".into(), "8".into()),
+            ("workload".into(), "btio".into()),
+            ("algorithm".into(), "tam:128".into()),
+            ("send_mode".into(), "isend".into()),
+            ("net.alpha_inter".into(), "5e-6".into()),
+            ("verify".into(), "true".into()),
+        ]);
+        c.apply(&kv).unwrap();
+        assert_eq!(c.nodes, 8);
+        assert_eq!(c.workload, WorkloadKind::Btio);
+        assert!(matches!(c.algorithm, Algorithm::Tam(t) if t.total_local_aggregators == 128));
+        assert_eq!(c.net.send_mode, SendMode::Isend);
+        assert_eq!(c.net.alpha_inter, 5e-6);
+        assert!(c.verify);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = RunConfig::default();
+        let kv = KvMap::from_pairs(vec![("bogus".into(), "1".into())]);
+        assert!(c.apply(&kv).is_err());
+    }
+}

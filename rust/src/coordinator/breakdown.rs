@@ -1,0 +1,201 @@
+//! Per-phase timing breakdowns matching the paper's Figures 4–7, plus the
+//! CPU cost model for the computation components.
+//!
+//! The simulator executes every algorithmic step for real (sorts, merges,
+//! byte movement) and *accounts* simulated time analytically so results are
+//! deterministic and independent of host load: communication comes from
+//! [`crate::netmodel`], I/O from [`crate::lustre::IoModel`], and the
+//! computation components (request calculation, offset sorting, datatype
+//! construction, memory movement) from [`CpuModel`] — per-item constants
+//! calibrated to KNL-class cores (EXPERIMENTS.md §Calibration).
+
+/// Per-item CPU cost constants (seconds) for the computation components.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuModel {
+    /// `ADIOI_LUSTRE_Calc_my_req`: per flattened request classified.
+    pub per_req_calc: f64,
+    /// Heap-merge comparison cost: multiplied by `n · log2(k)`.
+    pub per_cmp_sort: f64,
+    /// Memory movement, seconds per byte (intra-node copy bandwidth).
+    pub per_byte_memcpy: f64,
+    /// MPI derived-datatype construction, per offset-length entry.
+    pub per_item_datatype: f64,
+    /// Fixed cost per datatype (one per peer message).
+    pub per_datatype: f64,
+}
+
+impl Default for CpuModel {
+    /// KNL-class core: ~1.3 GHz, modest IPC; memcpy ~4 GB/s per core.
+    fn default() -> Self {
+        CpuModel {
+            per_req_calc: 8.0e-8,
+            per_cmp_sort: 6.0e-8,
+            per_byte_memcpy: 1.0 / 4.0e9,
+            per_item_datatype: 4.0e-8,
+            per_datatype: 2.0e-6,
+        }
+    }
+}
+
+impl CpuModel {
+    /// Heap k-way merge of `n` total items from `k` lists.
+    pub fn merge_time(&self, n: u64, k: usize) -> f64 {
+        if n == 0 || k == 0 {
+            return 0.0;
+        }
+        let logk = (k.max(2) as f64).log2();
+        n as f64 * logk * self.per_cmp_sort
+    }
+
+    /// Moving `bytes` through memory once.
+    pub fn memcpy_time(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.per_byte_memcpy
+    }
+
+    /// Building `k` derived datatypes over `n` total entries.
+    pub fn datatype_time(&self, n: u64, k: usize) -> f64 {
+        k as f64 * self.per_datatype + n as f64 * self.per_item_datatype
+    }
+
+    /// Classifying `n` requests against file domains.
+    pub fn calc_req_time(&self, n: u64) -> f64 {
+        n as f64 * self.per_req_calc
+    }
+}
+
+/// Simulated-time breakdown of one collective operation, with the exact
+/// component set the paper plots.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    // ---- intra-node aggregation (Figures 4–7 panels a–d) ----
+    /// Gathering requests + data to local aggregators (many-to-one comm).
+    pub intra_comm: f64,
+    /// Merge-sorting gathered offsets at local aggregators.
+    pub intra_sort: f64,
+    /// Moving request data into contiguous buffers at local aggregators.
+    pub intra_memcpy: f64,
+
+    // ---- inter-node aggregation (Figures 4–7 panels e–h) ----
+    /// `ADIOI_LUSTRE_Calc_my_req`: classifying requests by file domain.
+    pub calc_my_req: f64,
+    /// `ADIOI_Calc_others_req`: metadata exchange with global aggregators.
+    pub calc_others_req: f64,
+    /// Merge-sorting offsets at global aggregators.
+    pub inter_sort: f64,
+    /// MPI derived-datatype construction at global aggregators.
+    pub inter_datatype: f64,
+    /// Request-data exchange to global aggregators (many-to-many comm).
+    pub inter_comm: f64,
+
+    // ---- I/O phase ----
+    /// File-system time at the global aggregators.
+    pub io_phase: f64,
+}
+
+impl Breakdown {
+    /// Intra-node aggregation total.
+    pub fn intra_total(&self) -> f64 {
+        self.intra_comm + self.intra_sort + self.intra_memcpy
+    }
+
+    /// Inter-node aggregation total.
+    pub fn inter_total(&self) -> f64 {
+        self.calc_my_req + self.calc_others_req + self.inter_sort + self.inter_datatype
+            + self.inter_comm
+    }
+
+    /// End-to-end collective time.
+    pub fn total(&self) -> f64 {
+        self.intra_total() + self.inter_total() + self.io_phase
+    }
+
+    /// Achieved bandwidth for `bytes` moved end-to-end.
+    pub fn bandwidth(&self, bytes: u64) -> f64 {
+        let t = self.total();
+        if t <= 0.0 { 0.0 } else { bytes as f64 / t }
+    }
+
+    /// Component (label, seconds) rows in the paper's plotting order.
+    pub fn rows(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("intra_comm", self.intra_comm),
+            ("intra_sort", self.intra_sort),
+            ("intra_memcpy", self.intra_memcpy),
+            ("calc_my_req", self.calc_my_req),
+            ("calc_others_req", self.calc_others_req),
+            ("inter_sort", self.inter_sort),
+            ("inter_datatype", self.inter_datatype),
+            ("inter_comm", self.inter_comm),
+            ("io_phase", self.io_phase),
+        ]
+    }
+}
+
+/// Volume / congestion counters for one collective operation.
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    /// Total noncontiguous requests posted by all ranks.
+    pub reqs_posted: u64,
+    /// Requests remaining after intra-node coalescing (== posted for 2PIO).
+    pub reqs_after_intra: u64,
+    /// Total coalesced segments written by global aggregators.
+    pub reqs_at_io: u64,
+    /// Messages in the intra-node gather.
+    pub msgs_intra: usize,
+    /// Messages in the inter-node exchange (all rounds).
+    pub msgs_inter: usize,
+    /// Max per-global-aggregator in-degree in any round.
+    pub max_in_degree: usize,
+    /// Bytes written by the collective.
+    pub bytes: u64,
+    /// Two-phase rounds executed.
+    pub rounds: u64,
+    /// Extent-lock conflicts at the OSTs.
+    pub lock_conflicts: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_add_up() {
+        let b = Breakdown {
+            intra_comm: 1.0,
+            intra_sort: 2.0,
+            intra_memcpy: 3.0,
+            calc_my_req: 4.0,
+            calc_others_req: 5.0,
+            inter_sort: 6.0,
+            inter_datatype: 7.0,
+            inter_comm: 8.0,
+            io_phase: 9.0,
+        };
+        assert_eq!(b.intra_total(), 6.0);
+        assert_eq!(b.inter_total(), 30.0);
+        assert_eq!(b.total(), 45.0);
+        assert_eq!(b.rows().len(), 9);
+    }
+
+    #[test]
+    fn bandwidth_zero_time() {
+        assert_eq!(Breakdown::default().bandwidth(100), 0.0);
+    }
+
+    #[test]
+    fn merge_time_scales_with_log_k() {
+        let c = CpuModel::default();
+        let t2 = c.merge_time(1000, 2);
+        let t16 = c.merge_time(1000, 16);
+        assert!((t16 / t2 - 4.0).abs() < 1e-9); // log2(16)/log2(2) = 4
+        assert_eq!(c.merge_time(0, 5), 0.0);
+    }
+
+    #[test]
+    fn datatype_time_has_fixed_and_variable_parts() {
+        let c = CpuModel::default();
+        let base = c.datatype_time(0, 3);
+        assert!(base > 0.0);
+        assert!(c.datatype_time(100, 3) > base);
+    }
+}

@@ -1,0 +1,361 @@
+//! Public collective-I/O entry points: algorithm dispatch, write + read.
+//!
+//! The read path performs the write path in reverse (§IV: "the collective
+//! read operation performs simply in reverse order"): global aggregators
+//! read their file domains and scatter pieces back to the requesters
+//! (directly for two-phase; via the local aggregators for TAM).
+
+use crate::coordinator::breakdown::{Breakdown, Counters};
+use crate::coordinator::merge::ReqBatch;
+use crate::coordinator::reqcalc::{calc_my_req, metadata_bytes};
+use crate::coordinator::tam::{tam_write, TamConfig};
+use crate::coordinator::twophase::{two_phase_write, CollectiveCtx};
+use crate::coordinator::filedomain::FileDomains;
+use crate::coordinator::placement::{
+    per_node_count_for_total, select_global_aggregators, select_local_aggregators,
+};
+use crate::error::Result;
+use crate::lustre::LustreFile;
+use crate::mpisim::FlatView;
+use crate::netmodel::phase::{cost_phase, Message};
+
+/// Collective-I/O algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// ROMIO's classic two-phase I/O (baseline).
+    TwoPhase,
+    /// The paper's two-layer aggregation method.
+    Tam(TamConfig),
+}
+
+impl Algorithm {
+    /// Short name for reports.
+    pub fn name(&self) -> String {
+        match self {
+            Algorithm::TwoPhase => "two-phase".into(),
+            Algorithm::Tam(t) => format!("tam(P_L={})", t.total_local_aggregators),
+        }
+    }
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        if s == "two-phase" || s == "twophase" || s == "2p" {
+            return Ok(Algorithm::TwoPhase);
+        }
+        if s == "tam" {
+            return Ok(Algorithm::Tam(TamConfig::default()));
+        }
+        if let Some(pl) = s.strip_prefix("tam:") {
+            let total = pl
+                .parse()
+                .map_err(|_| crate::Error::config(format!("bad P_L in '{s}'")))?;
+            return Ok(Algorithm::Tam(TamConfig { total_local_aggregators: total }));
+        }
+        Err(crate::Error::config(format!(
+            "unknown algorithm '{s}' (expected two-phase|tam|tam:<P_L>)"
+        )))
+    }
+}
+
+/// Result of one collective operation.
+#[derive(Clone, Debug)]
+pub struct CollectiveOutcome {
+    /// Per-component simulated times.
+    pub breakdown: Breakdown,
+    /// Volume/congestion counters.
+    pub counters: Counters,
+}
+
+/// Run a collective write with the selected algorithm.
+pub fn run_collective_write(
+    ctx: &CollectiveCtx,
+    algo: Algorithm,
+    ranks: Vec<(usize, ReqBatch)>,
+    file: &mut LustreFile,
+) -> Result<CollectiveOutcome> {
+    let out = match algo {
+        Algorithm::TwoPhase => two_phase_write(ctx, ranks, file)?,
+        Algorithm::Tam(tam) => tam_write(ctx, &tam, ranks, file)?,
+    };
+    Ok(CollectiveOutcome { breakdown: out.breakdown, counters: out.counters })
+}
+
+/// Run a collective read: each requester's `view` is filled from `file`.
+///
+/// Returns the per-rank payloads (view order) and the outcome.  The
+/// communication structure mirrors the write in reverse; the I/O phase
+/// reads whole file domains.
+pub fn run_collective_read(
+    ctx: &CollectiveCtx,
+    algo: Algorithm,
+    views: Vec<(usize, FlatView)>,
+    file: &LustreFile,
+) -> Result<(Vec<(usize, Vec<u8>)>, CollectiveOutcome)> {
+    let mut bd = Breakdown::default();
+    let mut counters = Counters::default();
+
+    // Aggregate region + domains, as in the write path.
+    let lo = views.iter().filter_map(|(_, v)| v.min_offset()).min().unwrap_or(0);
+    let hi = views.iter().filter_map(|(_, v)| v.max_end()).max().unwrap_or(0);
+    let n_agg = ctx.n_global_agg.min(ctx.topo.nprocs()).max(1);
+    let domains = FileDomains::new(*file.config(), lo, hi, n_agg);
+    let agg_ranks = select_global_aggregators(ctx.topo, n_agg, ctx.placement);
+
+    counters.reqs_posted = views.iter().map(|(_, v)| v.len() as u64).sum();
+    counters.bytes = views.iter().map(|(_, v)| v.total_bytes()).sum();
+    counters.rounds = domains.n_rounds();
+
+    // For TAM, reads flow file → global aggs → local aggs → ranks; the
+    // local aggregators aggregate their members' views first (metadata
+    // only — no payload on the request side of a read).
+    let (requesters, scatter_plan): (Vec<(usize, FlatView)>, Option<Vec<(usize, usize)>>) =
+        match algo {
+            Algorithm::TwoPhase => (views.clone(), None),
+            Algorithm::Tam(tam) => {
+                let c = per_node_count_for_total(ctx.topo, tam.total_local_aggregators);
+                let locals = select_local_aggregators(ctx.topo, c);
+                let mut gather_msgs = Vec::new();
+                let mut per_agg: std::collections::HashMap<usize, Vec<&FlatView>> =
+                    Default::default();
+                for (rank, v) in &views {
+                    let agg = locals.assignment[*rank];
+                    if *rank != agg {
+                        gather_msgs.push(Message::new(*rank, agg, metadata_bytes(v.len() as u64)));
+                    }
+                    per_agg.entry(agg).or_default().push(v);
+                }
+                bd.intra_comm = cost_phase(ctx.net, ctx.topo, &gather_msgs).time;
+                counters.msgs_intra = gather_msgs.len();
+                let mut agg_views: Vec<(usize, FlatView)> = per_agg
+                    .into_iter()
+                    .map(|(agg, vs)| {
+                        let merged = crate::coordinator::merge::merge_views(&vs);
+                        (agg, merged)
+                    })
+                    .collect();
+                agg_views.sort_unstable_by_key(|(a, _)| *a);
+                let plan = views
+                    .iter()
+                    .map(|(rank, _)| (*rank, locals.assignment[*rank]))
+                    .collect();
+                (agg_views, Some(plan))
+            }
+        };
+
+    // Metadata to global aggregators (who needs what), once.
+    let mut meta_msgs = Vec::new();
+    for (rank, view) in &requesters {
+        let batch = ReqBatch::new(view.clone(), Vec::new());
+        let mr = calc_my_req(&domains, &batch);
+        let mut per_agg: std::collections::HashMap<usize, u64> = Default::default();
+        for ((_, agg), b) in &mr.by_dest {
+            *per_agg.entry(*agg).or_default() += b.view.len() as u64;
+        }
+        for (agg, n) in per_agg {
+            meta_msgs.push(Message::new(*rank, agg_ranks[agg], metadata_bytes(n)));
+        }
+    }
+    let meta_cost = cost_phase(ctx.net, ctx.topo, &meta_msgs);
+    bd.calc_others_req = meta_cost.time;
+    counters.msgs_inter += meta_msgs.len();
+    counters.max_in_degree = meta_cost.max_in_degree;
+
+    // I/O phase: aggregators read their domains (extent-accurate
+    // accounting happens through read cost only — reads take the same
+    // seek+bandwidth shape).
+    let mut ost_bytes = vec![0u64; file.config().stripe_count];
+    let mut ost_extents = vec![0u64; file.config().stripe_count];
+
+    // Reply data: aggregator → requester, then (TAM) local agg → rank.
+    let mut reply_msgs: Vec<Message> = Vec::new();
+    let mut filled: Vec<(usize, Vec<u8>)> = Vec::new();
+    for (rank, view) in &requesters {
+        let mut payload = vec![0u8; view.total_bytes() as usize];
+        let mut cursor = 0usize;
+        for (off, len) in view.iter() {
+            let bytes = file.read_at(off, len);
+            payload[cursor..cursor + len as usize].copy_from_slice(&bytes);
+            cursor += len as usize;
+            for (ost, _piece_off, piece_len) in file.config().split_by_stripe(off, len) {
+                ost_bytes[ost] += piece_len;
+                ost_extents[ost] += 1;
+            }
+            let agg = domains.aggregator_of(off);
+            reply_msgs.push(Message::new(agg_ranks[agg], *rank, len));
+        }
+        filled.push((*rank, payload));
+    }
+    let reply_cost = cost_phase(ctx.net, ctx.topo, &reply_msgs);
+    bd.inter_comm = reply_cost.time;
+    counters.msgs_inter += reply_msgs.len();
+
+    let stats: Vec<crate::lustre::OstStats> = ost_bytes
+        .iter()
+        .zip(&ost_extents)
+        .map(|(&bytes, &extents)| crate::lustre::OstStats {
+            bytes,
+            extents,
+            lock_acquisitions: 0,
+            lock_conflicts: 0,
+        })
+        .collect();
+    bd.io_phase = ctx.io.phase_time(&stats);
+
+    // TAM: scatter from local aggregators back to member ranks.
+    if let Some(plan) = scatter_plan {
+        let agg_payloads: std::collections::HashMap<usize, (FlatView, Vec<u8>)> = filled
+            .into_iter()
+            .zip(requesters.iter())
+            .map(|((agg, payload), (_, view))| (agg, (view.clone(), payload)))
+            .collect();
+        let mut scatter_msgs = Vec::new();
+        let mut out: Vec<(usize, Vec<u8>)> = Vec::new();
+        for (rank, view) in &views {
+            let agg = plan
+                .iter()
+                .find(|(r, _)| r == rank)
+                .map(|(_, a)| *a)
+                .expect("rank in plan");
+            let (aview, apayload) = &agg_payloads[&agg];
+            // Slice the member's bytes out of the aggregated buffer.
+            let mut payload = Vec::with_capacity(view.total_bytes() as usize);
+            for (off, len) in view.iter() {
+                let pos = locate(aview, off);
+                payload.extend_from_slice(&apayload[pos..pos + len as usize]);
+            }
+            if *rank != agg {
+                scatter_msgs.push(Message::new(agg, *rank, view.total_bytes()));
+            }
+            out.push((*rank, payload));
+        }
+        bd.intra_memcpy = ctx.cpu.memcpy_time(out.iter().map(|(_, p)| p.len() as u64).sum());
+        bd.intra_comm += cost_phase(ctx.net, ctx.topo, &scatter_msgs).time;
+        counters.msgs_intra += scatter_msgs.len();
+        return Ok((out, CollectiveOutcome { breakdown: bd, counters }));
+    }
+
+    Ok((filled, CollectiveOutcome { breakdown: bd, counters }))
+}
+
+/// Byte position of absolute file offset `off` within the payload of the
+/// sorted, coalesced `view` (panics if `off` is not covered — a protocol
+/// violation caught in tests).
+fn locate(view: &FlatView, off: u64) -> usize {
+    let offsets = view.offsets();
+    let idx = match offsets.binary_search(&off) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    };
+    let mut pos = 0u64;
+    for l in &view.lengths()[..idx] {
+        pos += l;
+    }
+    (pos + (off - offsets[idx])) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::coordinator::breakdown::CpuModel;
+    use crate::coordinator::placement::GlobalPlacement;
+    use crate::lustre::{IoModel, LustreConfig};
+    use crate::mpisim::rank::deterministic_payload;
+    use crate::netmodel::NetParams;
+    use crate::runtime::engine::NativeEngine;
+
+    fn fixture() -> (Topology, NetParams, CpuModel, IoModel, NativeEngine) {
+        (
+            Topology::new(2, 4),
+            NetParams::default(),
+            CpuModel::default(),
+            IoModel::default(),
+            NativeEngine,
+        )
+    }
+
+    fn make_ranks(topo: &Topology) -> Vec<(usize, ReqBatch)> {
+        (0..topo.nprocs())
+            .map(|r| {
+                let base = r as u64 * 100;
+                let view =
+                    FlatView::from_pairs(vec![(base, 30), (base + 50, 20)]).unwrap();
+                let payload = deterministic_payload(5, r, 50);
+                (r, ReqBatch::new(view, payload))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn algorithm_parses() {
+        assert_eq!("two-phase".parse::<Algorithm>().unwrap(), Algorithm::TwoPhase);
+        assert!(matches!("tam".parse::<Algorithm>().unwrap(), Algorithm::Tam(_)));
+        match "tam:64".parse::<Algorithm>().unwrap() {
+            Algorithm::Tam(t) => assert_eq!(t.total_local_aggregators, 64),
+            _ => panic!(),
+        }
+        assert!("bogus".parse::<Algorithm>().is_err());
+    }
+
+    #[test]
+    fn write_then_read_round_trip_two_phase() {
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let mut file = LustreFile::new(LustreConfig::new(64, 4));
+        let ranks = make_ranks(&topo);
+        run_collective_write(&ctx, Algorithm::TwoPhase, ranks.clone(), &mut file).unwrap();
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let (got, outcome) =
+            run_collective_read(&ctx, Algorithm::TwoPhase, views, &file).unwrap();
+        for ((r, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "rank {r} read-back mismatch");
+        }
+        assert!(outcome.breakdown.total() > 0.0);
+    }
+
+    #[test]
+    fn write_then_read_round_trip_tam() {
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let mut file = LustreFile::new(LustreConfig::new(64, 4));
+        let ranks = make_ranks(&topo);
+        let algo = Algorithm::Tam(TamConfig { total_local_aggregators: 2 });
+        run_collective_write(&ctx, algo, ranks.clone(), &mut file).unwrap();
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let (got, outcome) = run_collective_read(&ctx, algo, views, &file).unwrap();
+        for ((r, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "rank {r} TAM read-back mismatch");
+        }
+        assert!(outcome.breakdown.intra_comm > 0.0, "TAM read has intra traffic");
+    }
+
+    #[test]
+    fn locate_positions() {
+        let v = FlatView::from_pairs(vec![(10, 5), (20, 5)]).unwrap();
+        assert_eq!(locate(&v, 10), 0);
+        assert_eq!(locate(&v, 12), 2);
+        assert_eq!(locate(&v, 20), 5);
+        assert_eq!(locate(&v, 24), 9);
+    }
+}

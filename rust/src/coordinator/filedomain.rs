@@ -1,0 +1,169 @@
+//! Stripe-aligned file-domain partitioning (ROMIO-on-Lustre style).
+//!
+//! The aggregate access region of a collective call is divided among the
+//! `P_G` global aggregators.  On Lustre, ROMIO aligns domains to stripes
+//! and assigns stripes round-robin so aggregator `i` exclusively serves
+//! OST `i` — the one-to-one aggregator↔OST mapping that avoids extent-lock
+//! conflicts (§II).  When the aggregate region exceeds
+//! `P_G · stripe_size`, the collective proceeds in multiple rounds; in
+//! round `r` aggregator `i` handles stripe `r · P_G + i`.
+
+use crate::lustre::LustreConfig;
+
+/// File-domain assignment for one collective operation.
+#[derive(Clone, Debug)]
+pub struct FileDomains {
+    /// Stripe geometry.
+    pub lustre: LustreConfig,
+    /// First stripe of the aggregate access region.
+    pub first_stripe: u64,
+    /// One past the last stripe of the region.
+    pub end_stripe: u64,
+    /// Number of global aggregators `P_G`.
+    pub n_agg: usize,
+}
+
+impl FileDomains {
+    /// Partition the aggregate byte range `[lo, hi)` among `n_agg`
+    /// aggregators.  Empty ranges yield zero rounds.
+    pub fn new(lustre: LustreConfig, lo: u64, hi: u64, n_agg: usize) -> Self {
+        assert!(n_agg > 0);
+        let (first_stripe, end_stripe) = if hi <= lo {
+            (0, 0)
+        } else {
+            (lustre.stripe_of(lo), lustre.stripe_of(hi - 1) + 1)
+        };
+        FileDomains { lustre, first_stripe, end_stripe, n_agg }
+    }
+
+    /// Total stripes in the aggregate region.
+    pub fn n_stripes(&self) -> u64 {
+        self.end_stripe - self.first_stripe
+    }
+
+    /// Number of two-phase rounds: each round covers one stripe per
+    /// aggregator (ROMIO's Lustre driver writes ≤ stripe_size per
+    /// aggregator per round, §II).
+    pub fn n_rounds(&self) -> u64 {
+        self.n_stripes().div_ceil(self.n_agg as u64)
+    }
+
+    /// Aggregator index owning a byte offset.
+    ///
+    /// Stripes are distributed round-robin from the first stripe so that
+    /// aggregator `i` always touches OST `(first_stripe + i) mod
+    /// stripe_count`; with `n_agg == stripe_count` (ROMIO's Lustre
+    /// default) this is the one-to-one OST mapping.
+    pub fn aggregator_of(&self, offset: u64) -> usize {
+        debug_assert!(self.n_stripes() > 0);
+        let stripe = self.lustre.stripe_of(offset);
+        ((stripe - self.first_stripe) % self.n_agg as u64) as usize
+    }
+
+    /// Round in which a byte offset is serviced.
+    pub fn round_of(&self, offset: u64) -> u64 {
+        (self.lustre.stripe_of(offset) - self.first_stripe) / self.n_agg as u64
+    }
+
+    /// Byte range `[lo, hi)` served by aggregator `agg` in `round`
+    /// (`None` when that slot is past the end of the region).
+    pub fn domain_of(&self, agg: usize, round: u64) -> Option<(u64, u64)> {
+        let stripe = self.first_stripe + round * self.n_agg as u64 + agg as u64;
+        if stripe >= self.end_stripe {
+            return None;
+        }
+        Some(self.lustre.stripe_range(stripe))
+    }
+
+    /// Total bytes aggregator `agg` is responsible for across all rounds,
+    /// clipped to the aggregate region `[lo, hi)` given at construction
+    /// is *not* retained — callers clip per their views.
+    pub fn stripes_of(&self, agg: usize) -> impl Iterator<Item = u64> + '_ {
+        (0..self.n_rounds()).filter_map(move |r| {
+            let s = self.first_stripe + r * self.n_agg as u64 + agg as u64;
+            (s < self.end_stripe).then_some(s)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd(lo: u64, hi: u64, n_agg: usize) -> FileDomains {
+        FileDomains::new(LustreConfig::new(100, 4), lo, hi, n_agg)
+    }
+
+    #[test]
+    fn partition_covers_every_offset_exactly_once() {
+        let d = fd(50, 1050, 4);
+        for off in (50..1050).step_by(7) {
+            let a = d.aggregator_of(off);
+            let r = d.round_of(off);
+            let (lo, hi) = d.domain_of(a, r).unwrap();
+            assert!(off >= lo && off < hi, "offset {off} not in domain [{lo},{hi})");
+            // No other aggregator may own it.
+            for other in 0..4 {
+                if other != a {
+                    if let Some((olo, ohi)) = d.domain_of(other, r) {
+                        assert!(off < olo || off >= ohi);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rounds_math() {
+        // 10 stripes (offsets 0..1000), 4 aggregators → 3 rounds.
+        let d = fd(0, 1000, 4);
+        assert_eq!(d.n_stripes(), 10);
+        assert_eq!(d.n_rounds(), 3);
+        // Stripe 9 is aggregator 1, round 2.
+        assert_eq!(d.aggregator_of(950), 1);
+        assert_eq!(d.round_of(950), 2);
+        // Aggregator 2 in round 2 is stripe 10 — past end.
+        assert!(d.domain_of(2, 2).is_none());
+    }
+
+    #[test]
+    fn one_to_one_ost_mapping_when_nagg_eq_stripe_count() {
+        let lustre = LustreConfig::new(100, 4);
+        let d = FileDomains::new(lustre, 0, 1600, 4);
+        for agg in 0..4 {
+            let osts: Vec<usize> = d
+                .stripes_of(agg)
+                .map(|s| lustre.ost_of(s * 100))
+                .collect();
+            assert!(!osts.is_empty());
+            assert!(osts.iter().all(|&o| o == osts[0]), "agg {agg} hits OSTs {osts:?}");
+        }
+    }
+
+    #[test]
+    fn unaligned_region_start() {
+        let d = fd(250, 460, 2);
+        assert_eq!(d.first_stripe, 2);
+        assert_eq!(d.end_stripe, 5);
+        assert_eq!(d.aggregator_of(250), 0);
+        assert_eq!(d.aggregator_of(399), 1);
+        assert_eq!(d.aggregator_of(400), 0);
+        assert_eq!(d.round_of(400), 1);
+    }
+
+    #[test]
+    fn empty_region_zero_rounds() {
+        let d = fd(10, 10, 4);
+        assert_eq!(d.n_rounds(), 0);
+        assert_eq!(d.n_stripes(), 0);
+    }
+
+    #[test]
+    fn more_aggs_than_stripes_single_round() {
+        let d = fd(0, 250, 8);
+        assert_eq!(d.n_stripes(), 3);
+        assert_eq!(d.n_rounds(), 1);
+        assert!(d.domain_of(3, 0).is_none());
+        assert!(d.domain_of(2, 0).is_some());
+    }
+}

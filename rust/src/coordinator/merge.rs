@@ -1,0 +1,295 @@
+//! K-way heap merge and coalescing of sorted request streams — the native
+//! implementation of the aggregator hot path (§IV-A/B).
+//!
+//! Each incoming stream is one peer's already-sorted request list (the MPI
+//! file-view guarantee) together with its payload bytes in view order.  The
+//! merge produces a single ascending, coalesced request list; payload
+//! scatter into the aggregated contiguous buffer is a separate pass so the
+//! metadata step can also be executed by the XLA engine
+//! ([`crate::runtime::engine`]) interchangeably.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::mpisim::FlatView;
+
+/// One peer's aggregated requests: sorted view + payload in view order.
+#[derive(Clone, Debug, Default)]
+pub struct ReqBatch {
+    /// Sorted noncontiguous requests.
+    pub view: FlatView,
+    /// Payload bytes, concatenated in view order (empty for reads).
+    pub payload: Vec<u8>,
+}
+
+impl ReqBatch {
+    /// Empty batch.
+    pub fn new(view: FlatView, payload: Vec<u8>) -> Self {
+        debug_assert!(payload.is_empty() || payload.len() as u64 == view.total_bytes());
+        ReqBatch { view, payload }
+    }
+}
+
+/// K-way heap merge of sorted views into one sorted, coalesced view.
+///
+/// Time `O(n log k)` via a binary heap keyed on `(offset, length, stream)`
+/// — the deterministic tie-break mirrors the L1 bitonic kernel's
+/// lexicographic ordering so both engines produce identical output.
+pub fn merge_views(views: &[&FlatView]) -> FlatView {
+    let mut heap: BinaryHeap<Reverse<(u64, u64, usize, usize)>> = views
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_empty())
+        .map(|(s, v)| Reverse((v.offsets()[0], v.lengths()[0], s, 0usize)))
+        .collect();
+    let mut out = FlatView::empty();
+    let mut last: Option<(u64, u64)> = None;
+    while let Some(Reverse((off, len, s, i))) = heap.pop() {
+        match last {
+            Some((lo, ll)) if lo + ll == off => last = Some((lo, ll + len)),
+            Some((lo, ll)) => {
+                out.push(lo, ll);
+                last = Some((off, len));
+            }
+            None => last = Some((off, len)),
+        }
+        let v = views[s];
+        if i + 1 < v.len() {
+            heap.push(Reverse((v.offsets()[i + 1], v.lengths()[i + 1], s, i + 1)));
+        }
+    }
+    if let Some((lo, ll)) = last {
+        out.push(lo, ll);
+    }
+    out
+}
+
+/// Merge request batches: metadata via [`merge_views`], then payload
+/// scatter into one contiguous buffer ordered by the merged view.
+///
+/// Returns the merged batch and the number of bytes moved (for the
+/// memcpy-time component).  Payloads of distinct batches must not overlap
+/// in file space for bytes to be well-defined; overlapping writers are
+/// resolved "later batch wins" (matching aggregator receive order).
+pub fn merge_batches(batches: &[ReqBatch]) -> (ReqBatch, u64) {
+    let views: Vec<&FlatView> = batches.iter().map(|b| &b.view).collect();
+    let merged = merge_views(&views);
+    let (payload, moved) = scatter_into(&merged, batches);
+    (ReqBatch { view: merged, payload }, moved)
+}
+
+/// Scatter batch payloads into one contiguous buffer laid out by `merged`
+/// (which must cover every batch request — e.g. produced by
+/// [`merge_views`] or an [`crate::runtime::engine::SortEngine`]).
+///
+/// Returns the buffer and the bytes moved (memcpy-time accounting).
+pub fn scatter_into(merged: &FlatView, batches: &[ReqBatch]) -> (Vec<u8>, u64) {
+    let total = merged.total_bytes();
+    let mut payload = vec![0u8; total as usize];
+
+    // Prefix sums of merged segment payload positions for binary search.
+    let seg_offsets = merged.offsets();
+    let mut seg_payload_start = Vec::with_capacity(merged.len());
+    let mut acc = 0u64;
+    for l in merged.lengths() {
+        seg_payload_start.push(acc);
+        acc += l;
+    }
+
+    let mut moved = 0u64;
+    for b in batches {
+        if b.payload.is_empty() {
+            continue;
+        }
+        let mut cursor = 0usize;
+        for (off, len) in b.view.iter() {
+            // Find the merged segment containing `off`.
+            let seg = match seg_offsets.binary_search(&off) {
+                Ok(i) => i,
+                Err(i) => i - 1, // off falls inside segment i-1
+            };
+            let within = off - seg_offsets[seg];
+            debug_assert!(within + len <= merged.lengths()[seg]);
+            let dst = (seg_payload_start[seg] + within) as usize;
+            payload[dst..dst + len as usize]
+                .copy_from_slice(&b.payload[cursor..cursor + len as usize]);
+            cursor += len as usize;
+            moved += len;
+        }
+    }
+    (payload, moved)
+}
+
+/// Sort-then-coalesce for *unsorted* pair lists (the native twin of the
+/// XLA `aggregate` pipeline; used by the engine abstraction).
+pub fn sort_coalesce_pairs(mut pairs: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    pairs.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(pairs.len());
+    for (off, len) in pairs {
+        match out.last_mut() {
+            Some((lo, ll)) if *lo + *ll == off => *ll += len,
+            _ => out.push((off, len)),
+        }
+    }
+    out
+}
+
+/// Combine already-coalesced partial results (e.g. per-chunk outputs of
+/// the XLA engine) into the global coalesced list.
+///
+/// This must merge a segment that starts *at or inside* the running
+/// segment's range, not just exactly at its end: a zero-length request
+/// processed in one chunk can land strictly inside a segment another
+/// chunk already coalesced (it occupies no bytes, so this is not an
+/// overlap), and plain end-contiguity would leave it splitting the
+/// global result.  For disjoint inputs this reproduces
+/// [`sort_coalesce_pairs`] of the original concatenation exactly.
+pub fn combine_coalesced_partials(mut partials: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    partials.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(partials.len());
+    for (off, len) in partials {
+        match out.last_mut() {
+            Some((lo, ll)) if off <= *lo + *ll => {
+                *ll = (*ll).max(off + len - *lo);
+            }
+            _ => out.push((off, len)),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fv(pairs: &[(u64, u64)]) -> FlatView {
+        FlatView::from_pairs(pairs.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn merge_two_interleaved_streams_coalesces_fully() {
+        let a = fv(&[(0, 4), (8, 4)]);
+        let b = fv(&[(4, 4), (12, 4)]);
+        let m = merge_views(&[&a, &b]);
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![(0, 16)]);
+    }
+
+    #[test]
+    fn merge_disjoint_streams_keeps_gaps() {
+        let a = fv(&[(0, 4)]);
+        let b = fv(&[(100, 4)]);
+        let m = merge_views(&[&a, &b]);
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![(0, 4), (100, 4)]);
+    }
+
+    #[test]
+    fn merge_empty_inputs() {
+        assert!(merge_views(&[]).is_empty());
+        let e = FlatView::empty();
+        let a = fv(&[(5, 5)]);
+        let m = merge_views(&[&e, &a, &e]);
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![(5, 5)]);
+    }
+
+    #[test]
+    fn merge_matches_sort_coalesce_reference() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(99);
+        for _ in 0..50 {
+            let k = 1 + rng.gen_range(6) as usize;
+            let mut streams = Vec::new();
+            let mut all = Vec::new();
+            for _ in 0..k {
+                let n = rng.gen_range(20) as usize;
+                let mut pairs = Vec::new();
+                let mut cur = rng.gen_range(64);
+                for _ in 0..n {
+                    let len = 1 + rng.gen_range(8);
+                    pairs.push((cur, len));
+                    all.push((cur, len));
+                    cur += len + rng.gen_range(3) * rng.gen_range(16);
+                }
+                streams.push(fv(&pairs));
+            }
+            let refs: Vec<&FlatView> = streams.iter().collect();
+            let merged = merge_views(&refs);
+            let want = sort_coalesce_pairs(all);
+            assert_eq!(merged.iter().collect::<Vec<_>>(), want);
+        }
+    }
+
+    #[test]
+    fn merge_batches_moves_payload_correctly() {
+        let a = ReqBatch::new(fv(&[(0, 2), (6, 2)]), vec![1, 2, 7, 8]);
+        let b = ReqBatch::new(fv(&[(2, 2)]), vec![3, 4]);
+        let (m, moved) = merge_batches(&[a, b]);
+        assert_eq!(m.view.iter().collect::<Vec<_>>(), vec![(0, 4), (6, 2)]);
+        assert_eq!(m.payload, vec![1, 2, 3, 4, 7, 8]);
+        assert_eq!(moved, 6);
+    }
+
+    #[test]
+    fn merge_batches_metadata_only_when_no_payload() {
+        let a = ReqBatch::new(fv(&[(0, 2)]), vec![]);
+        let b = ReqBatch::new(fv(&[(2, 2)]), vec![]);
+        let (m, moved) = merge_batches(&[a, b]);
+        assert_eq!(m.view.iter().collect::<Vec<_>>(), vec![(0, 4)]);
+        assert_eq!(moved, 0);
+        assert_eq!(m.payload, vec![0u8; 4]);
+    }
+
+    #[test]
+    fn sort_coalesce_pairs_basic() {
+        let out = sort_coalesce_pairs(vec![(8, 4), (0, 4), (4, 4), (100, 1)]);
+        assert_eq!(out, vec![(0, 12), (100, 1)]);
+        assert!(sort_coalesce_pairs(vec![]).is_empty());
+    }
+
+    #[test]
+    fn combine_partials_absorbs_interior_zero_length() {
+        // Regression: a zero-length request processed in another chunk
+        // lands strictly inside an already-coalesced segment.
+        let partials = vec![(90089, 34), (90112, 0), (90123, 21)];
+        assert_eq!(combine_coalesced_partials(partials), vec![(90089, 55)]);
+    }
+
+    #[test]
+    fn combine_partials_matches_global_sort_coalesce() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(4242);
+        for _ in 0..100 {
+            // Disjoint requests incl. zero-lengths, shuffled, chunked.
+            let mut cursor = 0u64;
+            let mut pairs = Vec::new();
+            for _ in 0..200 {
+                let len = rng.gen_range(8);
+                if rng.gen_bool(0.5) {
+                    cursor += rng.gen_range(32);
+                }
+                pairs.push((cursor, len));
+                cursor += len;
+            }
+            rng.shuffle(&mut pairs);
+            let want = sort_coalesce_pairs(pairs.clone());
+            let chunk_size = 1 + rng.gen_range(64) as usize;
+            let partials: Vec<(u64, u64)> = pairs
+                .chunks(chunk_size)
+                .flat_map(|c| sort_coalesce_pairs(c.to_vec()))
+                .collect();
+            assert_eq!(combine_coalesced_partials(partials), want);
+        }
+    }
+
+    #[test]
+    fn coalesce_ratio_for_block_pattern() {
+        // §V-C: block-partitioned patterns coalesce almost entirely when
+        // adjacent ranks land on the same aggregator.
+        let streams: Vec<FlatView> = (0..8)
+            .map(|r| fv(&[(r * 100, 50), (r * 100 + 50, 50)]))
+            .collect();
+        let refs: Vec<&FlatView> = streams.iter().collect();
+        let merged = merge_views(&refs);
+        assert_eq!(merged.len(), 1);
+        assert_eq!(merged.total_bytes(), 800);
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's contribution: collective-I/O coordination.
+//!
+//! * [`placement`] — global/local aggregator selection (§IV-A, Fig 1),
+//!   including the Cray round-robin policy used as an ablation (§V).
+//! * [`filedomain`] — stripe-aligned file-domain partitioning with the
+//!   one-aggregator-per-OST mapping (§II, §IV-C).
+//! * [`reqcalc`] — `ADIOI_LUSTRE_Calc_my_req` / `ADIOI_Calc_others_req`
+//!   equivalents: who sends what to which aggregator in which round.
+//! * [`merge`] — k-way heap merge + coalescing of sorted request lists
+//!   (the §IV-A/B sort step; native twin of the L1 Pallas kernels).
+//! * [`breakdown`] — per-phase timing records matching Figures 4–7.
+//! * [`twophase`] — ROMIO's two-phase collective write/read (baseline).
+//! * [`tam`] — the two-layer aggregation method: intra-node aggregation,
+//!   then inter-node aggregation over local aggregators only.
+//! * [`collective`] — the public entry points dispatching on algorithm.
+
+pub mod breakdown;
+pub mod collective;
+pub mod filedomain;
+pub mod merge;
+pub mod placement;
+pub mod reqcalc;
+pub mod tam;
+pub mod twophase;

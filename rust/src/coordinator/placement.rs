@@ -1,0 +1,251 @@
+//! Aggregator selection and placement policies.
+//!
+//! Global aggregators: ROMIO-on-Lustre picks `P_G = stripe_count`
+//! aggregators; when there are at least `P_G` nodes they are spread one per
+//! node (evenly across nodes), otherwise nodes receive them round-robin.
+//! The paper additionally describes (and we implement as an ablation) the
+//! Cray MPI policy that round-robins *across* nodes picking successive
+//! local slots (ranks 0, 64, 1, 65 in their 2-node/64-ppn example).
+//!
+//! Local aggregators (§IV-A): on a node with `q` processes and `c` local
+//! aggregators, with `e = q mod c`, the chosen local rank ids are
+//! `ceil(q/c)·i` for `i in 0..e` and `ceil(q/c)·e + floor(q/c)·(i-e)` for
+//! `i in e..c` — evenly spread.  Each local aggregator serves the ranks
+//! from itself up to (not including) the next local aggregator.
+
+use crate::cluster::Topology;
+
+/// Global-aggregator placement policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlobalPlacement {
+    /// ROMIO: spread aggregators evenly across nodes (the paper's tuned
+    /// baseline).
+    Spread,
+    /// Cray MPI: round-robin across nodes, successive local slots
+    /// (0, ppn, 1, ppn+1, … in rank terms).
+    CrayRoundRobin,
+}
+
+/// Select the `n_agg` global aggregator ranks under a policy.
+pub fn select_global_aggregators(
+    topo: &Topology,
+    n_agg: usize,
+    policy: GlobalPlacement,
+) -> Vec<usize> {
+    let p = topo.nprocs();
+    let n_agg = n_agg.min(p);
+    match policy {
+        GlobalPlacement::Spread => {
+            if n_agg <= topo.nodes {
+                // One aggregator on a subset of nodes, nodes evenly spaced,
+                // first local rank of each chosen node.
+                (0..n_agg)
+                    .map(|i| topo.rank_of(i * topo.nodes / n_agg, 0))
+                    .collect()
+            } else {
+                // More aggregators than nodes: distribute per node, local
+                // slots evenly spread within each node.
+                let base = n_agg / topo.nodes;
+                let extra = n_agg % topo.nodes;
+                let mut out = Vec::with_capacity(n_agg);
+                for node in 0..topo.nodes {
+                    let c = base + usize::from(node < extra);
+                    for local in select_local_aggregators_on_node(topo.ppn, c) {
+                        out.push(topo.rank_of(node, local));
+                    }
+                }
+                out.sort_unstable();
+                out
+            }
+        }
+        GlobalPlacement::CrayRoundRobin => {
+            // slot-major round robin: (node 0, slot 0), (node 1, slot 0), …
+            // then slot 1, matching "0, 64, 1, 65".
+            let mut out = Vec::with_capacity(n_agg);
+            let mut slot = 0;
+            'outer: loop {
+                for node in 0..topo.nodes {
+                    if out.len() == n_agg {
+                        break 'outer;
+                    }
+                    out.push(topo.rank_of(node, slot));
+                }
+                slot += 1;
+                if slot >= topo.ppn {
+                    break;
+                }
+            }
+            out
+        }
+    }
+}
+
+/// §IV-A local-aggregator selection on one node: local rank ids of the
+/// `c` local aggregators among `q` processes.
+pub fn select_local_aggregators_on_node(q: usize, c: usize) -> Vec<usize> {
+    let c = c.clamp(1, q);
+    let e = q % c;
+    let ceil = q.div_ceil(c);
+    let floor = q / c;
+    (0..c)
+        .map(|i| if i < e { ceil * i } else { ceil * e + floor * (i - e) })
+        .collect()
+}
+
+/// Complete local-aggregator layout across the cluster.
+#[derive(Clone, Debug)]
+pub struct LocalAggregators {
+    /// Global ranks of all local aggregators, ascending.
+    pub ranks: Vec<usize>,
+    /// For every rank, the local aggregator it sends to.
+    pub assignment: Vec<usize>,
+}
+
+/// Select `c` local aggregators per node and assign every rank to one.
+///
+/// A local aggregator serves ranks from itself up to (not including) the
+/// next local aggregator on the node (§IV-A's `c=2, q=5 → {r0,r1,r2},
+/// {r3,r4}` example).
+pub fn select_local_aggregators(topo: &Topology, c: usize) -> LocalAggregators {
+    let locals = select_local_aggregators_on_node(topo.ppn, c);
+    let mut ranks = Vec::with_capacity(topo.nodes * locals.len());
+    let mut assignment = vec![0usize; topo.nprocs()];
+    for node in 0..topo.nodes {
+        for (i, &l) in locals.iter().enumerate() {
+            let agg_rank = topo.rank_of(node, l);
+            ranks.push(agg_rank);
+            let next = locals.get(i + 1).copied().unwrap_or(topo.ppn);
+            for local in l..next {
+                assignment[topo.rank_of(node, local)] = agg_rank;
+            }
+        }
+        // Ranks before the first local aggregator (possible only when the
+        // formula's first id > 0 — it never is, ceil*0 == 0) — guarded by
+        // debug assert.
+        debug_assert_eq!(locals[0], 0);
+    }
+    LocalAggregators { ranks, assignment }
+}
+
+impl LocalAggregators {
+    /// Number of local aggregators `P_L`.
+    pub fn count(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Ranks served by aggregator `agg` (including itself).
+    pub fn members_of(&self, agg: usize) -> Vec<usize> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|&(_, &a)| a == agg)
+            .map(|(r, _)| r)
+            .collect()
+    }
+}
+
+/// Derive the per-node local aggregator count `c` from a target total
+/// `P_L` (the paper tunes total `P_L`, e.g. 256, across all nodes).
+pub fn per_node_count_for_total(topo: &Topology, total_pl: usize) -> usize {
+    (total_pl.div_ceil(topo.nodes)).clamp(1, topo.ppn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_c2_q5() {
+        // §IV-A: c=2, q=5 → aggregators r0 and r3; groups {0,1,2}, {3,4}.
+        assert_eq!(select_local_aggregators_on_node(5, 2), vec![0, 3]);
+        let topo = Topology::new(1, 5);
+        let la = select_local_aggregators(&topo, 2);
+        assert_eq!(la.ranks, vec![0, 3]);
+        assert_eq!(la.members_of(0), vec![0, 1, 2]);
+        assert_eq!(la.members_of(3), vec![3, 4]);
+    }
+
+    #[test]
+    fn paper_fig1a_four_locals_of_eight() {
+        // Fig 1(a): 8 procs/node, 4 local aggregators per node → evenly
+        // spread: local ids 0, 2, 4, 6.
+        assert_eq!(select_local_aggregators_on_node(8, 4), vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn local_selection_degenerate_cases() {
+        assert_eq!(select_local_aggregators_on_node(4, 1), vec![0]);
+        assert_eq!(select_local_aggregators_on_node(4, 4), vec![0, 1, 2, 3]);
+        // c > q clamps to q.
+        assert_eq!(select_local_aggregators_on_node(3, 7), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn local_ids_strictly_increasing_and_in_range() {
+        for q in 1..40 {
+            for c in 1..=q {
+                let ids = select_local_aggregators_on_node(q, c);
+                assert_eq!(ids.len(), c);
+                assert!(ids.windows(2).all(|w| w[0] < w[1]), "q={q} c={c} ids={ids:?}");
+                assert!(ids.iter().all(|&i| i < q));
+                assert_eq!(ids[0], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn every_rank_assigned_to_its_nodes_aggregator() {
+        let topo = Topology::new(3, 8);
+        let la = select_local_aggregators(&topo, 3);
+        assert_eq!(la.count(), 9);
+        for r in 0..topo.nprocs() {
+            let a = la.assignment[r];
+            assert!(topo.same_node(r, a), "rank {r} assigned off-node agg {a}");
+            assert!(a <= r, "aggregator must not have higher rank than member");
+        }
+    }
+
+    #[test]
+    fn spread_one_per_node_when_enough_nodes() {
+        let topo = Topology::new(8, 4);
+        let g = select_global_aggregators(&topo, 4, GlobalPlacement::Spread);
+        assert_eq!(g, vec![0, 8, 16, 24]); // nodes 0, 2, 4, 6
+        let nodes: Vec<usize> = g.iter().map(|&r| topo.node_of(r)).collect();
+        assert_eq!(nodes, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn spread_multiple_per_node_when_fewer_nodes() {
+        let topo = Topology::new(2, 8);
+        let g = select_global_aggregators(&topo, 4, GlobalPlacement::Spread);
+        assert_eq!(g.len(), 4);
+        // Two per node, spread within node.
+        assert_eq!(g, vec![0, 4, 8, 12]);
+    }
+
+    #[test]
+    fn cray_round_robin_matches_paper_example() {
+        // 2 nodes × 64 ppn, 4 aggregators → ranks 0, 64, 1, 65.
+        let topo = Topology::new(2, 64);
+        let g = select_global_aggregators(&topo, 4, GlobalPlacement::CrayRoundRobin);
+        assert_eq!(g, vec![0, 64, 1, 65]);
+    }
+
+    #[test]
+    fn global_count_clamped_to_p() {
+        let topo = Topology::new(2, 2);
+        let g = select_global_aggregators(&topo, 100, GlobalPlacement::Spread);
+        assert_eq!(g.len(), 4);
+    }
+
+    #[test]
+    fn per_node_count_from_total() {
+        let topo = Topology::new(256, 64);
+        assert_eq!(per_node_count_for_total(&topo, 256), 1);
+        let topo4 = Topology::new(4, 64);
+        assert_eq!(per_node_count_for_total(&topo4, 256), 64);
+        // Clamped to ppn.
+        let topo2 = Topology::new(2, 4);
+        assert_eq!(per_node_count_for_total(&topo2, 1000), 4);
+    }
+}

@@ -1,0 +1,281 @@
+//! The Two-layer Aggregation Method (§IV): intra-node aggregation to local
+//! aggregators, then the two-phase exchange with only local aggregators as
+//! requesters.
+
+use crate::coordinator::breakdown::Counters;
+use crate::coordinator::merge::{scatter_into, ReqBatch};
+use crate::coordinator::placement::{per_node_count_for_total, select_local_aggregators};
+use crate::coordinator::twophase::{write_exchange, CollectiveCtx, ExchangeOutcome};
+use crate::error::Result;
+use crate::lustre::LustreFile;
+use crate::mpisim::FlatView;
+use crate::netmodel::phase::{cost_phase, Message};
+use crate::util::par_map;
+
+/// TAM tuning knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TamConfig {
+    /// Target total number of local aggregators `P_L` (the paper sweeps
+    /// this; 256 is the empirically good value on Theta, §V-A).
+    pub total_local_aggregators: usize,
+}
+
+impl Default for TamConfig {
+    fn default() -> Self {
+        TamConfig { total_local_aggregators: 256 }
+    }
+}
+
+/// Result of the intra-node aggregation stage.
+pub struct IntraOutcome {
+    /// One aggregated batch per local aggregator `(rank, batch)`.
+    pub local_batches: Vec<(usize, ReqBatch)>,
+    /// Simulated gather-communication time.
+    pub comm: f64,
+    /// Simulated merge-sort time (max over local aggregators).
+    pub sort: f64,
+    /// Simulated contiguous-buffer memory-movement time.
+    pub memcpy: f64,
+    /// Gather messages (non-aggregators → local aggregators).
+    pub msgs: usize,
+    /// Requests before intra-node coalescing.
+    pub reqs_before: u64,
+    /// Requests after intra-node coalescing.
+    pub reqs_after: u64,
+}
+
+/// Run intra-node aggregation: gather every rank's batch to its local
+/// aggregator, merge-sort and coalesce there, and move payloads into
+/// contiguous buffers (§IV-A).
+pub fn intra_node_aggregate(
+    ctx: &CollectiveCtx,
+    tam: &TamConfig,
+    ranks: Vec<(usize, ReqBatch)>,
+    ) -> Result<IntraOutcome> {
+    let topo = ctx.topo;
+    let c = per_node_count_for_total(topo, tam.total_local_aggregators);
+    let locals = select_local_aggregators(topo, c);
+    let reqs_before: u64 = ranks.iter().map(|(_, b)| b.view.len() as u64).sum();
+
+    // Gather messages: every non-aggregator sends metadata + payload to its
+    // local aggregator (many-to-one within each node, §IV-A).
+    let mut msgs: Vec<Message> = Vec::new();
+    let mut per_agg: std::collections::HashMap<usize, Vec<ReqBatch>> = Default::default();
+    for (rank, batch) in ranks {
+        let agg = locals.assignment[rank];
+        if rank != agg {
+            // 16 bytes of metadata per request + the payload bytes.
+            let bytes = batch.view.total_bytes() + 16 * batch.view.len() as u64;
+            msgs.push(Message::new(rank, agg, bytes));
+        }
+        per_agg.entry(agg).or_default().push(batch);
+    }
+    let comm_cost = cost_phase(ctx.net, ctx.topo, &msgs);
+
+    // Local aggregators merge-sort + coalesce concurrently (engine hot
+    // path) and build contiguous payload buffers.
+    let items: Vec<(usize, Vec<ReqBatch>)> = {
+        let mut v: Vec<_> = per_agg.into_iter().collect();
+        v.sort_unstable_by_key(|(agg, _)| *agg);
+        v
+    };
+    let merged: Vec<(usize, ReqBatch, f64, f64)> = par_map(items, |(agg, batches)| {
+        let k = batches.len();
+        let n_items: u64 = batches.iter().map(|b| b.view.len() as u64).sum();
+        let pairs: Vec<(u64, u64)> = batches.iter().flat_map(|b| b.view.iter()).collect();
+        let merged_pairs = ctx.engine.merge_coalesce(pairs).expect("engine merge failed");
+        let view = FlatView::from_pairs_unchecked(
+            merged_pairs.iter().map(|p| p.0).collect(),
+            merged_pairs.iter().map(|p| p.1).collect(),
+        );
+        let (payload, moved) = scatter_into(&view, &batches);
+        let sort_t = ctx.cpu.merge_time(n_items, k.max(1));
+        let memcpy_t = ctx.cpu.memcpy_time(moved);
+        (agg, ReqBatch { view, payload }, sort_t, memcpy_t)
+    });
+
+    let sort = merged.iter().map(|m| m.2).fold(0.0, f64::max);
+    let memcpy = merged.iter().map(|m| m.3).fold(0.0, f64::max);
+    let reqs_after: u64 = merged.iter().map(|m| m.1.view.len() as u64).sum();
+    Ok(IntraOutcome {
+        local_batches: merged.into_iter().map(|(a, b, _, _)| (a, b)).collect(),
+        comm: comm_cost.time,
+        sort,
+        memcpy,
+        msgs: msgs.len(),
+        reqs_before,
+        reqs_after,
+    })
+}
+
+/// Full TAM collective write: intra-node aggregation, then the inter-node
+/// two-phase exchange over local aggregators, then the (unchanged) I/O
+/// phase.
+pub fn tam_write(
+    ctx: &CollectiveCtx,
+    tam: &TamConfig,
+    ranks: Vec<(usize, ReqBatch)>,
+    file: &mut LustreFile,
+) -> Result<ExchangeOutcome> {
+    let mut intra = intra_node_aggregate(ctx, tam, ranks)?;
+    let local_batches = std::mem::take(&mut intra.local_batches);
+    let mut out = write_exchange(ctx, local_batches, file)?;
+    out.breakdown.intra_comm = intra.comm;
+    out.breakdown.intra_sort = intra.sort;
+    out.breakdown.intra_memcpy = intra.memcpy;
+    merge_counters(&mut out.counters, &intra);
+    Ok(out)
+}
+
+fn merge_counters(c: &mut Counters, intra: &IntraOutcome) {
+    c.reqs_posted = intra.reqs_before;
+    c.reqs_after_intra = intra.reqs_after;
+    c.msgs_intra = intra.msgs;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::coordinator::breakdown::CpuModel;
+    use crate::coordinator::placement::GlobalPlacement;
+    use crate::lustre::{IoModel, LustreConfig};
+    use crate::mpisim::rank::deterministic_payload;
+    use crate::netmodel::NetParams;
+    use crate::runtime::engine::NativeEngine;
+
+    struct Fixture {
+        topo: Topology,
+        net: NetParams,
+        cpu: CpuModel,
+        io: IoModel,
+        eng: NativeEngine,
+    }
+
+    impl Fixture {
+        fn new(nodes: usize, ppn: usize) -> Self {
+            Fixture {
+                topo: Topology::new(nodes, ppn),
+                net: NetParams::default(),
+                cpu: CpuModel::default(),
+                io: IoModel::default(),
+                eng: NativeEngine,
+            }
+        }
+
+        fn ctx(&self, n_agg: usize) -> CollectiveCtx<'_> {
+            CollectiveCtx {
+                topo: &self.topo,
+                net: &self.net,
+                cpu: &self.cpu,
+                io: &self.io,
+                engine: &self.eng,
+                placement: GlobalPlacement::Spread,
+                n_global_agg: n_agg,
+            }
+        }
+    }
+
+    fn block_ranks(topo: &Topology, block: u64, pieces: u64) -> Vec<(usize, ReqBatch)> {
+        (0..topo.nprocs())
+            .map(|r| {
+                let base = r as u64 * block;
+                let q = block / pieces;
+                let view = FlatView::from_pairs(
+                    (0..pieces).map(|i| (base + i * q, q)).collect(),
+                )
+                .unwrap();
+                let payload = deterministic_payload(11, r, block);
+                (r, ReqBatch::new(view, payload))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn intra_aggregation_coalesces_block_pattern() {
+        let f = Fixture::new(2, 4);
+        let ctx = f.ctx(4);
+        let tam = TamConfig { total_local_aggregators: 2 }; // 1 per node
+        let intra = intra_node_aggregate(&ctx, &tam, block_ranks(&f.topo, 64, 4)).unwrap();
+        assert_eq!(intra.local_batches.len(), 2);
+        assert_eq!(intra.reqs_before, 32);
+        // Per node, 4 ranks × 64B contiguous → a single segment.
+        assert_eq!(intra.reqs_after, 2);
+        assert_eq!(intra.msgs, 6); // 3 non-aggregators per node
+        assert!(intra.comm > 0.0 && intra.sort > 0.0 && intra.memcpy > 0.0);
+    }
+
+    #[test]
+    fn tam_write_lands_correct_bytes() {
+        let f = Fixture::new(2, 4);
+        let ctx = f.ctx(4);
+        let tam = TamConfig { total_local_aggregators: 4 };
+        let mut file = LustreFile::new(LustreConfig::new(64, 4));
+        tam_write(&ctx, &tam, block_ranks(&f.topo, 256, 4), &mut file).unwrap();
+        for r in 0..f.topo.nprocs() {
+            let want = deterministic_payload(11, r, 256);
+            assert_eq!(file.read_at(r as u64 * 256, 256), want, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn tam_equals_twophase_file_contents() {
+        let f = Fixture::new(2, 4);
+        let ctx = f.ctx(4);
+        let mut f1 = LustreFile::new(LustreConfig::new(64, 4));
+        let mut f2 = LustreFile::new(LustreConfig::new(64, 4));
+        crate::coordinator::twophase::two_phase_write(
+            &ctx,
+            block_ranks(&f.topo, 128, 2),
+            &mut f1,
+        )
+        .unwrap();
+        tam_write(
+            &ctx,
+            &TamConfig { total_local_aggregators: 2 },
+            block_ranks(&f.topo, 128, 2),
+            &mut f2,
+        )
+        .unwrap();
+        let total = 8 * 128;
+        assert_eq!(f1.read_at(0, total), f2.read_at(0, total));
+    }
+
+    #[test]
+    fn tam_with_pl_equal_p_matches_twophase_message_structure() {
+        // §IV-D: two-phase I/O is the special case P_L == P (intra-node
+        // stage degenerates: every rank is its own local aggregator).
+        let f = Fixture::new(2, 4);
+        let ctx = f.ctx(4);
+        let tam = TamConfig { total_local_aggregators: f.topo.nprocs() };
+        let intra =
+            intra_node_aggregate(&ctx, &tam, block_ranks(&f.topo, 64, 4)).unwrap();
+        assert_eq!(intra.msgs, 0, "no gather when P_L == P");
+        assert_eq!(intra.comm, 0.0);
+        assert_eq!(intra.local_batches.len(), f.topo.nprocs());
+    }
+
+    #[test]
+    fn tam_reduces_inter_node_in_degree() {
+        let f = Fixture::new(4, 8);
+        let ctx = f.ctx(2);
+        let ranks = block_ranks(&f.topo, 128, 4);
+        let mut f1 = LustreFile::new(LustreConfig::new(256, 2));
+        let two = crate::coordinator::twophase::two_phase_write(&ctx, ranks.clone(), &mut f1)
+            .unwrap();
+        let mut f2 = LustreFile::new(LustreConfig::new(256, 2));
+        let tam = tam_write(
+            &ctx,
+            &TamConfig { total_local_aggregators: 4 },
+            ranks,
+            &mut f2,
+        )
+        .unwrap();
+        assert!(
+            tam.counters.max_in_degree < two.counters.max_in_degree,
+            "TAM {} vs 2P {}",
+            tam.counters.max_in_degree,
+            two.counters.max_in_degree
+        );
+    }
+}

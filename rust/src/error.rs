@@ -1,0 +1,49 @@
+//! Crate error type.
+
+/// Unified error type for the tamio pipeline.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Configuration errors (bad CLI flags, config files, topologies).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Workload-generation errors (invalid decompositions etc.).
+    #[error("workload error: {0}")]
+    Workload(String),
+
+    /// Collective-I/O protocol violations (unsorted views, overlap rules…).
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    /// Simulated-storage errors (OST bounds, lock conflicts in strict mode).
+    #[error("storage error: {0}")]
+    Storage(String),
+
+    /// PJRT/XLA runtime errors (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Data verification mismatches (read-back != expected image).
+    #[error("verification failed: {0}")]
+    Verify(String),
+
+    /// Underlying I/O errors (artifact files, report output).
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper for formatted config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

@@ -1,0 +1,337 @@
+//! Experiment drivers shared by the CLI and the bench harnesses — one
+//! function per paper artifact (see DESIGN.md §4 experiment index).
+
+use crate::cluster::Topology;
+use crate::config::RunConfig;
+use crate::coordinator::collective::{run_collective_write, Algorithm, CollectiveOutcome};
+use crate::coordinator::tam::TamConfig;
+use crate::coordinator::twophase::CollectiveCtx;
+use crate::error::{Error, Result};
+use crate::lustre::LustreFile;
+use crate::metrics::{LabelledRun, ScalingSeries};
+use crate::mpisim::rank::deterministic_payload;
+use crate::netmodel::phase::in_degree_by_rank;
+use crate::runtime::engine::{build_engine, SortEngine};
+use crate::workloads::WorkloadKind;
+
+/// Verification result of a collective write.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    /// Ranks whose read-back matched.
+    pub ok: usize,
+    /// Ranks checked.
+    pub total: usize,
+}
+
+impl VerifyReport {
+    /// All ranks verified.
+    pub fn passed(&self) -> bool {
+        self.ok == self.total
+    }
+}
+
+/// Build the collective context pieces from a config (engine is returned
+/// separately because `CollectiveCtx` borrows it).
+pub fn build_engine_for(cfg: &RunConfig) -> Result<std::sync::Arc<dyn SortEngine>> {
+    build_engine(cfg.engine)
+}
+
+/// Run one collective write per `cfg`; returns the labelled outcome and,
+/// when `cfg.verify`, the byte-accurate read-back report.
+pub fn run_once(cfg: &RunConfig) -> Result<(LabelledRun, Option<VerifyReport>)> {
+    let engine = build_engine_for(cfg)?;
+    run_once_with_engine(cfg, engine.as_ref())
+}
+
+/// [`run_once`] with a caller-provided engine (avoids reloading XLA
+/// artifacts inside sweeps).
+pub fn run_once_with_engine(
+    cfg: &RunConfig,
+    engine: &dyn SortEngine,
+) -> Result<(LabelledRun, Option<VerifyReport>)> {
+    let topo = cfg.topology();
+    let workload = cfg.workload.build(cfg.scale);
+    let ranks = workload.generate(&topo, cfg.seed)?;
+    let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &cfg.net,
+        cpu: &cfg.cpu,
+        io: &cfg.io,
+        engine,
+        placement: cfg.placement,
+        n_global_agg: cfg.lustre.stripe_count,
+    };
+    let mut file = LustreFile::new(cfg.lustre);
+    let outcome = run_collective_write(&ctx, cfg.algorithm, ranks, &mut file)?;
+
+    let verify = if cfg.verify {
+        let mut ok = 0;
+        for (rank, view) in &views {
+            let want = deterministic_payload(cfg.seed, *rank, view.total_bytes());
+            let mut got = Vec::with_capacity(want.len());
+            for (off, len) in view.iter() {
+                got.extend_from_slice(&file.read_at(off, len));
+            }
+            if got == want {
+                ok += 1;
+            }
+        }
+        Some(VerifyReport { ok, total: views.len() })
+    } else {
+        None
+    };
+
+    Ok((
+        LabelledRun {
+            label: cfg.algorithm.name(),
+            breakdown: outcome.breakdown,
+            counters: outcome.counters,
+        },
+        verify,
+    ))
+}
+
+/// Pick a workload scale divisor so the run materializes roughly
+/// `budget_reqs` requests (the figures compare algorithms at identical
+/// scale, so shapes are preserved — DESIGN.md §Substitutions).
+pub fn auto_scale(kind: WorkloadKind, p: usize, budget_reqs: u64) -> u64 {
+    let (paper_reqs, _) = kind.build(1).paper_scale(p);
+    ((paper_reqs / budget_reqs as f64).ceil() as u64).max(1)
+}
+
+/// Figures 4–7: breakdown sweep over `P_L` values, final bar = two-phase.
+pub fn breakdown_sweep(base: &RunConfig, pl_values: &[usize]) -> Result<Vec<LabelledRun>> {
+    let engine = build_engine_for(base)?;
+    let mut runs = Vec::new();
+    for &pl in pl_values {
+        let mut cfg = base.clone();
+        cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: pl });
+        let (mut run, _) = run_once_with_engine(&cfg, engine.as_ref())?;
+        run.label = format!("P_L={pl}");
+        runs.push(run);
+    }
+    let mut cfg = base.clone();
+    cfg.algorithm = Algorithm::TwoPhase;
+    let (mut run, _) = run_once_with_engine(&cfg, engine.as_ref())?;
+    run.label = "two-phase".into();
+    runs.push(run);
+    Ok(runs)
+}
+
+/// Figure 3: strong-scaling bandwidth for one workload; returns the
+/// TAM(P_L=256) and two-phase series.
+pub fn fig3_series(
+    base: &RunConfig,
+    kind: WorkloadKind,
+    proc_counts: &[usize],
+    budget_reqs: u64,
+) -> Result<Vec<ScalingSeries>> {
+    let engine = build_engine_for(base)?;
+    let mut tam_points = Vec::new();
+    let mut two_points = Vec::new();
+    for &p in proc_counts {
+        if p % base.ppn != 0 {
+            return Err(Error::config(format!("P={p} not divisible by ppn={}", base.ppn)));
+        }
+        let mut cfg = base.clone();
+        cfg.workload = kind;
+        cfg.nodes = p / base.ppn;
+        cfg.scale = auto_scale(kind, p, budget_reqs);
+        cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 256 });
+        let (tam, _) = run_once_with_engine(&cfg, engine.as_ref())?;
+        cfg.algorithm = Algorithm::TwoPhase;
+        let (two, _) = run_once_with_engine(&cfg, engine.as_ref())?;
+        tam_points.push((p, tam.breakdown.bandwidth(tam.counters.bytes)));
+        two_points.push((p, two.breakdown.bandwidth(two.counters.bytes)));
+    }
+    Ok(vec![
+        ScalingSeries { label: "TAM(P_L=256)".into(), points: tam_points },
+        ScalingSeries { label: "two-phase".into(), points: two_points },
+    ])
+}
+
+/// Figure 2: per-global-aggregator in-degree (congestion) for two-phase
+/// vs TAM on the same workload.  Returns `(label, max_in_degree,
+/// mean_in_degree, n_messages)` rows.
+pub fn fig2_congestion(base: &RunConfig) -> Result<Vec<(String, usize, f64, usize)>> {
+    let engine = build_engine_for(base)?;
+    let mut rows = Vec::new();
+    for algo in [
+        Algorithm::TwoPhase,
+        Algorithm::Tam(TamConfig { total_local_aggregators: 256.min(base.nodes * base.ppn) }),
+    ] {
+        let mut cfg = base.clone();
+        cfg.algorithm = algo;
+        let (run, _) = run_once_with_engine(&cfg, engine.as_ref())?;
+        let c = &run.counters;
+        let mean = if c.msgs_inter == 0 {
+            0.0
+        } else {
+            c.msgs_inter as f64 / cfg.lustre.stripe_count.min(cfg.nodes * cfg.ppn) as f64
+        };
+        rows.push((algo.name(), c.max_in_degree, mean, c.msgs_inter));
+    }
+    Ok(rows)
+}
+
+/// Table I rows at a given topology + budget.
+pub fn table1_rows(topo: &Topology, budget_reqs: u64) -> Result<Vec<Vec<String>>> {
+    let mut rows = Vec::new();
+    for kind in WorkloadKind::paper_set() {
+        let scale = auto_scale(kind, topo.nprocs(), budget_reqs);
+        let w = kind.build(scale);
+        let stats = w.table_stats(topo)?;
+        rows.push(vec![
+            kind.to_string(),
+            format!("{:.3e}", stats.paper_requests),
+            crate::util::human_bytes(stats.paper_bytes),
+            format!("{}", stats.n_requests),
+            crate::util::human_bytes(stats.write_bytes),
+            format!("1/{scale}"),
+        ]);
+    }
+    Ok(rows)
+}
+
+/// Figures 4–7 driver: for each node count, sweep `P_L` (powers of four
+/// up to `P`, always including 256 when it fits) plus the two-phase bar,
+/// and print the breakdown table.  Shared by the fig4–fig7 benches and
+/// the CLI.
+pub fn run_breakdown_grid(
+    kind: WorkloadKind,
+    nodes_list: &[usize],
+    ppn: usize,
+    budget: u64,
+) -> Result<()> {
+    for &nodes in nodes_list {
+        let p = nodes * ppn;
+        let mut pls: Vec<usize> = [16usize, 64, 256, 1024, 4096]
+            .into_iter()
+            .filter(|&x| x >= nodes && x < p)
+            .collect();
+        if pls.is_empty() {
+            pls.push(nodes);
+        }
+        let mut cfg = RunConfig::default();
+        cfg.nodes = nodes;
+        cfg.ppn = ppn;
+        cfg.workload = kind;
+        cfg.scale = auto_scale(kind, p, budget);
+        println!(
+            "\n{kind} @ {nodes} nodes x {ppn} ppn (P={p}), scale 1/{}, P_L sweep {pls:?} + two-phase:",
+            cfg.scale
+        );
+        match breakdown_sweep(&cfg, &pls) {
+            Ok(runs) => {
+                print!("{}", crate::metrics::breakdown_table(&runs));
+                // §IV-D crossover: report the best P_L.
+                let best = runs
+                    .iter()
+                    .min_by(|a, b| {
+                        a.breakdown.total().partial_cmp(&b.breakdown.total()).unwrap()
+                    })
+                    .unwrap();
+                println!(
+                    "best end-to-end: {} ({:.3} ms)  [paper: P_L=256 minimizes f(P_L)+g(P_L)]",
+                    best.label,
+                    best.breakdown.total() * 1e3
+                );
+                // Coalescing progression (paper §V-B quotes these counts).
+                if let Some(r) = runs.first() {
+                    println!(
+                        "requests posted={} after-intra={} at-io={} (first bar)",
+                        r.counters.reqs_posted, r.counters.reqs_after_intra, r.counters.reqs_at_io
+                    );
+                }
+            }
+            Err(e) => println!("skipped: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Message-matrix summary used by the Fig-2 bench: in-degree histogram of
+/// an explicit message list (re-exported convenience).
+pub fn in_degree_summary(msgs: &[crate::netmodel::Message]) -> (usize, f64) {
+    let h = in_degree_by_rank(msgs);
+    let max = h.values().copied().max().unwrap_or(0);
+    let mean = if h.is_empty() {
+        0.0
+    } else {
+        h.values().sum::<usize>() as f64 / h.len() as f64
+    };
+    (max, mean)
+}
+
+/// Convenience accessor for outcome totals in benches.
+pub fn outcome_summary(o: &CollectiveOutcome) -> (f64, f64, f64, f64) {
+    (
+        o.breakdown.intra_total(),
+        o.breakdown.inter_total(),
+        o.breakdown.io_phase,
+        o.breakdown.total(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = 2;
+        cfg.ppn = 8;
+        cfg.workload = WorkloadKind::Strided;
+        cfg.lustre = crate::lustre::LustreConfig::new(1 << 16, 4);
+        cfg.verify = true;
+        cfg
+    }
+
+    #[test]
+    fn run_once_verifies() {
+        let cfg = small_cfg();
+        let (run, verify) = run_once(&cfg).unwrap();
+        let v = verify.unwrap();
+        assert!(v.passed(), "verify failed: {}/{}", v.ok, v.total);
+        assert!(run.breakdown.total() > 0.0);
+        assert!(run.counters.bytes > 0);
+    }
+
+    #[test]
+    fn run_once_tam_verifies() {
+        let mut cfg = small_cfg();
+        cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 4 });
+        let (_, verify) = run_once(&cfg).unwrap();
+        assert!(verify.unwrap().passed());
+    }
+
+    #[test]
+    fn breakdown_sweep_shapes() {
+        let mut cfg = small_cfg();
+        cfg.verify = false;
+        let runs = breakdown_sweep(&cfg, &[2, 4, 8]).unwrap();
+        assert_eq!(runs.len(), 4);
+        assert_eq!(runs[3].label, "two-phase");
+        // §IV-D: intra time decreases with more local aggregators.
+        assert!(runs[0].breakdown.intra_total() >= runs[2].breakdown.intra_total());
+    }
+
+    #[test]
+    fn auto_scale_reasonable() {
+        let s = auto_scale(WorkloadKind::E3smF, 16384, 1_000_000);
+        assert!(s >= 1000, "F case must scale down heavily, got {s}");
+        assert_eq!(auto_scale(WorkloadKind::Contig, 64, 1_000_000), 1);
+    }
+
+    #[test]
+    fn fig2_congestion_tam_lower() {
+        let mut cfg = small_cfg();
+        cfg.verify = false;
+        let rows = fig2_congestion(&cfg).unwrap();
+        assert_eq!(rows.len(), 2);
+        // Row 0: two-phase; row 1: TAM — TAM's in-degree must not exceed.
+        assert!(rows[1].1 <= rows[0].1);
+    }
+}

@@ -1,0 +1,93 @@
+//! I/O-phase cost model: parallel OSTs with seek + bandwidth + lock terms.
+//!
+//! The paper keeps the I/O phase identical between two-phase I/O and TAM
+//! (§IV-C) and its experiments show it roughly constant under strong
+//! scaling (total bytes fixed, aggregator count fixed).  The model captures
+//! that: OSTs drain in parallel; each OST's time is `extents · seek +
+//! bytes / bandwidth` plus a serialization penalty per lock conflict.
+
+use super::storage::OstStats;
+
+/// Cost parameters for one OST (all OSTs identical, as on Theta).
+#[derive(Clone, Copy, Debug)]
+pub struct IoModel {
+    /// Seconds per noncontiguous extent (seek/RPC setup).
+    pub seek: f64,
+    /// OST streaming bandwidth, bytes/second.
+    pub ost_bandwidth: f64,
+    /// Serialization penalty per extent-lock conflict (seconds).
+    pub lock_penalty: f64,
+}
+
+impl Default for IoModel {
+    /// Order-of-magnitude Theta Lustre (sonexion) per-OST figures; the
+    /// aggregate (56 OSTs) peaks at a few hundred GB/s of streaming writes.
+    fn default() -> Self {
+        IoModel {
+            seek: 4.0e-4,
+            ost_bandwidth: 7.5e8, // 750 MB/s per OST
+            lock_penalty: 1.0e-3,
+        }
+    }
+}
+
+impl IoModel {
+    /// Time for one OST's accumulated work.
+    pub fn ost_time(&self, s: &OstStats) -> f64 {
+        s.extents as f64 * self.seek
+            + s.bytes as f64 / self.ost_bandwidth
+            + s.lock_conflicts as f64 * self.lock_penalty
+    }
+
+    /// I/O-phase time: OSTs work in parallel → max over OSTs.
+    pub fn phase_time(&self, stats: &[OstStats]) -> f64 {
+        stats.iter().map(|s| self.ost_time(s)).fold(0.0, f64::max)
+    }
+
+    /// Aggregate achieved bandwidth for a phase (bytes, time).
+    pub fn bandwidth(total_bytes: u64, time: f64) -> f64 {
+        if time <= 0.0 {
+            0.0
+        } else {
+            total_bytes as f64 / time
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st(bytes: u64, extents: u64, conflicts: u64) -> OstStats {
+        OstStats { bytes, extents, lock_acquisitions: extents, lock_conflicts: conflicts }
+    }
+
+    #[test]
+    fn parallel_osts_take_max() {
+        let m = IoModel::default();
+        let a = st(1 << 30, 1, 0);
+        let b = st(1 << 20, 1, 0);
+        let phase = m.phase_time(&[a.clone(), b]);
+        assert!((phase - m.ost_time(&a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seeks_dominate_fragmented_io() {
+        let m = IoModel::default();
+        let frag = st(1 << 20, 10_000, 0);
+        let contig = st(1 << 20, 1, 0);
+        assert!(m.ost_time(&frag) > 100.0 * m.ost_time(&contig));
+    }
+
+    #[test]
+    fn lock_conflicts_penalized() {
+        let m = IoModel::default();
+        assert!(m.ost_time(&st(0, 0, 5)) > m.ost_time(&st(0, 0, 0)));
+    }
+
+    #[test]
+    fn bandwidth_math() {
+        assert_eq!(IoModel::bandwidth(1000, 2.0), 500.0);
+        assert_eq!(IoModel::bandwidth(1000, 0.0), 0.0);
+    }
+}

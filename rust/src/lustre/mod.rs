@@ -1,0 +1,119 @@
+//! Lustre file-system simulator: striping, OSTs, extent locks, storage.
+//!
+//! The paper's I/O phase depends on Lustre specifics: the file is striped
+//! round-robin across `stripe_count` OSTs in `stripe_size` units; ROMIO
+//! picks one global aggregator per OST so every aggregator only ever
+//! touches "its" OST (no extent-lock conflicts, §II/§IV-C), and each
+//! two-phase round writes at most one stripe per aggregator.
+//!
+//! * [`LustreConfig`] — stripe geometry + the stripe↔OST/offset math.
+//! * [`storage`] — byte-accurate in-memory OST stores (read-back
+//!   verification) + per-OST I/O accounting.
+//! * [`iomodel`] — the I/O-phase cost model (seek + bandwidth per OST,
+//!   parallel across OSTs, lock-conflict serialization penalty).
+
+pub mod iomodel;
+pub mod storage;
+
+pub use iomodel::IoModel;
+pub use storage::{LustreFile, OstStats};
+
+/// Stripe geometry of a shared file.
+#[derive(Clone, Copy, Debug)]
+pub struct LustreConfig {
+    /// Bytes per stripe unit (Theta experiments: 1 MiB).
+    pub stripe_size: u64,
+    /// Number of OSTs the file is striped over (Theta: 56).
+    pub stripe_count: usize,
+}
+
+impl Default for LustreConfig {
+    fn default() -> Self {
+        LustreConfig { stripe_size: 1 << 20, stripe_count: 56 }
+    }
+}
+
+impl LustreConfig {
+    /// New geometry; panics on zeros (config-layer invariant).
+    pub fn new(stripe_size: u64, stripe_count: usize) -> Self {
+        assert!(stripe_size > 0 && stripe_count > 0);
+        LustreConfig { stripe_size, stripe_count }
+    }
+
+    /// Stripe index containing a byte offset.
+    pub fn stripe_of(&self, offset: u64) -> u64 {
+        offset / self.stripe_size
+    }
+
+    /// OST serving a byte offset (round-robin striping).
+    pub fn ost_of(&self, offset: u64) -> usize {
+        (self.stripe_of(offset) % self.stripe_count as u64) as usize
+    }
+
+    /// Byte range `[start, end)` of stripe `s`.
+    pub fn stripe_range(&self, s: u64) -> (u64, u64) {
+        (s * self.stripe_size, (s + 1) * self.stripe_size)
+    }
+
+    /// Split `[offset, offset+len)` at stripe boundaries, yielding
+    /// `(ost, offset, len)` pieces — the unit of OST I/O and locking.
+    pub fn split_by_stripe(&self, offset: u64, len: u64) -> Vec<(usize, u64, u64)> {
+        let mut out = Vec::new();
+        let mut cur = offset;
+        let end = offset + len;
+        while cur < end {
+            let stripe = self.stripe_of(cur);
+            let (_, sup) = self.stripe_range(stripe);
+            let piece_end = end.min(sup);
+            out.push((self.ost_of(cur), cur, piece_end - cur));
+            cur = piece_end;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripe_and_ost_math() {
+        let c = LustreConfig::new(1024, 4);
+        assert_eq!(c.stripe_of(0), 0);
+        assert_eq!(c.stripe_of(1023), 0);
+        assert_eq!(c.stripe_of(1024), 1);
+        assert_eq!(c.ost_of(0), 0);
+        assert_eq!(c.ost_of(1024), 1);
+        assert_eq!(c.ost_of(4096), 0); // wraps at stripe_count
+    }
+
+    #[test]
+    fn stripe_range_bounds() {
+        let c = LustreConfig::new(100, 3);
+        assert_eq!(c.stripe_range(2), (200, 300));
+    }
+
+    #[test]
+    fn split_by_stripe_single_piece() {
+        let c = LustreConfig::new(1024, 4);
+        assert_eq!(c.split_by_stripe(10, 100), vec![(0, 10, 100)]);
+    }
+
+    #[test]
+    fn split_by_stripe_crosses_boundaries() {
+        let c = LustreConfig::new(100, 2);
+        let pieces = c.split_by_stripe(50, 200);
+        assert_eq!(
+            pieces,
+            vec![(0, 50, 50), (1, 100, 100), (0, 200, 50)]
+        );
+        let total: u64 = pieces.iter().map(|p| p.2).sum();
+        assert_eq!(total, 200);
+    }
+
+    #[test]
+    fn split_zero_len_empty() {
+        let c = LustreConfig::default();
+        assert!(c.split_by_stripe(5, 0).is_empty());
+    }
+}

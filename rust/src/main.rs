@@ -1,0 +1,209 @@
+//! `tamio` CLI — the coordinator launcher.
+//!
+//! ```text
+//! tamio run      [--config file.toml] [--nodes N --ppn Q --workload W
+//!                 --algorithm two-phase|tam|tam:<P_L> --engine native|xla
+//!                 --scale S --verify ...]
+//! tamio sweep    [--pl 16,64,256,...] <run flags>    # Figures 4–7 panels
+//! tamio scaling  [--procs 256,1024,...] <run flags>  # Figure 3 series
+//! tamio table1   [--budget-reqs N]                   # Table I
+//! tamio congest  <run flags>                         # Figure 2 stats
+//! tamio info                                         # engine/platform
+//! ```
+//!
+//! All `--key value` flags map onto [`tamio::config::RunConfig`] keys; a
+//! `--config` TOML-subset file is applied first, CLI flags override.
+
+use tamio::config::{KvMap, RunConfig};
+use tamio::error::Result;
+use tamio::experiments;
+use tamio::metrics::{breakdown_table, render_table, scaling_table};
+use tamio::util::{human_bytes, human_secs};
+use tamio::workloads::WorkloadKind;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let (mut kv, positional) = KvMap::from_cli(args)?;
+    let cmd = positional.first().map(String::as_str).unwrap_or("help");
+
+    // Flags consumed by subcommands rather than RunConfig.
+    let config_file = kv.take("config");
+    let pl_list = kv.take("pl");
+    let procs_list = kv.take("procs");
+    let budget: u64 = kv
+        .take("budget-reqs")
+        .map(|s| s.parse().unwrap_or(200_000))
+        .unwrap_or(200_000);
+
+    let mut cfg = RunConfig::default();
+    if let Some(path) = config_file {
+        cfg.apply(&KvMap::from_file(path)?)?;
+    }
+    cfg.apply(&kv)?;
+
+    match cmd {
+        "run" => cmd_run(&cfg),
+        "sweep" => cmd_sweep(&cfg, pl_list.as_deref()),
+        "scaling" => cmd_scaling(&cfg, procs_list.as_deref(), budget),
+        "table1" => cmd_table1(&cfg, budget),
+        "congest" => cmd_congest(&cfg),
+        "info" => cmd_info(),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+tamio — Two-layer Aggregation Method for MPI collective I/O (paper repro)
+
+USAGE: tamio <run|sweep|scaling|table1|congest|info> [--key value ...]
+
+Common flags (RunConfig keys):
+  --nodes N --ppn Q --workload e3sm-g|e3sm-f|btio|s3d|contig|strided
+  --algorithm two-phase|tam|tam:<P_L>   --engine native|xla
+  --scale S --stripe_size B --stripe_count K --send_mode isend|issend
+  --placement spread|cray --seed S --verify --config file.toml
+
+Subcommand flags:
+  sweep:   --pl 16,64,256          breakdown panels (Figures 4-7)
+  scaling: --procs 256,1024,4096   Figure 3 series; --budget-reqs N
+  table1:  --budget-reqs N
+";
+
+fn cmd_run(cfg: &RunConfig) -> Result<()> {
+    let topo = cfg.topology();
+    println!(
+        "run: {} on {} nodes x {} ppn (P={}), algo={}, engine={}, stripes {}x{}",
+        cfg.workload,
+        cfg.nodes,
+        cfg.ppn,
+        topo.nprocs(),
+        cfg.algorithm.name(),
+        cfg.engine,
+        cfg.lustre.stripe_count,
+        human_bytes(cfg.lustre.stripe_size),
+    );
+    let t0 = std::time::Instant::now();
+    let (run, verify) = experiments::run_once(cfg)?;
+    let wall = t0.elapsed();
+    print!("{}", breakdown_table(std::slice::from_ref(&run)));
+    let c = &run.counters;
+    println!(
+        "requests: posted={} after-intra={} at-io={}  msgs: intra={} inter={} max-indegree={}",
+        c.reqs_posted, c.reqs_after_intra, c.reqs_at_io, c.msgs_intra, c.msgs_inter,
+        c.max_in_degree
+    );
+    println!(
+        "bytes={}  rounds={}  lock-conflicts={}  sim-time={}  wall={wall:?}",
+        human_bytes(c.bytes),
+        c.rounds,
+        c.lock_conflicts,
+        human_secs(run.breakdown.total()),
+    );
+    if let Some(v) = verify {
+        println!(
+            "verify: {}/{} ranks OK{}",
+            v.ok,
+            v.total,
+            if v.passed() { "" } else { "  <-- MISMATCH" }
+        );
+        if !v.passed() {
+            return Err(tamio::Error::Verify(format!("{}/{} ranks", v.ok, v.total)));
+        }
+    }
+    Ok(())
+}
+
+fn parse_list(s: Option<&str>, default: &[usize]) -> Vec<usize> {
+    s.map(|s| {
+        s.split(',')
+            .filter_map(|x| x.trim().parse().ok())
+            .collect::<Vec<usize>>()
+    })
+    .filter(|v| !v.is_empty())
+    .unwrap_or_else(|| default.to_vec())
+}
+
+fn cmd_sweep(cfg: &RunConfig, pl: Option<&str>) -> Result<()> {
+    let p = cfg.topology().nprocs();
+    let defaults: Vec<usize> = [16, 64, 256, 1024]
+        .into_iter()
+        .filter(|&x| x <= p)
+        .collect();
+    let pls = parse_list(pl, &defaults);
+    println!(
+        "breakdown sweep: {} P={} pl={:?} (last bar = two-phase)",
+        cfg.workload, p, pls
+    );
+    let runs = experiments::breakdown_sweep(cfg, &pls)?;
+    print!("{}", breakdown_table(&runs));
+    Ok(())
+}
+
+fn cmd_scaling(cfg: &RunConfig, procs: Option<&str>, budget: u64) -> Result<()> {
+    let procs = parse_list(procs, &[256, 1024, 4096]);
+    println!(
+        "strong scaling: {} procs={:?} ppn={} budget={budget} reqs",
+        cfg.workload, procs, cfg.ppn
+    );
+    let series = experiments::fig3_series(cfg, cfg.workload, &procs, budget)?;
+    print!("{}", scaling_table(&cfg.workload.to_string(), &series));
+    Ok(())
+}
+
+fn cmd_table1(cfg: &RunConfig, budget: u64) -> Result<()> {
+    let topo = cfg.topology();
+    let rows = experiments::table1_rows(&topo, budget)?;
+    let headers: Vec<String> = [
+        "dataset",
+        "paper #reqs",
+        "paper bytes",
+        "run #reqs",
+        "run bytes",
+        "scale",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    print!("{}", render_table(&headers, &rows));
+    Ok(())
+}
+
+fn cmd_congest(cfg: &RunConfig) -> Result<()> {
+    let rows = experiments::fig2_congestion(cfg)?;
+    let headers: Vec<String> = ["algorithm", "max in-degree", "mean msgs/agg", "total msgs"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let rows: Vec<Vec<String>> = rows
+        .into_iter()
+        .map(|(a, max, mean, n)| vec![a, max.to_string(), format!("{mean:.1}"), n.to_string()])
+        .collect();
+    print!("{}", render_table(&headers, &rows));
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("tamio {} — TAM collective-I/O reproduction", env!("CARGO_PKG_VERSION"));
+    println!("threads available: {}", tamio::util::parallel::default_threads());
+    match tamio::runtime::PjrtRuntime::load_default() {
+        Ok(rt) => {
+            println!("artifacts: {} (platform {})", rt.artifacts_dir().display(), rt.platform());
+            println!("batch sizes: {:?}", rt.batch_sizes());
+        }
+        Err(e) => println!("xla engine unavailable: {e}"),
+    }
+    for k in WorkloadKind::paper_set() {
+        println!("workload available: {k}");
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Reporting: breakdown tables, scaling series, CSV/JSON emitters.
+//!
+//! The bench harnesses print the same rows/series the paper's figures
+//! plot; these helpers keep the formatting consistent and provide CSV
+//! output for external plotting.
+
+pub mod report;
+
+pub use report::{render_table, write_csv, JsonWriter};
+
+use crate::coordinator::breakdown::{Breakdown, Counters};
+use crate::util::{human_bytes, human_secs};
+
+/// One labelled run (e.g. one bar of a Figure 4–7 panel).
+#[derive(Clone, Debug)]
+pub struct LabelledRun {
+    /// Bar label (e.g. "P_L=256" or "two-phase").
+    pub label: String,
+    /// Component times.
+    pub breakdown: Breakdown,
+    /// Volume counters.
+    pub counters: Counters,
+}
+
+/// Render a Figures-4–7-style breakdown table: one column per run, one
+/// row per component.
+pub fn breakdown_table(runs: &[LabelledRun]) -> String {
+    let mut headers = vec!["component".to_string()];
+    headers.extend(runs.iter().map(|r| r.label.clone()));
+    let comp_names: Vec<&'static str> =
+        Breakdown::default().rows().iter().map(|(n, _)| *n).collect();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (i, name) in comp_names.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        for r in runs {
+            row.push(human_secs(r.breakdown.rows()[i].1));
+        }
+        rows.push(row);
+    }
+    for (name, f) in [
+        ("intra_total", Breakdown::intra_total as fn(&Breakdown) -> f64),
+        ("inter_total", Breakdown::inter_total as fn(&Breakdown) -> f64),
+        ("end_to_end", Breakdown::total as fn(&Breakdown) -> f64),
+    ] {
+        let mut row = vec![name.to_string()];
+        for r in runs {
+            row.push(human_secs(f(&r.breakdown)));
+        }
+        rows.push(row);
+    }
+    let mut row = vec!["bandwidth".to_string()];
+    for r in runs {
+        row.push(format!("{}/s", human_bytes(r.breakdown.bandwidth(r.counters.bytes) as u64)));
+    }
+    rows.push(row);
+    render_table(&headers, &rows)
+}
+
+/// A strong-scaling series (Figure 3): `(P, bandwidth_bytes_per_s)`.
+#[derive(Clone, Debug)]
+pub struct ScalingSeries {
+    /// Series label (algorithm).
+    pub label: String,
+    /// Points `(nprocs, bandwidth B/s)`.
+    pub points: Vec<(usize, f64)>,
+}
+
+/// Render Figure-3-style series side by side.
+pub fn scaling_table(title: &str, series: &[ScalingSeries]) -> String {
+    let mut headers = vec![format!("{title} P")];
+    headers.extend(series.iter().map(|s| format!("{} (MiB/s)", s.label)));
+    let ps: Vec<usize> = series
+        .first()
+        .map(|s| s.points.iter().map(|p| p.0).collect())
+        .unwrap_or_default();
+    let mut rows = Vec::new();
+    for (i, p) in ps.iter().enumerate() {
+        let mut row = vec![p.to_string()];
+        for s in series {
+            row.push(format!("{:.1}", s.points[i].1 / (1024.0 * 1024.0)));
+        }
+        rows.push(row);
+    }
+    render_table(&headers, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_table_has_all_components() {
+        let run = LabelledRun {
+            label: "P_L=4".into(),
+            breakdown: Breakdown { intra_comm: 0.5, ..Default::default() },
+            counters: Counters { bytes: 1 << 20, ..Default::default() },
+        };
+        let t = breakdown_table(&[run]);
+        for name in ["intra_comm", "io_phase", "end_to_end", "bandwidth"] {
+            assert!(t.contains(name), "missing {name} in:\n{t}");
+        }
+        assert!(t.contains("P_L=4"));
+    }
+
+    #[test]
+    fn scaling_table_lists_points() {
+        let s = ScalingSeries {
+            label: "tam".into(),
+            points: vec![(256, 1e9), (1024, 2e9)],
+        };
+        let t = scaling_table("e3sm-g", &[s]);
+        assert!(t.contains("256"));
+        assert!(t.contains("1024"));
+        assert!(t.contains("tam"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Plain-text table rendering, CSV output, and a tiny JSON writer
+//! (serde is not available in the image).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Render an aligned ASCII table.
+pub fn render_table(headers: &[String], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in &widths {
+            let _ = write!(out, "+{}", "-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    for (i, h) in headers.iter().enumerate() {
+        let _ = write!(out, "| {h:width$} ", width = widths[i]);
+    }
+    out.push_str("|\n");
+    sep(&mut out);
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            let _ = write!(out, "| {cell:width$} ", width = widths[i]);
+        }
+        out.push_str("|\n");
+    }
+    sep(&mut out);
+    out
+}
+
+/// Write rows as CSV (no quoting needed for our numeric content; commas
+/// in cells are replaced defensively).
+pub fn write_csv(path: impl AsRef<Path>, headers: &[String], rows: &[Vec<String>]) -> Result<()> {
+    let clean = |s: &String| s.replace(',', ";");
+    let mut out = String::new();
+    out.push_str(&headers.iter().map(clean).collect::<Vec<_>>().join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.iter().map(clean).collect::<Vec<_>>().join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Minimal JSON object writer for structured reports.
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    fields: Vec<(String, String)>,
+}
+
+impl JsonWriter {
+    /// New empty object.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a numeric field.
+    pub fn num(mut self, key: &str, v: f64) -> Self {
+        self.fields.push((key.to_string(), format!("{v}")));
+        self
+    }
+
+    /// Add an integer field.
+    pub fn int(mut self, key: &str, v: u64) -> Self {
+        self.fields.push((key.to_string(), format!("{v}")));
+        self
+    }
+
+    /// Add a string field (escapes quotes and backslashes).
+    pub fn str(mut self, key: &str, v: &str) -> Self {
+        let escaped = v.replace('\\', "\\\\").replace('"', "\\\"");
+        self.fields.push((key.to_string(), format!("\"{escaped}\"")));
+        self
+    }
+
+    /// Add a raw (pre-serialized) field, e.g. a nested object.
+    pub fn raw(mut self, key: &str, v: String) -> Self {
+        self.fields.push((key.to_string(), v));
+        self
+    }
+
+    /// Serialize.
+    pub fn finish(self) -> String {
+        let body = self
+            .fields
+            .into_iter()
+            .map(|(k, v)| format!("\"{k}\": {v}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!("{{{body}}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["a".into(), "long-header".into()],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("| a   | long-header |"));
+        assert!(t.contains("| 333 | 4           |"));
+    }
+
+    #[test]
+    fn csv_round_trip(){
+        let dir = std::env::temp_dir().join("tamio_csv_test.csv");
+        write_csv(&dir, &["x".into(), "y".into()], &[vec!["1".into(), "2,3".into()]]).unwrap();
+        let s = std::fs::read_to_string(&dir).unwrap();
+        assert_eq!(s, "x,y\n1,2;3\n");
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn json_writer_escapes() {
+        let j = JsonWriter::new()
+            .str("name", "a\"b")
+            .int("n", 3)
+            .num("t", 1.5)
+            .finish();
+        assert_eq!(j, "{\"name\": \"a\\\"b\", \"n\": 3, \"t\": 1.5}");
+    }
+}

@@ -1,0 +1,244 @@
+//! Flattened MPI file views: nondecreasing `(offset, length)` lists.
+
+use crate::error::{Error, Result};
+
+/// A flattened file view: parallel `offsets`/`lengths` arrays, offsets
+/// monotonically nondecreasing (the MPI file-view requirement the paper's
+/// heap merge relies on).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FlatView {
+    offsets: Vec<u64>,
+    lengths: Vec<u64>,
+}
+
+impl FlatView {
+    /// Empty view.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Build from pairs, validating the nondecreasing-offset invariant.
+    pub fn from_pairs(pairs: Vec<(u64, u64)>) -> Result<Self> {
+        let mut v = FlatView {
+            offsets: Vec::with_capacity(pairs.len()),
+            lengths: Vec::with_capacity(pairs.len()),
+        };
+        let mut prev = 0u64;
+        for (i, (off, len)) in pairs.into_iter().enumerate() {
+            if i > 0 && off < prev {
+                return Err(Error::Protocol(format!(
+                    "file view offsets must be nondecreasing: pair {i} has offset {off} < {prev}"
+                )));
+            }
+            prev = off;
+            v.offsets.push(off);
+            v.lengths.push(len);
+        }
+        Ok(v)
+    }
+
+    /// Build without validation (generator-internal use; debug-asserted).
+    pub fn from_pairs_unchecked(offsets: Vec<u64>, lengths: Vec<u64>) -> Self {
+        debug_assert_eq!(offsets.len(), lengths.len());
+        debug_assert!(offsets.windows(2).all(|w| w[0] <= w[1]));
+        FlatView { offsets, lengths }
+    }
+
+    /// Append one request; must keep offsets nondecreasing.
+    pub fn push(&mut self, offset: u64, length: u64) {
+        debug_assert!(self.offsets.last().is_none_or(|&last| offset >= last));
+        self.offsets.push(offset);
+        self.lengths.push(length);
+    }
+
+    /// Number of noncontiguous requests.
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// True when there are no requests.
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+
+    /// Total bytes covered.
+    pub fn total_bytes(&self) -> u64 {
+        self.lengths.iter().sum()
+    }
+
+    /// Offsets slice.
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// Lengths slice.
+    pub fn lengths(&self) -> &[u64] {
+        &self.lengths
+    }
+
+    /// Iterate `(offset, length)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.offsets.iter().copied().zip(self.lengths.iter().copied())
+    }
+
+    /// First byte offset covered (None when empty).
+    pub fn min_offset(&self) -> Option<u64> {
+        self.offsets.first().copied()
+    }
+
+    /// One-past-last byte offset covered (None when empty).
+    pub fn max_end(&self) -> Option<u64> {
+        self.iter().map(|(o, l)| o + l).max()
+    }
+
+    /// Coalesce adjacent exactly-contiguous requests in place
+    /// (`off[i] == off[i-1] + len[i-1]`), the paper's coalescing rule.
+    pub fn coalesce(&mut self) {
+        if self.offsets.len() < 2 {
+            return;
+        }
+        let mut w = 0usize;
+        for r in 1..self.offsets.len() {
+            if self.offsets[w] + self.lengths[w] == self.offsets[r] {
+                self.lengths[w] += self.lengths[r];
+            } else {
+                w += 1;
+                self.offsets[w] = self.offsets[r];
+                self.lengths[w] = self.lengths[r];
+            }
+        }
+        self.offsets.truncate(w + 1);
+        self.lengths.truncate(w + 1);
+    }
+
+    /// Intersect this view with the byte range `[lo, hi)`, returning the
+    /// contained (possibly clipped) requests and, for each, the byte offset
+    /// *within this view's payload* where the clipped piece starts — needed
+    /// to slice a rank's write buffer per file domain.
+    pub fn clip_to_range(&self, lo: u64, hi: u64) -> Vec<ClippedReq> {
+        let mut out = Vec::new();
+        let mut payload_cursor = 0u64;
+        for (off, len) in self.iter() {
+            let end = off + len;
+            let s = off.max(lo);
+            let e = end.min(hi);
+            if s < e {
+                out.push(ClippedReq {
+                    offset: s,
+                    length: e - s,
+                    payload_offset: payload_cursor + (s - off),
+                });
+            }
+            payload_cursor += len;
+        }
+        out
+    }
+
+    /// Validate the invariant (used by property tests / failure injection).
+    pub fn validate(&self) -> Result<()> {
+        if self.offsets.len() != self.lengths.len() {
+            return Err(Error::Protocol("offsets/lengths length mismatch".into()));
+        }
+        for w in self.offsets.windows(2) {
+            if w[0] > w[1] {
+                return Err(Error::Protocol(format!(
+                    "offsets decrease: {} > {}",
+                    w[0], w[1]
+                )));
+            }
+        }
+        for (o, l) in self.iter() {
+            if o.checked_add(l).is_none() {
+                return Err(Error::Protocol(format!("request [{o}, +{l}) overflows u64")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A request clipped to a file-domain range, carrying the location of its
+/// bytes within the owning rank's payload buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClippedReq {
+    /// Absolute file offset of the clipped piece.
+    pub offset: u64,
+    /// Length of the clipped piece.
+    pub length: u64,
+    /// Byte position within the owner's payload where the piece starts.
+    pub payload_offset: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_pairs_validates_order() {
+        assert!(FlatView::from_pairs(vec![(0, 4), (4, 4), (4, 2)]).is_ok());
+        assert!(FlatView::from_pairs(vec![(8, 4), (0, 4)]).is_err());
+    }
+
+    #[test]
+    fn totals() {
+        let v = FlatView::from_pairs(vec![(0, 4), (10, 6)]).unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.total_bytes(), 10);
+        assert_eq!(v.min_offset(), Some(0));
+        assert_eq!(v.max_end(), Some(16));
+    }
+
+    #[test]
+    fn coalesce_merges_contiguous_runs() {
+        let mut v = FlatView::from_pairs(vec![(0, 4), (4, 4), (8, 2), (20, 4), (24, 1)]).unwrap();
+        v.coalesce();
+        assert_eq!(
+            v.iter().collect::<Vec<_>>(),
+            vec![(0, 10), (20, 5)]
+        );
+    }
+
+    #[test]
+    fn coalesce_keeps_noncontiguous() {
+        let mut v = FlatView::from_pairs(vec![(0, 4), (5, 4)]).unwrap();
+        v.coalesce();
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn coalesce_zero_length_same_offset() {
+        let mut v = FlatView::from_pairs(vec![(0, 4), (4, 0), (4, 4)]).unwrap();
+        v.coalesce();
+        assert_eq!(v.iter().collect::<Vec<_>>(), vec![(0, 8)]);
+    }
+
+    #[test]
+    fn clip_to_range_clips_and_tracks_payload() {
+        let v = FlatView::from_pairs(vec![(0, 10), (20, 10)]).unwrap();
+        let c = v.clip_to_range(5, 25);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0], ClippedReq { offset: 5, length: 5, payload_offset: 5 });
+        assert_eq!(c[1], ClippedReq { offset: 20, length: 5, payload_offset: 10 });
+    }
+
+    #[test]
+    fn clip_to_range_empty_outside() {
+        let v = FlatView::from_pairs(vec![(0, 10)]).unwrap();
+        assert!(v.clip_to_range(100, 200).is_empty());
+        assert!(v.clip_to_range(10, 10).is_empty());
+    }
+
+    #[test]
+    fn clip_full_range_identity() {
+        let v = FlatView::from_pairs(vec![(3, 4), (9, 2)]).unwrap();
+        let c = v.clip_to_range(0, u64::MAX);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].payload_offset, 0);
+        assert_eq!(c[1].payload_offset, 4);
+    }
+
+    #[test]
+    fn validate_catches_overflow() {
+        let v = FlatView::from_pairs_unchecked(vec![u64::MAX - 1], vec![10]);
+        assert!(v.validate().is_err());
+    }
+}

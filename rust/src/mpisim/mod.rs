@@ -1,0 +1,21 @@
+//! MPI-like substrate: flattened file views, datatype flattening, rank
+//! state.
+//!
+//! MPI collective I/O describes each process's access with a *file view*; an
+//! implementation flattens the view into a monotonically nondecreasing list
+//! of `(offset, length)` pairs (the MPI standard requires nondecreasing
+//! offsets within one collective call — §IV-A of the paper relies on this
+//! for the heap-merge).  This module provides:
+//!
+//! * [`FlatView`] — the flattened request list + invariant checking,
+//! * [`subarray`] — flattening of N-dimensional subarray datatypes (the
+//!   file views BTIO and S3D-IO construct),
+//! * [`RankState`] — a simulated MPI process: its view and write payload.
+
+pub mod flatview;
+pub mod rank;
+pub mod subarray;
+
+pub use flatview::FlatView;
+pub use rank::RankState;
+pub use subarray::subarray_flatten;

@@ -1,0 +1,97 @@
+//! Simulated MPI process state for one collective I/O call.
+
+use crate::error::{Error, Result};
+use crate::util::SplitMix64;
+
+use super::FlatView;
+
+/// One MPI process's contribution to a collective write/read: its file view
+/// and (for writes) the payload bytes, laid out in view order.
+#[derive(Clone, Debug, Default)]
+pub struct RankState {
+    /// Global MPI rank.
+    pub rank: usize,
+    /// Flattened file view.
+    pub view: FlatView,
+    /// Write payload, `view.total_bytes()` long, in view order.
+    pub payload: Vec<u8>,
+}
+
+impl RankState {
+    /// Build a rank with a deterministic pseudo-random payload derived from
+    /// `(seed, rank)` — verification recomputes the same bytes.
+    pub fn with_random_payload(rank: usize, view: FlatView, seed: u64) -> Self {
+        let payload = deterministic_payload(seed, rank, view.total_bytes());
+        RankState { rank, view, payload }
+    }
+
+    /// Build a rank with an explicit payload; validates the length.
+    pub fn with_payload(rank: usize, view: FlatView, payload: Vec<u8>) -> Result<Self> {
+        if payload.len() as u64 != view.total_bytes() {
+            return Err(Error::Protocol(format!(
+                "rank {rank}: payload {} bytes but view covers {}",
+                payload.len(),
+                view.total_bytes()
+            )));
+        }
+        Ok(RankState { rank, view, payload })
+    }
+
+    /// Bytes this rank writes.
+    pub fn bytes(&self) -> u64 {
+        self.view.total_bytes()
+    }
+}
+
+/// The deterministic payload function shared by generators and verifiers:
+/// byte `i` of rank `r` under `seed` is reproducible anywhere.
+pub fn deterministic_payload(seed: u64, rank: usize, nbytes: u64) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    // Word-at-a-time fill (§Perf change 2): identical byte stream to the
+    // original byte-loop (little-endian word layout), ~8x fewer rng calls
+    // and bulk writes instead of per-byte push.
+    let n = nbytes as usize;
+    let mut out = vec![0u8; n];
+    let mut chunks = out.chunks_exact_mut(8);
+    for chunk in &mut chunks {
+        chunk.copy_from_slice(&rng.next_u64().to_le_bytes());
+    }
+    let rem = chunks.into_remainder();
+    if !rem.is_empty() {
+        let word = rng.next_u64().to_le_bytes();
+        rem.copy_from_slice(&word[..rem.len()]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_matches_view_size() {
+        let v = FlatView::from_pairs(vec![(0, 5), (10, 3)]).unwrap();
+        let r = RankState::with_random_payload(2, v, 42);
+        assert_eq!(r.payload.len(), 8);
+        assert_eq!(r.bytes(), 8);
+    }
+
+    #[test]
+    fn payload_deterministic() {
+        assert_eq!(
+            deterministic_payload(1, 3, 100),
+            deterministic_payload(1, 3, 100)
+        );
+        assert_ne!(
+            deterministic_payload(1, 3, 100),
+            deterministic_payload(1, 4, 100)
+        );
+    }
+
+    #[test]
+    fn explicit_payload_length_checked() {
+        let v = FlatView::from_pairs(vec![(0, 4)]).unwrap();
+        assert!(RankState::with_payload(0, v.clone(), vec![0; 3]).is_err());
+        assert!(RankState::with_payload(0, v, vec![0; 4]).is_ok());
+    }
+}

@@ -1,0 +1,176 @@
+//! Flattening of N-dimensional subarray datatypes
+//! (`MPI_Type_create_subarray` semantics, C order).
+//!
+//! BTIO and S3D-IO construct their file views as subarrays of a global
+//! array: each process owns a hyper-rectangle, and the flattened view is
+//! one contiguous run per innermost-dimension line.  The run count is the
+//! product of the non-innermost local sizes — this is exactly where the
+//! paper's Table I request counts come from.
+
+use crate::error::{Error, Result};
+
+use super::FlatView;
+
+/// Flatten a subarray datatype into a [`FlatView`].
+///
+/// * `global` — global array dimension sizes, C order (last dim contiguous).
+/// * `sub` — local hyper-rectangle sizes.
+/// * `start` — local hyper-rectangle origin.
+/// * `elem_size` — bytes per element.
+/// * `file_base` — byte offset of the array within the file.
+///
+/// Contiguous runs that happen to be exactly adjacent in the file (e.g.
+/// when the subarray spans a full innermost dimension) are *not* coalesced
+/// here: flattening reproduces what `MPI_Type_create_subarray` +
+/// `ADIOI_Flatten` yield; coalescing is the aggregators' job.
+pub fn subarray_flatten(
+    global: &[usize],
+    sub: &[usize],
+    start: &[usize],
+    elem_size: usize,
+    file_base: u64,
+) -> Result<FlatView> {
+    let ndims = global.len();
+    if sub.len() != ndims || start.len() != ndims {
+        return Err(Error::Workload(format!(
+            "subarray dims mismatch: global {ndims}, sub {}, start {}",
+            sub.len(),
+            start.len()
+        )));
+    }
+    if ndims == 0 {
+        return Ok(FlatView::empty());
+    }
+    for d in 0..ndims {
+        if start[d] + sub[d] > global[d] {
+            return Err(Error::Workload(format!(
+                "subarray out of bounds in dim {d}: start {} + sub {} > global {}",
+                start[d], sub[d], global[d]
+            )));
+        }
+    }
+    if sub.iter().any(|&s| s == 0) {
+        return Ok(FlatView::empty());
+    }
+
+    // Row-major strides in elements.
+    let mut stride = vec![1u64; ndims];
+    for d in (0..ndims.saturating_sub(1)).rev() {
+        stride[d] = stride[d + 1] * global[d + 1] as u64;
+    }
+
+    let inner = ndims - 1;
+    let run_len = (sub[inner] * elem_size) as u64;
+    let n_runs: usize = sub[..inner].iter().product();
+
+    let mut offsets = Vec::with_capacity(n_runs);
+    let mut lengths = Vec::with_capacity(n_runs);
+    // Iterate the outer dims odometer-style; offsets come out ascending
+    // because strides are positive and we count up in row-major order.
+    let mut idx = vec![0usize; inner];
+    loop {
+        let mut elem_off = start[inner] as u64 * stride[inner];
+        for d in 0..inner {
+            elem_off += (start[d] + idx[d]) as u64 * stride[d];
+        }
+        offsets.push(file_base + elem_off * elem_size as u64);
+        lengths.push(run_len);
+        // Advance odometer.
+        let mut d = inner;
+        loop {
+            if d == 0 {
+                return Ok(FlatView::from_pairs_unchecked(offsets, lengths));
+            }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < sub[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+/// Balanced 1-D block decomposition: bounds `[start, end)` of part `i`
+/// of `n` points split into `parts` near-equal blocks (the MPI_Cart
+/// convention when sizes don't divide evenly).
+pub fn balanced_bounds(n: usize, parts: usize, i: usize) -> (usize, usize) {
+    debug_assert!(parts > 0 && i < parts);
+    (i * n / parts, (i + 1) * n / parts)
+}
+
+/// Number of flattened runs of a subarray without materializing it.
+pub fn subarray_run_count(sub: &[usize]) -> u64 {
+    if sub.is_empty() || sub.contains(&0) {
+        return 0;
+    }
+    sub[..sub.len() - 1].iter().map(|&s| s as u64).product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_dim_is_single_run() {
+        let v = subarray_flatten(&[100], &[10], &[5], 8, 0).unwrap();
+        assert_eq!(v.iter().collect::<Vec<_>>(), vec![(40, 80)]);
+    }
+
+    #[test]
+    fn two_dim_rows() {
+        // global 4x6, sub 2x3 at (1,2), elem 1 byte.
+        let v = subarray_flatten(&[4, 6], &[2, 3], &[1, 2], 1, 0).unwrap();
+        assert_eq!(v.iter().collect::<Vec<_>>(), vec![(8, 3), (14, 3)]);
+    }
+
+    #[test]
+    fn three_dim_run_count_matches_formula() {
+        let v = subarray_flatten(&[8, 8, 8], &[2, 4, 3], &[0, 0, 0], 4, 0).unwrap();
+        assert_eq!(v.len() as u64, subarray_run_count(&[2, 4, 3]));
+        assert_eq!(v.len(), 8);
+        assert_eq!(v.total_bytes(), (2 * 4 * 3 * 4) as u64);
+    }
+
+    #[test]
+    fn full_inner_dim_stays_unmerged_runs() {
+        // sub spans the full innermost dim: physically contiguous rows,
+        // but flattening must still emit one run per row (coalescing is
+        // the aggregator's job).
+        let v = subarray_flatten(&[4, 4], &[2, 4], &[0, 0], 1, 0).unwrap();
+        assert_eq!(v.len(), 2);
+        let mut w = v.clone();
+        w.coalesce();
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn file_base_shifts_offsets() {
+        let a = subarray_flatten(&[4, 4], &[1, 2], &[0, 0], 1, 0).unwrap();
+        let b = subarray_flatten(&[4, 4], &[1, 2], &[0, 0], 1, 1000).unwrap();
+        assert_eq!(b.min_offset().unwrap(), a.min_offset().unwrap() + 1000);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        assert!(subarray_flatten(&[4, 4], &[2, 3], &[3, 0], 1, 0).is_err());
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        assert!(subarray_flatten(&[4, 4], &[2], &[0, 0], 1, 0).is_err());
+    }
+
+    #[test]
+    fn zero_extent_empty() {
+        let v = subarray_flatten(&[4, 4], &[0, 4], &[0, 0], 1, 0).unwrap();
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn offsets_ascending_4d() {
+        let v = subarray_flatten(&[3, 4, 5, 6], &[2, 2, 2, 3], &[1, 1, 1, 1], 8, 64).unwrap();
+        assert!(v.offsets().windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(v.len(), 2 * 2 * 2);
+    }
+}

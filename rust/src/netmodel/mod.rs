@@ -1,0 +1,141 @@
+//! Network cost model: α–β links with receiver-side congestion and the
+//! Isend/Issend pending-queue effect.
+//!
+//! The paper's observation (§III–§IV-D) is that two-phase I/O's all-to-many
+//! exchange congests the `P_G` global aggregators: each aggregator posts
+//! `P/P_G` receives per round, and receive processing serializes at the
+//! receiver.  TAM reduces the in-degree to `P_L/P_G`.  This module models
+//! exactly that effect so paper-scale figures can be regenerated without an
+//! Aries interconnect:
+//!
+//! * each message costs `α(link) + bytes · β(link)` with distinct
+//!   intra-node (shared-memory) and inter-node parameters;
+//! * a receiver serializes the per-message overhead of everything addressed
+//!   to it within a phase (the congestion term: `in_degree · α_recv` plus
+//!   byte drain at the link bandwidth);
+//! * a sender serializes injection of its own messages;
+//! * the phase time is the max over participants (BSP-style bound);
+//! * with [`SendMode::Isend`], unreceived sends from earlier rounds pile up
+//!   in the match queue and add a per-pending-message processing penalty —
+//!   the effect the paper fixed in ROMIO by switching to `MPI_Issend` (§V).
+//!
+//! The defaults approximate a Cray XC40/Aries + KNL system at the order-of-
+//! magnitude level (µs-scale latencies, ~10 GB/s inter-node links, ~0.3 µs
+//! match-queue processing); EXPERIMENTS.md records the calibration. Shapes,
+//! not absolute numbers, are the reproduction target.
+
+pub mod phase;
+
+pub use phase::{ExchangeStats, Message, PhaseCost};
+
+/// Asynchronous-send semantics used by the aggregation communication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendMode {
+    /// `MPI_Isend`: non-aggregators may race ahead into later rounds while
+    /// earlier small sends are still queued; pending messages inflate the
+    /// receiver's match-queue processing cost.
+    Isend,
+    /// `MPI_Issend`: synchronous completion — a round's sends must be
+    /// matched before `MPI_Waitall` returns, so no pending-queue buildup.
+    Issend,
+}
+
+impl std::fmt::Display for SendMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SendMode::Isend => write!(f, "isend"),
+            SendMode::Issend => write!(f, "issend"),
+        }
+    }
+}
+
+/// α–β + congestion parameters for the simulated interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct NetParams {
+    /// Per-message latency between nodes (seconds).
+    pub alpha_inter: f64,
+    /// Per-message latency within a node / shared memory (seconds).
+    pub alpha_intra: f64,
+    /// Inter-node inverse bandwidth (seconds per byte).
+    pub beta_inter: f64,
+    /// Intra-node inverse bandwidth (seconds per byte).
+    pub beta_intra: f64,
+    /// Receiver-side per-message processing (matching, unpacking) —
+    /// serializes at the receiver; this term carries the congestion effect.
+    pub recv_overhead: f64,
+    /// Sender-side per-message injection overhead (serializes at sender).
+    pub send_overhead: f64,
+    /// Extra receiver match-queue processing per *pending* unmatched send
+    /// when [`SendMode::Isend`] lets rounds overlap (seconds per pending
+    /// message per posted receive).
+    pub pending_penalty: f64,
+    /// Per-node NIC ingestion, seconds per byte of *inter-node* traffic
+    /// arriving at one node.  This is what distinguishes placement
+    /// policies: stacking several global aggregators on one node (Cray
+    /// round-robin) funnels their combined traffic through one NIC.
+    pub nic_ingest: f64,
+    /// Send mode for the aggregation phases.
+    pub send_mode: SendMode,
+}
+
+impl Default for NetParams {
+    /// Order-of-magnitude Cray XC40 (Aries, KNL) calibration; see
+    /// EXPERIMENTS.md §Calibration.
+    fn default() -> Self {
+        NetParams {
+            alpha_inter: 2.0e-6,
+            alpha_intra: 4.0e-7,
+            beta_inter: 1.0 / 8.0e9,
+            beta_intra: 1.0 / 20.0e9,
+            recv_overhead: 3.0e-7,
+            send_overhead: 1.5e-7,
+            pending_penalty: 6.0e-10,
+            nic_ingest: 1.0 / 10.0e9,
+            send_mode: SendMode::Issend,
+        }
+    }
+}
+
+impl NetParams {
+    /// Point-to-point cost of one message of `bytes` (no congestion).
+    pub fn msg_cost(&self, intra_node: bool, bytes: u64) -> f64 {
+        if intra_node {
+            self.alpha_intra + bytes as f64 * self.beta_intra
+        } else {
+            self.alpha_inter + bytes as f64 * self.beta_inter
+        }
+    }
+
+    /// With this mode, do unmatched sends from previous rounds persist?
+    pub fn carries_pending(&self) -> bool {
+        matches!(self.send_mode, SendMode::Isend)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intra_cheaper_than_inter() {
+        let p = NetParams::default();
+        assert!(p.msg_cost(true, 4096) < p.msg_cost(false, 4096));
+    }
+
+    #[test]
+    fn msg_cost_scales_with_bytes() {
+        let p = NetParams::default();
+        let small = p.msg_cost(false, 1024);
+        let big = p.msg_cost(false, 1024 * 1024);
+        assert!(big > small * 10.0);
+    }
+
+    #[test]
+    fn issend_default_has_no_pending() {
+        let p = NetParams::default();
+        assert!(!p.carries_pending());
+        let mut p2 = p;
+        p2.send_mode = SendMode::Isend;
+        assert!(p2.carries_pending());
+    }
+}

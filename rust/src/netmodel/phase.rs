@@ -1,0 +1,301 @@
+//! Phase-level cost evaluation: BSP-style max over per-rank timelines.
+//!
+//! A *phase* is one bulk message exchange (e.g. one round of request
+//! redistribution).  The simulator executes the data movement for real and
+//! hands this module the message list `(src, dst, bytes)`; the model returns
+//! the simulated phase time and congestion statistics.
+
+use std::collections::HashMap;
+
+use crate::cluster::Topology;
+
+use super::NetParams;
+
+/// One simulated message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Message {
+    /// Sending rank.
+    pub src: usize,
+    /// Receiving rank.
+    pub dst: usize,
+    /// Payload size in bytes.
+    pub bytes: u64,
+}
+
+impl Message {
+    /// Convenience constructor.
+    pub fn new(src: usize, dst: usize, bytes: u64) -> Self {
+        Self { src, dst, bytes }
+    }
+}
+
+/// Result of costing one exchange phase.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseCost {
+    /// Simulated wall time of the phase (seconds).
+    pub time: f64,
+    /// Time of the most loaded receiver (the congestion bound).
+    pub recv_bound: f64,
+    /// Time of the most loaded sender (the injection bound).
+    pub send_bound: f64,
+    /// Time of the most loaded node NIC (inter-node ingestion bound).
+    pub nic_bound: f64,
+    /// Maximum receiver in-degree (messages addressed to one rank).
+    pub max_in_degree: usize,
+    /// Total messages in the phase.
+    pub n_messages: usize,
+    /// Total bytes moved in the phase.
+    pub total_bytes: u64,
+}
+
+/// Aggregate statistics over a multi-phase exchange (e.g. all rounds).
+#[derive(Clone, Debug, Default)]
+pub struct ExchangeStats {
+    /// Total simulated time.
+    pub time: f64,
+    /// Total messages.
+    pub n_messages: usize,
+    /// Total bytes.
+    pub total_bytes: u64,
+    /// Max in-degree observed in any phase.
+    pub max_in_degree: usize,
+}
+
+impl ExchangeStats {
+    /// Fold one phase into the totals.
+    pub fn absorb(&mut self, c: &PhaseCost) {
+        self.time += c.time;
+        self.n_messages += c.n_messages;
+        self.total_bytes += c.total_bytes;
+        self.max_in_degree = self.max_in_degree.max(c.max_in_degree);
+    }
+}
+
+/// Cost one exchange phase.
+///
+/// `pending_per_receiver` carries the unmatched-send count from previous
+/// rounds for the [`super::SendMode::Isend`] pending-queue model; pass an
+/// empty map (or use [`cost_phase`]) for Issend semantics.
+pub fn cost_phase_with_pending(
+    params: &NetParams,
+    topo: &Topology,
+    msgs: &[Message],
+    pending_per_receiver: &HashMap<usize, u64>,
+) -> PhaseCost {
+    let mut recv_time: HashMap<usize, f64> = HashMap::new();
+    let mut send_time: HashMap<usize, f64> = HashMap::new();
+    let mut nic_time: HashMap<usize, f64> = HashMap::new();
+    let mut in_degree: HashMap<usize, usize> = HashMap::new();
+    let mut total_bytes = 0u64;
+
+    for m in msgs {
+        let intra = topo.same_node(m.src, m.dst);
+        let wire = params.msg_cost(intra, m.bytes);
+        // Receiver serializes matching + draining of everything addressed
+        // to it: this is where all-to-many congestion shows up.
+        let pending = *pending_per_receiver.get(&m.dst).unwrap_or(&0) as f64;
+        *recv_time.entry(m.dst).or_default() +=
+            params.recv_overhead + wire + pending * params.pending_penalty;
+        // Sender serializes injection but overlaps transfer completion.
+        *send_time.entry(m.src).or_default() +=
+            params.send_overhead + if intra { 0.0 } else { m.bytes as f64 * params.beta_inter };
+        // Inter-node traffic shares the destination node's NIC: stacking
+        // aggregators on a node concentrates this bound.
+        if !intra {
+            *nic_time.entry(topo.node_of(m.dst)).or_default() +=
+                m.bytes as f64 * params.nic_ingest;
+        }
+        *in_degree.entry(m.dst).or_default() += 1;
+        total_bytes += m.bytes;
+    }
+
+    let recv_bound = recv_time.values().cloned().fold(0.0, f64::max);
+    let send_bound = send_time.values().cloned().fold(0.0, f64::max);
+    let nic_bound = nic_time.values().cloned().fold(0.0, f64::max);
+    PhaseCost {
+        time: recv_bound.max(send_bound).max(nic_bound),
+        recv_bound,
+        send_bound,
+        nic_bound,
+        max_in_degree: in_degree.values().cloned().max().unwrap_or(0),
+        n_messages: msgs.len(),
+        total_bytes,
+    }
+}
+
+/// Cost one exchange phase with no pending-queue carry-over.
+pub fn cost_phase(params: &NetParams, topo: &Topology, msgs: &[Message]) -> PhaseCost {
+    cost_phase_with_pending(params, topo, msgs, &HashMap::new())
+}
+
+/// Tracks unmatched sends across rounds for the Isend model.
+///
+/// Under `MPI_Isend`, non-aggregators post sends and immediately continue
+/// into the next round; the receiver's match queue grows with every round
+/// still in flight.  Under `MPI_Issend` the queue drains each round.
+#[derive(Debug, Default)]
+pub struct PendingQueue {
+    pending: HashMap<usize, u64>,
+}
+
+impl PendingQueue {
+    /// New empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cost a round and update the queue according to the send mode.
+    pub fn cost_round(
+        &mut self,
+        params: &NetParams,
+        topo: &Topology,
+        msgs: &[Message],
+    ) -> PhaseCost {
+        let cost = cost_phase_with_pending(params, topo, msgs, &self.pending);
+        if params.carries_pending() {
+            // A fraction of this round's small sends stay unmatched when the
+            // senders race ahead; accumulate them on the receivers.
+            for m in msgs {
+                *self.pending.entry(m.dst).or_default() += 1;
+            }
+        } else {
+            self.pending.clear();
+        }
+        cost
+    }
+
+    /// Current pending count for a rank (tests/diagnostics).
+    pub fn pending_for(&self, rank: usize) -> u64 {
+        *self.pending.get(&rank).unwrap_or(&0)
+    }
+}
+
+/// Per-receiver in-degree histogram for an exchange — the data behind the
+/// paper's Figure 2 congestion illustration.
+pub fn in_degree_by_rank(msgs: &[Message]) -> HashMap<usize, usize> {
+    let mut h = HashMap::new();
+    for m in msgs {
+        *h.entry(m.dst).or_default() += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::new(2, 4)
+    }
+
+    #[test]
+    fn empty_phase_costs_nothing() {
+        let c = cost_phase(&NetParams::default(), &topo(), &[]);
+        assert_eq!(c.time, 0.0);
+        assert_eq!(c.n_messages, 0);
+    }
+
+    #[test]
+    fn congestion_grows_with_in_degree() {
+        let p = NetParams::default();
+        let t = Topology::new(4, 4);
+        // 15 senders -> 1 receiver vs 15 senders -> 15 receivers.
+        let fan_in: Vec<Message> =
+            (1..16).map(|s| Message::new(s, 0, 1024)).collect();
+        let spread: Vec<Message> =
+            (1..16).map(|s| Message::new(s, (s + 1) % 16, 1024)).collect();
+        let c1 = cost_phase(&p, &t, &fan_in);
+        let c2 = cost_phase(&p, &t, &spread);
+        assert!(c1.time > c2.time * 4.0, "fan-in must congest: {} vs {}", c1.time, c2.time);
+        assert_eq!(c1.max_in_degree, 15);
+    }
+
+    #[test]
+    fn intra_node_phase_cheaper() {
+        let p = NetParams::default();
+        let t = Topology::new(2, 4);
+        let intra: Vec<Message> = (1..4).map(|s| Message::new(s, 0, 1 << 20)).collect();
+        let inter: Vec<Message> = (1..4).map(|s| Message::new(4 + s, 0, 1 << 20)).collect();
+        assert!(cost_phase(&p, &t, &intra).time < cost_phase(&p, &t, &inter).time);
+    }
+
+    #[test]
+    fn isend_pending_queue_inflates_later_rounds() {
+        let mut p = NetParams::default();
+        p.send_mode = super::super::SendMode::Isend;
+        let t = Topology::new(4, 4);
+        let msgs: Vec<Message> = (1..16).map(|s| Message::new(s, 0, 64)).collect();
+        let mut q = PendingQueue::new();
+        let first = q.cost_round(&p, &t, &msgs).time;
+        for _ in 0..200 {
+            q.cost_round(&p, &t, &msgs);
+        }
+        let late = q.cost_round(&p, &t, &msgs).time;
+        assert!(late > first, "pending queue must grow round cost");
+        assert!(q.pending_for(0) > 0);
+    }
+
+    #[test]
+    fn issend_rounds_stay_flat() {
+        let p = NetParams::default(); // Issend default
+        let t = Topology::new(4, 4);
+        let msgs: Vec<Message> = (1..16).map(|s| Message::new(s, 0, 64)).collect();
+        let mut q = PendingQueue::new();
+        let first = q.cost_round(&p, &t, &msgs).time;
+        for _ in 0..200 {
+            q.cost_round(&p, &t, &msgs);
+        }
+        let late = q.cost_round(&p, &t, &msgs).time;
+        assert!((late - first).abs() < 1e-12);
+        assert_eq!(q.pending_for(0), 0);
+    }
+
+    #[test]
+    fn nic_bound_punishes_stacked_receivers() {
+        // Same message set, receivers on one node vs spread across nodes:
+        // the single-node case saturates that node's NIC.
+        let p = NetParams::default();
+        let t = Topology::new(4, 4);
+        let stacked: Vec<Message> =
+            (4..16).map(|s| Message::new(s, s % 4, 1 << 20)).collect();
+        let spread: Vec<Message> =
+            (0..12).map(|s| Message::new(s, (s + 4) % 16, 1 << 20)).collect();
+        let c1 = cost_phase(&p, &t, &stacked);
+        let c2 = cost_phase(&p, &t, &spread);
+        assert!(c1.nic_bound > c2.nic_bound * 2.0, "{} vs {}", c1.nic_bound, c2.nic_bound);
+    }
+
+    #[test]
+    fn intra_messages_skip_the_nic() {
+        let p = NetParams::default();
+        let t = Topology::new(2, 4);
+        let intra = vec![Message::new(1, 0, 1 << 20)];
+        assert_eq!(cost_phase(&p, &t, &intra).nic_bound, 0.0);
+    }
+
+    #[test]
+    fn stats_absorb_accumulates() {
+        let p = NetParams::default();
+        let t = topo();
+        let msgs = vec![Message::new(1, 0, 10), Message::new(2, 0, 20)];
+        let c = cost_phase(&p, &t, &msgs);
+        let mut s = ExchangeStats::default();
+        s.absorb(&c);
+        s.absorb(&c);
+        assert_eq!(s.n_messages, 4);
+        assert_eq!(s.total_bytes, 60);
+        assert!(s.time > 0.0);
+    }
+
+    #[test]
+    fn in_degree_histogram() {
+        let msgs = vec![
+            Message::new(1, 0, 1),
+            Message::new(2, 0, 1),
+            Message::new(3, 5, 1),
+        ];
+        let h = in_degree_by_rank(&msgs);
+        assert_eq!(h[&0], 2);
+        assert_eq!(h[&5], 1);
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny property-testing harness (proptest is not in the image).
+//!
+//! [`forall`] runs a property over `cases` deterministic random cases; on
+//! failure it retries with progressively simpler size hints (shrink-lite)
+//! and reports the failing seed so the case can be replayed exactly.
+
+use crate::util::SplitMix64;
+
+/// Size hint passed to generators; shrinks on failure.
+#[derive(Debug)]
+pub struct Gen<'a> {
+    /// PRNG for this case.
+    pub rng: &'a mut SplitMix64,
+    /// Soft upper bound for collection sizes.
+    pub size: usize,
+}
+
+impl Gen<'_> {
+    /// Uniform usize in `[lo, hi]` scaled into the current size budget.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size);
+        if hi <= lo {
+            lo
+        } else {
+            lo + self.rng.gen_range((hi - lo + 1) as u64) as usize
+        }
+    }
+
+    /// Random u64 below `bound`.
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        self.rng.gen_range(bound.max(1))
+    }
+
+    /// Random bool with probability `p`.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+}
+
+/// Run `prop` over `cases` random cases derived from `seed`.
+///
+/// `prop` returns `Err(description)` to fail.  On failure the harness
+/// retries the same case seed at smaller size hints to report the
+/// simplest reproduction it can find, then panics with seed + message.
+pub fn forall<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut root = SplitMix64::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let run = |size: usize, prop: &mut F| -> Result<(), String> {
+            let mut rng = SplitMix64::new(case_seed);
+            let mut g = Gen { rng: &mut rng, size };
+            prop(&mut g)
+        };
+        if let Err(first_msg) = run(64, &mut prop) {
+            // Shrink-lite: find the smallest size hint that still fails.
+            let mut msg = first_msg;
+            let mut failing_size = 64;
+            for size in [1usize, 2, 4, 8, 16, 32] {
+                if let Err(m) = run(size, &mut prop) {
+                    msg = m;
+                    failing_size = size;
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 size {failing_size}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("always-true", 1, 25, |g| {
+            count += 1;
+            let n = g.usize_in(0, 100);
+            if n <= 100 { Ok(()) } else { Err("impossible".into()) }
+        });
+        assert!(count >= 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        forall("always-false", 2, 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Vec::new();
+        forall("collect", 3, 5, |g| {
+            a.push(g.u64_below(1000));
+            Ok(())
+        });
+        let mut b = Vec::new();
+        forall("collect", 3, 5, |g| {
+            b.push(g.u64_below(1000));
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

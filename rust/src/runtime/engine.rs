@@ -1,0 +1,221 @@
+//! The aggregator hot path behind a trait: native Rust vs the AOT-compiled
+//! XLA pipeline, interchangeable and bit-identical.
+//!
+//! The coordinator calls [`SortEngine::merge_coalesce`] wherever an
+//! aggregator must sort + coalesce gathered offset/length lists (§IV-A
+//! intra-node, §IV-B inter-node).  [`NativeEngine`] is the pure-Rust
+//! implementation; [`XlaEngine`] executes the `artifacts/agg_*.hlo.txt`
+//! pipeline (bitonic sort + coalesce Pallas kernels) via PJRT.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (`!Send`), while the
+//! coordinator fans merges out over scoped threads — so [`XlaEngine`]
+//! owns a dedicated worker thread that constructs and exclusively owns
+//! the [`PjrtRuntime`]; requests cross over an mpsc channel.  This also
+//! matches how a real deployment would pin a PJRT context to one core.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::coordinator::merge::sort_coalesce_pairs;
+use crate::error::{Error, Result};
+
+use super::pjrt::PjrtRuntime;
+
+/// Engine selector for configs / CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust k-way merge / sort+coalesce.
+    Native,
+    /// AOT-compiled JAX/Pallas pipeline via PJRT.
+    Xla,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(EngineKind::Native),
+            "xla" => Ok(EngineKind::Xla),
+            other => Err(crate::Error::config(format!(
+                "unknown engine '{other}' (expected native|xla)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineKind::Native => write!(f, "native"),
+            EngineKind::Xla => write!(f, "xla"),
+        }
+    }
+}
+
+/// Sort + coalesce of an aggregator's gathered request metadata.
+pub trait SortEngine: Send + Sync {
+    /// Sort `pairs` ascending by offset and coalesce exactly-contiguous
+    /// neighbours.  Input order is arbitrary (it is a concatenation of the
+    /// peers' sorted lists); output is ascending and minimal.
+    fn merge_coalesce(&self, pairs: Vec<(u64, u64)>) -> Result<Vec<(u64, u64)>>;
+
+    /// Engine name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust engine.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeEngine;
+
+impl SortEngine for NativeEngine {
+    fn merge_coalesce(&self, pairs: Vec<(u64, u64)>) -> Result<Vec<(u64, u64)>> {
+        Ok(sort_coalesce_pairs(pairs))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+type Job = (Vec<(u64, u64)>, mpsc::Sender<Result<Vec<(u64, u64)>>>);
+
+/// XLA engine: a worker thread owns the PJRT runtime; callers submit
+/// batches over a channel (PJRT handles are `!Send`).
+pub struct XlaEngine {
+    tx: Mutex<mpsc::Sender<Job>>,
+    /// Batch sizes reported by the worker at startup (diagnostics).
+    batch_sizes: Vec<usize>,
+    /// Largest compiled batch.
+    max_batch: usize,
+}
+
+impl XlaEngine {
+    /// Spawn the worker and load artifacts from `dir`.
+    pub fn load(dir: std::path::PathBuf) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<Vec<usize>>>();
+        std::thread::Builder::new()
+            .name("xla-engine".into())
+            .spawn(move || {
+                let rt = match PjrtRuntime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = init_tx.send(Ok(rt.batch_sizes()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                // Serve until every sender is dropped.
+                while let Ok((pairs, reply)) = rx.recv() {
+                    let _ = reply.send(run_batched(&rt, pairs));
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("cannot spawn xla worker: {e}")))?;
+        let batch_sizes = init_rx
+            .recv()
+            .map_err(|_| Error::Runtime("xla worker died during init".into()))??;
+        let max_batch = *batch_sizes.last().expect("nonempty artifact set");
+        Ok(XlaEngine { tx: Mutex::new(tx), batch_sizes, max_batch })
+    }
+
+    /// Load artifacts from the default location.
+    pub fn load_default() -> Result<Self> {
+        let dir = super::find_artifacts_dir().ok_or_else(|| {
+            Error::Runtime("artifacts/manifest.txt not found — run `make artifacts`".into())
+        })?;
+        Self::load(dir)
+    }
+
+    /// Compiled batch sizes.
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
+    /// Largest compiled batch size.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+}
+
+/// Chunk oversize inputs, run each chunk through the artifact, combine.
+fn run_batched(rt: &PjrtRuntime, pairs: Vec<(u64, u64)>) -> Result<Vec<(u64, u64)>> {
+    if pairs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let max = rt.max_batch();
+    if pairs.len() <= max {
+        return rt.aggregate_batch(&pairs);
+    }
+    // Chunk outputs are sorted+coalesced; the final combine must absorb
+    // zero-length segments that fall inside another chunk's segment —
+    // see combine_coalesced_partials.
+    let mut partials: Vec<(u64, u64)> = Vec::new();
+    for chunk in pairs.chunks(max) {
+        partials.extend(rt.aggregate_batch(chunk)?);
+    }
+    Ok(crate::coordinator::merge::combine_coalesced_partials(partials))
+}
+
+impl SortEngine for XlaEngine {
+    fn merge_coalesce(&self, pairs: Vec<(u64, u64)>) -> Result<Vec<(u64, u64)>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().map_err(|_| Error::Runtime("engine lock poisoned".into()))?;
+            tx.send((pairs, reply_tx))
+                .map_err(|_| Error::Runtime("xla worker gone".into()))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("xla worker dropped reply".into()))?
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+impl std::fmt::Debug for XlaEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaEngine")
+            .field("batch_sizes", &self.batch_sizes)
+            .finish()
+    }
+}
+
+/// Build an engine by kind; `Xla` loads the default artifacts.
+pub fn build_engine(kind: EngineKind) -> Result<std::sync::Arc<dyn SortEngine>> {
+    match kind {
+        EngineKind::Native => Ok(std::sync::Arc::new(NativeEngine)),
+        EngineKind::Xla => Ok(std::sync::Arc::new(XlaEngine::load_default()?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_sorts_and_coalesces() {
+        let e = NativeEngine;
+        let out = e
+            .merge_coalesce(vec![(8, 4), (0, 4), (4, 4), (100, 2)])
+            .unwrap();
+        assert_eq!(out, vec![(0, 12), (100, 2)]);
+        assert_eq!(e.name(), "native");
+    }
+
+    #[test]
+    fn engine_kind_parses() {
+        assert_eq!("native".parse::<EngineKind>().unwrap(), EngineKind::Native);
+        assert_eq!("xla".parse::<EngineKind>().unwrap(), EngineKind::Xla);
+        assert!("cuda".parse::<EngineKind>().is_err());
+    }
+
+    #[test]
+    fn native_engine_empty() {
+        assert!(NativeEngine.merge_coalesce(vec![]).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,38 @@
+//! Runtime layer: PJRT execution of the AOT-compiled aggregation pipeline.
+//!
+//! `make artifacts` lowers the L2 JAX pipeline (which calls the L1 Pallas
+//! kernels) to HLO text; [`pjrt::PjrtRuntime`] loads those artifacts with
+//! the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute`), and [`engine`] exposes the aggregator
+//! hot path behind the [`engine::SortEngine`] trait with interchangeable
+//! native-Rust and XLA implementations.  Python never runs here.
+
+pub mod engine;
+pub mod pjrt;
+
+pub use engine::{EngineKind, NativeEngine, SortEngine, XlaEngine};
+pub use pjrt::PjrtRuntime;
+
+/// Default artifacts directory, relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `$TAMIO_ARTIFACTS` override, else walk
+/// up from the current directory looking for `artifacts/manifest.txt`.
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("TAMIO_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.txt").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACTS_DIR);
+        if cand.join("manifest.txt").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT client wrapper: load `artifacts/agg_*.hlo.txt`, compile once,
+//! execute batches of the aggregation pipeline on the request path.
+//!
+//! The artifact contract (see `python/compile/model.py`):
+//! inputs `(offsets: s64[N], lengths: s64[N])` padded with [`SENTINEL`],
+//! output tuple `(coal_off: s64[N], coal_len: s64[N], nseg: s64[1])`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Sentinel offset marking padding slots (i64::MAX, matching
+/// `kernels.bitonic.SENTINEL`).
+pub const SENTINEL: i64 = i64::MAX;
+
+/// A compiled aggregation executable for one batch size.
+struct SizedExec {
+    n: usize,
+    exec: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU runtime holding one compiled executable per artifact size.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    execs: BTreeMap<usize, SizedExec>,
+    artifacts_dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Load every artifact listed in `<dir>/manifest.txt` and compile it
+    /// on the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let listing = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                manifest.display()
+            ))
+        })?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut execs = BTreeMap::new();
+        for line in listing.lines() {
+            let mut parts = line.split_whitespace();
+            let (Some(file), Some(n)) = (parts.next(), parts.next()) else {
+                continue;
+            };
+            let n: usize = n
+                .parse()
+                .map_err(|_| Error::Runtime(format!("bad manifest line: {line}")))?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exec = client.compile(&comp)?;
+            execs.insert(n, SizedExec { n, exec });
+        }
+        if execs.is_empty() {
+            return Err(Error::Runtime(format!(
+                "no artifacts found in {}",
+                dir.display()
+            )));
+        }
+        Ok(PjrtRuntime { client, execs, artifacts_dir: dir })
+    }
+
+    /// Convenience: locate the artifacts dir and load it.
+    pub fn load_default() -> Result<Self> {
+        let dir = super::find_artifacts_dir().ok_or_else(|| {
+            Error::Runtime("artifacts/manifest.txt not found — run `make artifacts`".into())
+        })?;
+        Self::load(dir)
+    }
+
+    /// Available batch sizes, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.execs.keys().copied().collect()
+    }
+
+    /// Largest supported batch size.
+    pub fn max_batch(&self) -> usize {
+        *self.execs.keys().next_back().expect("nonempty")
+    }
+
+    /// Directory the artifacts were loaded from.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run the aggregation pipeline on ≤ `max_batch()` pairs: returns the
+    /// coalesced `(offset, length)` list.
+    ///
+    /// Picks the smallest artifact size ≥ `pairs.len()` and pads with
+    /// SENTINEL; the trailing sentinel segment is dropped on output.
+    pub fn aggregate_batch(&self, pairs: &[(u64, u64)]) -> Result<Vec<(u64, u64)>> {
+        let need = pairs.len().max(1);
+        let sized = self
+            .execs
+            .values()
+            .find(|s| s.n >= need)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "batch of {} exceeds largest artifact {}",
+                    pairs.len(),
+                    self.max_batch()
+                ))
+            })?;
+        let n = sized.n;
+        let mut offsets = vec![SENTINEL; n];
+        let mut lengths = vec![0i64; n];
+        for (i, &(o, l)) in pairs.iter().enumerate() {
+            offsets[i] = i64::try_from(o)
+                .map_err(|_| Error::Runtime(format!("offset {o} exceeds i64 range")))?;
+            lengths[i] = i64::try_from(l)
+                .map_err(|_| Error::Runtime(format!("length {l} exceeds i64 range")))?;
+        }
+        let off_lit = xla::Literal::vec1(&offsets);
+        let len_lit = xla::Literal::vec1(&lengths);
+        let result = sized.exec.execute::<xla::Literal>(&[off_lit, len_lit])?[0][0]
+            .to_literal_sync()?;
+        let (co, cl, nseg) = result.to_tuple3()?;
+        let co = co.to_vec::<i64>()?;
+        let cl = cl.to_vec::<i64>()?;
+        let nseg = nseg.to_vec::<i64>()?[0] as usize;
+        let mut out = Vec::with_capacity(nseg);
+        for i in 0..nseg.min(n) {
+            if co[i] == SENTINEL {
+                break; // trailing sentinel segment (padding)
+            }
+            out.push((co[i] as u64, cl[i] as u64));
+        }
+        Ok(out)
+    }
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime")
+            .field("artifacts_dir", &self.artifacts_dir)
+            .field("batch_sizes", &self.batch_sizes())
+            .finish()
+    }
+}

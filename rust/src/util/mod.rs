@@ -1,0 +1,66 @@
+//! Small shared utilities: deterministic PRNG, parallel map over OS
+//! threads, byte formatting.  (No rand/rayon in the offline image.)
+
+pub mod parallel;
+pub mod rng;
+
+pub use parallel::par_map;
+pub use rng::SplitMix64;
+
+/// Format a byte count in human units (GiB/MiB/KiB/B).
+pub fn human_bytes(bytes: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format a simulated-seconds value with sensible precision.
+pub fn human_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} us", s * 1e6)
+    }
+}
+
+/// Integer ceiling division.
+pub const fn ceil_div(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(human_bytes(85 * 1024 * 1024 * 1024), "85.00 GiB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert_eq!(human_secs(2.5), "2.500 s");
+        assert_eq!(human_secs(0.0025), "2.500 ms");
+        assert_eq!(human_secs(0.0000025), "2.500 us");
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Scoped-thread parallel map (rayon is not available in the image).
+//!
+//! Deterministic: results are returned in input order regardless of
+//! scheduling; work is chunked contiguously over `min(items, cores)`
+//! threads.
+
+use std::num::NonZeroUsize;
+
+/// Number of worker threads to use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+/// Parallel map preserving input order.
+///
+/// `f` must be `Sync` (called from multiple scoped threads); items are
+/// processed by contiguous chunks so cache behaviour matches the serial
+/// loop.  Falls back to a serial map for small inputs.
+pub fn par_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = default_threads().min(n.max(1));
+    if threads <= 1 || n < 2 {
+        return items.into_iter().map(f).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<U>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let mut item_chunks: Vec<Vec<T>> = Vec::new();
+    {
+        let mut it = items.into_iter();
+        loop {
+            let c: Vec<T> = it.by_ref().take(chunk).collect();
+            if c.is_empty() {
+                break;
+            }
+            item_chunks.push(c);
+        }
+    }
+    let fref = &f;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (ci, c) in item_chunks.into_iter().enumerate() {
+            handles.push((ci, s.spawn(move || c.into_iter().map(fref).collect::<Vec<U>>())));
+        }
+        for (ci, h) in handles {
+            let res = h.join().expect("par_map worker panicked");
+            for (j, v) in res.into_iter().enumerate() {
+                out[ci * chunk + j] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|v| v.expect("par_map slot unfilled")).collect()
+}
+
+/// Parallel for-each over mutable chunks of a slice.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() || chunk == 0 {
+        return;
+    }
+    let fref = &f;
+    std::thread::scope(|s| {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            s.spawn(move || fref(i, c));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(items, |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        assert_eq!(par_map(Vec::<u32>::new(), |x| x), Vec::<u32>::new());
+        assert_eq!(par_map(vec![7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn par_map_non_divisible_chunks() {
+        let items: Vec<usize> = (0..17).collect();
+        let out = par_map(items, |x| x + 100);
+        assert_eq!(out, (100..117).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_all() {
+        let mut data = vec![0u32; 97];
+        par_chunks_mut(&mut data, 10, |_, c| {
+            for v in c {
+                *v = 1;
+            }
+        });
+        assert!(data.iter().all(|&v| v == 1));
+    }
+}

@@ -1,0 +1,193 @@
+//! NPB BTIO block-tridiagonal I/O pattern (§V-B).
+//!
+//! BTIO requires a square process count `P = q²`.  The global solution
+//! array is 3-D (`N³` grid cells) with 5 doubles per cell and 40 written
+//! "variables" (time steps in the benchmark); each process owns `q` cells
+//! of size `(N/q)³` arranged along a block diagonal, so adjacent ranks own
+//! z-adjacent cells — the pattern that coalesces extremely well under
+//! intra-node aggregation (§V-B reports 335 M → 84 M requests at 16
+//! nodes).
+//!
+//! Noncontiguous run count: per cell, one run per (x, y) line =
+//! `(N/q)²` runs of `(N/q)·5·8` bytes; per rank per variable `q` cells →
+//! `N²/q` runs per rank per variable; total `40·N²·q = 40·N²·√P` —
+//! the paper's `512²·40·√P` formula at `N = 512`.
+
+use crate::cluster::Topology;
+use crate::error::{Error, Result};
+use crate::mpisim::subarray::subarray_flatten;
+use crate::mpisim::FlatView;
+use crate::workloads::Workload;
+
+/// BTIO generator.
+#[derive(Clone, Debug)]
+pub struct Btio {
+    /// Grid points per dimension (paper: 512).
+    pub n: usize,
+    /// Written variables / time steps (paper: 40).
+    pub vars: usize,
+    /// Solution-vector components per cell (paper: 5).
+    pub comps: usize,
+    /// Bytes per scalar (double).
+    pub elem: usize,
+}
+
+impl Btio {
+    /// Paper configuration: 512³ × 40 × 5 doubles = 200 GiB.
+    pub fn paper() -> Self {
+        Btio { n: 512, vars: 40, comps: 5, elem: 8 }
+    }
+
+    /// Scaled-down configuration: shrinks the grid (and the variable
+    /// count for large divisors) while keeping the decomposition shape.
+    pub fn scaled(scale: u64) -> Self {
+        // Volume scales with n³·vars; take the cube root for the grid.
+        let mut cfg = Self::paper();
+        let mut s = scale.max(1);
+        while s >= 8 && cfg.n > 32 {
+            cfg.n /= 2;
+            s /= 8;
+        }
+        while s >= 2 && cfg.vars > 5 {
+            cfg.vars /= 2;
+            s /= 2;
+        }
+        cfg
+    }
+
+    /// Side of the process grid: `q = √P` (P must be square).
+    pub fn q(&self, p: usize) -> Result<usize> {
+        let q = (p as f64).sqrt().round() as usize;
+        if q * q != p {
+            return Err(Error::Workload(format!(
+                "BTIO requires a square process count, got {p}"
+            )));
+        }
+        Ok(q)
+    }
+
+    /// Bytes of one variable's full 3-D array.
+    fn var_bytes(&self) -> u64 {
+        (self.n as u64).pow(3) * (self.comps * self.elem) as u64
+    }
+}
+
+impl Workload for Btio {
+    fn name(&self) -> String {
+        format!("btio(n={},vars={})", self.n, self.vars)
+    }
+
+    fn view(&self, topo: &Topology, rank: usize) -> Result<FlatView> {
+        let p = topo.nprocs();
+        let q = self.q(p)?;
+        let (i, j) = (rank / q, rank % q);
+        // The solution array is treated as a 3-D grid of cells; the
+        // element record is the 5-component solution vector, so the
+        // flattened global dims are (x, y, z·comps·elem bytes handled via
+        // elem_size).  Balanced cell bounds per axis handle grids not
+        // divisible by q.
+        let global = [self.n, self.n, self.n];
+        let elem_size = self.comps * self.elem;
+        let bounds = |b: usize| crate::mpisim::subarray::balanced_bounds(self.n, q, b);
+        let mut pairs: Vec<(u64, u64)> = Vec::new();
+        for var in 0..self.vars {
+            let base = var as u64 * self.var_bytes();
+            for c in 0..q {
+                // Diagonal cell placement: cell c of rank (i, j) sits at
+                // x-slab c, y-block (i + c) mod q, z-block (j + c) mod q —
+                // the BT multi-partition scheme.
+                let (x0, x1) = bounds(c);
+                let (y0, y1) = bounds((i + c) % q);
+                let (z0, z1) = bounds((j + c) % q);
+                let start = [x0, y0, z0];
+                let sub = [x1 - x0, y1 - y0, z1 - z0];
+                let v = subarray_flatten(&global, &sub, &start, elem_size, base)?;
+                pairs.extend(v.iter());
+            }
+        }
+        // Runs from successive cells within one variable ascend (x-slab
+        // major), and variables ascend by base; the whole list is sorted.
+        pairs.sort_unstable();
+        Ok(FlatView::from_pairs_unchecked(
+            pairs.iter().map(|p| p.0).collect(),
+            pairs.iter().map(|p| p.1).collect(),
+        ))
+    }
+
+    fn paper_scale(&self, p: usize) -> (f64, u64) {
+        // 512² · 40 · √P requests; 200 GiB.
+        let paper = Btio::paper();
+        (
+            (paper.n * paper.n * paper.vars) as f64 * (p as f64).sqrt(),
+            paper.var_bytes() * paper.vars as u64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_count_matches_formula() {
+        // N=64, q=4 (P=16), vars=5: per the formula vars·N²·q runs total.
+        let w = Btio { n: 64, vars: 5, comps: 5, elem: 8 };
+        let topo = Topology::new(4, 4);
+        let views = w.generate_views(&topo).unwrap();
+        let total: u64 = views.iter().map(|(_, v)| v.len() as u64).sum();
+        assert_eq!(total, (5 * 64 * 64 * 4) as u64);
+    }
+
+    #[test]
+    fn write_amount_matches_grid_volume() {
+        let w = Btio { n: 32, vars: 4, comps: 5, elem: 8 };
+        let topo = Topology::new(1, 4);
+        let views = w.generate_views(&topo).unwrap();
+        let bytes: u64 = views.iter().map(|(_, v)| v.total_bytes()).sum();
+        assert_eq!(bytes, 4 * 32u64.pow(3) * 40);
+    }
+
+    #[test]
+    fn cells_tile_the_grid_exactly() {
+        // Every byte of every variable written exactly once.
+        let w = Btio { n: 16, vars: 1, comps: 1, elem: 1 };
+        let topo = Topology::new(1, 16); // q = 4
+        let views = w.generate_views(&topo).unwrap();
+        let mut coverage = vec![0u32; 16 * 16 * 16];
+        for (_, v) in &views {
+            for (off, len) in v.iter() {
+                for b in off..off + len {
+                    coverage[b as usize] += 1;
+                }
+            }
+        }
+        assert!(coverage.iter().all(|&c| c == 1), "grid not tiled exactly once");
+    }
+
+    #[test]
+    fn rejects_non_square_process_count() {
+        let w = Btio::scaled(512);
+        let topo = Topology::new(2, 4);
+        assert!(w.view(&topo, 0).is_err());
+    }
+
+    #[test]
+    fn scaled_shrinks_volume() {
+        let paper = Btio::paper();
+        let small = Btio::scaled(4096);
+        assert!(small.n < paper.n);
+        let paper_vol = paper.var_bytes() * paper.vars as u64;
+        let small_vol = small.var_bytes() * small.vars as u64;
+        assert!(small_vol < paper_vol / 100);
+    }
+
+    #[test]
+    fn paper_formula_at_16384() {
+        // §V-B: 1,342,177,280 requests at 256 nodes × 64 ppn.
+        let w = Btio::paper();
+        let (reqs, bytes) = w.paper_scale(16384);
+        assert_eq!(reqs, 512.0 * 512.0 * 40.0 * 128.0);
+        assert_eq!(reqs as u64, 1_342_177_280);
+        assert_eq!(bytes, 200 * (1 << 30));
+    }
+}

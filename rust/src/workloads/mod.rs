@@ -1,0 +1,209 @@
+//! I/O-pattern generators for the paper's evaluation workloads (Table I).
+//!
+//! Each generator reproduces the *access-pattern structure* of its
+//! benchmark — request counts, sizes, per-rank ordering, cross-rank
+//! adjacency — at a configurable scale (the paper's full datasets are up
+//! to 200 GiB / 1.4 G requests; see DESIGN.md §Substitutions):
+//!
+//! * [`e3sm`] — E3SM F and G production decompositions: very long lists
+//!   of small noncontiguous requests, interleaved across ranks.
+//! * [`btio`] — NPB BTIO block-tridiagonal 3D decomposition
+//!   (`512² · 40 · √P` noncontiguous requests at paper scale).
+//! * [`s3d`] — S3D-IO checkpoint: block-block-block 3D partitioning,
+//!   four variables (mass 11, velocity 3, pressure 1, temperature 1).
+//! * [`synthetic`] — contiguous/strided micro-patterns for tests.
+
+pub mod btio;
+pub mod e3sm;
+pub mod s3d;
+pub mod synthetic;
+
+use crate::cluster::Topology;
+use crate::coordinator::merge::ReqBatch;
+use crate::error::Result;
+use crate::mpisim::rank::deterministic_payload;
+use crate::mpisim::FlatView;
+use crate::util::par_map;
+
+/// Table I row: dataset statistics.
+#[derive(Clone, Debug)]
+pub struct TableStats {
+    /// Workload name.
+    pub name: String,
+    /// Total noncontiguous requests across all ranks (this run's scale).
+    pub n_requests: u64,
+    /// Total write amount in bytes (this run's scale).
+    pub write_bytes: u64,
+    /// Paper-scale request count (analytic, for the Table I comparison).
+    pub paper_requests: f64,
+    /// Paper-scale write amount in bytes.
+    pub paper_bytes: u64,
+}
+
+/// A workload generates one flattened file view per rank.
+pub trait Workload: Send + Sync {
+    /// Human-readable name.
+    fn name(&self) -> String;
+
+    /// The flattened view of `rank` under `topo`.
+    fn view(&self, topo: &Topology, rank: usize) -> Result<FlatView>;
+
+    /// Paper-scale analytic statistics for Table I (requests, bytes).
+    fn paper_scale(&self, p: usize) -> (f64, u64);
+
+    /// Generate all ranks' views with deterministic payloads.
+    fn generate(&self, topo: &Topology, seed: u64) -> Result<Vec<(usize, ReqBatch)>> {
+        let views = self.generate_views(topo)?;
+        Ok(views
+            .into_iter()
+            .map(|(r, view)| {
+                let payload = deterministic_payload(seed, r, view.total_bytes());
+                (r, ReqBatch::new(view, payload))
+            })
+            .collect())
+    }
+
+    /// Generate views only (read path, stats).
+    fn generate_views(&self, topo: &Topology) -> Result<Vec<(usize, FlatView)>> {
+        let views = par_map((0..topo.nprocs()).collect::<Vec<_>>(), |r| {
+            self.view(topo, r).map(|v| (r, v))
+        });
+        views.into_iter().collect()
+    }
+
+    /// Table I statistics at this run's scale + paper scale.
+    fn table_stats(&self, topo: &Topology) -> Result<TableStats> {
+        let views = self.generate_views(topo)?;
+        let n_requests = views.iter().map(|(_, v)| v.len() as u64).sum();
+        let write_bytes = views.iter().map(|(_, v)| v.total_bytes()).sum();
+        let (paper_requests, paper_bytes) = self.paper_scale(topo.nprocs());
+        Ok(TableStats {
+            name: self.name(),
+            n_requests,
+            write_bytes,
+            paper_requests,
+            paper_bytes,
+        })
+    }
+}
+
+/// Workload selector for configs / CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// E3SM G case (ocean/sea-ice; 180 M requests, 85 GiB at paper scale).
+    E3smG,
+    /// E3SM F case (atmosphere; 1.36 G requests, 14 GiB at paper scale).
+    E3smF,
+    /// NPB BTIO block-tridiagonal.
+    Btio,
+    /// S3D-IO checkpoint.
+    S3d,
+    /// Synthetic contiguous blocks.
+    Contig,
+    /// Synthetic strided interleave.
+    Strided,
+}
+
+impl std::str::FromStr for WorkloadKind {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "e3sm-g" | "e3sm_g" => Ok(WorkloadKind::E3smG),
+            "e3sm-f" | "e3sm_f" => Ok(WorkloadKind::E3smF),
+            "btio" => Ok(WorkloadKind::Btio),
+            "s3d" | "s3d-io" => Ok(WorkloadKind::S3d),
+            "contig" => Ok(WorkloadKind::Contig),
+            "strided" => Ok(WorkloadKind::Strided),
+            other => Err(crate::Error::config(format!(
+                "unknown workload '{other}' (e3sm-g|e3sm-f|btio|s3d|contig|strided)"
+            ))),
+        }
+    }
+}
+
+impl WorkloadKind {
+    /// Instantiate the workload at a scale divisor (1 = paper scale;
+    /// `scale` shrinks request counts and byte volumes ~linearly).
+    pub fn build(self, scale: u64) -> Box<dyn Workload> {
+        match self {
+            WorkloadKind::E3smG => Box::new(e3sm::E3sm::g_case(scale)),
+            WorkloadKind::E3smF => Box::new(e3sm::E3sm::f_case(scale)),
+            WorkloadKind::Btio => Box::new(btio::Btio::scaled(scale)),
+            WorkloadKind::S3d => Box::new(s3d::S3dIo::scaled(scale)),
+            WorkloadKind::Contig => Box::new(synthetic::Contig::new(1 << 20)),
+            WorkloadKind::Strided => Box::new(synthetic::Strided::new(1 << 16, 64)),
+        }
+    }
+
+    /// All paper workloads (Figure 3 order).
+    pub fn paper_set() -> [WorkloadKind; 4] {
+        [WorkloadKind::E3smG, WorkloadKind::E3smF, WorkloadKind::Btio, WorkloadKind::S3d]
+    }
+}
+
+impl std::fmt::Display for WorkloadKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            WorkloadKind::E3smG => "e3sm-g",
+            WorkloadKind::E3smF => "e3sm-f",
+            WorkloadKind::Btio => "btio",
+            WorkloadKind::S3d => "s3d",
+            WorkloadKind::Contig => "contig",
+            WorkloadKind::Strided => "strided",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing_round_trips() {
+        for k in [
+            WorkloadKind::E3smG,
+            WorkloadKind::E3smF,
+            WorkloadKind::Btio,
+            WorkloadKind::S3d,
+            WorkloadKind::Contig,
+            WorkloadKind::Strided,
+        ] {
+            let s = k.to_string();
+            assert_eq!(s.parse::<WorkloadKind>().unwrap(), k);
+        }
+        assert!("nope".parse::<WorkloadKind>().is_err());
+    }
+
+    #[test]
+    fn every_workload_generates_valid_views() {
+        let topo = Topology::new(2, 8);
+        for k in [
+            WorkloadKind::E3smG,
+            WorkloadKind::E3smF,
+            WorkloadKind::Btio,
+            WorkloadKind::S3d,
+            WorkloadKind::Contig,
+            WorkloadKind::Strided,
+        ] {
+            let w = k.build(4096);
+            let views = w.generate_views(&topo).unwrap();
+            assert_eq!(views.len(), 16);
+            for (r, v) in views {
+                v.validate().unwrap_or_else(|e| panic!("{k} rank {r}: {e}"));
+                assert!(!v.is_empty(), "{k} rank {r} generated empty view");
+            }
+        }
+    }
+
+    #[test]
+    fn payloads_match_views() {
+        let topo = Topology::new(1, 4);
+        let w = WorkloadKind::Strided.build(1);
+        let ranks = w.generate(&topo, 3).unwrap();
+        for (_, b) in ranks {
+            assert_eq!(b.payload.len() as u64, b.view.total_bytes());
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! S3D-IO checkpoint I/O pattern (§V-C).
+//!
+//! S3D checkpoints four variables over a 3-D Cartesian mesh partitioned
+//! block-block-block: pressure and temperature are 3-D arrays, mass and
+//! velocity are 4-D with component counts 11 and 3.  Every variable
+//! component is a full 3-D array in the file, written by each rank as a
+//! subarray — so each rank contributes `ny_l · nz_l` noncontiguous runs
+//! per component, 16 components total.  Paper scale: 800³ grid, 61 GiB.
+//!
+//! Block partitioning puts x-adjacent ranks on contiguous file ranges, so
+//! intra-node aggregation coalesces most requests (the paper's
+//! `(1/2)^(P/P_L)` reduction bound).
+
+use crate::cluster::Topology;
+use crate::error::{Error, Result};
+use crate::mpisim::subarray::subarray_flatten;
+use crate::mpisim::FlatView;
+use crate::workloads::Workload;
+
+/// S3D-IO generator.
+#[derive(Clone, Debug)]
+pub struct S3dIo {
+    /// Grid points per dimension (paper: 800).
+    pub n: usize,
+    /// Bytes per scalar (double).
+    pub elem: usize,
+}
+
+impl S3dIo {
+    /// Paper configuration: 800³ × 16 components × 8 B = 61 GiB.
+    pub fn paper() -> Self {
+        S3dIo { n: 800, elem: 8 }
+    }
+
+    /// Scaled-down grid preserving the decomposition shape.
+    pub fn scaled(scale: u64) -> Self {
+        let mut cfg = Self::paper();
+        let mut s = scale.max(1);
+        while s >= 8 && cfg.n > 40 {
+            cfg.n /= 2;
+            s /= 8;
+        }
+        cfg
+    }
+
+    /// Component count: mass 11 + velocity 3 + pressure 1 + temperature 1.
+    pub const COMPONENTS: usize = 16;
+
+    /// Near-cubic factorization of `p` into `(px, py, pz)` with
+    /// `px·py·pz == p` (px ≥ py ≥ pz as balanced as possible).
+    pub fn factorize(p: usize) -> (usize, usize, usize) {
+        let mut best = (p, 1, 1);
+        let mut best_score = usize::MAX;
+        let mut x = 1;
+        while x * x * x <= p {
+            if p % x == 0 {
+                let rem = p / x;
+                let mut y = x;
+                while y * y <= rem {
+                    if rem % y == 0 {
+                        let z = rem / y;
+                        let score = z - x; // spread: smaller is more cubic
+                        if score < best_score {
+                            best_score = score;
+                            best = (z, y, x);
+                        }
+                    }
+                    y += 1;
+                }
+            }
+            x += 1;
+        }
+        best
+    }
+
+    fn comp_bytes(&self) -> u64 {
+        (self.n as u64).pow(3) * self.elem as u64
+    }
+}
+
+impl Workload for S3dIo {
+    fn name(&self) -> String {
+        format!("s3d-io(n={})", self.n)
+    }
+
+    fn view(&self, topo: &Topology, rank: usize) -> Result<FlatView> {
+        let p = topo.nprocs();
+        let (px, py, pz) = Self::factorize(p);
+        if self.n < px || self.n < py || self.n < pz {
+            return Err(Error::Workload(format!(
+                "S3D grid {} smaller than process grid {px}x{py}x{pz}",
+                self.n
+            )));
+        }
+        // Rank → (ix, iy, iz) block coordinates, x-major (x fastest in
+        // rank order so x-adjacent ranks are rank-adjacent — the S3D
+        // MPI_Cart_create layout that makes intra-node coalescing work).
+        let ix = rank % px;
+        let iy = (rank / px) % py;
+        let iz = rank / (px * py);
+        // File layout per component: C-order global dims (z, y, x), x
+        // innermost/contiguous.  Balanced block bounds per axis (MPI_Cart
+        // convention) so any grid/process combination decomposes.
+        let global = [self.n, self.n, self.n];
+        let (z0, z1) = crate::mpisim::subarray::balanced_bounds(self.n, pz, iz);
+        let (y0, y1) = crate::mpisim::subarray::balanced_bounds(self.n, py, iy);
+        let (x0, x1) = crate::mpisim::subarray::balanced_bounds(self.n, px, ix);
+        let sub = [z1 - z0, y1 - y0, x1 - x0];
+        let start = [z0, y0, x0];
+        let mut pairs: Vec<(u64, u64)> = Vec::new();
+        for comp in 0..Self::COMPONENTS {
+            let base = comp as u64 * self.comp_bytes();
+            let v = subarray_flatten(&global, &sub, &start, self.elem, base)?;
+            pairs.extend(v.iter());
+        }
+        Ok(FlatView::from_pairs_unchecked(
+            pairs.iter().map(|p| p.0).collect(),
+            pairs.iter().map(|p| p.1).collect(),
+        ))
+    }
+
+    fn paper_scale(&self, p: usize) -> (f64, u64) {
+        // Requests: 16 comps · P · ny_l · nz_l = 16 · n² · px; paper
+        // quotes the py·pz form for its Fortran layout — same structure.
+        let paper = Self::paper();
+        let (px, _, _) = Self::factorize(p);
+        (
+            (Self::COMPONENTS as f64) * (paper.n as f64).powi(2) * px as f64,
+            paper.comp_bytes() * Self::COMPONENTS as u64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorize_balanced() {
+        assert_eq!(S3dIo::factorize(8), (2, 2, 2));
+        assert_eq!(S3dIo::factorize(64), (4, 4, 4));
+        let (x, y, z) = S3dIo::factorize(16);
+        assert_eq!(x * y * z, 16);
+        assert!(x >= y && y >= z);
+        let (x, y, z) = S3dIo::factorize(7); // prime
+        assert_eq!((x, y, z), (7, 1, 1));
+    }
+
+    #[test]
+    fn request_count_matches_formula() {
+        let w = S3dIo { n: 40, elem: 8 };
+        let topo = Topology::new(2, 4); // P=8 → 2x2x2
+        let views = w.generate_views(&topo).unwrap();
+        let total: u64 = views.iter().map(|(_, v)| v.len() as u64).sum();
+        // per rank per comp: (40/2)·(40/2) = 400 runs; ×16 comps ×8 ranks.
+        assert_eq!(total, 400 * 16 * 8);
+    }
+
+    #[test]
+    fn write_amount_is_61gib_shape() {
+        let w = S3dIo::paper();
+        let (_, bytes) = w.paper_scale(16384);
+        // 8 × 16 × 800³ = 65,536,000,000 B ≈ 61 GiB (paper Table I).
+        assert_eq!(bytes, 8 * 16 * 800u64.pow(3));
+        assert!((bytes as f64 / (1u64 << 30) as f64 - 61.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn components_tile_each_array_exactly() {
+        let w = S3dIo { n: 16, elem: 1 };
+        let topo = Topology::new(1, 8);
+        let views = w.generate_views(&topo).unwrap();
+        let comp_bytes = 16u64.pow(3);
+        let mut coverage = vec![0u32; (comp_bytes * 16) as usize];
+        for (_, v) in &views {
+            for (off, len) in v.iter() {
+                for b in off..off + len {
+                    coverage[b as usize] += 1;
+                }
+            }
+        }
+        assert!(coverage.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn x_adjacent_ranks_are_file_adjacent() {
+        // Rank 0 and rank 1 (x-neighbours) own contiguous x-runs: rank 1's
+        // first run starts exactly where rank 0's first run ends.
+        let w = S3dIo { n: 16, elem: 8 };
+        let topo = Topology::new(1, 8);
+        let v0 = w.view(&topo, 0).unwrap();
+        let v1 = w.view(&topo, 1).unwrap();
+        let (o0, l0) = v0.iter().next().unwrap();
+        let (o1, _) = v1.iter().next().unwrap();
+        assert_eq!(o0 + l0, o1);
+    }
+}

@@ -1,0 +1,112 @@
+//! Synthetic micro-patterns for tests, examples and ablations.
+
+use crate::cluster::Topology;
+use crate::error::Result;
+use crate::mpisim::FlatView;
+use crate::workloads::Workload;
+
+/// Each rank writes one contiguous block: `[r·block, (r+1)·block)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Contig {
+    /// Block bytes per rank.
+    pub block: u64,
+}
+
+impl Contig {
+    /// New contiguous workload.
+    pub fn new(block: u64) -> Self {
+        Contig { block }
+    }
+}
+
+impl Workload for Contig {
+    fn name(&self) -> String {
+        format!("contig(block={})", self.block)
+    }
+
+    fn view(&self, _topo: &Topology, rank: usize) -> Result<FlatView> {
+        FlatView::from_pairs(vec![(rank as u64 * self.block, self.block)])
+    }
+
+    fn paper_scale(&self, p: usize) -> (f64, u64) {
+        (p as f64, p as u64 * self.block)
+    }
+}
+
+/// Classic strided interleave: the file is a sequence of `P`-wide element
+/// groups; rank `r` owns element `r` of every group.  The canonical
+/// "every rank noncontiguous, globally dense" pattern: after aggregation
+/// the whole file is contiguous.
+#[derive(Clone, Copy, Debug)]
+pub struct Strided {
+    /// Number of groups (requests per rank).
+    pub groups: u64,
+    /// Element bytes.
+    pub elem: u64,
+}
+
+impl Strided {
+    /// New strided workload.
+    pub fn new(groups: u64, elem: u64) -> Self {
+        Strided { groups, elem }
+    }
+}
+
+impl Workload for Strided {
+    fn name(&self) -> String {
+        format!("strided(groups={},elem={})", self.groups, self.elem)
+    }
+
+    fn view(&self, topo: &Topology, rank: usize) -> Result<FlatView> {
+        let p = topo.nprocs() as u64;
+        let stride = p * self.elem;
+        let pairs = (0..self.groups)
+            .map(|g| (g * stride + rank as u64 * self.elem, self.elem))
+            .collect();
+        FlatView::from_pairs(pairs)
+    }
+
+    fn paper_scale(&self, p: usize) -> (f64, u64) {
+        (
+            p as f64 * self.groups as f64,
+            p as u64 * self.groups * self.elem,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contig_blocks_disjoint_and_ordered() {
+        let topo = Topology::new(1, 4);
+        let w = Contig::new(100);
+        for r in 0..4 {
+            let v = w.view(&topo, r).unwrap();
+            assert_eq!(v.iter().collect::<Vec<_>>(), vec![(r as u64 * 100, 100)]);
+        }
+    }
+
+    #[test]
+    fn strided_tiles_file_densely() {
+        let topo = Topology::new(1, 4);
+        let w = Strided::new(8, 16);
+        let views = w.generate_views(&topo).unwrap();
+        let total: u64 = views.iter().map(|(_, v)| v.total_bytes()).sum();
+        assert_eq!(total, 4 * 8 * 16);
+        // Union of all views covers [0, total) with no gaps: merge check.
+        let refs: Vec<&FlatView> = views.iter().map(|(_, v)| v).collect();
+        let merged = crate::coordinator::merge::merge_views(&refs);
+        assert_eq!(merged.iter().collect::<Vec<_>>(), vec![(0, total)]);
+    }
+
+    #[test]
+    fn strided_request_count() {
+        let topo = Topology::new(2, 2);
+        let w = Strided::new(5, 8);
+        let v = w.view(&topo, 3).unwrap();
+        assert_eq!(v.len(), 5);
+        assert_eq!(v.min_offset(), Some(3 * 8));
+    }
+}

@@ -1,0 +1,86 @@
+//! CLI integration: drive the `tamio` binary end-to-end (arg parsing,
+//! config files, subcommands, exit codes).
+
+use std::process::Command;
+
+fn tamio() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_tamio"))
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = tamio().output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["run", "sweep", "scaling", "table1", "congest", "info"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn run_with_verify_succeeds_and_prints_breakdown() {
+    let out = tamio()
+        .args([
+            "run", "--nodes", "2", "--ppn", "4", "--workload", "strided",
+            "--algorithm", "tam:2", "--stripe_size", "4096", "--stripe_count", "4",
+            "--verify",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("io_phase"));
+    assert!(text.contains("verify: 8/8 ranks OK"));
+}
+
+#[test]
+fn config_file_applies_and_cli_overrides() {
+    let dir = std::env::temp_dir().join("tamio_cli_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("run.toml");
+    std::fs::write(
+        &cfg,
+        "nodes = 2\nppn = 4\nworkload = \"contig\"\n[net]\nalpha_inter = 5e-6\n",
+    )
+    .unwrap();
+    let out = tamio()
+        .args(["run", "--config", cfg.to_str().unwrap(), "--ppn", "8"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("2 nodes x 8 ppn"), "CLI override lost:\n{text}");
+    assert!(text.contains("contig"));
+}
+
+#[test]
+fn bad_flag_fails_with_nonzero_exit() {
+    let out = tamio().args(["run", "--bogus-flag", "3"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown config key"));
+}
+
+#[test]
+fn congest_reports_both_algorithms() {
+    let out = tamio()
+        .args(["congest", "--nodes", "2", "--ppn", "8", "--workload", "strided"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("two-phase"));
+    assert!(text.contains("tam"));
+}
+
+#[test]
+fn table1_prints_all_datasets() {
+    let out = tamio()
+        .args(["table1", "--nodes", "2", "--ppn", "8", "--budget-reqs", "20000"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for ds in ["e3sm-g", "e3sm-f", "s3d"] {
+        assert!(text.contains(ds), "table1 missing {ds}");
+    }
+}

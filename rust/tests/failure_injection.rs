@@ -1,0 +1,150 @@
+//! Failure-injection tests: failed OSTs, protocol violations, degenerate
+//! inputs — the pipeline must fail loudly and precisely, never corrupt.
+
+use tamio::cluster::Topology;
+use tamio::coordinator::breakdown::CpuModel;
+use tamio::coordinator::collective::{run_collective_write, Algorithm};
+use tamio::coordinator::merge::ReqBatch;
+use tamio::coordinator::placement::GlobalPlacement;
+use tamio::coordinator::tam::TamConfig;
+use tamio::coordinator::twophase::CollectiveCtx;
+use tamio::error::Error;
+use tamio::lustre::{IoModel, LustreConfig, LustreFile};
+use tamio::mpisim::{FlatView, RankState};
+use tamio::netmodel::NetParams;
+use tamio::runtime::engine::NativeEngine;
+
+fn ctx_parts() -> (Topology, NetParams, CpuModel, IoModel, NativeEngine) {
+    (
+        Topology::new(2, 4),
+        NetParams::default(),
+        CpuModel::default(),
+        IoModel::default(),
+        NativeEngine,
+    )
+}
+
+fn simple_ranks(topo: &Topology) -> Vec<(usize, ReqBatch)> {
+    (0..topo.nprocs())
+        .map(|r| {
+            let view = FlatView::from_pairs(vec![(r as u64 * 100, 100)]).unwrap();
+            (r, ReqBatch::new(view, vec![r as u8; 100]))
+        })
+        .collect()
+}
+
+#[test]
+fn failed_ost_surfaces_storage_error() {
+    let (topo, net, cpu, io, eng) = ctx_parts();
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 4,
+    };
+    let mut file = LustreFile::new(LustreConfig::new(64, 4));
+    file.fail_ost(2);
+    let err = run_collective_write(&ctx, Algorithm::TwoPhase, simple_ranks(&topo), &mut file)
+        .unwrap_err();
+    assert!(matches!(err, Error::Storage(_)), "got {err}");
+}
+
+#[test]
+fn tam_with_failed_ost_also_fails_cleanly() {
+    let (topo, net, cpu, io, eng) = ctx_parts();
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 4,
+    };
+    let mut file = LustreFile::new(LustreConfig::new(64, 4));
+    file.fail_ost(0);
+    let algo = Algorithm::Tam(TamConfig { total_local_aggregators: 2 });
+    assert!(run_collective_write(&ctx, algo, simple_ranks(&topo), &mut file).is_err());
+}
+
+#[test]
+fn unsorted_view_rejected_at_construction() {
+    let err = FlatView::from_pairs(vec![(100, 4), (0, 4)]).unwrap_err();
+    assert!(matches!(err, Error::Protocol(_)));
+}
+
+#[test]
+fn payload_size_mismatch_rejected() {
+    let view = FlatView::from_pairs(vec![(0, 10)]).unwrap();
+    assert!(RankState::with_payload(0, view, vec![1, 2, 3]).is_err());
+}
+
+#[test]
+fn empty_and_zero_length_ranks_are_fine() {
+    let (topo, net, cpu, io, eng) = ctx_parts();
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 4,
+    };
+    // Rank 0 writes, everyone else posts empty views or zero-length reqs.
+    let mut ranks = vec![(
+        0usize,
+        ReqBatch::new(FlatView::from_pairs(vec![(0, 64)]).unwrap(), vec![9u8; 64]),
+    )];
+    for r in 1..topo.nprocs() {
+        let view = if r % 2 == 0 {
+            FlatView::empty()
+        } else {
+            FlatView::from_pairs(vec![(128, 0)]).unwrap()
+        };
+        ranks.push((r, ReqBatch::new(view, vec![])));
+    }
+    let mut file = LustreFile::new(LustreConfig::new(64, 4));
+    let out = run_collective_write(
+        &ctx,
+        Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
+        ranks,
+        &mut file,
+    )
+    .unwrap();
+    assert_eq!(file.read_at(0, 64), vec![9u8; 64]);
+    assert_eq!(out.counters.bytes, 64);
+}
+
+#[test]
+fn oversized_offsets_rejected_by_validate() {
+    let v = FlatView::from_pairs_unchecked(vec![u64::MAX - 2], vec![100]);
+    assert!(v.validate().is_err());
+}
+
+#[test]
+fn config_rejects_unknown_and_malformed_keys() {
+    use tamio::config::{KvMap, RunConfig};
+    let mut cfg = RunConfig::default();
+    assert!(cfg
+        .apply(&KvMap::from_pairs(vec![("nodes".into(), "NaN".into())]))
+        .is_err());
+    assert!(cfg
+        .apply(&KvMap::from_pairs(vec![("placement".into(), "diagonal".into())]))
+        .is_err());
+    assert!(cfg
+        .apply(&KvMap::from_pairs(vec![("workload".into(), "hpl".into())]))
+        .is_err());
+}
+
+#[test]
+fn btio_non_square_process_count_is_a_workload_error() {
+    use tamio::workloads::{Workload, WorkloadKind};
+    let topo = Topology::new(2, 4);
+    let w = WorkloadKind::Btio.build(4096);
+    let err = w.view(&topo, 0).unwrap_err();
+    assert!(matches!(err, Error::Workload(_)));
+}

@@ -1,0 +1,259 @@
+//! Integration tests: full collective write/read across workloads,
+//! algorithms and topologies, verified against a reference file image.
+
+use tamio::cluster::Topology;
+use tamio::config::RunConfig;
+use tamio::coordinator::breakdown::CpuModel;
+use tamio::coordinator::collective::{run_collective_read, run_collective_write, Algorithm};
+use tamio::coordinator::merge::ReqBatch;
+use tamio::coordinator::placement::GlobalPlacement;
+use tamio::coordinator::tam::TamConfig;
+use tamio::coordinator::twophase::CollectiveCtx;
+use tamio::experiments::run_once;
+use tamio::lustre::{IoModel, LustreConfig, LustreFile};
+use tamio::netmodel::NetParams;
+use tamio::runtime::engine::NativeEngine;
+use tamio::workloads::WorkloadKind;
+
+struct Fx {
+    topo: Topology,
+    net: NetParams,
+    cpu: CpuModel,
+    io: IoModel,
+    eng: NativeEngine,
+}
+
+impl Fx {
+    fn new(nodes: usize, ppn: usize) -> Self {
+        Fx {
+            topo: Topology::new(nodes, ppn),
+            net: NetParams::default(),
+            cpu: CpuModel::default(),
+            io: IoModel::default(),
+            eng: NativeEngine,
+        }
+    }
+
+    fn ctx(&self, n_agg: usize) -> CollectiveCtx<'_> {
+        CollectiveCtx {
+            topo: &self.topo,
+            net: &self.net,
+            cpu: &self.cpu,
+            io: &self.io,
+            engine: &self.eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: n_agg,
+        }
+    }
+}
+
+/// Reference image: apply every rank's writes in rank order to a flat
+/// buffer (the MPI result for non-overlapping collective writes).
+fn reference_image(ranks: &[(usize, ReqBatch)]) -> (u64, Vec<u8>) {
+    let hi = ranks
+        .iter()
+        .filter_map(|(_, b)| b.view.max_end())
+        .max()
+        .unwrap_or(0);
+    let mut img = vec![0u8; hi as usize];
+    for (_, b) in ranks {
+        let mut cursor = 0usize;
+        for (off, len) in b.view.iter() {
+            img[off as usize..(off + len) as usize]
+                .copy_from_slice(&b.payload[cursor..cursor + len as usize]);
+            cursor += len as usize;
+        }
+    }
+    (hi, img)
+}
+
+fn check_workload(kind: WorkloadKind, algo: Algorithm, nodes: usize, ppn: usize, scale: u64) {
+    let fx = Fx::new(nodes, ppn);
+    let ctx = fx.ctx(8);
+    let w = kind.build(scale);
+    let ranks = w.generate(&fx.topo, 99).unwrap();
+    let (hi, img) = reference_image(&ranks);
+    let mut file = LustreFile::new(LustreConfig::new(1 << 14, 8));
+    let out = run_collective_write(&ctx, algo, ranks, &mut file).unwrap();
+    assert_eq!(
+        file.read_at(0, hi),
+        img,
+        "{kind} {} file image mismatch",
+        algo.name()
+    );
+    assert_eq!(out.counters.lock_conflicts, 0, "{kind}: stripe-aligned domains must not conflict");
+}
+
+#[test]
+fn e3sm_g_two_phase_and_tam_match_reference() {
+    check_workload(WorkloadKind::E3smG, Algorithm::TwoPhase, 2, 8, 50_000);
+    check_workload(
+        WorkloadKind::E3smG,
+        Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
+        2,
+        8,
+        50_000,
+    );
+}
+
+#[test]
+fn e3sm_f_tam_matches_reference() {
+    check_workload(
+        WorkloadKind::E3smF,
+        Algorithm::Tam(TamConfig { total_local_aggregators: 8 }),
+        2,
+        8,
+        200_000,
+    );
+}
+
+#[test]
+fn btio_both_algorithms_match_reference() {
+    // P = 16 (square) — BTIO requirement.
+    check_workload(WorkloadKind::Btio, Algorithm::TwoPhase, 2, 8, 100_000);
+    check_workload(
+        WorkloadKind::Btio,
+        Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
+        2,
+        8,
+        100_000,
+    );
+}
+
+#[test]
+fn s3d_both_algorithms_match_reference() {
+    check_workload(WorkloadKind::S3d, Algorithm::TwoPhase, 2, 8, 50_000);
+    check_workload(
+        WorkloadKind::S3d,
+        Algorithm::Tam(TamConfig { total_local_aggregators: 2 }),
+        2,
+        8,
+        50_000,
+    );
+}
+
+#[test]
+fn tam_and_two_phase_produce_identical_files() {
+    for kind in [WorkloadKind::Strided, WorkloadKind::Contig, WorkloadKind::S3d] {
+        let fx = Fx::new(2, 8);
+        let ctx = fx.ctx(4);
+        // Scale divisor shrinks the paper-size datasets (S3D at scale 1
+        // is 61 GiB); synthetic workloads ignore it.
+        let w = kind.build(100_000);
+        let ranks = w.generate(&fx.topo, 5).unwrap();
+        let hi = ranks.iter().filter_map(|(_, b)| b.view.max_end()).max().unwrap();
+        let mut f1 = LustreFile::new(LustreConfig::new(1 << 12, 4));
+        let mut f2 = LustreFile::new(LustreConfig::new(1 << 12, 4));
+        run_collective_write(&ctx, Algorithm::TwoPhase, ranks.clone(), &mut f1).unwrap();
+        run_collective_write(
+            &ctx,
+            Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
+            ranks,
+            &mut f2,
+        )
+        .unwrap();
+        assert_eq!(f1.read_at(0, hi), f2.read_at(0, hi), "{kind}");
+    }
+}
+
+#[test]
+fn read_inverts_write_for_all_workloads() {
+    for kind in [WorkloadKind::Strided, WorkloadKind::Btio, WorkloadKind::S3d] {
+        let fx = Fx::new(2, 8);
+        let ctx = fx.ctx(4);
+        let w = kind.build(100_000);
+        let ranks = w.generate(&fx.topo, 21).unwrap();
+        let mut file = LustreFile::new(LustreConfig::new(1 << 13, 4));
+        run_collective_write(&ctx, Algorithm::TwoPhase, ranks.clone(), &mut file).unwrap();
+        for algo in [
+            Algorithm::TwoPhase,
+            Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
+        ] {
+            let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+            let (got, _) = run_collective_read(&ctx, algo, views, &file).unwrap();
+            for ((r, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+                assert_eq!(payload, &want.payload, "{kind} {} rank {r}", algo.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_round_boundary_exact_stripe_multiples() {
+    // Aggregate region exactly n_agg stripes -> 1 round; +1 byte -> 2.
+    let fx = Fx::new(1, 4);
+    let ctx = fx.ctx(4);
+    let stripe = 1024u64;
+    for extra in [0u64, 1] {
+        let total = 4 * stripe + extra;
+        let view = tamio::mpisim::FlatView::from_pairs(vec![(0, total)]).unwrap();
+        let payload = vec![7u8; total as usize];
+        let ranks = vec![(0usize, ReqBatch::new(view, payload))];
+        let mut file = LustreFile::new(LustreConfig::new(stripe, 4));
+        let out = run_collective_write(&ctx, Algorithm::TwoPhase, ranks, &mut file).unwrap();
+        assert_eq!(out.counters.rounds, 1 + u64::from(extra > 0));
+        assert_eq!(file.read_at(0, total), vec![7u8; total as usize]);
+    }
+}
+
+#[test]
+fn non_divisible_process_counts_work() {
+    // 3 nodes x 5 ppn, P_L=7: uneven everywhere.
+    let fx = Fx::new(3, 5);
+    let ctx = fx.ctx(3);
+    let w = WorkloadKind::Strided.build(100_000);
+    let ranks = w.generate(&fx.topo, 1).unwrap();
+    let (hi, img) = reference_image(&ranks);
+    let mut file = LustreFile::new(LustreConfig::new(1 << 12, 3));
+    run_collective_write(
+        &ctx,
+        Algorithm::Tam(TamConfig { total_local_aggregators: 7 }),
+        ranks,
+        &mut file,
+    )
+    .unwrap();
+    assert_eq!(file.read_at(0, hi), img);
+}
+
+#[test]
+fn pl_sweep_intra_monotone_inter_growing() {
+    // §IV-D: f(P_L) decreasing, g(P_L) increasing (communication part).
+    let mut cfg = RunConfig::default();
+    cfg.nodes = 4;
+    cfg.ppn = 16;
+    cfg.workload = WorkloadKind::E3smG;
+    cfg.scale = 2048;
+    let runs = tamio::experiments::breakdown_sweep(&cfg, &[4, 16, 64]).unwrap();
+    assert!(runs[0].breakdown.intra_total() > runs[2].breakdown.intra_total());
+    assert!(runs[0].counters.msgs_inter <= runs[2].counters.msgs_inter);
+}
+
+#[test]
+fn two_phase_equivalent_to_tam_with_pl_eq_p() {
+    // §IV-D: P_L == P makes TAM's exchange structurally identical.
+    let mut cfg = RunConfig::default();
+    cfg.nodes = 2;
+    cfg.ppn = 8;
+    cfg.workload = WorkloadKind::Strided;
+    cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 16 });
+    let (tam_run, _) = run_once(&cfg).unwrap();
+    cfg.algorithm = Algorithm::TwoPhase;
+    let (two_run, _) = run_once(&cfg).unwrap();
+    assert_eq!(tam_run.counters.msgs_intra, 0);
+    assert_eq!(tam_run.counters.msgs_inter, two_run.counters.msgs_inter);
+    assert_eq!(tam_run.counters.max_in_degree, two_run.counters.max_in_degree);
+    assert!((tam_run.breakdown.inter_comm - two_run.breakdown.inter_comm).abs() < 1e-12);
+}
+
+#[test]
+fn congestion_shrinks_with_tam_at_scale() {
+    // P = 1024 > P_L = 256 so TAM's aggregation layer is active.
+    let mut cfg = RunConfig::default();
+    cfg.nodes = 16;
+    cfg.ppn = 64;
+    cfg.workload = WorkloadKind::E3smG;
+    cfg.scale = 8192;
+    let rows = tamio::experiments::fig2_congestion(&cfg).unwrap();
+    let (two, tam) = (&rows[0], &rows[1]);
+    assert!(tam.1 < two.1, "TAM in-degree {} !< two-phase {}", tam.1, two.1);
+}

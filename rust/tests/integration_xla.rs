@@ -1,0 +1,85 @@
+//! XLA-engine integration: the AOT-compiled JAX/Pallas aggregation
+//! pipeline must agree bit-for-bit with the native engine, standalone and
+//! inside full collectives.  Tests skip (with a notice) when artifacts
+//! have not been built (`make artifacts`).
+
+use tamio::config::RunConfig;
+use tamio::coordinator::collective::Algorithm;
+use tamio::coordinator::merge::sort_coalesce_pairs;
+use tamio::coordinator::tam::TamConfig;
+use tamio::experiments::{run_once, run_once_with_engine};
+use tamio::lustre::LustreConfig;
+use tamio::runtime::engine::{EngineKind, SortEngine, XlaEngine};
+use tamio::util::SplitMix64;
+use tamio::workloads::WorkloadKind;
+
+fn xla_or_skip() -> Option<XlaEngine> {
+    match XlaEngine::load_default() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("[skip] xla engine unavailable: {e}");
+            None
+        }
+    }
+}
+
+fn random_pairs(n: usize, seed: u64) -> Vec<(u64, u64)> {
+    let mut rng = SplitMix64::new(seed);
+    let mut cursor = 0u64;
+    let mut pairs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = rng.gen_range(64); // includes zero-length requests
+        cursor += if rng.gen_bool(0.4) { 0 } else { rng.gen_range(128) };
+        pairs.push((cursor, len));
+        cursor += len;
+    }
+    rng.shuffle(&mut pairs);
+    pairs
+}
+
+#[test]
+fn xla_matches_native_on_random_batches() {
+    let Some(xla) = xla_or_skip() else { return };
+    for n in [0usize, 1, 2, 100, 255, 256, 257, 1024, 5000, 20_000] {
+        let pairs = random_pairs(n, n as u64 + 1);
+        let native = sort_coalesce_pairs(pairs.clone());
+        let got = xla.merge_coalesce(pairs).unwrap();
+        assert_eq!(got, native, "n={n}");
+    }
+}
+
+#[test]
+fn xla_handles_extreme_offsets() {
+    let Some(xla) = xla_or_skip() else { return };
+    // Offsets near 2^62 (file offsets are < 2^63 by MPI convention).
+    let big = 1u64 << 62;
+    let pairs = vec![(big, 10), (big + 10, 5), (0, 3), (big + 100, 1)];
+    let got = xla.merge_coalesce(pairs.clone()).unwrap();
+    assert_eq!(got, sort_coalesce_pairs(pairs));
+}
+
+#[test]
+fn full_collective_identical_under_both_engines() {
+    let Some(xla) = xla_or_skip() else { return };
+    let mut cfg = RunConfig::default();
+    cfg.nodes = 2;
+    cfg.ppn = 8;
+    cfg.workload = WorkloadKind::Btio;
+    cfg.scale = 100_000;
+    cfg.lustre = LustreConfig::new(1 << 14, 8);
+    cfg.verify = true;
+    cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 4 });
+
+    let (xla_run, xla_verify) = run_once_with_engine(&cfg, &xla).unwrap();
+    assert!(xla_verify.unwrap().passed(), "xla engine verification");
+
+    cfg.engine = EngineKind::Native;
+    let (native_run, native_verify) = run_once(&cfg).unwrap();
+    assert!(native_verify.unwrap().passed());
+
+    // Identical aggregation results -> identical counters and times.
+    assert_eq!(xla_run.counters.reqs_after_intra, native_run.counters.reqs_after_intra);
+    assert_eq!(xla_run.counters.reqs_at_io, native_run.counters.reqs_at_io);
+    assert_eq!(xla_run.counters.msgs_inter, native_run.counters.msgs_inter);
+    assert!((xla_run.breakdown.total() - native_run.breakdown.total()).abs() < 1e-12);
+}

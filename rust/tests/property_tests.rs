@@ -1,0 +1,226 @@
+//! Property tests (propmini harness): random file views, topologies and
+//! geometries → structural invariants of the whole pipeline.
+
+use tamio::cluster::Topology;
+use tamio::coordinator::breakdown::CpuModel;
+use tamio::coordinator::collective::{run_collective_write, Algorithm};
+use tamio::coordinator::filedomain::FileDomains;
+use tamio::coordinator::merge::{merge_views, sort_coalesce_pairs, ReqBatch};
+use tamio::coordinator::placement::{select_local_aggregators, GlobalPlacement};
+use tamio::coordinator::tam::TamConfig;
+use tamio::coordinator::twophase::CollectiveCtx;
+use tamio::lustre::{IoModel, LustreConfig, LustreFile};
+use tamio::mpisim::FlatView;
+use tamio::netmodel::NetParams;
+use tamio::propmini::{forall, Gen};
+use tamio::runtime::engine::NativeEngine;
+
+/// Random sorted view with mixed contiguity.
+fn gen_view(g: &mut Gen, max_reqs: usize) -> (FlatView, Vec<u8>) {
+    let n = g.usize_in(0, max_reqs);
+    let mut cursor = g.u64_below(512);
+    let mut pairs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = 1 + g.u64_below(64);
+        if !g.bool_with(0.5) {
+            cursor += g.u64_below(256);
+        }
+        pairs.push((cursor, len));
+        cursor += len;
+    }
+    let view = FlatView::from_pairs(pairs).unwrap();
+    let total = view.total_bytes();
+    let payload: Vec<u8> = (0..total).map(|i| (i as u8).wrapping_mul(31)).collect();
+    (view, payload)
+}
+
+#[test]
+fn prop_sort_coalesce_is_idempotent_and_minimal() {
+    forall("coalesce-idempotent", 0xC0A1, 200, |g| {
+        let (view, _) = gen_view(g, 60);
+        let pairs: Vec<(u64, u64)> = view.iter().collect();
+        let once = sort_coalesce_pairs(pairs);
+        let twice = sort_coalesce_pairs(once.clone());
+        if once != twice {
+            return Err(format!("not idempotent: {once:?} vs {twice:?}"));
+        }
+        // Minimal: no two adjacent outputs contiguous.
+        for w in once.windows(2) {
+            if w[0].0 + w[0].1 == w[1].0 {
+                return Err(format!("not minimal: {:?}", w));
+            }
+        }
+        // Byte-conserving.
+        let before: u64 = view.lengths().iter().sum();
+        let after: u64 = once.iter().map(|p| p.1).sum();
+        if before != after {
+            return Err(format!("bytes changed {before} -> {after}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_views_equals_sort_coalesce_of_concat() {
+    forall("merge-vs-sort", 0x3E46, 150, |g| {
+        let k = g.usize_in(1, 8);
+        let views: Vec<(FlatView, Vec<u8>)> = (0..k).map(|_| gen_view(g, 30)).collect();
+        let refs: Vec<&FlatView> = views.iter().map(|(v, _)| v).collect();
+        let merged = merge_views(&refs);
+        let concat: Vec<(u64, u64)> = refs.iter().flat_map(|v| v.iter()).collect();
+        let want = sort_coalesce_pairs(concat);
+        if merged.iter().collect::<Vec<_>>() != want {
+            return Err("k-way merge != sort+coalesce".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_file_domains_partition_exactly() {
+    forall("domains-partition", 0xD0ED, 200, |g| {
+        let stripe = 1 + g.u64_below(4096);
+        let count = g.usize_in(1, 16);
+        let n_agg = g.usize_in(1, 16);
+        let lo = g.u64_below(1 << 20);
+        let hi = lo + 1 + g.u64_below(1 << 20);
+        let d = FileDomains::new(LustreConfig::new(stripe, count), lo, hi, n_agg);
+        // Sampled offsets: owned by exactly one (agg, round) slot whose
+        // domain contains them.
+        for i in 0..50 {
+            let off = lo + (hi - lo - 1) * i / 49;
+            let a = d.aggregator_of(off);
+            let r = d.round_of(off);
+            let Some((dlo, dhi)) = d.domain_of(a, r) else {
+                return Err(format!("offset {off}: no domain for ({a},{r})"));
+            };
+            if off < dlo || off >= dhi {
+                return Err(format!("offset {off} outside domain [{dlo},{dhi})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_local_aggregator_selection_invariants() {
+    forall("local-agg-selection", 0x10CA, 300, |g| {
+        let nodes = g.usize_in(1, 8);
+        let ppn = g.usize_in(1, 32);
+        let c = g.usize_in(1, 40);
+        let topo = Topology::new(nodes, ppn);
+        let la = select_local_aggregators(&topo, c);
+        let expect_per_node = c.clamp(1, ppn);
+        if la.ranks.len() != nodes * expect_per_node {
+            return Err(format!(
+                "count {} != nodes {nodes} * c {expect_per_node}",
+                la.ranks.len()
+            ));
+        }
+        for r in 0..topo.nprocs() {
+            let a = la.assignment[r];
+            if topo.node_of(a) != topo.node_of(r) {
+                return Err(format!("rank {r} assigned cross-node aggregator {a}"));
+            }
+            if a > r {
+                return Err(format!("aggregator {a} above member {r}"));
+            }
+            if !la.ranks.contains(&a) {
+                return Err(format!("assignment target {a} not an aggregator"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_collective_write_matches_reference_random_everything() {
+    forall("collective-vs-reference", 0xF11E, 40, |g| {
+        let nodes = 1 + g.usize_in(1, 3);
+        let ppn = 1 + g.usize_in(1, 7);
+        let topo = Topology::new(nodes, ppn);
+        let stripe = 64 + g.u64_below(2048);
+        let n_ost = g.usize_in(1, 8);
+        let pl = 1 + g.usize_in(0, nodes * ppn);
+        // Disjoint per-rank regions to keep the reference order-free.
+        let region = 8192u64;
+        let mut ranks = Vec::new();
+        let mut expected: Vec<(u64, Vec<u8>)> = Vec::new();
+        for r in 0..topo.nprocs() {
+            let base = r as u64 * region;
+            let n = g.usize_in(0, 12);
+            let mut cursor = base;
+            let mut pairs = Vec::new();
+            for _ in 0..n {
+                let len = 1 + g.u64_below(100);
+                if cursor + len >= base + region {
+                    break;
+                }
+                pairs.push((cursor, len));
+                cursor += len + g.u64_below(50);
+            }
+            let view = FlatView::from_pairs(pairs).unwrap();
+            let total = view.total_bytes();
+            let payload: Vec<u8> =
+                (0..total).map(|i| (i as u8) ^ (r as u8)).collect();
+            let mut cursor_b = 0usize;
+            for (off, len) in view.iter() {
+                expected.push((off, payload[cursor_b..cursor_b + len as usize].to_vec()));
+                cursor_b += len as usize;
+            }
+            ranks.push((r, ReqBatch::new(view, payload)));
+        }
+        let net = NetParams::default();
+        let cpu = CpuModel::default();
+        let io = IoModel::default();
+        let eng = NativeEngine;
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: n_ost,
+        };
+        let mut file = LustreFile::new(LustreConfig::new(stripe, n_ost));
+        let algo = Algorithm::Tam(TamConfig { total_local_aggregators: pl });
+        run_collective_write(&ctx, algo, ranks, &mut file)
+            .map_err(|e| format!("write failed: {e}"))?;
+        for (off, bytes) in expected {
+            let got = file.read_at(off, bytes.len() as u64);
+            if got != bytes {
+                return Err(format!("mismatch at offset {off}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stripe_split_conserves_bytes_and_osts() {
+    forall("stripe-split", 0x57A1, 300, |g| {
+        let cfg = LustreConfig::new(1 + g.u64_below(4096), g.usize_in(1, 12));
+        let off = g.u64_below(1 << 30);
+        let len = g.u64_below(1 << 16);
+        let pieces = cfg.split_by_stripe(off, len);
+        let total: u64 = pieces.iter().map(|p| p.2).sum();
+        if total != len {
+            return Err(format!("bytes {total} != {len}"));
+        }
+        let mut cursor = off;
+        for (ost, poff, plen) in pieces {
+            if poff != cursor {
+                return Err(format!("gap at {poff} (expected {cursor})"));
+            }
+            if cfg.ost_of(poff) != ost {
+                return Err("wrong OST".into());
+            }
+            if plen == 0 {
+                return Err("zero-length piece".into());
+            }
+            cursor = poff + plen;
+        }
+        Ok(())
+    });
+}
