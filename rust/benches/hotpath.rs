@@ -1,0 +1,175 @@
+//! Aggregator hot-path microbenchmarks (§Perf tentpole): the streaming
+//! pipeline vs its pre-streaming baselines, wall-clock, at 1k/16k/128k
+//! requests.
+//!
+//! * merge — `SortEngine::merge_sorted` (O(n log k) gallop heap merge over
+//!   k already-sorted peer streams) vs the flatten + full re-sort baseline
+//!   (`sort_coalesce_pairs` of the concatenation, what the round loop did
+//!   before).
+//! * scatter — two-pointer payload scatter into a reused buffer vs the
+//!   per-request binary-search reference.
+//! * cost_phase — dense-rank accumulators on a 16384-rank topology.
+//!
+//! Writes `BENCH_hotpath.json` (median wall times + speedups) in the
+//! working directory.
+//!
+//! `cargo bench --bench hotpath`
+
+use std::time::Duration;
+
+use tamio::benchkit::{bench, black_box, section, JsonReport};
+use tamio::cluster::Topology;
+use tamio::coordinator::merge::{
+    scatter_into_binary_search, scatter_into_buf, sort_coalesce_pairs, ReqBatch,
+};
+use tamio::mpisim::FlatView;
+use tamio::netmodel::phase::{cost_phase, Message};
+use tamio::netmodel::NetParams;
+use tamio::runtime::engine::{NativeEngine, SortEngine};
+use tamio::util::SplitMix64;
+
+/// Request counts per experiment (the ISSUE's 1k/16k/128k grid).
+const SIZES: [usize; 3] = [1_000, 16_000, 128_000];
+/// Sorted peer streams per merge (the acceptance floor is ≥ 8).
+const K: usize = 8;
+/// Consecutive requests per stream before the deal rotates — the
+/// block-partitioned adjacency real MPI file views exhibit (§V-C).
+const RUN: usize = 8;
+
+/// One global sorted, disjoint request sequence dealt to `k` streams in
+/// runs of `RUN`.
+fn make_streams(k: usize, total: usize, seed: u64) -> Vec<FlatView> {
+    let mut rng = SplitMix64::new(seed);
+    let mut streams: Vec<Vec<(u64, u64)>> = vec![Vec::with_capacity(total / k + RUN); k];
+    let mut cursor = 0u64;
+    for i in 0..total {
+        let s = (i / RUN) % k;
+        let len = 8 + rng.gen_range(56);
+        if rng.gen_bool(0.5) {
+            cursor += rng.gen_range(512);
+        }
+        streams[s].push((cursor, len));
+        cursor += len;
+    }
+    streams
+        .into_iter()
+        .map(|pairs| FlatView::from_pairs(pairs).expect("generator emits sorted views"))
+        .collect()
+}
+
+fn bench_merge(report: &mut JsonReport, budget: Duration) {
+    let engine = NativeEngine;
+    for &n in &SIZES {
+        section(&format!("merge: {n} requests from {K} sorted streams"));
+        let streams = make_streams(K, n, 0xB0B + n as u64);
+        let refs: Vec<&FlatView> = streams.iter().collect();
+
+        // Correctness pin before timing anything.
+        let concat: Vec<(u64, u64)> = streams.iter().flat_map(|v| v.iter()).collect();
+        let want = sort_coalesce_pairs(concat);
+        let got = engine.merge_sorted(&refs).expect("native merge");
+        assert_eq!(
+            got.iter().collect::<Vec<_>>(),
+            want,
+            "merge_sorted != flatten+re-sort at n={n}"
+        );
+
+        let base = bench(&format!("flatten+re-sort/{n}"), budget, || {
+            let concat: Vec<(u64, u64)> = streams.iter().flat_map(|v| v.iter()).collect();
+            black_box(sort_coalesce_pairs(black_box(concat)));
+        });
+        println!("{base}");
+        let kway = bench(&format!("merge_sorted/{n}"), budget, || {
+            black_box(engine.merge_sorted(black_box(&refs)).unwrap());
+        });
+        println!("{kway}");
+        let speedup = base.median.as_secs_f64() / kway.median.as_secs_f64().max(1e-12);
+        println!(
+            "merge_sorted speedup over flatten+re-sort at n={n}: {speedup:.2}x {}",
+            if speedup > 1.0 { "(k-way wins)" } else { "(baseline wins)" }
+        );
+        report.add(&base);
+        report.add(&kway);
+        report.add_value(&format!("merge_speedup/{n}"), speedup);
+    }
+}
+
+fn bench_scatter(report: &mut JsonReport, budget: Duration) {
+    let engine = NativeEngine;
+    for &n in &SIZES {
+        section(&format!("scatter: {n} requests, {K} payload batches"));
+        let streams = make_streams(K, n, 0x5CA7 + n as u64);
+        let batches: Vec<ReqBatch> = streams
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| {
+                let payload = vec![(i as u8).wrapping_mul(37); v.total_bytes() as usize];
+                ReqBatch::new(v, payload)
+            })
+            .collect();
+        let views: Vec<&FlatView> = batches.iter().map(|b| &b.view).collect();
+        let merged = engine.merge_sorted(&views).expect("merge");
+
+        // Correctness pin.
+        let mut buf = Vec::new();
+        let moved = scatter_into_buf(&merged, &batches, &mut buf);
+        let (want, want_moved) = scatter_into_binary_search(&merged, &batches);
+        assert_eq!(buf, want, "scatter mismatch at n={n}");
+        assert_eq!(moved, want_moved);
+
+        let base = bench(&format!("scatter_binary_search/{n}"), budget, || {
+            black_box(scatter_into_binary_search(black_box(&merged), black_box(&batches)));
+        });
+        println!("{base}");
+        let two = bench(&format!("scatter_two_pointer/{n}"), budget, || {
+            black_box(scatter_into_buf(
+                black_box(&merged),
+                black_box(&batches),
+                black_box(&mut buf),
+            ));
+        });
+        println!("{two}");
+        let speedup = base.median.as_secs_f64() / two.median.as_secs_f64().max(1e-12);
+        println!("two-pointer scatter speedup at n={n}: {speedup:.2}x");
+        report.add(&base);
+        report.add(&two);
+        report.add_value(&format!("scatter_speedup/{n}"), speedup);
+    }
+}
+
+fn bench_cost_phase(report: &mut JsonReport, budget: Duration) {
+    // The ROADMAP north-star topology: 16384 ranks on 256 nodes, with the
+    // all-to-many pattern that stresses the receiver accumulators.
+    let topo = Topology::new(256, 64);
+    let params = NetParams::default();
+    let n_agg = 64usize;
+    let spacing = topo.nprocs() / n_agg;
+    for &n in &SIZES {
+        section(&format!("cost_phase: {n} messages, P={} (dense-rank)", topo.nprocs()));
+        let mut rng = SplitMix64::new(0xC057 + n as u64);
+        let msgs: Vec<Message> = (0..n)
+            .map(|i| {
+                Message::new(
+                    rng.gen_range(topo.nprocs() as u64) as usize,
+                    (i % n_agg) * spacing,
+                    1024 + rng.gen_range(1 << 14),
+                )
+            })
+            .collect();
+        let r = bench(&format!("cost_phase/{n}"), budget, || {
+            black_box(cost_phase(black_box(&params), black_box(&topo), black_box(&msgs)));
+        });
+        println!("{r}   ({:.2} Mmsgs/s)", r.per_second(n as u64) / 1e6);
+        report.add(&r);
+    }
+}
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let mut report = JsonReport::new();
+    bench_merge(&mut report, budget);
+    bench_scatter(&mut report, budget);
+    bench_cost_phase(&mut report, budget);
+    report.write("BENCH_hotpath.json").expect("write BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json");
+}

@@ -70,6 +70,56 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Accumulates [`BenchResult`]s (plus derived scalars such as speedup
+/// ratios) and writes them as a JSON report, e.g. `BENCH_hotpath.json` —
+/// the machine-readable twin of the printed tables for CI trend tracking.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    entries: Vec<String>,
+}
+
+impl JsonReport {
+    /// New empty report.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one measured result (times in microseconds).
+    pub fn add(&mut self, r: &BenchResult) {
+        self.entries.push(
+            crate::metrics::report::JsonWriter::new()
+                .str("name", &r.name)
+                .int("iters", r.iters as u64)
+                .num("min_us", r.min.as_secs_f64() * 1e6)
+                .num("median_us", r.median.as_secs_f64() * 1e6)
+                .num("mean_us", r.mean.as_secs_f64() * 1e6)
+                .num("max_us", r.max.as_secs_f64() * 1e6)
+                .finish(),
+        );
+    }
+
+    /// Append a derived scalar (e.g. a speedup ratio).
+    pub fn add_value(&mut self, name: &str, value: f64) {
+        self.entries.push(
+            crate::metrics::report::JsonWriter::new()
+                .str("name", name)
+                .num("value", value)
+                .finish(),
+        );
+    }
+
+    /// Serialize the report object.
+    pub fn to_json(&self) -> String {
+        format!("{{\"benches\": [{}]}}", self.entries.join(", "))
+    }
+
+    /// Write the report to `path`.
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> crate::error::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+}
+
 /// Print a bench-section header.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
@@ -91,5 +141,21 @@ mod tests {
         assert!(r.iters >= 1);
         assert!(r.min <= r.median && r.median <= r.max);
         assert!(r.per_second(10_000) > 0.0);
+    }
+
+    #[test]
+    fn json_report_serializes_results_and_values() {
+        let r = bench("tiny", Duration::from_millis(1), || {
+            black_box(1 + 1);
+        });
+        let mut rep = JsonReport::new();
+        rep.add(&r);
+        rep.add_value("speedup/16k", 2.5);
+        let j = rep.to_json();
+        assert!(j.starts_with("{\"benches\": ["));
+        assert!(j.contains("\"name\": \"tiny\""));
+        assert!(j.contains("median_us"));
+        assert!(j.contains("\"name\": \"speedup/16k\""));
+        assert!(j.contains("\"value\": 2.5"));
     }
 }

@@ -7,11 +7,20 @@
 //! scatter into the aggregated contiguous buffer is a separate pass so the
 //! metadata step can also be executed by the XLA engine
 //! ([`crate::runtime::engine`]) interchangeably.
+//!
+//! The streaming pipeline (DESIGN.md §Hot path) is:
+//! [`crate::runtime::engine::SortEngine::merge_sorted`] → [`merge_views`]
+//! (`O(n log k)`, gallop-accelerated on runs) → [`scatter_into_buf`]
+//! (linear two-pointer payload scatter into a reusable buffer).
+//! [`AggScratch`] owns the per-aggregator buffers that survive across
+//! exchange rounds so the steady state allocates nothing.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::error::Result;
 use crate::mpisim::FlatView;
+use crate::runtime::engine::SortEngine;
 
 /// One peer's aggregated requests: sorted view + payload in view order.
 #[derive(Clone, Debug, Default)]
@@ -30,11 +39,32 @@ impl ReqBatch {
     }
 }
 
+/// Fold `(off, len)` into the running coalesce state, emitting the
+/// previous segment when contiguity breaks (the paper's exact rule).
+#[inline]
+fn absorb(last: &mut Option<(u64, u64)>, out: &mut FlatView, off: u64, len: u64) {
+    match *last {
+        Some((lo, ll)) if lo + ll == off => *last = Some((lo, ll + len)),
+        Some((lo, ll)) => {
+            out.push(lo, ll);
+            *last = Some((off, len));
+        }
+        None => *last = Some((off, len)),
+    }
+}
+
 /// K-way heap merge of sorted views into one sorted, coalesced view.
 ///
 /// Time `O(n log k)` via a binary heap keyed on `(offset, length, stream)`
 /// — the deterministic tie-break mirrors the L1 bitonic kernel's
 /// lexicographic ordering so both engines produce identical output.
+///
+/// After each pop the winning stream *gallops*: as long as its next entry
+/// would win the very next heap comparison anyway (full-tuple order against
+/// the current heap top), it is consumed directly without a push/pop pair.
+/// Real file views interleave in block-sized runs (§V-C), so this
+/// collapses most heap traffic while popping in the exact same order as
+/// the plain heap algorithm.
 pub fn merge_views(views: &[&FlatView]) -> FlatView {
     let mut heap: BinaryHeap<Reverse<(u64, u64, usize, usize)>> = views
         .iter()
@@ -45,17 +75,26 @@ pub fn merge_views(views: &[&FlatView]) -> FlatView {
     let mut out = FlatView::empty();
     let mut last: Option<(u64, u64)> = None;
     while let Some(Reverse((off, len, s, i))) = heap.pop() {
-        match last {
-            Some((lo, ll)) if lo + ll == off => last = Some((lo, ll + len)),
-            Some((lo, ll)) => {
-                out.push(lo, ll);
-                last = Some((off, len));
-            }
-            None => last = Some((off, len)),
-        }
+        absorb(&mut last, &mut out, off, len);
         let v = views[s];
-        if i + 1 < v.len() {
-            heap.push(Reverse((v.offsets()[i + 1], v.lengths()[i + 1], s, i + 1)));
+        let mut i = i;
+        loop {
+            if i + 1 >= v.len() {
+                break;
+            }
+            let next = (v.offsets()[i + 1], v.lengths()[i + 1], s, i + 1);
+            match heap.peek() {
+                Some(&Reverse(top)) if next > top => {
+                    heap.push(Reverse(next));
+                    break;
+                }
+                // Heap empty, or this stream still holds the minimum:
+                // consume directly (identical pop order to the pure heap).
+                _ => {
+                    absorb(&mut last, &mut out, next.0, next.1);
+                    i += 1;
+                }
+            }
         }
     }
     if let Some((lo, ll)) = last {
@@ -84,6 +123,58 @@ pub fn merge_batches(batches: &[ReqBatch]) -> (ReqBatch, u64) {
 ///
 /// Returns the buffer and the bytes moved (memcpy-time accounting).
 pub fn scatter_into(merged: &FlatView, batches: &[ReqBatch]) -> (Vec<u8>, u64) {
+    let mut payload = Vec::new();
+    let moved = scatter_into_buf(merged, batches, &mut payload);
+    (payload, moved)
+}
+
+/// [`scatter_into`] into a caller-owned buffer (cleared, zero-filled and
+/// resized to `merged.total_bytes()`; capacity is reused across calls —
+/// the scratch-arena hot path).
+///
+/// Both `merged` and each batch view are ascending, so the containing
+/// merged segment is found with a linear two-pointer walk instead of a
+/// per-request binary search, and the segment's payload start is carried
+/// as a running sum — `O(reqs + segments)` per batch, no index tables.
+pub fn scatter_into_buf(merged: &FlatView, batches: &[ReqBatch], payload: &mut Vec<u8>) -> u64 {
+    let total = merged.total_bytes() as usize;
+    payload.clear();
+    payload.resize(total, 0);
+    let seg_offsets = merged.offsets();
+    let seg_lengths = merged.lengths();
+
+    let mut moved = 0u64;
+    for b in batches {
+        if b.payload.is_empty() {
+            continue;
+        }
+        let mut cursor = 0usize;
+        let mut seg = 0usize;
+        // Payload position of segment `seg` within the merged buffer.
+        let mut seg_start = 0u64;
+        for (off, len) in b.view.iter() {
+            // Advance to the last segment starting at or before `off`
+            // (batch offsets are nondecreasing, so `seg` never rewinds).
+            while seg + 1 < seg_offsets.len() && seg_offsets[seg + 1] <= off {
+                seg_start += seg_lengths[seg];
+                seg += 1;
+            }
+            let within = off - seg_offsets[seg];
+            debug_assert!(within + len <= seg_lengths[seg]);
+            let dst = (seg_start + within) as usize;
+            payload[dst..dst + len as usize]
+                .copy_from_slice(&b.payload[cursor..cursor + len as usize]);
+            cursor += len as usize;
+            moved += len;
+        }
+    }
+    moved
+}
+
+/// Reference implementation of [`scatter_into`] using a per-request binary
+/// search over the merged offsets (the pre-streaming hot path).  Kept for
+/// the equivalence regression tests and the hot-path benchmark baseline.
+pub fn scatter_into_binary_search(merged: &FlatView, batches: &[ReqBatch]) -> (Vec<u8>, u64) {
     let total = merged.total_bytes();
     let mut payload = vec![0u8; total as usize];
 
@@ -118,6 +209,52 @@ pub fn scatter_into(merged: &FlatView, batches: &[ReqBatch]) -> (Vec<u8>, u64) {
         }
     }
     (payload, moved)
+}
+
+/// Reusable per-aggregator scratch for the exchange round loop: the batch
+/// staging `Vec` and the contiguous payload buffer — the two largest
+/// per-round allocations of the old path — survive across rounds with
+/// their capacity intact (§Perf tentpole; ownership contract in DESIGN.md
+/// §Hot path).  The merged `FlatView` itself is still produced fresh by
+/// the engine each round.
+#[derive(Debug, Default)]
+pub struct AggScratch {
+    /// Batches staged for this aggregator in the current round.
+    pub batches: Vec<ReqBatch>,
+    /// Merged, coalesced view (engine output) for the current round.
+    pub merged: FlatView,
+    /// Contiguous payload laid out by `merged` (capacity reused).
+    pub payload: Vec<u8>,
+    /// Total input requests staged this round (cost accounting).
+    pub n_items: u64,
+    /// Number of contributing peer batches this round (cost accounting).
+    pub k: usize,
+}
+
+impl AggScratch {
+    /// Reset for a new round, keeping allocated capacity.
+    pub fn reset(&mut self) {
+        self.batches.clear();
+        self.merged = FlatView::empty();
+        self.payload.clear();
+        self.n_items = 0;
+        self.k = 0;
+    }
+
+    /// Merge the staged batches through `engine` and scatter their
+    /// payloads into the reusable buffer.  Returns the bytes moved.
+    pub fn merge_with(&mut self, engine: &dyn SortEngine) -> Result<u64> {
+        self.k = self.batches.len();
+        self.n_items = self.batches.iter().map(|b| b.view.len() as u64).sum();
+        if self.batches.is_empty() {
+            self.merged = FlatView::empty();
+            self.payload.clear();
+            return Ok(0);
+        }
+        let views: Vec<&FlatView> = self.batches.iter().map(|b| &b.view).collect();
+        self.merged = engine.merge_sorted(&views)?;
+        Ok(scatter_into_buf(&self.merged, &self.batches, &mut self.payload))
+    }
 }
 
 /// Sort-then-coalesce for *unsorted* pair lists (the native twin of the
@@ -192,6 +329,25 @@ mod tests {
     }
 
     #[test]
+    fn merge_single_stream_gallops_to_the_end() {
+        // With one stream the heap is empty after the first pop; the
+        // gallop path must still emit (and coalesce) every entry.
+        let a = fv(&[(0, 4), (4, 4), (10, 2), (20, 4)]);
+        let m = merge_views(&[&a]);
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![(0, 8), (10, 2), (20, 4)]);
+    }
+
+    #[test]
+    fn merge_run_structured_streams() {
+        // Long per-stream runs (the gallop fast path) interleaved at run
+        // granularity across streams.
+        let a = fv(&[(0, 10), (10, 10), (40, 10), (50, 10)]);
+        let b = fv(&[(20, 10), (30, 10), (60, 10), (75, 5)]);
+        let m = merge_views(&[&a, &b]);
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![(0, 70), (75, 5)]);
+    }
+
+    #[test]
     fn merge_matches_sort_coalesce_reference() {
         use crate::util::SplitMix64;
         let mut rng = SplitMix64::new(99);
@@ -236,6 +392,53 @@ mod tests {
         assert_eq!(m.view.iter().collect::<Vec<_>>(), vec![(0, 4)]);
         assert_eq!(moved, 0);
         assert_eq!(m.payload, vec![0u8; 4]);
+    }
+
+    #[test]
+    fn scatter_two_pointer_matches_binary_search() {
+        // Zero-length requests and a batch landing mid-segment.
+        let a = ReqBatch::new(fv(&[(0, 2), (4, 0), (6, 2)]), vec![1, 2, 7, 8]);
+        let b = ReqBatch::new(fv(&[(2, 2), (8, 1)]), vec![3, 4, 9]);
+        let views: Vec<&FlatView> = [&a, &b].iter().map(|x| &x.view).collect();
+        let merged = merge_views(&views);
+        let batches = [a, b];
+        let (p1, m1) = scatter_into(&merged, &batches);
+        let (p2, m2) = scatter_into_binary_search(&merged, &batches);
+        assert_eq!(p1, p2);
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn scatter_into_buf_reuses_and_zero_fills() {
+        let a = ReqBatch::new(fv(&[(0, 2)]), vec![5, 6]);
+        let mut buf = vec![0xFFu8; 64];
+        let moved = scatter_into_buf(&a.view.clone(), std::slice::from_ref(&a), &mut buf);
+        assert_eq!(moved, 2);
+        assert_eq!(buf, vec![5, 6]);
+        // A second use with a smaller layout must not leak stale bytes.
+        let b = ReqBatch::new(fv(&[(10, 1)]), vec![9]);
+        let moved = scatter_into_buf(&b.view.clone(), std::slice::from_ref(&b), &mut buf);
+        assert_eq!(moved, 1);
+        assert_eq!(buf, vec![9]);
+    }
+
+    #[test]
+    fn agg_scratch_merges_and_resets() {
+        use crate::runtime::engine::NativeEngine;
+        let mut s = AggScratch::default();
+        s.batches.push(ReqBatch::new(fv(&[(0, 2), (6, 2)]), vec![1, 2, 7, 8]));
+        s.batches.push(ReqBatch::new(fv(&[(2, 2)]), vec![3, 4]));
+        let moved = s.merge_with(&NativeEngine).unwrap();
+        assert_eq!(moved, 6);
+        assert_eq!(s.k, 2);
+        assert_eq!(s.n_items, 3);
+        assert_eq!(s.merged.iter().collect::<Vec<_>>(), vec![(0, 4), (6, 2)]);
+        assert_eq!(s.payload, vec![1, 2, 3, 4, 7, 8]);
+        s.reset();
+        assert!(s.batches.is_empty() && s.merged.is_empty() && s.payload.is_empty());
+        // Empty round: merge_with is a cheap no-op.
+        assert_eq!(s.merge_with(&NativeEngine).unwrap(), 0);
+        assert_eq!(s.k, 0);
     }
 
     #[test]

@@ -79,20 +79,21 @@ pub fn intra_node_aggregate(
         v.sort_unstable_by_key(|(agg, _)| *agg);
         v
     };
-    let merged: Vec<(usize, ReqBatch, f64, f64)> = par_map(items, |(agg, batches)| {
+    // The engine streams each member's already-sorted view (no flatten +
+    // full re-sort on the native path); engine errors propagate as `Err`
+    // instead of aborting the worker thread.
+    let merged: Vec<Result<(usize, ReqBatch, f64, f64)>> = par_map(items, |(agg, batches)| {
         let k = batches.len();
         let n_items: u64 = batches.iter().map(|b| b.view.len() as u64).sum();
-        let pairs: Vec<(u64, u64)> = batches.iter().flat_map(|b| b.view.iter()).collect();
-        let merged_pairs = ctx.engine.merge_coalesce(pairs).expect("engine merge failed");
-        let view = FlatView::from_pairs_unchecked(
-            merged_pairs.iter().map(|p| p.0).collect(),
-            merged_pairs.iter().map(|p| p.1).collect(),
-        );
+        let views: Vec<&FlatView> = batches.iter().map(|b| &b.view).collect();
+        let view = ctx.engine.merge_sorted(&views)?;
         let (payload, moved) = scatter_into(&view, &batches);
         let sort_t = ctx.cpu.merge_time(n_items, k.max(1));
         let memcpy_t = ctx.cpu.memcpy_time(moved);
-        (agg, ReqBatch { view, payload }, sort_t, memcpy_t)
+        Ok((agg, ReqBatch { view, payload }, sort_t, memcpy_t))
     });
+    let merged: Vec<(usize, ReqBatch, f64, f64)> =
+        merged.into_iter().collect::<Result<Vec<_>>>()?;
 
     let sort = merged.iter().map(|m| m.2).fold(0.0, f64::max);
     let memcpy = merged.iter().map(|m| m.3).fold(0.0, f64::max);

@@ -14,12 +14,11 @@ use std::collections::HashMap;
 use crate::cluster::Topology;
 use crate::coordinator::breakdown::{Breakdown, Counters, CpuModel};
 use crate::coordinator::filedomain::FileDomains;
-use crate::coordinator::merge::{scatter_into, ReqBatch};
+use crate::coordinator::merge::{AggScratch, ReqBatch};
 use crate::coordinator::placement::{select_global_aggregators, GlobalPlacement};
 use crate::coordinator::reqcalc::{calc_my_req, metadata_bytes, MyReqs};
 use crate::error::Result;
 use crate::lustre::{IoModel, LustreFile};
-use crate::mpisim::FlatView;
 use crate::netmodel::phase::{cost_phase, Message, PendingQueue};
 use crate::netmodel::NetParams;
 use crate::runtime::engine::SortEngine;
@@ -118,17 +117,25 @@ pub fn write_exchange(
     // ---- Rounds: data exchange, aggregator merge, datatype, I/O.
     let mut pending = PendingQueue::new();
     let mut my_reqs = my_reqs;
+    // Per-aggregator scratch slots survive the round loop: the batch
+    // staging Vec and the contiguous payload buffer keep their capacity
+    // across rounds, eliminating the old per-round per_agg/payload
+    // allocations (§Perf tentpole).
+    let mut scratch: Vec<AggScratch> = (0..n_agg).map(|_| AggScratch::default()).collect();
+    let mut data_msgs: Vec<Message> = Vec::new();
     for round in 0..n_rounds {
         // Collect this round's messages: requester → aggregator batches.
         // Batches are MOVED out of the requester state (no payload clone
         // on the hot path — §Perf change 1).
-        let mut per_agg: Vec<Vec<ReqBatch>> = (0..n_agg).map(|_| Vec::new()).collect();
-        let mut data_msgs: Vec<Message> = Vec::new();
+        data_msgs.clear();
+        for slot in scratch.iter_mut() {
+            slot.reset();
+        }
         for (rank, mr) in my_reqs.iter_mut() {
             for agg in mr.dests_in_round(round) {
                 let b = mr.by_dest.remove(&(round, agg)).expect("dest listed");
                 data_msgs.push(Message::new(*rank, agg_ranks[agg], b.view.total_bytes()));
-                per_agg[agg].push(b);
+                scratch[agg].batches.push(b);
             }
         }
         let comm = pending.cost_round(ctx.net, ctx.topo, &data_msgs);
@@ -137,48 +144,31 @@ pub fn write_exchange(
         counters.max_in_degree = counters.max_in_degree.max(comm.max_in_degree);
 
         // Aggregator-side merge + datatype + write, concurrent across
-        // aggregators → max for time, real bytes into the file.
-        let merged: Vec<(usize, ReqBatch, u64, usize, u64)> =
-            par_map(per_agg.into_iter().enumerate().collect(), |(agg, batches)| {
-                if batches.is_empty() {
-                    return (agg, ReqBatch::default(), 0, 0, 0);
-                }
-                let k = batches.len();
-                let n_items: u64 = batches.iter().map(|b| b.view.len() as u64).sum();
-                let pairs: Vec<(u64, u64)> = batches
-                    .iter()
-                    .flat_map(|b| b.view.iter())
-                    .collect();
-                let merged_pairs = ctx
-                    .engine
-                    .merge_coalesce(pairs)
-                    .expect("engine merge failed");
-                let view = FlatView::from_pairs_unchecked(
-                    merged_pairs.iter().map(|p| p.0).collect(),
-                    merged_pairs.iter().map(|p| p.1).collect(),
-                );
-                let (payload, _moved) = scatter_into(&view, &batches);
-                (agg, ReqBatch { view, payload }, n_items, k, n_items)
+        // aggregators → max for time, real bytes into the file.  The
+        // engine streams the already-sorted peer views (no flatten + full
+        // re-sort), and an engine failure propagates as `Err` instead of
+        // aborting a worker thread.
+        let merged: Vec<Result<AggScratch>> =
+            par_map(std::mem::take(&mut scratch), |mut slot| {
+                slot.merge_with(ctx.engine)?;
+                Ok(slot)
             });
+        scratch = merged.into_iter().collect::<Result<Vec<_>>>()?;
 
         let mut sort_t: f64 = 0.0;
         let mut dt_t: f64 = 0.0;
         file.begin_round();
-        for (agg, batch, n_items, k, _) in &merged {
-            if *k == 0 {
+        for (agg, slot) in scratch.iter().enumerate() {
+            if slot.k == 0 {
                 continue;
             }
-            sort_t = sort_t.max(ctx.cpu.merge_time(*n_items, *k));
-            dt_t = dt_t.max(ctx.cpu.datatype_time(*n_items, *k));
-            counters.reqs_at_io += batch.view.len() as u64;
+            sort_t = sort_t.max(ctx.cpu.merge_time(slot.n_items, slot.k));
+            dt_t = dt_t.max(ctx.cpu.datatype_time(slot.n_items, slot.k));
+            counters.reqs_at_io += slot.merged.len() as u64;
             // The merged batch lies inside this aggregator's round domain
-            // by construction; write each coalesced segment.
-            let writer = agg_ranks[*agg];
-            let mut cursor = 0usize;
-            for (off, len) in batch.view.iter() {
-                file.write_at(writer, off, &batch.payload[cursor..cursor + len as usize])?;
-                cursor += len as usize;
-            }
+            // by construction; land the whole coalesced batch in one
+            // vectored call.
+            file.write_view(agg_ranks[agg], &slot.merged, &slot.payload)?;
         }
         bd.inter_sort += sort_t;
         bd.inter_datatype += dt_t;
@@ -208,6 +198,7 @@ mod tests {
     use super::*;
     use crate::lustre::LustreConfig;
     use crate::mpisim::rank::deterministic_payload;
+    use crate::mpisim::FlatView;
     use crate::runtime::engine::NativeEngine;
 
     fn ctx<'a>(

@@ -1,35 +1,58 @@
-//! Crate error type.
+//! Crate error type (hand-rolled Display/Error impls — `thiserror` is not
+//! available in the offline image).
 
 /// Unified error type for the tamio pipeline.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration errors (bad CLI flags, config files, topologies).
-    #[error("config error: {0}")]
     Config(String),
 
     /// Workload-generation errors (invalid decompositions etc.).
-    #[error("workload error: {0}")]
     Workload(String),
 
     /// Collective-I/O protocol violations (unsorted views, overlap rules…).
-    #[error("protocol error: {0}")]
     Protocol(String),
 
     /// Simulated-storage errors (OST bounds, lock conflicts in strict mode).
-    #[error("storage error: {0}")]
     Storage(String),
 
     /// PJRT/XLA runtime errors (artifact load, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Data verification mismatches (read-back != expected image).
-    #[error("verification failed: {0}")]
     Verify(String),
 
     /// Underlying I/O errors (artifact files, report output).
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Workload(msg) => write!(f, "workload error: {msg}"),
+            Error::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            Error::Storage(msg) => write!(f, "storage error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Verify(msg) => write!(f, "verification failed: {msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate result alias.
@@ -42,8 +65,28 @@ impl Error {
     }
 }
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_by_kind() {
+        assert_eq!(Error::config("bad").to_string(), "config error: bad");
+        assert_eq!(Error::Storage("OST 3".into()).to_string(), "storage error: OST 3");
+    }
+
+    #[test]
+    fn io_errors_are_transparent() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert_eq!(e.to_string(), "gone");
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

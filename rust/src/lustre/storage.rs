@@ -8,6 +8,7 @@
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
+use crate::mpisim::FlatView;
 
 use super::LustreConfig;
 
@@ -71,12 +72,41 @@ impl LustreFile {
     /// accounts extents/locks per OST.  Returns an error if an OST has been
     /// failed via [`Self::fail_ost`].
     pub fn write_at(&mut self, writer: usize, offset: u64, data: &[u8]) -> Result<()> {
+        self.write_extent(writer, offset, data)
+    }
+
+    /// Vectored write: land a whole coalesced batch — `view` segments with
+    /// their contiguous `payload` in view order — in one call, instead of a
+    /// per-segment cursor loop at the call site (§Perf tentpole).
+    ///
+    /// Byte-identical to calling [`Self::write_at`] per segment, including
+    /// extent/lock accounting order.
+    pub fn write_view(&mut self, writer: usize, view: &FlatView, payload: &[u8]) -> Result<()> {
+        debug_assert_eq!(payload.len() as u64, view.total_bytes());
         let mut cursor = 0usize;
-        for (ost, piece_off, piece_len) in self.cfg.split_by_stripe(offset, data.len() as u64) {
+        for (off, len) in view.iter() {
+            self.write_extent(writer, off, &payload[cursor..cursor + len as usize])?;
+            cursor += len as usize;
+        }
+        Ok(())
+    }
+
+    /// One contiguous extent: inlined stripe walk (no per-call `Vec` from
+    /// `split_by_stripe` — this is the innermost I/O loop).
+    fn write_extent(&mut self, writer: usize, offset: u64, data: &[u8]) -> Result<()> {
+        let stripe_size = self.cfg.stripe_size as usize;
+        let mut cursor = 0usize;
+        let mut cur = offset;
+        let end = offset + data.len() as u64;
+        while cur < end {
+            let stripe = self.cfg.stripe_of(cur);
+            let (stripe_lo, stripe_hi) = self.cfg.stripe_range(stripe);
+            let piece_end = end.min(stripe_hi);
+            let piece_len = (piece_end - cur) as usize;
+            let ost = self.cfg.ost_of(cur);
             if self.failed_osts[ost] {
                 return Err(Error::Storage(format!("OST {ost} failed")));
             }
-            let stripe = self.cfg.stripe_of(piece_off);
             // Extent-lock accounting (Lustre locks per OST object; with
             // stripe-aligned file domains each stripe has one writer).
             match self.round_locks.get(&stripe) {
@@ -91,17 +121,16 @@ impl LustreFile {
                     self.stats[ost].lock_acquisitions += 1;
                 }
             }
-            let (stripe_lo, _) = self.cfg.stripe_range(stripe);
-            let within = (piece_off - stripe_lo) as usize;
+            let within = (cur - stripe_lo) as usize;
             let buf = self
                 .stripes
                 .entry(stripe)
-                .or_insert_with(|| vec![0u8; self.cfg.stripe_size as usize]);
-            buf[within..within + piece_len as usize]
-                .copy_from_slice(&data[cursor..cursor + piece_len as usize]);
-            cursor += piece_len as usize;
-            self.stats[ost].bytes += piece_len;
+                .or_insert_with(|| vec![0u8; stripe_size]);
+            buf[within..within + piece_len].copy_from_slice(&data[cursor..cursor + piece_len]);
+            cursor += piece_len;
+            self.stats[ost].bytes += piece_len as u64;
             self.stats[ost].extents += 1;
+            cur = piece_end;
         }
         Ok(())
     }
@@ -225,6 +254,44 @@ mod tests {
         f.write_at(0, 0, &[1u8; 8]).unwrap();
         f.write_at(0, 4, &[9u8; 2]).unwrap();
         assert_eq!(f.read_at(0, 8), vec![1, 1, 1, 1, 9, 9, 1, 1]);
+    }
+
+    #[test]
+    fn write_view_matches_per_segment_write_at() {
+        let view = FlatView::from_pairs(vec![(10, 30), (60, 10), (70, 0), (200, 5)]).unwrap();
+        let payload: Vec<u8> = (0..45).map(|i| i as u8).collect();
+
+        let mut a = LustreFile::new(cfg());
+        a.begin_round();
+        a.write_view(3, &view, &payload).unwrap();
+
+        let mut b = LustreFile::new(cfg());
+        b.begin_round();
+        let mut cursor = 0usize;
+        for (off, len) in view.iter() {
+            b.write_at(3, off, &payload[cursor..cursor + len as usize]).unwrap();
+            cursor += len as usize;
+        }
+
+        assert_eq!(a.read_at(0, 256), b.read_at(0, 256));
+        assert_eq!(a.total_bytes_written(), b.total_bytes_written());
+        for (sa, sb) in a.stats().iter().zip(b.stats()) {
+            assert_eq!(sa.extents, sb.extents);
+            assert_eq!(sa.lock_acquisitions, sb.lock_acquisitions);
+            assert_eq!(sa.lock_conflicts, sb.lock_conflicts);
+        }
+    }
+
+    #[test]
+    fn write_view_failed_ost_rejects() {
+        let mut f = LustreFile::new(cfg());
+        f.fail_ost(1);
+        f.begin_round();
+        let view = FlatView::from_pairs(vec![(0, 8), (64, 8)]).unwrap();
+        assert!(f.write_view(0, &view, &[1u8; 16]).is_err());
+        // The piece before the failed OST landed (same as sequential
+        // write_at semantics).
+        assert_eq!(f.read_at(0, 8), vec![1u8; 8]);
     }
 
     #[test]

@@ -117,7 +117,7 @@ mod tests {
     }
 
     #[test]
-    fn csv_round_trip(){
+    fn csv_round_trip() {
         let dir = std::env::temp_dir().join("tamio_csv_test.csv");
         write_csv(&dir, &["x".into(), "y".into()], &[vec!["1".into(), "2,3".into()]]).unwrap();
         let s = std::fs::read_to_string(&dir).unwrap();

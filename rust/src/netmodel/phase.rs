@@ -74,50 +74,63 @@ impl ExchangeStats {
 /// Cost one exchange phase.
 ///
 /// `pending_per_receiver` carries the unmatched-send count from previous
-/// rounds for the [`super::SendMode::Isend`] pending-queue model; pass an
-/// empty map (or use [`cost_phase`]) for Issend semantics.
+/// rounds for the [`super::SendMode::Isend`] pending-queue model, indexed
+/// densely by receiver rank.  Ranks beyond the end of the slice count as
+/// zero pending, so an empty slice (or [`cost_phase`]) gives Issend
+/// semantics.
+///
+/// Accumulators are dense `Vec`s indexed by rank / node — ranks are
+/// `0..topo.nprocs()` by construction, and this function runs once per
+/// round per phase, where `HashMap` churn dominated at high rank counts
+/// (§Perf tentpole).
+///
+/// # Panics
+///
+/// Every `Message` must carry `src`/`dst` ranks inside `0..topo.nprocs()`
+/// (the dense-rank invariant, DESIGN.md §Hot path); an out-of-range rank
+/// is a caller bug and panics on the slice index.
 pub fn cost_phase_with_pending(
     params: &NetParams,
     topo: &Topology,
     msgs: &[Message],
-    pending_per_receiver: &HashMap<usize, u64>,
+    pending_per_receiver: &[u64],
 ) -> PhaseCost {
-    let mut recv_time: HashMap<usize, f64> = HashMap::new();
-    let mut send_time: HashMap<usize, f64> = HashMap::new();
-    let mut nic_time: HashMap<usize, f64> = HashMap::new();
-    let mut in_degree: HashMap<usize, usize> = HashMap::new();
+    let nprocs = topo.nprocs();
+    let mut recv_time = vec![0.0f64; nprocs];
+    let mut send_time = vec![0.0f64; nprocs];
+    let mut nic_time = vec![0.0f64; topo.nodes];
+    let mut in_degree = vec![0usize; nprocs];
     let mut total_bytes = 0u64;
 
     for m in msgs {
+        debug_assert!(m.src < nprocs && m.dst < nprocs, "rank outside 0..nprocs");
         let intra = topo.same_node(m.src, m.dst);
         let wire = params.msg_cost(intra, m.bytes);
         // Receiver serializes matching + draining of everything addressed
         // to it: this is where all-to-many congestion shows up.
-        let pending = *pending_per_receiver.get(&m.dst).unwrap_or(&0) as f64;
-        *recv_time.entry(m.dst).or_default() +=
-            params.recv_overhead + wire + pending * params.pending_penalty;
+        let pending = pending_per_receiver.get(m.dst).copied().unwrap_or(0) as f64;
+        recv_time[m.dst] += params.recv_overhead + wire + pending * params.pending_penalty;
         // Sender serializes injection but overlaps transfer completion.
-        *send_time.entry(m.src).or_default() +=
+        send_time[m.src] +=
             params.send_overhead + if intra { 0.0 } else { m.bytes as f64 * params.beta_inter };
         // Inter-node traffic shares the destination node's NIC: stacking
         // aggregators on a node concentrates this bound.
         if !intra {
-            *nic_time.entry(topo.node_of(m.dst)).or_default() +=
-                m.bytes as f64 * params.nic_ingest;
+            nic_time[topo.node_of(m.dst)] += m.bytes as f64 * params.nic_ingest;
         }
-        *in_degree.entry(m.dst).or_default() += 1;
+        in_degree[m.dst] += 1;
         total_bytes += m.bytes;
     }
 
-    let recv_bound = recv_time.values().cloned().fold(0.0, f64::max);
-    let send_bound = send_time.values().cloned().fold(0.0, f64::max);
-    let nic_bound = nic_time.values().cloned().fold(0.0, f64::max);
+    let recv_bound = recv_time.iter().copied().fold(0.0, f64::max);
+    let send_bound = send_time.iter().copied().fold(0.0, f64::max);
+    let nic_bound = nic_time.iter().copied().fold(0.0, f64::max);
     PhaseCost {
         time: recv_bound.max(send_bound).max(nic_bound),
         recv_bound,
         send_bound,
         nic_bound,
-        max_in_degree: in_degree.values().cloned().max().unwrap_or(0),
+        max_in_degree: in_degree.iter().copied().max().unwrap_or(0),
         n_messages: msgs.len(),
         total_bytes,
     }
@@ -125,7 +138,7 @@ pub fn cost_phase_with_pending(
 
 /// Cost one exchange phase with no pending-queue carry-over.
 pub fn cost_phase(params: &NetParams, topo: &Topology, msgs: &[Message]) -> PhaseCost {
-    cost_phase_with_pending(params, topo, msgs, &HashMap::new())
+    cost_phase_with_pending(params, topo, msgs, &[])
 }
 
 /// Tracks unmatched sends across rounds for the Isend model.
@@ -133,9 +146,10 @@ pub fn cost_phase(params: &NetParams, topo: &Topology, msgs: &[Message]) -> Phas
 /// Under `MPI_Isend`, non-aggregators post sends and immediately continue
 /// into the next round; the receiver's match queue grows with every round
 /// still in flight.  Under `MPI_Issend` the queue drains each round.
+/// Counts are dense per rank (grown lazily to `topo.nprocs()`).
 #[derive(Debug, Default)]
 pub struct PendingQueue {
-    pending: HashMap<usize, u64>,
+    pending: Vec<u64>,
 }
 
 impl PendingQueue {
@@ -151,22 +165,25 @@ impl PendingQueue {
         topo: &Topology,
         msgs: &[Message],
     ) -> PhaseCost {
+        if self.pending.len() < topo.nprocs() {
+            self.pending.resize(topo.nprocs(), 0);
+        }
         let cost = cost_phase_with_pending(params, topo, msgs, &self.pending);
         if params.carries_pending() {
             // A fraction of this round's small sends stay unmatched when the
             // senders race ahead; accumulate them on the receivers.
             for m in msgs {
-                *self.pending.entry(m.dst).or_default() += 1;
+                self.pending[m.dst] += 1;
             }
         } else {
-            self.pending.clear();
+            self.pending.fill(0);
         }
         cost
     }
 
     /// Current pending count for a rank (tests/diagnostics).
     pub fn pending_for(&self, rank: usize) -> u64 {
-        *self.pending.get(&rank).unwrap_or(&0)
+        self.pending.get(rank).copied().unwrap_or(0)
     }
 }
 

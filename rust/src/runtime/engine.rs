@@ -16,8 +16,9 @@
 use std::sync::mpsc;
 use std::sync::Mutex;
 
-use crate::coordinator::merge::sort_coalesce_pairs;
+use crate::coordinator::merge::{merge_views, sort_coalesce_pairs};
 use crate::error::{Error, Result};
+use crate::mpisim::FlatView;
 
 use super::pjrt::PjrtRuntime;
 
@@ -60,6 +61,26 @@ pub trait SortEngine: Send + Sync {
     /// peers' sorted lists); output is ascending and minimal.
     fn merge_coalesce(&self, pairs: Vec<(u64, u64)>) -> Result<Vec<(u64, u64)>>;
 
+    /// Merge *already-sorted* peer streams into one ascending, coalesced
+    /// view — the streaming entry point of the aggregator hot path.
+    ///
+    /// Each element of `views` is one peer's flattened file view, sorted by
+    /// construction (the MPI file-view guarantee).  The default
+    /// implementation concatenates and reuses [`Self::merge_coalesce`]
+    /// (what the batched XLA pipeline does, with
+    /// [`crate::coordinator::merge::combine_coalesced_partials`] absorbing
+    /// chunk seams); [`NativeEngine`] overrides it with the `O(n log k)`
+    /// heap merge so no flatten + full re-sort happens on the native path.
+    /// Both produce bit-identical output.
+    fn merge_sorted(&self, views: &[&FlatView]) -> Result<FlatView> {
+        let pairs: Vec<(u64, u64)> = views.iter().flat_map(|v| v.iter()).collect();
+        let merged = self.merge_coalesce(pairs)?;
+        Ok(FlatView::from_pairs_unchecked(
+            merged.iter().map(|p| p.0).collect(),
+            merged.iter().map(|p| p.1).collect(),
+        ))
+    }
+
     /// Engine name for reports.
     fn name(&self) -> &'static str;
 }
@@ -71,6 +92,10 @@ pub struct NativeEngine;
 impl SortEngine for NativeEngine {
     fn merge_coalesce(&self, pairs: Vec<(u64, u64)>) -> Result<Vec<(u64, u64)>> {
         Ok(sort_coalesce_pairs(pairs))
+    }
+
+    fn merge_sorted(&self, views: &[&FlatView]) -> Result<FlatView> {
+        Ok(merge_views(views))
     }
 
     fn name(&self) -> &'static str {
@@ -217,5 +242,34 @@ mod tests {
     #[test]
     fn native_engine_empty() {
         assert!(NativeEngine.merge_coalesce(vec![]).unwrap().is_empty());
+        assert!(NativeEngine.merge_sorted(&[]).unwrap().is_empty());
+    }
+
+    /// Exercises the trait's default `merge_sorted` (the concat + coalesce
+    /// fallback the XLA engine inherits) against the native override.
+    struct ConcatFallback;
+
+    impl SortEngine for ConcatFallback {
+        fn merge_coalesce(&self, pairs: Vec<(u64, u64)>) -> Result<Vec<(u64, u64)>> {
+            Ok(sort_coalesce_pairs(pairs))
+        }
+
+        fn name(&self) -> &'static str {
+            "concat-fallback"
+        }
+    }
+
+    #[test]
+    fn merge_sorted_native_matches_default_fallback() {
+        let a = FlatView::from_pairs(vec![(0, 4), (8, 4), (16, 0)]).unwrap();
+        let b = FlatView::from_pairs(vec![(4, 4), (12, 4), (100, 2)]).unwrap();
+        let views = [&a, &b];
+        let native = NativeEngine.merge_sorted(&views).unwrap();
+        let fallback = ConcatFallback.merge_sorted(&views).unwrap();
+        assert_eq!(native, fallback);
+        assert_eq!(
+            native.iter().collect::<Vec<_>>(),
+            vec![(0, 16), (100, 2)]
+        );
     }
 }

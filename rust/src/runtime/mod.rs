@@ -8,6 +8,14 @@
 //! native-Rust and XLA implementations.  Python never runs here.
 
 pub mod engine;
+
+// The real PJRT wrapper needs the `xla` crate, which must be vendored into
+// the build image; without the `xla` feature a stub with the same API
+// reports the runtime as unavailable so every XLA path skips gracefully.
+#[cfg(feature = "xla")]
+pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use engine::{EngineKind, NativeEngine, SortEngine, XlaEngine};

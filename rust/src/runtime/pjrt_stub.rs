@@ -1,0 +1,82 @@
+//! Stub PJRT runtime, compiled when the `xla` cargo feature is off.
+//!
+//! The offline image does not ship the `xla` crate, so this module mirrors
+//! the public API of `runtime/pjrt.rs` and fails at [`PjrtRuntime::load`]
+//! with a descriptive error.  Everything downstream (the engine worker,
+//! `tamio info`, the XLA tests and examples) already treats "artifacts
+//! unavailable" as a skip condition, so the stub makes the whole crate
+//! buildable and testable without PJRT while keeping call sites identical.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Sentinel offset marking padding slots (i64::MAX, matching
+/// `kernels.bitonic.SENTINEL`).
+pub const SENTINEL: i64 = i64::MAX;
+
+/// Stub runtime: construction always fails; methods exist only so the
+/// engine layer type-checks identically with and without the feature.
+#[derive(Debug)]
+pub struct PjrtRuntime {
+    artifacts_dir: PathBuf,
+}
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "XLA/PJRT support not compiled in — build with `--features xla` \
+         (requires the vendored `xla` crate) to run the AOT pipeline"
+            .into(),
+    )
+}
+
+impl PjrtRuntime {
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = dir.as_ref();
+        Err(unavailable())
+    }
+
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn load_default() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Available batch sizes, ascending (stub: none).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Largest supported batch size (stub: zero).
+    pub fn max_batch(&self) -> usize {
+        0
+    }
+
+    /// Directory the artifacts were loaded from.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn aggregate_batch(&self, pairs: &[(u64, u64)]) -> Result<Vec<(u64, u64)>> {
+        let _ = pairs;
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_with_runtime_error() {
+        let err = PjrtRuntime::load("/nonexistent").unwrap_err();
+        assert!(matches!(err, Error::Runtime(_)));
+        assert!(PjrtRuntime::load_default().is_err());
+    }
+}

@@ -1,0 +1,294 @@
+//! Equivalence tests for the streaming aggregator hot path: the
+//! `merge_sorted` engine entry point must be bit-identical to
+//! sort+coalesce of the concatenation for every engine, the two-pointer
+//! payload scatter must match the binary-search reference (including
+//! overlapping and zero-length segments), and the dense-rank phase cost
+//! accounting must match a hash-map reference.
+
+use std::collections::HashMap;
+
+use tamio::cluster::Topology;
+use tamio::coordinator::merge::{
+    scatter_into, scatter_into_binary_search, scatter_into_buf, sort_coalesce_pairs, ReqBatch,
+};
+use tamio::mpisim::FlatView;
+use tamio::netmodel::phase::{cost_phase, cost_phase_with_pending, Message, PendingQueue};
+use tamio::netmodel::{NetParams, SendMode};
+use tamio::runtime::engine::{NativeEngine, SortEngine, XlaEngine};
+use tamio::util::SplitMix64;
+
+/// `k` sorted streams built from one global request sequence dealt out in
+/// runs, with zero-length requests mixed in; disjoint in file space.
+fn random_streams(rng: &mut SplitMix64, k: usize, total: usize) -> Vec<FlatView> {
+    let run = 1 + rng.gen_range(6) as usize;
+    let mut streams: Vec<Vec<(u64, u64)>> = vec![Vec::new(); k];
+    let mut cursor = rng.gen_range(128);
+    for i in 0..total {
+        let s = (i / run) % k;
+        let len = rng.gen_range(48); // includes zero-length requests
+        if rng.gen_bool(0.5) {
+            cursor += rng.gen_range(256);
+        }
+        streams[s].push((cursor, len));
+        cursor += len;
+    }
+    streams
+        .into_iter()
+        .map(|pairs| FlatView::from_pairs(pairs).unwrap())
+        .collect()
+}
+
+/// Deterministic payload for a view (distinct per stream index).
+fn payload_for(view: &FlatView, tag: u8) -> Vec<u8> {
+    (0..view.total_bytes()).map(|i| (i as u8).wrapping_mul(31) ^ tag).collect()
+}
+
+fn assert_merge_sorted_matches_reference(engine: &dyn SortEngine, seed: u64) {
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..60 {
+        let k = 1 + rng.gen_range(12) as usize;
+        let total = rng.gen_range(400) as usize;
+        let streams = random_streams(&mut rng, k, total);
+        let refs: Vec<&FlatView> = streams.iter().collect();
+        let merged = engine.merge_sorted(&refs).unwrap();
+        let concat: Vec<(u64, u64)> = streams.iter().flat_map(|v| v.iter()).collect();
+        let want = sort_coalesce_pairs(concat);
+        assert_eq!(
+            merged.iter().collect::<Vec<_>>(),
+            want,
+            "engine '{}' diverged from sort+coalesce (case {case}, k={k}, n={total})",
+            engine.name()
+        );
+        merged.validate().unwrap();
+    }
+}
+
+#[test]
+fn native_merge_sorted_matches_sort_coalesce_of_concat() {
+    assert_merge_sorted_matches_reference(&NativeEngine, 0xAB5E);
+}
+
+/// The default-trait fallback path (what the XLA engine inherits):
+/// concatenate, then `merge_coalesce`.
+struct ConcatFallback;
+
+impl SortEngine for ConcatFallback {
+    fn merge_coalesce(&self, pairs: Vec<(u64, u64)>) -> tamio::Result<Vec<(u64, u64)>> {
+        Ok(sort_coalesce_pairs(pairs))
+    }
+
+    fn name(&self) -> &'static str {
+        "concat-fallback"
+    }
+}
+
+#[test]
+fn fallback_merge_sorted_matches_sort_coalesce_of_concat() {
+    assert_merge_sorted_matches_reference(&ConcatFallback, 0xAB5E);
+}
+
+#[test]
+fn xla_merge_sorted_matches_native() {
+    let xla = match XlaEngine::load_default() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[skip] xla engine unavailable: {e}");
+            return;
+        }
+    };
+    let mut rng = SplitMix64::new(0x71A);
+    for _ in 0..10 {
+        let k = 1 + rng.gen_range(10) as usize;
+        let total = rng.gen_range(2000) as usize;
+        let streams = random_streams(&mut rng, k, total);
+        let refs: Vec<&FlatView> = streams.iter().collect();
+        let native = NativeEngine.merge_sorted(&refs).unwrap();
+        let got = xla.merge_sorted(&refs).unwrap();
+        assert_eq!(got, native, "xla merge_sorted != native (k={k}, n={total})");
+    }
+}
+
+#[test]
+fn scatter_two_pointer_matches_binary_search_randomized() {
+    let mut rng = SplitMix64::new(0x5CA7);
+    for case in 0..80 {
+        let k = 1 + rng.gen_range(8) as usize;
+        let total = rng.gen_range(300) as usize;
+        let streams = random_streams(&mut rng, k, total);
+        let batches: Vec<ReqBatch> = streams
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| {
+                let p = payload_for(&v, i as u8);
+                ReqBatch::new(v, p)
+            })
+            .collect();
+        let views: Vec<&FlatView> = batches.iter().map(|b| &b.view).collect();
+        let merged = NativeEngine.merge_sorted(&views).unwrap();
+
+        let (p_two, m_two) = scatter_into(&merged, &batches);
+        let (p_bin, m_bin) = scatter_into_binary_search(&merged, &batches);
+        assert_eq!(p_two, p_bin, "payload mismatch (case {case})");
+        assert_eq!(m_two, m_bin, "moved-bytes mismatch (case {case})");
+    }
+}
+
+#[test]
+fn scatter_handles_overlapping_and_zero_length_segments() {
+    // Overlapping writers (later batch wins, distinct offsets) plus
+    // zero-length requests both inside and between merged segments: the
+    // merged view is deliberately *not* fully coalesced across overlaps.
+    let a = ReqBatch::new(
+        FlatView::from_pairs(vec![(0, 8), (8, 0), (20, 4)]).unwrap(),
+        vec![1u8; 12],
+    );
+    let b = ReqBatch::new(
+        FlatView::from_pairs(vec![(2, 4), (21, 2), (30, 0)]).unwrap(),
+        vec![2u8; 6],
+    );
+    let views: Vec<&FlatView> = vec![&a.view, &b.view];
+    let merged = NativeEngine.merge_sorted(&views).unwrap();
+    let batches = [a, b];
+    let (p_two, m_two) = scatter_into(&merged, &batches);
+    let (p_bin, m_bin) = scatter_into_binary_search(&merged, &batches);
+    assert_eq!(p_two, p_bin);
+    assert_eq!(m_two, m_bin);
+    assert_eq!(m_two, 18);
+}
+
+#[test]
+fn scatter_into_buf_steady_state_reuses_capacity() {
+    let mut rng = SplitMix64::new(0xBEEF);
+    let mut buf = Vec::new();
+    for round in 0..10 {
+        let streams = random_streams(&mut rng, 4, 100);
+        let batches: Vec<ReqBatch> = streams
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| {
+                let p = payload_for(&v, i as u8 ^ round);
+                ReqBatch::new(v, p)
+            })
+            .collect();
+        let views: Vec<&FlatView> = batches.iter().map(|b| &b.view).collect();
+        let merged = NativeEngine.merge_sorted(&views).unwrap();
+        let moved = scatter_into_buf(&merged, &batches, &mut buf);
+        let (want, want_moved) = scatter_into_binary_search(&merged, &batches);
+        assert_eq!(buf, want, "round {round}");
+        assert_eq!(moved, want_moved);
+    }
+}
+
+// ---- dense-rank phase accounting vs a hash-map reference ----
+
+/// The pre-tentpole hash-map implementation, kept verbatim as the oracle.
+fn cost_phase_hashmap_reference(
+    params: &NetParams,
+    topo: &Topology,
+    msgs: &[Message],
+    pending_per_receiver: &HashMap<usize, u64>,
+) -> (f64, f64, f64, f64, usize, u64) {
+    let mut recv_time: HashMap<usize, f64> = HashMap::new();
+    let mut send_time: HashMap<usize, f64> = HashMap::new();
+    let mut nic_time: HashMap<usize, f64> = HashMap::new();
+    let mut in_degree: HashMap<usize, usize> = HashMap::new();
+    let mut total_bytes = 0u64;
+    for m in msgs {
+        let intra = topo.same_node(m.src, m.dst);
+        let wire = params.msg_cost(intra, m.bytes);
+        let pending = *pending_per_receiver.get(&m.dst).unwrap_or(&0) as f64;
+        *recv_time.entry(m.dst).or_default() +=
+            params.recv_overhead + wire + pending * params.pending_penalty;
+        *send_time.entry(m.src).or_default() +=
+            params.send_overhead + if intra { 0.0 } else { m.bytes as f64 * params.beta_inter };
+        if !intra {
+            *nic_time.entry(topo.node_of(m.dst)).or_default() +=
+                m.bytes as f64 * params.nic_ingest;
+        }
+        *in_degree.entry(m.dst).or_default() += 1;
+        total_bytes += m.bytes;
+    }
+    let recv = recv_time.values().cloned().fold(0.0, f64::max);
+    let send = send_time.values().cloned().fold(0.0, f64::max);
+    let nic = nic_time.values().cloned().fold(0.0, f64::max);
+    (
+        recv.max(send).max(nic),
+        recv,
+        send,
+        nic,
+        in_degree.values().cloned().max().unwrap_or(0),
+        total_bytes,
+    )
+}
+
+fn random_msgs(rng: &mut SplitMix64, topo: &Topology, n: usize) -> Vec<Message> {
+    let p = topo.nprocs() as u64;
+    (0..n)
+        .map(|_| {
+            Message::new(
+                rng.gen_range(p) as usize,
+                rng.gen_range(p) as usize,
+                rng.gen_range(1 << 16),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn dense_cost_phase_matches_hashmap_reference() {
+    let mut rng = SplitMix64::new(0xDE45E);
+    let params = NetParams::default();
+    for _ in 0..50 {
+        let topo = Topology::new(1 + rng.gen_range(8) as usize, 1 + rng.gen_range(16) as usize);
+        let msgs = random_msgs(&mut rng, &topo, rng.gen_range(200) as usize);
+        // Random pending counts on a subset of receivers.
+        let mut pending_dense = vec![0u64; topo.nprocs()];
+        let mut pending_map = HashMap::new();
+        for _ in 0..rng.gen_range(10) {
+            let r = rng.gen_range(topo.nprocs() as u64) as usize;
+            let c = rng.gen_range(50);
+            pending_dense[r] = c;
+            pending_map.insert(r, c);
+        }
+        let got = cost_phase_with_pending(&params, &topo, &msgs, &pending_dense);
+        let (time, recv, send, nic, max_in, bytes) =
+            cost_phase_hashmap_reference(&params, &topo, &msgs, &pending_map);
+        assert_eq!(got.time, time);
+        assert_eq!(got.recv_bound, recv);
+        assert_eq!(got.send_bound, send);
+        assert_eq!(got.nic_bound, nic);
+        assert_eq!(got.max_in_degree, max_in);
+        assert_eq!(got.total_bytes, bytes);
+        assert_eq!(got.n_messages, msgs.len());
+    }
+}
+
+#[test]
+fn dense_pending_queue_matches_reference_across_rounds() {
+    let mut params = NetParams::default();
+    params.send_mode = SendMode::Isend;
+    let topo = Topology::new(4, 8);
+    let mut rng = SplitMix64::new(0x9E0);
+    let mut q = PendingQueue::new();
+    let mut pending_ref: HashMap<usize, u64> = HashMap::new();
+    for _ in 0..20 {
+        let msgs = random_msgs(&mut rng, &topo, 64);
+        let got = q.cost_round(&params, &topo, &msgs);
+        let (time, ..) = cost_phase_hashmap_reference(&params, &topo, &msgs, &pending_ref);
+        assert_eq!(got.time, time);
+        for m in &msgs {
+            *pending_ref.entry(m.dst).or_default() += 1;
+        }
+    }
+    for r in 0..topo.nprocs() {
+        assert_eq!(q.pending_for(r), *pending_ref.get(&r).unwrap_or(&0), "rank {r}");
+    }
+    // cost_phase (no pending) equals a round under Issend semantics.
+    params.send_mode = SendMode::Issend;
+    let msgs = random_msgs(&mut rng, &topo, 64);
+    let mut q2 = PendingQueue::new();
+    let a = q2.cost_round(&params, &topo, &msgs);
+    let b = cost_phase(&params, &topo, &msgs);
+    assert_eq!(a.time, b.time);
+    assert_eq!(q2.pending_for(0), 0);
+}

@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Repo gate: tier-1 (release build + tests) plus formatting and lints.
+#
+#   scripts/check.sh            # tier-1 + fmt + clippy
+#   BENCH=1 scripts/check.sh    # additionally regenerate BENCH_hotpath.json
+#
+# fmt/clippy are skipped with a warning when the components are not
+# installed (the offline image ships a bare toolchain).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "warn: rustfmt not installed; skipping cargo fmt --check" >&2
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "warn: clippy not installed; skipping" >&2
+fi
+
+if [ "${BENCH:-0}" = "1" ]; then
+    echo "== hot-path bench (writes BENCH_hotpath.json) =="
+    cargo bench --bench hotpath
+fi
+
+echo "check.sh: all gates passed"
