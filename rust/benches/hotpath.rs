@@ -9,6 +9,12 @@
 //! * scatter — two-pointer payload scatter into a reused buffer vs the
 //!   per-request binary-search reference.
 //! * cost_phase — dense-rank accumulators on a 16384-rank topology.
+//! * calc_my_req — dense destination accumulators (single open batch +
+//!   CSR round index; the old per-destination `HashMap` path).
+//! * read_view — vectored read into a reused buffer vs the per-request
+//!   `read_at` loop (one `Vec` allocation per request, what
+//!   `run_collective_read` did before the streaming treatment).
+//! * collective_read — `run_collective_read` end-to-end, both algorithms.
 //!
 //! Writes `BENCH_hotpath.json` (median wall times + speedups) in the
 //! working directory.
@@ -19,9 +25,18 @@ use std::time::Duration;
 
 use tamio::benchkit::{bench, black_box, section, JsonReport};
 use tamio::cluster::Topology;
+use tamio::coordinator::breakdown::CpuModel;
+use tamio::coordinator::collective::{run_collective_read, run_collective_write, Algorithm};
+use tamio::coordinator::filedomain::FileDomains;
 use tamio::coordinator::merge::{
     scatter_into_binary_search, scatter_into_buf, sort_coalesce_pairs, ReqBatch,
 };
+use tamio::coordinator::placement::GlobalPlacement;
+use tamio::coordinator::reqcalc::calc_my_req;
+use tamio::coordinator::tam::TamConfig;
+use tamio::coordinator::twophase::CollectiveCtx;
+use tamio::lustre::{IoModel, LustreConfig, LustreFile, OstStats};
+use tamio::mpisim::rank::deterministic_payload;
 use tamio::mpisim::FlatView;
 use tamio::netmodel::phase::{cost_phase, Message};
 use tamio::netmodel::NetParams;
@@ -164,12 +179,145 @@ fn bench_cost_phase(report: &mut JsonReport, budget: Duration) {
     }
 }
 
+fn bench_reqcalc(report: &mut JsonReport, budget: Duration) {
+    // Dense calc_my_req (single open accumulator + CSR round index) on a
+    // single sorted view classified against a 64-aggregator domain set —
+    // the per-requester work of both exchange directions.
+    for &n in &SIZES {
+        section(&format!("calc_my_req: {n} requests, 64 aggregators (dense)"));
+        let view = make_streams(1, n, 0xCA1C + n as u64).remove(0);
+        let lo = view.min_offset().unwrap_or(0);
+        let hi = view.max_end().unwrap_or(0);
+        // Stripe sized so a fraction of requests straddles a boundary.
+        let domains = FileDomains::new(LustreConfig::new(4096, 64), lo, hi, 64);
+        let batch = ReqBatch::new(view, Vec::new()); // metadata-only (read side)
+        let r = bench(&format!("calc_my_req/{n}"), budget, || {
+            black_box(calc_my_req(black_box(&domains), black_box(&batch)));
+        });
+        println!("{r}   ({:.2} Mreqs/s)", r.per_second(n as u64) / 1e6);
+        report.add(&r);
+    }
+}
+
+fn bench_read_view(report: &mut JsonReport, budget: Duration) {
+    for &n in &SIZES {
+        section(&format!("read_view: {n} segments, vectored vs read_at loop"));
+        let view = make_streams(1, n, 0x4EAD + n as u64).remove(0);
+        let payload = deterministic_payload(17, 0, view.total_bytes());
+        let mut file = LustreFile::new(LustreConfig::new(1 << 16, 8));
+        file.begin_round();
+        file.write_view(0, &view, &payload).expect("seed write");
+
+        // Correctness pin before timing anything.
+        let mut buf = Vec::new();
+        let mut stats = vec![OstStats::default(); file.config().stripe_count];
+        file.read_view(&view, &mut buf, &mut stats).expect("read_view");
+        let mut want = Vec::with_capacity(buf.len());
+        for (off, len) in view.iter() {
+            want.extend_from_slice(&file.read_at(off, len));
+        }
+        assert_eq!(buf, want, "read_view != read_at loop at n={n}");
+
+        let base = bench(&format!("read_at_loop/{n}"), budget, || {
+            let mut sum = 0usize;
+            for (off, len) in view.iter() {
+                sum += black_box(file.read_at(off, len)).len();
+            }
+            black_box(sum);
+        });
+        println!("{base}");
+        let vectored = bench(&format!("read_view/{n}"), budget, || {
+            file.read_view(black_box(&view), black_box(&mut buf), black_box(&mut stats))
+                .expect("read_view");
+        });
+        println!("{vectored}");
+        let speedup = base.median.as_secs_f64() / vectored.median.as_secs_f64().max(1e-12);
+        println!("vectored read_view speedup at n={n}: {speedup:.2}x");
+        report.add(&base);
+        report.add(&vectored);
+        report.add_value(&format!("read_view_speedup/{n}"), speedup);
+    }
+}
+
+fn bench_collective_read(report: &mut JsonReport, budget: Duration) {
+    // End-to-end read path on 64 ranks: write once, then time
+    // run_collective_read for both algorithms at n total requests.
+    let topo = Topology::new(4, 16);
+    let net = NetParams::default();
+    let cpu = CpuModel::default();
+    let io = IoModel::default();
+    let eng = NativeEngine;
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 8,
+    };
+    for &n in &SIZES {
+        section(&format!("collective_read: {n} requests over {} ranks", topo.nprocs()));
+        let streams = make_streams(topo.nprocs(), n, 0xC011 + n as u64);
+        let ranks: Vec<(usize, ReqBatch)> = streams
+            .into_iter()
+            .enumerate()
+            .map(|(r, v)| {
+                let payload = deterministic_payload(23, r, v.total_bytes());
+                (r, ReqBatch::new(v, payload))
+            })
+            .collect();
+        let mut file = LustreFile::new(LustreConfig::new(1 << 14, 8));
+        run_collective_write(&ctx, Algorithm::TwoPhase, ranks.clone(), &mut file)
+            .expect("seed write");
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+
+        // run_collective_read consumes its views, so the timed closures
+        // below clone them each iteration; measure the clone alone so the
+        // report lets readers subtract it from the collective medians.
+        let clone_cost = bench(&format!("views_clone/{n}"), budget, || {
+            black_box(views.clone());
+        });
+        println!("{clone_cost}");
+        report.add(&clone_cost);
+
+        for (label, algo) in [
+            ("collective_read_2p", Algorithm::TwoPhase),
+            ("collective_read_tam", Algorithm::Tam(TamConfig { total_local_aggregators: 16 })),
+        ] {
+            // Correctness pin: read-back must be bit-identical.
+            let (got, _) =
+                run_collective_read(&ctx, algo, views.clone(), &file).expect("read");
+            for ((r, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+                assert_eq!(payload, &want.payload, "{label} rank {r} mismatch at n={n}");
+            }
+            let r = bench(&format!("{label}/{n}"), budget, || {
+                black_box(
+                    run_collective_read(
+                        black_box(&ctx),
+                        black_box(algo),
+                        black_box(views.clone()),
+                        black_box(&file),
+                    )
+                    .expect("read"),
+                );
+            });
+            println!("{r}   ({:.2} Mreqs/s)", r.per_second(n as u64) / 1e6);
+            report.add(&r);
+        }
+    }
+}
+
 fn main() {
     let budget = Duration::from_millis(300);
     let mut report = JsonReport::new();
     bench_merge(&mut report, budget);
     bench_scatter(&mut report, budget);
     bench_cost_phase(&mut report, budget);
+    bench_reqcalc(&mut report, budget);
+    bench_read_view(&mut report, budget);
+    bench_collective_read(&mut report, budget);
     report.write("BENCH_hotpath.json").expect("write BENCH_hotpath.json");
     println!("\nwrote BENCH_hotpath.json");
 }

@@ -13,7 +13,10 @@
 //! (`O(n log k)`, gallop-accelerated on runs) → [`scatter_into_buf`]
 //! (linear two-pointer payload scatter into a reusable buffer).
 //! [`AggScratch`] owns the per-aggregator buffers that survive across
-//! exchange rounds so the steady state allocates nothing.
+//! exchange rounds so the steady state allocates nothing.  The read path
+//! runs the same pipeline in reverse: [`ReadScratch`] stages the peer
+//! views, the engine merges them, storage fills the buffer, and
+//! [`gather_from_buf`] copies each peer's bytes back out.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -171,6 +174,45 @@ pub fn scatter_into_buf(merged: &FlatView, batches: &[ReqBatch], payload: &mut V
     moved
 }
 
+/// Reverse of [`scatter_into_buf`]: copy the bytes of each request of
+/// `view` *out of* the contiguous buffer `payload` laid out by `merged`
+/// into `out` (view order) — the requester-side reply assembly of the
+/// collective-read path and the TAM read scatter.
+///
+/// Both `merged` and `view` are ascending, so the containing merged
+/// segment is found with the same linear two-pointer walk as the scatter;
+/// `merged` must cover every nonzero request of `view` (it is the engine
+/// merge of the peer views, which include `view`).  Returns bytes moved.
+pub fn gather_from_buf(merged: &FlatView, payload: &[u8], view: &FlatView, out: &mut [u8]) -> u64 {
+    debug_assert_eq!(payload.len() as u64, merged.total_bytes());
+    debug_assert_eq!(out.len() as u64, view.total_bytes());
+    let seg_offsets = merged.offsets();
+    let seg_lengths = merged.lengths();
+    let mut cursor = 0usize;
+    let mut seg = 0usize;
+    // Payload position of segment `seg` within the merged buffer.
+    let mut seg_start = 0u64;
+    let mut moved = 0u64;
+    for (off, len) in view.iter() {
+        // Zero-length requests occupy no bytes on either side.
+        if len == 0 {
+            continue;
+        }
+        while seg + 1 < seg_offsets.len() && seg_offsets[seg + 1] <= off {
+            seg_start += seg_lengths[seg];
+            seg += 1;
+        }
+        let within = off - seg_offsets[seg];
+        debug_assert!(within + len <= seg_lengths[seg], "request not covered by merged view");
+        let src = (seg_start + within) as usize;
+        out[cursor..cursor + len as usize]
+            .copy_from_slice(&payload[src..src + len as usize]);
+        cursor += len as usize;
+        moved += len;
+    }
+    moved
+}
+
 /// Reference implementation of [`scatter_into`] using a per-request binary
 /// search over the merged offsets (the pre-streaming hot path).  Kept for
 /// the equivalence regression tests and the hot-path benchmark baseline.
@@ -254,6 +296,60 @@ impl AggScratch {
         let views: Vec<&FlatView> = self.batches.iter().map(|b| &b.view).collect();
         self.merged = engine.merge_sorted(&views)?;
         Ok(scatter_into_buf(&self.merged, &self.batches, &mut self.payload))
+    }
+}
+
+/// Read-side twin of [`AggScratch`]: per-aggregator staging for one round
+/// of the collective-read exchange (DESIGN.md §Read path).
+///
+/// The aggregator merges the peer views addressed to it (metadata only — a
+/// read carries no payload on the request side), reads the merged segments
+/// from storage into the reusable `payload` buffer
+/// ([`crate::lustre::LustreFile::read_view`]), and the requester-side
+/// [`gather_from_buf`] copies each peer's bytes back out.  `batches`,
+/// `payload` and `stats` keep their capacity across rounds; `stats`
+/// additionally keeps its *contents* (per-OST read accounting accumulates
+/// over the whole collective, since the file itself is immutable on
+/// reads).
+#[derive(Debug, Default)]
+pub struct ReadScratch {
+    /// Peer views staged this round: `(requester index, view)`.
+    pub batches: Vec<(usize, FlatView)>,
+    /// Merged, coalesced view (engine output) for the current round.
+    pub merged: FlatView,
+    /// Contiguous bytes of `merged` read from storage (capacity reused).
+    pub payload: Vec<u8>,
+    /// Per-OST read accounting, accumulated across rounds.
+    pub stats: Vec<crate::lustre::OstStats>,
+    /// Total staged requests this round (cost accounting).
+    pub n_items: u64,
+    /// Number of contributing peers this round (cost accounting).
+    pub k: usize,
+}
+
+impl ReadScratch {
+    /// Reset the per-round state, keeping allocated capacity (and the
+    /// cross-round `stats` accumulation).
+    pub fn reset_round(&mut self) {
+        self.batches.clear();
+        self.merged = FlatView::empty();
+        self.payload.clear();
+        self.n_items = 0;
+        self.k = 0;
+    }
+
+    /// Merge the staged peer views through `engine`.
+    pub fn merge_with(&mut self, engine: &dyn SortEngine) -> Result<()> {
+        self.k = self.batches.len();
+        self.n_items = self.batches.iter().map(|(_, v)| v.len() as u64).sum();
+        if self.batches.is_empty() {
+            self.merged = FlatView::empty();
+            self.payload.clear();
+            return Ok(());
+        }
+        let views: Vec<&FlatView> = self.batches.iter().map(|(_, v)| v).collect();
+        self.merged = engine.merge_sorted(&views)?;
+        Ok(())
     }
 }
 
@@ -439,6 +535,90 @@ mod tests {
         // Empty round: merge_with is a cheap no-op.
         assert_eq!(s.merge_with(&NativeEngine).unwrap(), 0);
         assert_eq!(s.k, 0);
+    }
+
+    #[test]
+    fn gather_inverts_scatter() {
+        // scatter batches into the merged buffer, then gather each batch
+        // back out: bytes must round-trip exactly.
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0x6A7);
+        for _ in 0..50 {
+            let k = 1 + rng.gen_range(6) as usize;
+            let mut batches = Vec::new();
+            let mut cursor = rng.gen_range(64);
+            for tag in 0..k {
+                let n = rng.gen_range(30) as usize;
+                let mut pairs = Vec::new();
+                for _ in 0..n {
+                    let len = rng.gen_range(9); // includes zero-length
+                    if rng.gen_bool(0.5) {
+                        cursor += rng.gen_range(40);
+                    }
+                    pairs.push((cursor, len));
+                    cursor += len;
+                }
+                let view = fv(&pairs);
+                let payload: Vec<u8> = (0..view.total_bytes())
+                    .map(|i| (i as u8).wrapping_mul(13) ^ tag as u8)
+                    .collect();
+                batches.push(ReqBatch::new(view, payload));
+            }
+            let views: Vec<&FlatView> = batches.iter().map(|b| &b.view).collect();
+            let merged = merge_views(&views);
+            let (buf, _) = scatter_into(&merged, &batches);
+            for b in &batches {
+                let mut out = vec![0u8; b.view.total_bytes() as usize];
+                let moved = gather_from_buf(&merged, &buf, &b.view, &mut out);
+                assert_eq!(out, b.payload);
+                assert_eq!(moved, b.view.total_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn gather_handles_overlapping_reads() {
+        // Two readers over the same bytes: the merged view keeps the
+        // overlapping segments distinct and each gather sees its own.
+        let a = fv(&[(0, 8)]);
+        let b = fv(&[(2, 4)]);
+        let merged = merge_views(&[&a, &b]);
+        assert_eq!(merged.iter().collect::<Vec<_>>(), vec![(0, 8), (2, 4)]);
+        // Buffer laid out by `merged`: bytes of (0,8) then bytes of (2,4).
+        let file: Vec<u8> = (10..18).collect();
+        let mut payload = vec![0u8; merged.total_bytes() as usize];
+        // Simulate the aggregator read: each merged segment filled from
+        // the "file" image.
+        let mut cur = 0usize;
+        for (off, len) in merged.iter() {
+            payload[cur..cur + len as usize]
+                .copy_from_slice(&file[off as usize..(off + len) as usize]);
+            cur += len as usize;
+        }
+        let mut out_a = vec![0u8; 8];
+        let mut out_b = vec![0u8; 4];
+        gather_from_buf(&merged, &payload, &a, &mut out_a);
+        gather_from_buf(&merged, &payload, &b, &mut out_b);
+        assert_eq!(out_a, (10..18).collect::<Vec<u8>>());
+        assert_eq!(out_b, (12..16).collect::<Vec<u8>>());
+    }
+
+    #[test]
+    fn read_scratch_merges_and_resets() {
+        use crate::runtime::engine::NativeEngine;
+        let mut s = ReadScratch::default();
+        s.batches.push((0, fv(&[(0, 2), (6, 2)])));
+        s.batches.push((1, fv(&[(2, 2)])));
+        s.merge_with(&NativeEngine).unwrap();
+        assert_eq!(s.k, 2);
+        assert_eq!(s.n_items, 3);
+        assert_eq!(s.merged.iter().collect::<Vec<_>>(), vec![(0, 4), (6, 2)]);
+        s.reset_round();
+        assert!(s.batches.is_empty() && s.merged.is_empty() && s.payload.is_empty());
+        // Empty round: merge_with is a cheap no-op.
+        s.merge_with(&NativeEngine).unwrap();
+        assert_eq!(s.k, 0);
+        assert!(s.merged.is_empty());
     }
 
     #[test]

@@ -8,8 +8,21 @@
 //! which aggregators learn the offset-length lists they will receive; the
 //! simulator performs it as an accounted message exchange
 //! (16 bytes per offset-length entry, matching ROMIO's packing).
-
-use std::collections::HashMap;
+//!
+//! Storage is dense (§Perf tentpole 2): aggregators are `0..n_agg` by
+//! construction — the same trick as `cost_phase_with_pending`'s
+//! rank-indexed accumulators.  For a non-overlapping view the pieces
+//! arrive in nondecreasing `(round, aggregator)` order (offsets
+//! nondecreasing ⇒ stripes nondecreasing ⇒ `(round, agg)`
+//! lexicographically nondecreasing, since the stripe → `(round, agg)`
+//! mapping is monotone), so almost every piece appends to the *tail*
+//! batch of its aggregator's list and no per-destination `HashMap` is
+//! needed; overlapping requests (legal on the read side) revisit an
+//! earlier round of the same aggregator, found by binary search.  New
+//! destinations are provably created in ascending `(round, agg)` order
+//! even then, so the per-round destination lists come out presorted —
+//! `dests_in_round` returns a precomputed CSR slice instead of filtering
+//! + sorting the key set per round.
 
 use crate::mpisim::FlatView;
 
@@ -27,31 +40,105 @@ struct DestAccum {
     payload: Vec<u8>,
 }
 
-/// Classified requests of one requester: per (round, aggregator) batches.
+/// Classified requests of one requester: per `(round, aggregator)` batches
+/// stored densely by aggregator id, with a CSR round index.
 #[derive(Debug, Default)]
 pub struct MyReqs {
-    /// Per-destination sorted request batches.
-    pub by_dest: HashMap<DestKey, ReqBatch>,
+    /// Per-aggregator `(round, batch)` lists, ascending by round
+    /// (aggregators are `0..n_agg` — the dense-destination invariant).
+    per_agg: Vec<Vec<(u64, ReqBatch)>>,
+    /// Per-aggregator drain cursor for the in-order round loop.
+    cursor: Vec<usize>,
+    /// CSR round index: the aggregators with data in round `r` are
+    /// `round_aggs[round_starts[r]..round_starts[r + 1]]`, ascending.
+    /// `round_starts` has `max_round + 2` entries (empty when no batches).
+    round_aggs: Vec<usize>,
+    round_starts: Vec<usize>,
     /// Number of flattened request pieces classified (cost accounting).
     pub pieces: u64,
 }
 
 impl MyReqs {
-    /// Destinations for a given round, ascending by aggregator.
-    pub fn dests_in_round(&self, round: u64) -> Vec<usize> {
-        let mut v: Vec<usize> = self
-            .by_dest
-            .keys()
-            .filter(|(r, _)| *r == round)
-            .map(|&(_, a)| a)
-            .collect();
-        v.sort_unstable();
-        v
+    /// Destinations for a given round, ascending by aggregator — a
+    /// precomputed slice (no per-round filter + sort).
+    pub fn dests_in_round(&self, round: u64) -> &[usize] {
+        let r = round as usize;
+        if r + 1 < self.round_starts.len() {
+            &self.round_aggs[self.round_starts[r]..self.round_starts[r + 1]]
+        } else {
+            &[]
+        }
     }
 
     /// Highest round index present.
     pub fn max_round(&self) -> Option<u64> {
-        self.by_dest.keys().map(|&(r, _)| r).max()
+        // `round_starts` is empty or has `max_round + 2` entries.
+        self.round_starts.len().checked_sub(2).map(|r| r as u64)
+    }
+
+    /// Total number of `(round, aggregator)` destinations.
+    pub fn n_dests(&self) -> usize {
+        self.round_aggs.len()
+    }
+
+    /// Borrow the batch for `(round, agg)`, if present (binary search over
+    /// the aggregator's round-sorted list; off the hot path).
+    pub fn get(&self, round: u64, agg: usize) -> Option<&ReqBatch> {
+        let list = self.per_agg.get(agg)?;
+        list.binary_search_by_key(&round, |(r, _)| *r).ok().map(|i| &list[i].1)
+    }
+
+    /// Iterate all `(dest, batch)` pairs, grouped by aggregator and
+    /// ascending by round within each.
+    pub fn iter(&self) -> impl Iterator<Item = (DestKey, &ReqBatch)> + '_ {
+        self.per_agg
+            .iter()
+            .enumerate()
+            .flat_map(|(a, list)| list.iter().map(move |(r, b)| ((*r, a), b)))
+    }
+
+    /// Per-aggregator total request count across all rounds, ascending by
+    /// aggregator, skipping aggregators with no data — sizes the
+    /// `calc_others_req` metadata messages without a per-rank hash map.
+    pub fn reqs_per_agg(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.per_agg.iter().enumerate().filter_map(|(a, list)| {
+            if list.is_empty() {
+                None
+            } else {
+                Some((a, list.iter().map(|(_, b)| b.view.len() as u64).sum()))
+            }
+        })
+    }
+
+    /// Drain round `round`'s batches in ascending-aggregator order.
+    ///
+    /// Rounds must be drained in ascending order (the exchange loop's
+    /// access pattern); each batch is yielded exactly once, moved out of
+    /// the per-aggregator storage.
+    pub fn take_round(&mut self, round: u64) -> RoundDrain<'_> {
+        RoundDrain { reqs: self, round, idx: 0 }
+    }
+}
+
+/// Draining iterator over one round's `(aggregator, batch)` pairs — see
+/// [`MyReqs::take_round`].
+pub struct RoundDrain<'a> {
+    reqs: &'a mut MyReqs,
+    round: u64,
+    idx: usize,
+}
+
+impl Iterator for RoundDrain<'_> {
+    type Item = (usize, ReqBatch);
+
+    fn next(&mut self) -> Option<(usize, ReqBatch)> {
+        let agg = *self.reqs.dests_in_round(self.round).get(self.idx)?;
+        self.idx += 1;
+        let cur = self.reqs.cursor[agg];
+        self.reqs.cursor[agg] = cur + 1;
+        let (r, batch) = &mut self.reqs.per_agg[agg][cur];
+        debug_assert_eq!(*r, self.round, "rounds must be drained in ascending order");
+        Some((agg, std::mem::take(batch)))
     }
 }
 
@@ -62,7 +149,10 @@ impl MyReqs {
 /// lists inherit the source's ascending order, so aggregators can heap-merge
 /// them directly.
 pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> MyReqs {
-    let mut accum: HashMap<DestKey, DestAccum> = HashMap::new();
+    let n_agg = domains.n_agg;
+    let mut per_agg: Vec<Vec<(u64, DestAccum)>> = (0..n_agg).map(|_| Vec::new()).collect();
+    let mut round_aggs: Vec<usize> = Vec::new();
+    let mut round_starts: Vec<usize> = Vec::new();
     let mut pieces = 0u64;
     let has_payload = !batch.payload.is_empty();
     let mut payload_cursor = 0u64;
@@ -76,6 +166,104 @@ pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> MyReqs {
         // Inline stripe split (§Perf change 3): no per-request Vec from
         // split_by_stripe on this path — it dominates allocation volume
         // for the paper's hundreds of millions of small requests.
+        let mut cur = off;
+        let end = off + len;
+        loop {
+            let stripe_end = (cur / stripe_size + 1) * stripe_size;
+            let piece_end = end.min(stripe_end);
+            let (piece_off, piece_len) = (cur, piece_end - cur);
+            let agg = domains.aggregator_of(piece_off);
+            let round = domains.round_of(piece_off);
+            // Destination lookup: the tail batch for the common
+            // (non-overlapping) case; an overlapping request revisits an
+            // earlier round of this aggregator, which must already exist
+            // (a view that reaches round r of an aggregator has covered
+            // every earlier stripe of it that a later request can touch).
+            let list = &mut per_agg[agg];
+            let last_round = list.last().map(|(r, _)| *r);
+            let idx = match last_round {
+                Some(r) if r == round => list.len() - 1,
+                Some(r) if r > round => list
+                    .binary_search_by_key(&round, |(r, _)| *r)
+                    .expect("overlapping request revisits a known round"),
+                _ => {
+                    // New destination.  These are created in ascending
+                    // (round, agg) order even for overlapping views, so
+                    // the CSR round index stays sorted by construction.
+                    while round_starts.len() <= round as usize {
+                        round_starts.push(round_aggs.len());
+                    }
+                    round_aggs.push(agg);
+                    list.push((round, DestAccum::default()));
+                    list.len() - 1
+                }
+            };
+            let acc = &mut list[idx].1;
+            acc.offsets.push(piece_off);
+            acc.lengths.push(piece_len);
+            if has_payload {
+                let start = (payload_cursor + (piece_off - off)) as usize;
+                acc.payload
+                    .extend_from_slice(&batch.payload[start..start + piece_len as usize]);
+            }
+            pieces += 1;
+            if piece_end >= end {
+                break;
+            }
+            cur = piece_end;
+        }
+        payload_cursor += len;
+    }
+    if !round_starts.is_empty() {
+        round_starts.push(round_aggs.len());
+    }
+    MyReqs {
+        per_agg: per_agg
+            .into_iter()
+            .map(|list| {
+                list.into_iter()
+                    .map(|(r, a)| {
+                        (
+                            r,
+                            ReqBatch::new(
+                                FlatView::from_pairs_unchecked(a.offsets, a.lengths),
+                                a.payload,
+                            ),
+                        )
+                    })
+                    .collect()
+            })
+            .collect(),
+        cursor: vec![0; n_agg],
+        round_aggs,
+        round_starts,
+        pieces,
+    }
+}
+
+/// Bytes on the wire for the `calc_others_req` metadata describing `n`
+/// offset-length entries (ROMIO packs two 8-byte words per entry).
+pub fn metadata_bytes(n: u64) -> u64 {
+    16 * n
+}
+
+/// The pre-tentpole `HashMap` implementation, kept verbatim as the golden
+/// oracle for the dense rewrite (same pattern as the binary-search
+/// `scatter_into_binary_search` reference).
+#[cfg(test)]
+pub(crate) fn calc_my_req_hashmap(
+    domains: &FileDomains,
+    batch: &ReqBatch,
+) -> (std::collections::HashMap<DestKey, ReqBatch>, u64) {
+    let mut accum: std::collections::HashMap<DestKey, DestAccum> = Default::default();
+    let mut pieces = 0u64;
+    let has_payload = !batch.payload.is_empty();
+    let mut payload_cursor = 0u64;
+    let stripe_size = domains.lustre.stripe_size;
+    for (off, len) in batch.view.iter() {
+        if len == 0 {
+            continue;
+        }
         let mut cur = off;
         let end = off + len;
         loop {
@@ -109,19 +297,14 @@ pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> MyReqs {
             )
         })
         .collect();
-    MyReqs { by_dest, pieces }
-}
-
-/// Bytes on the wire for the `calc_others_req` metadata describing `n`
-/// offset-length entries (ROMIO packs two 8-byte words per entry).
-pub fn metadata_bytes(n: u64) -> u64 {
-    16 * n
+    (by_dest, pieces)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::lustre::LustreConfig;
+    use crate::util::SplitMix64;
 
     fn domains(n_agg: usize) -> FileDomains {
         // stripe 100 bytes, 4 OSTs, region [0, 1200)
@@ -140,8 +323,8 @@ mod tests {
         let d = domains(4);
         let r = calc_my_req(&d, &batch(&[(10, 20)]));
         assert_eq!(r.pieces, 1);
-        assert_eq!(r.by_dest.len(), 1);
-        let b = &r.by_dest[&(0, 0)];
+        assert_eq!(r.n_dests(), 1);
+        let b = r.get(0, 0).unwrap();
         assert_eq!(b.view.iter().collect::<Vec<_>>(), vec![(10, 20)]);
         assert_eq!(b.payload, (0..20).map(|i| i as u8).collect::<Vec<_>>());
     }
@@ -151,8 +334,8 @@ mod tests {
         let d = domains(4);
         let r = calc_my_req(&d, &batch(&[(90, 20)]));
         assert_eq!(r.pieces, 2);
-        let a = &r.by_dest[&(0, 0)];
-        let b = &r.by_dest[&(0, 1)];
+        let a = r.get(0, 0).unwrap();
+        let b = r.get(0, 1).unwrap();
         assert_eq!(a.view.iter().collect::<Vec<_>>(), vec![(90, 10)]);
         assert_eq!(b.view.iter().collect::<Vec<_>>(), vec![(100, 10)]);
         // Payload split preserves byte identity.
@@ -165,15 +348,17 @@ mod tests {
         let d = domains(4);
         // Offset 450 → stripe 4 → round 1, aggregator 0.
         let r = calc_my_req(&d, &batch(&[(450, 10)]));
-        assert!(r.by_dest.contains_key(&(1, 0)));
+        assert!(r.get(1, 0).is_some());
         assert_eq!(r.max_round(), Some(1));
+        assert_eq!(r.dests_in_round(0), &[] as &[usize]);
+        assert_eq!(r.dests_in_round(1), &[0]);
     }
 
     #[test]
     fn per_dest_lists_stay_sorted() {
         let d = domains(2);
         let r = calc_my_req(&d, &batch(&[(0, 10), (200, 10), (410, 10), (600, 10)]));
-        for b in r.by_dest.values() {
+        for (_, b) in r.iter() {
             assert!(b.view.validate().is_ok());
         }
     }
@@ -182,16 +367,18 @@ mod tests {
     fn empty_batch_empty_result() {
         let d = domains(4);
         let r = calc_my_req(&d, &ReqBatch::default());
-        assert!(r.by_dest.is_empty());
+        assert_eq!(r.n_dests(), 0);
         assert_eq!(r.pieces, 0);
         assert_eq!(r.max_round(), None);
+        assert_eq!(r.dests_in_round(0), &[] as &[usize]);
+        assert_eq!(r.reqs_per_agg().count(), 0);
     }
 
     #[test]
     fn dests_in_round_sorted() {
         let d = domains(4);
         let r = calc_my_req(&d, &batch(&[(50, 10), (250, 10), (350, 10)]));
-        assert_eq!(r.dests_in_round(0), vec![0, 2, 3]);
+        assert_eq!(r.dests_in_round(0), &[0, 2, 3]);
     }
 
     #[test]
@@ -200,15 +387,165 @@ mod tests {
         let b = batch(&[(95, 120), (700, 33)]);
         let total_in = b.view.total_bytes();
         let r = calc_my_req(&d, &b);
-        let total_out: u64 = r.by_dest.values().map(|b| b.view.total_bytes()).sum();
+        let total_out: u64 = r.iter().map(|(_, b)| b.view.total_bytes()).sum();
         assert_eq!(total_in, total_out);
-        let payload_out: usize = r.by_dest.values().map(|b| b.payload.len()).sum();
+        let payload_out: usize = r.iter().map(|(_, b)| b.payload.len()).sum();
         assert_eq!(payload_out as u64, total_in);
+    }
+
+    #[test]
+    fn take_round_drains_in_dest_order() {
+        let d = domains(2);
+        let src = batch(&[(0, 10), (150, 10), (390, 20), (800, 10)]);
+        let mut r = calc_my_req(&d, &src);
+        let mut drained: Vec<(u64, usize)> = Vec::new();
+        let mut payload_cat: Vec<u8> = Vec::new();
+        for round in 0..=r.max_round().unwrap() {
+            for (agg, b) in r.take_round(round) {
+                drained.push((round, agg));
+                payload_cat.extend_from_slice(&b.payload);
+            }
+        }
+        // Lexicographically ascending keys, every dest exactly once.
+        assert!(drained.windows(2).all(|w| w[0] < w[1]), "{drained:?}");
+        assert_eq!(drained.len(), r.n_dests());
+        // Concatenation in (round, agg) order reproduces the source payload
+        // — the invariant the read path's reply assembly relies on.
+        assert_eq!(payload_cat, src.payload);
     }
 
     #[test]
     fn metadata_bytes_packing() {
         assert_eq!(metadata_bytes(0), 0);
         assert_eq!(metadata_bytes(10), 160);
+    }
+
+    /// Random view with gaps, zero-length requests, single-byte requests
+    /// straddling stripe boundaries (offset ≡ -1 mod stripe), and
+    /// occasional overlapping requests (legal on the read side).
+    fn random_batch(rng: &mut SplitMix64, stripe: u64, with_payload: bool) -> ReqBatch {
+        let n = rng.gen_range(60) as usize;
+        let mut pairs = Vec::with_capacity(n);
+        let mut cursor = rng.gen_range(stripe * 3);
+        for _ in 0..n {
+            if rng.gen_bool(0.4) {
+                cursor += rng.gen_range(stripe * 2);
+            }
+            let len = match rng.gen_range(4) {
+                0 => 0,                              // zero-length request
+                1 => {
+                    // Single-byte request straddler setup: jump to the last
+                    // byte of a stripe so the *next* request straddles.
+                    cursor = (cursor / stripe + 1) * stripe - 1;
+                    1
+                }
+                2 => 1 + rng.gen_range(2 * stripe),  // may span stripes
+                _ => 1 + rng.gen_range(stripe / 2),
+            };
+            let off = cursor;
+            pairs.push((off, len));
+            if rng.gen_bool(0.15) {
+                // Rewind inside the request just pushed: the next request
+                // overlaps it (offsets stay nondecreasing).
+                cursor = off + rng.gen_range(len.max(1));
+            } else {
+                cursor += len;
+            }
+        }
+        let view = FlatView::from_pairs(pairs).unwrap();
+        let payload = if with_payload {
+            (0..view.total_bytes()).map(|i| (i as u8).wrapping_mul(167)).collect()
+        } else {
+            Vec::new()
+        };
+        ReqBatch::new(view, payload)
+    }
+
+    #[test]
+    fn dense_matches_hashmap_oracle_randomized() {
+        let mut rng = SplitMix64::new(0xD0_5E);
+        for case in 0..200 {
+            let stripe = [16u64, 100, 256][rng.gen_range(3) as usize];
+            let n_agg = 1 + rng.gen_range(8) as usize;
+            let with_payload = rng.gen_bool(0.7);
+            let b = random_batch(&mut rng, stripe, with_payload);
+            let lo = b.view.min_offset().unwrap_or(0);
+            let hi = b.view.max_end().unwrap_or(0);
+            let d = FileDomains::new(LustreConfig::new(stripe, 4), lo, hi, n_agg);
+            if d.n_stripes() == 0 {
+                continue;
+            }
+            let dense = calc_my_req(&d, &b);
+            let (oracle, oracle_pieces) = calc_my_req_hashmap(&d, &b);
+            assert_eq!(dense.pieces, oracle_pieces, "case {case}");
+            assert_eq!(dense.n_dests(), oracle.len(), "case {case}");
+            for (key, want) in &oracle {
+                let got = dense
+                    .get(key.0, key.1)
+                    .unwrap_or_else(|| panic!("case {case}: missing dest {key:?}"));
+                assert_eq!(
+                    got.view.iter().collect::<Vec<_>>(),
+                    want.view.iter().collect::<Vec<_>>(),
+                    "case {case} dest {key:?} view"
+                );
+                assert_eq!(got.payload, want.payload, "case {case} dest {key:?} payload");
+            }
+            // dests_in_round must equal the sorted oracle key projection.
+            if let Some(max) = dense.max_round() {
+                for round in 0..=max {
+                    let mut want: Vec<usize> = oracle
+                        .keys()
+                        .filter(|(r, _)| *r == round)
+                        .map(|&(_, a)| a)
+                        .collect();
+                    want.sort_unstable();
+                    assert_eq!(dense.dests_in_round(round), &want[..], "case {case} r{round}");
+                }
+            }
+            assert_eq!(
+                dense.max_round(),
+                oracle.keys().map(|&(r, _)| r).max(),
+                "case {case}"
+            );
+        }
+    }
+
+    #[test]
+    fn overlapping_view_revisits_earlier_round() {
+        // A 300-byte request followed by a nested 10-byte request: with
+        // stripe 100 and 2 aggregators the nested request lands back in
+        // (round 0, agg 0) *after* (round 1, agg 0) was created.
+        let d = FileDomains::new(LustreConfig::new(100, 4), 0, 300, 2);
+        let b = batch(&[(0, 300), (50, 10)]);
+        let r = calc_my_req(&d, &b);
+        let (oracle, oracle_pieces) = calc_my_req_hashmap(&d, &b);
+        assert_eq!(r.pieces, oracle_pieces);
+        assert_eq!(r.n_dests(), oracle.len());
+        for (key, want) in &oracle {
+            let got = r.get(key.0, key.1).unwrap();
+            assert_eq!(
+                got.view.iter().collect::<Vec<_>>(),
+                want.view.iter().collect::<Vec<_>>(),
+                "dest {key:?}"
+            );
+            assert_eq!(got.payload, want.payload, "dest {key:?}");
+            got.view.validate().unwrap();
+        }
+        assert_eq!(r.get(0, 0).unwrap().view.iter().collect::<Vec<_>>(), vec![(0, 100), (50, 10)]);
+    }
+
+    #[test]
+    fn single_byte_request_straddling_stripe_boundary() {
+        // Two single-byte requests around the 100-byte stripe boundary and
+        // one two-byte request straddling it.
+        let d = domains(4);
+        let r = calc_my_req(&d, &batch(&[(99, 1), (100, 1), (199, 2)]));
+        assert_eq!(r.pieces, 4);
+        assert_eq!(r.get(0, 0).unwrap().view.iter().collect::<Vec<_>>(), vec![(99, 1)]);
+        assert_eq!(
+            r.get(0, 1).unwrap().view.iter().collect::<Vec<_>>(),
+            vec![(100, 1), (199, 1)]
+        );
+        assert_eq!(r.get(0, 2).unwrap().view.iter().collect::<Vec<_>>(), vec![(200, 1)]);
     }
 }

@@ -5,6 +5,7 @@
 use crate::coordinator::breakdown::Counters;
 use crate::coordinator::merge::{scatter_into, ReqBatch};
 use crate::coordinator::placement::{per_node_count_for_total, select_local_aggregators};
+use crate::coordinator::reqcalc::metadata_bytes;
 use crate::coordinator::twophase::{write_exchange, CollectiveCtx, ExchangeOutcome};
 use crate::error::Result;
 use crate::lustre::LustreFile;
@@ -109,6 +110,76 @@ pub fn intra_node_aggregate(
     })
 }
 
+/// Result of the read-side intra-node stage (§IV-A in reverse).
+pub struct IntraReadOutcome {
+    /// One merged view per local aggregator `(rank, view)`, ascending by
+    /// rank — the requester set of the inter-node read exchange.
+    pub agg_views: Vec<(usize, FlatView)>,
+    /// rank → its local aggregator (the reply-scatter plan).
+    pub assignment: Vec<usize>,
+    /// Simulated gather-communication time (metadata only).
+    pub comm: f64,
+    /// Simulated merge time (max over local aggregators).
+    pub sort: f64,
+    /// Gather messages (non-aggregators → local aggregators).
+    pub msgs: usize,
+}
+
+/// Read-side intra-node stage: every rank sends its view *metadata* to its
+/// local aggregator (no payload travels on the request side of a read),
+/// which merges the member views through the engine into one sorted,
+/// coalesced view per local aggregator.
+///
+/// Grouping is dense by rank (local aggregators are rank ids —
+/// the dense-rank invariant), and the merge runs through
+/// [`crate::runtime::engine::SortEngine::merge_sorted`] so reads and
+/// writes share one engine entry point; engine errors propagate as `Err`.
+pub fn intra_node_read_views(
+    ctx: &CollectiveCtx,
+    tam: &TamConfig,
+    views: &[(usize, FlatView)],
+) -> Result<IntraReadOutcome> {
+    let topo = ctx.topo;
+    let c = per_node_count_for_total(topo, tam.total_local_aggregators);
+    let locals = select_local_aggregators(topo, c);
+
+    let mut msgs: Vec<Message> = Vec::new();
+    let mut per_agg: Vec<Vec<&FlatView>> = vec![Vec::new(); topo.nprocs()];
+    for (rank, v) in views {
+        let agg = locals.assignment[*rank];
+        if *rank != agg {
+            msgs.push(Message::new(*rank, agg, metadata_bytes(v.len() as u64)));
+        }
+        per_agg[agg].push(v);
+    }
+    let comm = cost_phase(ctx.net, ctx.topo, &msgs).time;
+
+    // Local aggregators with at least one member view, ascending by rank.
+    let mut items: Vec<(usize, Vec<&FlatView>)> = Vec::with_capacity(locals.ranks.len());
+    for &a in &locals.ranks {
+        let vs = std::mem::take(&mut per_agg[a]);
+        if !vs.is_empty() {
+            items.push((a, vs));
+        }
+    }
+    let merged: Vec<Result<(usize, FlatView, f64)>> = par_map(items, |(agg, vs)| {
+        let k = vs.len();
+        let n: u64 = vs.iter().map(|v| v.len() as u64).sum();
+        let view = ctx.engine.merge_sorted(&vs)?;
+        Ok((agg, view, ctx.cpu.merge_time(n, k.max(1))))
+    });
+    let merged: Vec<(usize, FlatView, f64)> = merged.into_iter().collect::<Result<Vec<_>>>()?;
+
+    let sort = merged.iter().map(|m| m.2).fold(0.0, f64::max);
+    Ok(IntraReadOutcome {
+        agg_views: merged.into_iter().map(|(a, v, _)| (a, v)).collect(),
+        assignment: locals.assignment,
+        comm,
+        sort,
+        msgs: msgs.len(),
+    })
+}
+
 /// Full TAM collective write: intra-node aggregation, then the inter-node
 /// two-phase exchange over local aggregators, then the (unchanged) I/O
 /// phase.
@@ -204,6 +275,26 @@ mod tests {
         assert_eq!(intra.reqs_after, 2);
         assert_eq!(intra.msgs, 6); // 3 non-aggregators per node
         assert!(intra.comm > 0.0 && intra.sort > 0.0 && intra.memcpy > 0.0);
+    }
+
+    #[test]
+    fn intra_read_views_merge_members_through_engine() {
+        let f = Fixture::new(2, 4);
+        let ctx = f.ctx(4);
+        let tam = TamConfig { total_local_aggregators: 2 }; // 1 per node
+        let views: Vec<(usize, FlatView)> = block_ranks(&f.topo, 64, 4)
+            .into_iter()
+            .map(|(r, b)| (r, b.view))
+            .collect();
+        let intra = intra_node_read_views(&ctx, &tam, &views).unwrap();
+        assert_eq!(intra.agg_views.len(), 2);
+        // Per node, 4 ranks × 64B contiguous → a single coalesced segment.
+        assert!(intra.agg_views.iter().all(|(_, v)| v.len() == 1));
+        assert_eq!(intra.msgs, 6); // 3 non-aggregators per node
+        assert!(intra.comm > 0.0 && intra.sort > 0.0);
+        for (r, _) in &views {
+            assert!(f.topo.same_node(*r, intra.assignment[*r]));
+        }
     }
 
     #[test]

@@ -9,8 +9,6 @@
 //! `calc_my_req`, `calc_others_req`, offset sort, datatype creation,
 //! communication, and the I/O phase.
 
-use std::collections::HashMap;
-
 use crate::cluster::Topology;
 use crate::coordinator::breakdown::{Breakdown, Counters, CpuModel};
 use crate::coordinator::filedomain::FileDomains;
@@ -95,14 +93,11 @@ pub fn write_exchange(
         .fold(0.0, f64::max);
 
     // ---- ADIOI_Calc_others_req: metadata exchange (offset-length lists
-    // travel to the aggregators once, covering all rounds).
+    // travel to the aggregators once, covering all rounds).  Per-agg
+    // totals come straight off the dense destination lists.
     let mut meta_msgs: Vec<Message> = Vec::new();
     for (rank, mr) in &my_reqs {
-        let mut per_agg: HashMap<usize, u64> = HashMap::new();
-        for ((_, agg), b) in &mr.by_dest {
-            *per_agg.entry(*agg).or_default() += b.view.len() as u64;
-        }
-        for (agg, n) in per_agg {
+        for (agg, n) in mr.reqs_per_agg() {
             meta_msgs.push(Message::new(*rank, agg_ranks[agg], metadata_bytes(n)));
         }
     }
@@ -132,8 +127,7 @@ pub fn write_exchange(
             slot.reset();
         }
         for (rank, mr) in my_reqs.iter_mut() {
-            for agg in mr.dests_in_round(round) {
-                let b = mr.by_dest.remove(&(round, agg)).expect("dest listed");
+            for (agg, b) in mr.take_round(round) {
                 data_msgs.push(Message::new(*rank, agg_ranks[agg], b.view.total_bytes()));
                 scratch[agg].batches.push(b);
             }

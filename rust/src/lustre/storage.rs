@@ -135,6 +135,53 @@ impl LustreFile {
         Ok(())
     }
 
+    /// Vectored read: fill `out` with the bytes of `view`'s segments in
+    /// view order (zero-filled where never written), mirroring
+    /// [`Self::write_view`]'s inlined stripe walk — no per-segment `Vec`
+    /// from [`LustreConfig::split_by_stripe`] and no per-segment result
+    /// allocation on the read hot path.
+    ///
+    /// `out` is cleared and resized to `view.total_bytes()` (capacity is
+    /// reused across calls — the read scratch-arena hot path).  Reads take
+    /// `&self`, so per-OST accounting accumulates into the caller-owned
+    /// `stats` (one slot per OST).  Returns an error if a covered OST has
+    /// been failed via [`Self::fail_ost`], mirroring the write side.
+    pub fn read_view(
+        &self,
+        view: &FlatView,
+        out: &mut Vec<u8>,
+        stats: &mut [OstStats],
+    ) -> Result<()> {
+        debug_assert_eq!(stats.len(), self.cfg.stripe_count);
+        out.clear();
+        out.resize(view.total_bytes() as usize, 0);
+        let mut cursor = 0usize;
+        for (off, len) in view.iter() {
+            let mut cur = off;
+            let end = off + len;
+            while cur < end {
+                let stripe = self.cfg.stripe_of(cur);
+                let (stripe_lo, stripe_hi) = self.cfg.stripe_range(stripe);
+                let piece_end = end.min(stripe_hi);
+                let piece_len = (piece_end - cur) as usize;
+                let ost = self.cfg.ost_of(cur);
+                if self.failed_osts[ost] {
+                    return Err(Error::Storage(format!("OST {ost} failed")));
+                }
+                if let Some(buf) = self.stripes.get(&stripe) {
+                    let within = (cur - stripe_lo) as usize;
+                    out[cursor..cursor + piece_len]
+                        .copy_from_slice(&buf[within..within + piece_len]);
+                }
+                stats[ost].bytes += piece_len as u64;
+                stats[ost].extents += 1;
+                cursor += piece_len;
+                cur = piece_end;
+            }
+        }
+        Ok(())
+    }
+
     /// Read `len` bytes at `offset` (zero-filled where never written).
     pub fn read_at(&self, offset: u64, len: u64) -> Vec<u8> {
         let mut out = vec![0u8; len as usize];
@@ -292,6 +339,73 @@ mod tests {
         // The piece before the failed OST landed (same as sequential
         // write_at semantics).
         assert_eq!(f.read_at(0, 8), vec![1u8; 8]);
+    }
+
+    #[test]
+    fn read_view_matches_per_segment_read_at() {
+        let mut f = LustreFile::new(cfg());
+        f.begin_round();
+        let data: Vec<u8> = (0..200).map(|i| (i as u8).wrapping_mul(7)).collect();
+        f.write_at(0, 30, &data).unwrap();
+
+        // Segments crossing stripe boundaries, a zero-length request, and
+        // a never-written tail.
+        let view = FlatView::from_pairs(vec![(10, 30), (60, 70), (130, 0), (500, 20)]).unwrap();
+        let mut out = vec![0xFFu8; 3]; // stale buffer must be fully replaced
+        let mut stats = vec![OstStats::default(); f.config().stripe_count];
+        f.read_view(&view, &mut out, &mut stats).unwrap();
+
+        let mut want = Vec::new();
+        for (off, len) in view.iter() {
+            want.extend_from_slice(&f.read_at(off, len));
+        }
+        assert_eq!(out, want);
+
+        // Per-OST accounting matches the split_by_stripe reference.
+        let mut want_bytes = vec![0u64; f.config().stripe_count];
+        let mut want_extents = vec![0u64; f.config().stripe_count];
+        for (off, len) in view.iter() {
+            for (ost, _, piece_len) in f.config().split_by_stripe(off, len) {
+                want_bytes[ost] += piece_len;
+                want_extents[ost] += 1;
+            }
+        }
+        for (ost, s) in stats.iter().enumerate() {
+            assert_eq!(s.bytes, want_bytes[ost], "OST {ost} bytes");
+            assert_eq!(s.extents, want_extents[ost], "OST {ost} extents");
+        }
+    }
+
+    #[test]
+    fn read_view_reuses_buffer_without_stale_bytes() {
+        let mut f = LustreFile::new(cfg());
+        f.begin_round();
+        f.write_at(0, 0, &[9u8; 16]).unwrap();
+        let mut out = Vec::new();
+        let mut stats = vec![OstStats::default(); f.config().stripe_count];
+        let big = FlatView::from_pairs(vec![(0, 16)]).unwrap();
+        f.read_view(&big, &mut out, &mut stats).unwrap();
+        assert_eq!(out, vec![9u8; 16]);
+        // Smaller view over unwritten space: must come back all zero.
+        let small = FlatView::from_pairs(vec![(1000, 4)]).unwrap();
+        f.read_view(&small, &mut out, &mut stats).unwrap();
+        assert_eq!(out, vec![0u8; 4]);
+    }
+
+    #[test]
+    fn read_view_failed_ost_rejects() {
+        let mut f = LustreFile::new(cfg());
+        f.begin_round();
+        f.write_at(0, 0, &[1u8; 128]).unwrap();
+        f.fail_ost(1);
+        let view = FlatView::from_pairs(vec![(0, 8), (64, 8)]).unwrap();
+        let mut out = Vec::new();
+        let mut stats = vec![OstStats::default(); f.config().stripe_count];
+        assert!(f.read_view(&view, &mut out, &mut stats).is_err());
+        // OST 0 alone is fine.
+        let ok = FlatView::from_pairs(vec![(0, 8)]).unwrap();
+        f.read_view(&ok, &mut out, &mut stats).unwrap();
+        assert_eq!(out, vec![1u8; 8]);
     }
 
     #[test]

@@ -111,6 +111,54 @@ impl FlatView {
         self.lengths.truncate(w + 1);
     }
 
+    /// Whether any two nonzero requests overlap in file space.  MPI
+    /// permits overlapping filetypes for *reads* (erroneous for writes);
+    /// the read exchange uses this to decide whether a requester view can
+    /// be exchanged as-is or must go through [`Self::disjoint_union`].
+    /// Zero-length requests occupy no bytes and never overlap.
+    pub fn has_overlap(&self) -> bool {
+        let mut end = 0u64;
+        let mut first = true;
+        for (off, len) in self.iter() {
+            if len == 0 {
+                continue;
+            }
+            if !first && off < end {
+                return true;
+            }
+            end = end.max(off + len);
+            first = false;
+        }
+        false
+    }
+
+    /// The disjoint union of this view's requests: sorted, maximal
+    /// segments covering exactly the bytes touched, with overlapping and
+    /// exactly-contiguous requests merged (zero-length requests dropped).
+    pub fn disjoint_union(&self) -> FlatView {
+        let mut out = FlatView::empty();
+        let (mut lo, mut hi, mut have) = (0u64, 0u64, false);
+        for (off, len) in self.iter() {
+            if len == 0 {
+                continue;
+            }
+            if have && off <= hi {
+                hi = hi.max(off + len);
+            } else {
+                if have {
+                    out.push(lo, hi - lo);
+                }
+                lo = off;
+                hi = off + len;
+                have = true;
+            }
+        }
+        if have {
+            out.push(lo, hi - lo);
+        }
+        out
+    }
+
     /// Intersect this view with the byte range `[lo, hi)`, returning the
     /// contained (possibly clipped) requests and, for each, the byte offset
     /// *within this view's payload* where the clipped piece starts — needed
@@ -234,6 +282,29 @@ mod tests {
         assert_eq!(c.len(), 2);
         assert_eq!(c[0].payload_offset, 0);
         assert_eq!(c[1].payload_offset, 4);
+    }
+
+    #[test]
+    fn has_overlap_detects_nested_and_partial() {
+        assert!(!FlatView::from_pairs(vec![(0, 4), (4, 4), (10, 2)]).unwrap().has_overlap());
+        assert!(FlatView::from_pairs(vec![(0, 8), (2, 4)]).unwrap().has_overlap());
+        // Nested: a later short request inside an earlier long one.
+        assert!(FlatView::from_pairs(vec![(0, 300), (50, 10)]).unwrap().has_overlap());
+        // Zero-length requests never overlap anything.
+        assert!(!FlatView::from_pairs(vec![(0, 8), (4, 0), (8, 2)]).unwrap().has_overlap());
+        assert!(!FlatView::empty().has_overlap());
+    }
+
+    #[test]
+    fn disjoint_union_merges_overlaps_and_contiguity() {
+        let v = FlatView::from_pairs(vec![(0, 8), (2, 4), (8, 2), (20, 5), (40, 0)]).unwrap();
+        let u = v.disjoint_union();
+        assert_eq!(u.iter().collect::<Vec<_>>(), vec![(0, 10), (20, 5)]);
+        assert!(!u.has_overlap());
+        // Nested requests collapse into the covering segment.
+        let n = FlatView::from_pairs(vec![(0, 300), (50, 10), (320, 4)]).unwrap();
+        assert_eq!(n.disjoint_union().iter().collect::<Vec<_>>(), vec![(0, 300), (320, 4)]);
+        assert!(FlatView::empty().disjoint_union().is_empty());
     }
 
     #[test]

@@ -95,11 +95,44 @@ pub fn cost_phase_with_pending(
     msgs: &[Message],
     pending_per_receiver: &[u64],
 ) -> PhaseCost {
+    let mut scratch = PhaseScratch::default();
+    cost_phase_into(params, topo, msgs, pending_per_receiver, &mut scratch)
+}
+
+/// Reusable dense accumulators for [`cost_phase_into`] — the per-round
+/// scratch of the exchange loops.  Capacity survives across rounds
+/// (scratch-arena treatment of the cost path: one phase evaluation per
+/// round otherwise re-allocates four rank/node-sized `Vec`s).
+#[derive(Debug, Default)]
+pub struct PhaseScratch {
+    recv_time: Vec<f64>,
+    send_time: Vec<f64>,
+    nic_time: Vec<f64>,
+    in_degree: Vec<usize>,
+}
+
+/// [`cost_phase_with_pending`] into caller-owned scratch accumulators
+/// (cleared and re-zeroed each call, capacity reused).
+pub fn cost_phase_into(
+    params: &NetParams,
+    topo: &Topology,
+    msgs: &[Message],
+    pending_per_receiver: &[u64],
+    scratch: &mut PhaseScratch,
+) -> PhaseCost {
     let nprocs = topo.nprocs();
-    let mut recv_time = vec![0.0f64; nprocs];
-    let mut send_time = vec![0.0f64; nprocs];
-    let mut nic_time = vec![0.0f64; topo.nodes];
-    let mut in_degree = vec![0usize; nprocs];
+    scratch.recv_time.clear();
+    scratch.recv_time.resize(nprocs, 0.0);
+    scratch.send_time.clear();
+    scratch.send_time.resize(nprocs, 0.0);
+    scratch.nic_time.clear();
+    scratch.nic_time.resize(topo.nodes, 0.0);
+    scratch.in_degree.clear();
+    scratch.in_degree.resize(nprocs, 0);
+    let recv_time = &mut scratch.recv_time;
+    let send_time = &mut scratch.send_time;
+    let nic_time = &mut scratch.nic_time;
+    let in_degree = &mut scratch.in_degree;
     let mut total_bytes = 0u64;
 
     for m in msgs {
@@ -150,6 +183,8 @@ pub fn cost_phase(params: &NetParams, topo: &Topology, msgs: &[Message]) -> Phas
 #[derive(Debug, Default)]
 pub struct PendingQueue {
     pending: Vec<u64>,
+    /// Reused phase accumulators (one allocation for the whole exchange).
+    scratch: PhaseScratch,
 }
 
 impl PendingQueue {
@@ -168,7 +203,7 @@ impl PendingQueue {
         if self.pending.len() < topo.nprocs() {
             self.pending.resize(topo.nprocs(), 0);
         }
-        let cost = cost_phase_with_pending(params, topo, msgs, &self.pending);
+        let cost = cost_phase_into(params, topo, msgs, &self.pending, &mut self.scratch);
         if params.carries_pending() {
             // A fraction of this round's small sends stay unmatched when the
             // senders race ahead; accumulate them on the receivers.
@@ -288,6 +323,31 @@ mod tests {
         let t = Topology::new(2, 4);
         let intra = vec![Message::new(1, 0, 1 << 20)];
         assert_eq!(cost_phase(&p, &t, &intra).nic_bound, 0.0);
+    }
+
+    #[test]
+    fn reused_scratch_matches_fresh_evaluation() {
+        // The same PhaseScratch across phases of different shapes (and
+        // different topology sizes) must not leak accumulator state.
+        let p = NetParams::default();
+        let mut scratch = PhaseScratch::default();
+        let big = Topology::new(4, 8);
+        let small = Topology::new(2, 2);
+        let phases = [
+            (big, (1..30).map(|s| Message::new(s, s % 7, 512)).collect::<Vec<_>>()),
+            (small, vec![Message::new(0, 3, 64), Message::new(1, 3, 64)]),
+            (big, vec![Message::new(31, 0, 1 << 20)]),
+        ];
+        for (topo, msgs) in &phases {
+            let fresh = cost_phase_with_pending(&p, topo, msgs, &[]);
+            let reused = cost_phase_into(&p, topo, msgs, &[], &mut scratch);
+            assert_eq!(reused.time, fresh.time);
+            assert_eq!(reused.recv_bound, fresh.recv_bound);
+            assert_eq!(reused.send_bound, fresh.send_bound);
+            assert_eq!(reused.nic_bound, fresh.nic_bound);
+            assert_eq!(reused.max_in_degree, fresh.max_in_degree);
+            assert_eq!(reused.total_bytes, fresh.total_bytes);
+        }
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Failure-injection tests: failed OSTs, protocol violations, degenerate
 //! inputs — the pipeline must fail loudly and precisely, never corrupt.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use tamio::cluster::Topology;
 use tamio::coordinator::breakdown::CpuModel;
-use tamio::coordinator::collective::{run_collective_write, Algorithm};
-use tamio::coordinator::merge::ReqBatch;
+use tamio::coordinator::collective::{run_collective_read, run_collective_write, Algorithm};
+use tamio::coordinator::merge::{sort_coalesce_pairs, ReqBatch};
 use tamio::coordinator::placement::GlobalPlacement;
 use tamio::coordinator::tam::TamConfig;
 use tamio::coordinator::twophase::CollectiveCtx;
@@ -12,7 +14,7 @@ use tamio::error::Error;
 use tamio::lustre::{IoModel, LustreConfig, LustreFile};
 use tamio::mpisim::{FlatView, RankState};
 use tamio::netmodel::NetParams;
-use tamio::runtime::engine::NativeEngine;
+use tamio::runtime::engine::{NativeEngine, SortEngine};
 
 fn ctx_parts() -> (Topology, NetParams, CpuModel, IoModel, NativeEngine) {
     (
@@ -68,6 +70,105 @@ fn tam_with_failed_ost_also_fails_cleanly() {
     file.fail_ost(0);
     let algo = Algorithm::Tam(TamConfig { total_local_aggregators: 2 });
     assert!(run_collective_write(&ctx, algo, simple_ranks(&topo), &mut file).is_err());
+}
+
+/// Engine that succeeds for the first `ok_calls` merges, then returns
+/// `Err` — drives mid-round engine failures through the default
+/// `merge_sorted` (concat + `merge_coalesce`) path.
+struct FailingEngine {
+    ok_calls: usize,
+    calls: AtomicUsize,
+}
+
+impl FailingEngine {
+    fn after(ok_calls: usize) -> Self {
+        FailingEngine { ok_calls, calls: AtomicUsize::new(0) }
+    }
+}
+
+impl SortEngine for FailingEngine {
+    fn merge_coalesce(&self, pairs: Vec<(u64, u64)>) -> tamio::Result<Vec<(u64, u64)>> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) >= self.ok_calls {
+            return Err(Error::Runtime("injected engine failure".into()));
+        }
+        Ok(sort_coalesce_pairs(pairs))
+    }
+
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+}
+
+/// Multi-round read pattern: every rank reads a contiguous block, so each
+/// of several rounds performs at least one aggregator merge.
+fn read_views(topo: &Topology) -> Vec<(usize, FlatView)> {
+    (0..topo.nprocs())
+        .map(|r| (r, FlatView::from_pairs(vec![(r as u64 * 256, 256)]).unwrap()))
+        .collect()
+}
+
+#[test]
+fn engine_error_mid_round_propagates_from_read() {
+    let (topo, net, cpu, io, _) = ctx_parts();
+    // 8 ranks × 256B over 4 aggregators at stripe 64 → 8 rounds; failing
+    // after 4 successful merges puts the error in the middle of the round
+    // loop, inside the parallel per-aggregator map.
+    let eng = FailingEngine::after(4);
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 4,
+    };
+    let file = LustreFile::new(LustreConfig::new(64, 4));
+    let err = run_collective_read(&ctx, Algorithm::TwoPhase, read_views(&topo), &file)
+        .unwrap_err();
+    assert!(matches!(err, Error::Runtime(_)), "got {err}");
+    assert!(eng.calls.load(Ordering::SeqCst) > 4, "failure must be mid-run");
+}
+
+#[test]
+fn tam_read_engine_error_in_intra_merge_propagates() {
+    let (topo, net, cpu, io, _) = ctx_parts();
+    // Fail on the very first merge: the local-aggregator view merge.
+    let eng = FailingEngine::after(0);
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 4,
+    };
+    let file = LustreFile::new(LustreConfig::new(64, 4));
+    let algo = Algorithm::Tam(TamConfig { total_local_aggregators: 2 });
+    let err = run_collective_read(&ctx, algo, read_views(&topo), &file).unwrap_err();
+    assert!(matches!(err, Error::Runtime(_)), "got {err}");
+}
+
+#[test]
+fn failed_ost_surfaces_storage_error_on_read() {
+    let (topo, net, cpu, io, eng) = ctx_parts();
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 4,
+    };
+    let mut file = LustreFile::new(LustreConfig::new(64, 4));
+    run_collective_write(&ctx, Algorithm::TwoPhase, simple_ranks(&topo), &mut file).unwrap();
+    file.fail_ost(2);
+    for algo in [Algorithm::TwoPhase, Algorithm::Tam(TamConfig { total_local_aggregators: 2 })] {
+        let err = run_collective_read(&ctx, algo, read_views(&topo), &file).unwrap_err();
+        assert!(matches!(err, Error::Storage(_)), "{}: got {err}", algo.name());
+    }
 }
 
 #[test]

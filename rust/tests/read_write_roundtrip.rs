@@ -1,0 +1,208 @@
+//! Cross-algorithm round-trip property suite: for random `FlatView`
+//! patterns, `run_collective_write` followed by `run_collective_read`
+//! returns bit-identical payloads under **both** `Algorithm::TwoPhase` and
+//! `Algorithm::Tam`, across 1/4/16 global aggregators, several local
+//! aggregator counts, and stripe geometries chosen so requests straddle
+//! stripe boundaries.  This suite locks in the streaming read path (round
+//! loop, scratch arenas, engine merges, vectored reads, reply assembly)
+//! against the byte-accurate storage model.
+
+use tamio::cluster::Topology;
+use tamio::coordinator::breakdown::CpuModel;
+use tamio::coordinator::collective::{run_collective_read, run_collective_write, Algorithm};
+use tamio::coordinator::merge::ReqBatch;
+use tamio::coordinator::placement::GlobalPlacement;
+use tamio::coordinator::tam::TamConfig;
+use tamio::coordinator::twophase::CollectiveCtx;
+use tamio::lustre::{IoModel, LustreConfig, LustreFile};
+use tamio::mpisim::rank::deterministic_payload;
+use tamio::mpisim::FlatView;
+use tamio::netmodel::NetParams;
+use tamio::runtime::engine::NativeEngine;
+use tamio::util::SplitMix64;
+
+struct Fx {
+    topo: Topology,
+    net: NetParams,
+    cpu: CpuModel,
+    io: IoModel,
+    eng: NativeEngine,
+}
+
+impl Fx {
+    fn new(nodes: usize, ppn: usize) -> Self {
+        Fx {
+            topo: Topology::new(nodes, ppn),
+            net: NetParams::default(),
+            cpu: CpuModel::default(),
+            io: IoModel::default(),
+            eng: NativeEngine,
+        }
+    }
+
+    fn ctx(&self, n_agg: usize) -> CollectiveCtx<'_> {
+        CollectiveCtx {
+            topo: &self.topo,
+            net: &self.net,
+            cpu: &self.cpu,
+            io: &self.io,
+            engine: &self.eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: n_agg,
+        }
+    }
+}
+
+/// Deal one global ascending request sequence to the ranks at random:
+/// views are disjoint in file space (so the written image is well-defined)
+/// but interleave arbitrarily, with random gaps, zero-length requests, and
+/// lengths up to ~2.5 stripes so many requests straddle stripe boundaries.
+fn random_disjoint_ranks(
+    rng: &mut SplitMix64,
+    nprocs: usize,
+    total_reqs: usize,
+    stripe: u64,
+    seed: u64,
+) -> Vec<(usize, ReqBatch)> {
+    let mut per_rank: Vec<Vec<(u64, u64)>> = vec![Vec::new(); nprocs];
+    let mut cursor = rng.gen_range(stripe.max(2)); // may start mid-stripe
+    for _ in 0..total_reqs {
+        let r = rng.gen_range(nprocs as u64) as usize;
+        if rng.gen_bool(0.4) {
+            cursor += rng.gen_range(2 * stripe);
+        }
+        let len = match rng.gen_range(5) {
+            0 => 0,                                // zero-length request
+            1 => {
+                // Park on the last byte of a stripe: a 2-byte request
+                // straddles the boundary.
+                cursor = (cursor / stripe + 1) * stripe - 1;
+                2
+            }
+            2 => 1 + rng.gen_range(5 * stripe / 2), // up to ~2.5 stripes
+            _ => 1 + rng.gen_range(stripe / 2),
+        };
+        per_rank[r].push((cursor, len));
+        cursor += len;
+    }
+    per_rank
+        .into_iter()
+        .enumerate()
+        .map(|(r, pairs)| {
+            let view = FlatView::from_pairs(pairs).unwrap();
+            let payload = deterministic_payload(seed, r, view.total_bytes());
+            (r, ReqBatch::new(view, payload))
+        })
+        .collect()
+}
+
+fn check_roundtrip(
+    fx: &Fx,
+    n_agg: usize,
+    stripe_count: usize,
+    stripe: u64,
+    ranks: &[(usize, ReqBatch)],
+    write_algo: Algorithm,
+    read_algos: &[Algorithm],
+) {
+    let ctx = fx.ctx(n_agg);
+    let mut file = LustreFile::new(LustreConfig::new(stripe, stripe_count));
+    run_collective_write(&ctx, write_algo, ranks.to_vec(), &mut file)
+        .unwrap_or_else(|e| panic!("write {} failed: {e}", write_algo.name()));
+    for &read_algo in read_algos {
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let (got, outcome) = run_collective_read(&ctx, read_algo, views, &file)
+            .unwrap_or_else(|e| panic!("read {} failed: {e}", read_algo.name()));
+        assert_eq!(got.len(), ranks.len());
+        for ((r, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+            assert_eq!(
+                payload,
+                &want.payload,
+                "rank {r}: write={} read={} n_agg={n_agg} stripe={stripe} mismatch",
+                write_algo.name(),
+                read_algo.name()
+            );
+        }
+        assert_eq!(
+            outcome.counters.bytes,
+            ranks.iter().map(|(_, b)| b.view.total_bytes()).sum::<u64>()
+        );
+    }
+}
+
+#[test]
+fn roundtrip_across_algorithms_aggregators_and_stripes() {
+    let mut rng = SplitMix64::new(0x07_2170);
+    let fx = Fx::new(2, 8); // 16 ranks on 2 nodes
+    for &n_agg in &[1usize, 4, 16] {
+        for &(stripe, stripe_count) in &[(64u64, 4usize), (100, 3)] {
+            for case in 0..3u64 {
+                let seed = 0x5EED ^ ((n_agg as u64) << 8) ^ (stripe << 16) ^ case;
+                let ranks = random_disjoint_ranks(&mut rng, fx.topo.nprocs(), 150, stripe, seed);
+                let algos = [
+                    Algorithm::TwoPhase,
+                    Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
+                ];
+                for write_algo in algos {
+                    check_roundtrip(
+                        &fx,
+                        n_agg,
+                        stripe_count,
+                        stripe,
+                        &ranks,
+                        write_algo,
+                        &algos,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn roundtrip_sweeps_local_aggregator_counts() {
+    // P_L from 2 (one per node) through P (degenerate TAM == two-phase).
+    let mut rng = SplitMix64::new(0x9000_00B0);
+    let fx = Fx::new(2, 8);
+    let ranks = random_disjoint_ranks(&mut rng, fx.topo.nprocs(), 200, 64, 0xFACE);
+    for pl in [2usize, 4, 8, 16] {
+        let tam = Algorithm::Tam(TamConfig { total_local_aggregators: pl });
+        check_roundtrip(&fx, 4, 4, 64, &ranks, tam, &[tam, Algorithm::TwoPhase]);
+    }
+}
+
+#[test]
+fn roundtrip_uneven_topology_and_single_aggregator() {
+    // 3 nodes × 5 ppn with P_L = 7: nothing divides anything.
+    let mut rng = SplitMix64::new(0xDD31);
+    let fx = Fx::new(3, 5);
+    let ranks = random_disjoint_ranks(&mut rng, fx.topo.nprocs(), 120, 100, 0xBEE);
+    let tam = Algorithm::Tam(TamConfig { total_local_aggregators: 7 });
+    check_roundtrip(&fx, 1, 3, 100, &ranks, Algorithm::TwoPhase, &[Algorithm::TwoPhase, tam]);
+    check_roundtrip(&fx, 1, 3, 100, &ranks, tam, &[tam]);
+}
+
+#[test]
+fn roundtrip_with_empty_and_zero_length_ranks() {
+    let fx = Fx::new(2, 4);
+    // Rank 0 writes one stripe-misaligned extent; rank 3 writes two pieces
+    // straddling a boundary; others post empty or zero-length views.
+    let v0 = FlatView::from_pairs(vec![(10, 100)]).unwrap();
+    let v3 = FlatView::from_pairs(vec![(200, 30), (254, 20)]).unwrap();
+    let ranks: Vec<(usize, ReqBatch)> = (0..fx.topo.nprocs())
+        .map(|r| match r {
+            0 => (r, ReqBatch::new(v0.clone(), deterministic_payload(1, 0, 100))),
+            3 => (r, ReqBatch::new(v3.clone(), deterministic_payload(1, 3, 50))),
+            _ if r % 2 == 0 => (r, ReqBatch::new(FlatView::empty(), Vec::new())),
+            _ => (r, ReqBatch::new(FlatView::from_pairs(vec![(64, 0)]).unwrap(), Vec::new())),
+        })
+        .collect();
+    let algos = [
+        Algorithm::TwoPhase,
+        Algorithm::Tam(TamConfig { total_local_aggregators: 2 }),
+    ];
+    for write_algo in algos {
+        check_roundtrip(&fx, 4, 4, 64, &ranks, write_algo, &algos);
+    }
+}
