@@ -63,7 +63,7 @@ fn main() -> tamio::Result<()> {
     ] {
         cfg.algorithm = algo;
         let t0 = Instant::now();
-        let (run, verify) = run_once_with_engine(&cfg, engine.as_ref())?;
+        let (run, verify) = run_once_with_engine(&cfg, engine.as_ref())?.remove(0);
         let wall = t0.elapsed();
         let v = verify.expect("verify on");
         assert!(v.passed(), "verification failed for {}", run.label);

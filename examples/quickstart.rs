@@ -28,7 +28,7 @@ fn main() -> tamio::Result<()> {
         Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
     ] {
         cfg.algorithm = algo;
-        let (run, verify) = run_once(&cfg)?;
+        let (run, verify) = run_once(&cfg)?.remove(0);
         let v = verify.expect("verification enabled");
         println!(
             "{:<14} end-to-end {:>10.3} ms   verify {}/{} ranks {}",

@@ -28,7 +28,7 @@ fn main() {
             // unmatched-send queue builds up under Isend (§V).
             cfg.lustre.stripe_size = 1 << 12;
             cfg.lustre.stripe_count = 8;
-            let (run, _) = run_once(&cfg).expect("run");
+            let (run, _) = run_once(&cfg).expect("run").remove(0);
             rows.push(vec![
                 format!("P={}", nodes * ppn),
                 mode.to_string(),

@@ -30,7 +30,7 @@ fn main() {
             // them on the first nodes, spreading puts one per node —
             // the per-node NIC bound separates the two policies.
             cfg.lustre.stripe_count = nodes / 2;
-            let (run, _) = run_once(&cfg).expect("run");
+            let (run, _) = run_once(&cfg).expect("run").remove(0);
             rows.push(vec![
                 format!("P={}", nodes * ppn),
                 name.to_string(),

@@ -5,7 +5,7 @@
 //! `cargo bench --bench fig4_e3sm_g`
 //! Env: TAMIO_BENCH_FULL=1 adds the 64- and 256-node panels.
 
-use tamio::experiments::run_breakdown_grid;
+use tamio::experiments::{bench_direction_from_env, run_breakdown_grid};
 use tamio::workloads::WorkloadKind;
 
 fn main() {
@@ -15,6 +15,9 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(150_000);
+    // Write and read panels (the paper reports both); override with
+    // TAMIO_BENCH_DIRECTION=write|read|both.
+    let direction = bench_direction_from_env();
     println!("Figure 4: E3SM G breakdown (intra components ~1/P_L, inter ~P_L)");
-    run_breakdown_grid(WorkloadKind::E3smG, &nodes, 64, budget).expect("fig4");
+    run_breakdown_grid(WorkloadKind::E3smG, &nodes, 64, budget, direction).expect("fig4");
 }

@@ -3,7 +3,7 @@
 //!
 //! `cargo bench --bench fig5_e3sm_f`
 
-use tamio::experiments::run_breakdown_grid;
+use tamio::experiments::{bench_direction_from_env, run_breakdown_grid};
 use tamio::workloads::WorkloadKind;
 
 fn main() {
@@ -13,6 +13,9 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(150_000);
+    // Write and read panels (the paper reports both); override with
+    // TAMIO_BENCH_DIRECTION=write|read|both.
+    let direction = bench_direction_from_env();
     println!("Figure 5: E3SM F breakdown (communication-dominated)");
-    run_breakdown_grid(WorkloadKind::E3smF, &nodes, 64, budget).expect("fig5");
+    run_breakdown_grid(WorkloadKind::E3smF, &nodes, 64, budget, direction).expect("fig5");
 }

@@ -6,7 +6,7 @@
 //!
 //! `cargo bench --bench fig6_btio`
 
-use tamio::experiments::run_breakdown_grid;
+use tamio::experiments::{bench_direction_from_env, run_breakdown_grid};
 use tamio::workloads::WorkloadKind;
 
 fn main() {
@@ -17,6 +17,9 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(150_000);
+    // Write and read panels (the paper reports both); override with
+    // TAMIO_BENCH_DIRECTION=write|read|both.
+    let direction = bench_direction_from_env();
     println!("Figure 6: BTIO breakdown (block-tridiagonal, high coalesce ratio)");
-    run_breakdown_grid(WorkloadKind::Btio, &nodes, 64, budget).expect("fig6");
+    run_breakdown_grid(WorkloadKind::Btio, &nodes, 64, budget, direction).expect("fig6");
 }

@@ -3,7 +3,7 @@
 //!
 //! `cargo bench --bench fig7_s3d`
 
-use tamio::experiments::run_breakdown_grid;
+use tamio::experiments::{bench_direction_from_env, run_breakdown_grid};
 use tamio::workloads::WorkloadKind;
 
 fn main() {
@@ -13,6 +13,9 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(150_000);
+    // Write and read panels (the paper reports both); override with
+    // TAMIO_BENCH_DIRECTION=write|read|both.
+    let direction = bench_direction_from_env();
     println!("Figure 7: S3D-IO breakdown (inter-node aggregation dominates)");
-    run_breakdown_grid(WorkloadKind::S3d, &nodes, 64, budget).expect("fig7");
+    run_breakdown_grid(WorkloadKind::S3d, &nodes, 64, budget, direction).expect("fig7");
 }

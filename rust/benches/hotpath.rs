@@ -14,6 +14,9 @@
 //! * read_view — vectored read into a reused buffer vs the per-request
 //!   `read_at` loop (one `Vec` allocation per request, what
 //!   `run_collective_read` did before the streaming treatment).
+//! * collective_write — `run_collective_write` end-to-end, both
+//!   algorithms (the write panel twin of the read cases below; both
+//!   drive the same direction-generic `run_exchange` loop).
 //! * collective_read — `run_collective_read` end-to-end, both algorithms.
 //!
 //! Writes `BENCH_hotpath.json` (median wall times + speedups) in the
@@ -239,6 +242,82 @@ fn bench_read_view(report: &mut JsonReport, budget: Duration) {
     }
 }
 
+fn bench_collective_write(report: &mut JsonReport, budget: Duration) {
+    // End-to-end write path on 64 ranks — the write panel alongside the
+    // read panel below, through the same direction-generic exchange loop.
+    let topo = Topology::new(4, 16);
+    let net = NetParams::default();
+    let cpu = CpuModel::default();
+    let io = IoModel::default();
+    let eng = NativeEngine;
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 8,
+    };
+    for &n in &SIZES {
+        section(&format!("collective_write: {n} requests over {} ranks", topo.nprocs()));
+        let streams = make_streams(topo.nprocs(), n, 0xC0DE + n as u64);
+        let ranks: Vec<(usize, ReqBatch)> = streams
+            .into_iter()
+            .enumerate()
+            .map(|(r, v)| {
+                let payload = deterministic_payload(29, r, v.total_bytes());
+                (r, ReqBatch::new(v, payload))
+            })
+            .collect();
+
+        // Correctness pin: rank 0's bytes must land exactly.
+        let mut file = LustreFile::new(LustreConfig::new(1 << 14, 8));
+        run_collective_write(&ctx, Algorithm::TwoPhase, ranks.clone(), &mut file)
+            .expect("pin write");
+        let (r0, b0) = &ranks[0];
+        let mut got = Vec::new();
+        for (off, len) in b0.view.iter() {
+            got.extend_from_slice(&file.read_at(off, len));
+        }
+        assert_eq!(&got, &b0.payload, "rank {r0} write pin mismatch at n={n}");
+
+        // run_collective_write consumes its batches, so the timed closures
+        // clone them each iteration; measure the clone alone so readers
+        // can subtract it from the collective medians.
+        let clone_cost = bench(&format!("ranks_clone/{n}"), budget, || {
+            black_box(ranks.clone());
+        });
+        println!("{clone_cost}");
+        report.add(&clone_cost);
+
+        for (label, algo) in [
+            ("collective_write_2p", Algorithm::TwoPhase),
+            ("collective_write_tam", Algorithm::Tam(TamConfig { total_local_aggregators: 16 })),
+        ] {
+            // One untimed write first so every timed iteration runs in the
+            // warm-overwrite regime (stripe blocks already allocated) —
+            // the steady state, matching how the read cases time a
+            // pre-populated file.
+            let mut file = LustreFile::new(LustreConfig::new(1 << 14, 8));
+            run_collective_write(&ctx, algo, ranks.clone(), &mut file).expect("warm-up");
+            let r = bench(&format!("{label}/{n}"), budget, || {
+                black_box(
+                    run_collective_write(
+                        black_box(&ctx),
+                        black_box(algo),
+                        black_box(ranks.clone()),
+                        black_box(&mut file),
+                    )
+                    .expect("write"),
+                );
+            });
+            println!("{r}   ({:.2} Mreqs/s)", r.per_second(n as u64) / 1e6);
+            report.add(&r);
+        }
+    }
+}
+
 fn bench_collective_read(report: &mut JsonReport, budget: Duration) {
     // End-to-end read path on 64 ranks: write once, then time
     // run_collective_read for both algorithms at n total requests.
@@ -317,6 +396,7 @@ fn main() {
     bench_cost_phase(&mut report, budget);
     bench_reqcalc(&mut report, budget);
     bench_read_view(&mut report, budget);
+    bench_collective_write(&mut report, budget);
     bench_collective_read(&mut report, budget);
     report.write("BENCH_hotpath.json").expect("write BENCH_hotpath.json");
     println!("\nwrote BENCH_hotpath.json");

@@ -5,7 +5,7 @@ pub mod kv;
 
 use crate::cluster::Topology;
 use crate::coordinator::breakdown::CpuModel;
-use crate::coordinator::collective::Algorithm;
+use crate::coordinator::collective::{Algorithm, DirectionSpec};
 use crate::coordinator::placement::GlobalPlacement;
 use crate::error::{Error, Result};
 use crate::lustre::{IoModel, LustreConfig};
@@ -28,6 +28,9 @@ pub struct RunConfig {
     pub scale: u64,
     /// Collective algorithm.
     pub algorithm: Algorithm,
+    /// Collective direction(s) the drivers run: write, read, or both
+    /// (read runs pre-populate the file and verify the gathered bytes).
+    pub direction: DirectionSpec,
     /// Aggregator hot-path engine.
     pub engine: EngineKind,
     /// Global-aggregator placement policy.
@@ -54,6 +57,7 @@ impl Default for RunConfig {
             workload: WorkloadKind::E3smG,
             scale: 4096,
             algorithm: Algorithm::TwoPhase,
+            direction: DirectionSpec::Write,
             engine: EngineKind::Native,
             placement: GlobalPlacement::Spread,
             lustre: LustreConfig::default(),
@@ -95,6 +99,7 @@ impl RunConfig {
             "workload" => self.workload = value.parse()?,
             "scale" => self.scale = parse_u64(value)?,
             "algorithm" | "algo" => self.algorithm = value.parse()?,
+            "direction" | "dir" => self.direction = value.parse()?,
             "engine" => self.engine = value.parse()?,
             "placement" => {
                 self.placement = match value {
@@ -162,6 +167,7 @@ mod tests {
             ("nodes".into(), "8".into()),
             ("workload".into(), "btio".into()),
             ("algorithm".into(), "tam:128".into()),
+            ("direction".into(), "both".into()),
             ("send_mode".into(), "isend".into()),
             ("net.alpha_inter".into(), "5e-6".into()),
             ("verify".into(), "true".into()),
@@ -170,9 +176,21 @@ mod tests {
         assert_eq!(c.nodes, 8);
         assert_eq!(c.workload, WorkloadKind::Btio);
         assert!(matches!(c.algorithm, Algorithm::Tam(t) if t.total_local_aggregators == 128));
+        assert_eq!(c.direction, DirectionSpec::Both);
         assert_eq!(c.net.send_mode, SendMode::Isend);
         assert_eq!(c.net.alpha_inter, 5e-6);
         assert!(c.verify);
+    }
+
+    #[test]
+    fn direction_defaults_to_write_and_rejects_garbage() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.direction, DirectionSpec::Write);
+        let kv = KvMap::from_pairs(vec![("direction".into(), "read".into())]);
+        c.apply(&kv).unwrap();
+        assert_eq!(c.direction, DirectionSpec::Read);
+        let bad = KvMap::from_pairs(vec![("direction".into(), "sideways".into())]);
+        assert!(c.apply(&bad).is_err());
     }
 
     #[test]

@@ -1,28 +1,118 @@
-//! Public collective-I/O entry points: algorithm dispatch, write + read.
+//! Public collective-I/O entry points: algorithm dispatch and the
+//! direction-generic round-exchange engine.
 //!
-//! The read path performs the write path in reverse (§IV: "the collective
-//! read operation performs simply in reverse order"): global aggregators
-//! read their round domains and scatter pieces back to the requesters
-//! (directly for two-phase; via the local aggregators for TAM).  Like the
-//! write exchange, the read is round-structured and arena-backed: each
-//! aggregator owns a [`ReadScratch`] whose staging and payload buffers
-//! keep their capacity across rounds, the peer-view merge runs through
-//! [`crate::runtime::engine::SortEngine::merge_sorted`], and the file is
-//! read with one vectored [`LustreFile::read_view`] call per aggregator
-//! per round (DESIGN.md §Read path).
+//! Reads and writes share one two-phase skeleton (§IV; "the collective
+//! read operation performs simply in reverse order"): classify requester
+//! views against the file domains (`calc_my_req`), exchange metadata
+//! once, then run round-sliced peer exchanges in which each global
+//! aggregator merges the peer views addressed to it through the engine
+//! and performs one vectored storage call per round.  [`run_exchange`] is
+//! that skeleton, written once; the [`Direction`] axis — bound by
+//! [`ExchangeIo`] — specializes only the genuinely divergent steps:
+//! which way the payload messages point, payload scatter
+//! ([`crate::coordinator::merge::RoundScratch::merge_scatter`]) vs reply
+//! gather ([`gather_from_buf`]), `LustreFile::write_view` vs
+//! `read_view`, and where the I/O-phase statistics accumulate
+//! (DESIGN.md §Direction-generic exchange).
+//!
+//! Both TwoPhase and TAM drive the same loop: TAM stacks its intra-node
+//! layer on top and hands the local aggregators to [`run_exchange`] as
+//! the requester set, in either direction.
 
 use crate::coordinator::breakdown::{Breakdown, Counters};
 use crate::coordinator::filedomain::FileDomains;
-use crate::coordinator::merge::{gather_from_buf, ReadScratch, ReqBatch};
+use crate::coordinator::merge::{gather_from_buf, ReqBatch, RoundScratch};
 use crate::coordinator::placement::select_global_aggregators;
 use crate::coordinator::reqcalc::{calc_my_req, metadata_bytes, MyReqs};
 use crate::coordinator::tam::{intra_node_read_views, tam_write, TamConfig};
 use crate::coordinator::twophase::{two_phase_write, CollectiveCtx, ExchangeOutcome};
 use crate::error::Result;
-use crate::lustre::{LustreFile, OstStats};
+use crate::lustre::{LustreConfig, LustreFile, OstStats};
 use crate::mpisim::FlatView;
 use crate::netmodel::phase::{cost_phase, Message, PendingQueue};
 use crate::util::par_map;
+
+/// Direction axis of the collective pipeline: one round-exchange engine
+/// ([`run_exchange`]) serves both directions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Requesters push payloads to the aggregators, which persist them.
+    Write,
+    /// Aggregators read the file and reply with each requester's bytes.
+    Read,
+}
+
+impl std::fmt::Display for Direction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Direction::Write => write!(f, "write"),
+            Direction::Read => write!(f, "read"),
+        }
+    }
+}
+
+impl std::str::FromStr for Direction {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "write" | "w" => Ok(Direction::Write),
+            "read" | "r" => Ok(Direction::Read),
+            other => Err(crate::Error::config(format!(
+                "unknown direction '{other}' (expected write|read)"
+            ))),
+        }
+    }
+}
+
+/// Driver-level direction selector (`RunConfig::direction`, the CLI's
+/// `--direction` flag): one direction or both, write first.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DirectionSpec {
+    /// Write collectives only (the pre-direction-axis behaviour).
+    #[default]
+    Write,
+    /// Read collectives only (the driver pre-populates the file).
+    Read,
+    /// The write panel first, then the read panel.
+    Both,
+}
+
+impl DirectionSpec {
+    /// The directions a run covers, in execution order.
+    pub fn runs(self) -> &'static [Direction] {
+        match self {
+            DirectionSpec::Write => &[Direction::Write],
+            DirectionSpec::Read => &[Direction::Read],
+            DirectionSpec::Both => &[Direction::Write, Direction::Read],
+        }
+    }
+}
+
+impl std::fmt::Display for DirectionSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DirectionSpec::Write => write!(f, "write"),
+            DirectionSpec::Read => write!(f, "read"),
+            DirectionSpec::Both => write!(f, "both"),
+        }
+    }
+}
+
+impl std::str::FromStr for DirectionSpec {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "write" | "w" => Ok(DirectionSpec::Write),
+            "read" | "r" => Ok(DirectionSpec::Read),
+            "both" | "rw" | "wr" => Ok(DirectionSpec::Both),
+            other => Err(crate::Error::config(format!(
+                "unknown direction '{other}' (expected write|read|both)"
+            ))),
+        }
+    }
+}
 
 /// Collective-I/O algorithm selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -104,7 +194,7 @@ pub fn run_collective_read(
     let posted: u64 = views.iter().map(|(_, v)| v.len() as u64).sum();
     match algo {
         Algorithm::TwoPhase => {
-            let (filled, out) = read_exchange(ctx, views, file)?;
+            let (filled, out) = exchange_read(ctx, views, file)?;
             let mut counters = out.counters;
             counters.reqs_posted = posted;
             Ok((
@@ -115,7 +205,7 @@ pub fn run_collective_read(
         Algorithm::Tam(tam) => {
             let intra = intra_node_read_views(ctx, &tam, &views)?;
             let assignment = intra.assignment;
-            let (agg_filled, out) = read_exchange(ctx, intra.agg_views, file)?;
+            let (agg_filled, out) = exchange_read(ctx, intra.agg_views, file)?;
             let mut bd = out.breakdown;
             let mut counters = out.counters;
             bd.intra_sort = intra.sort;
@@ -162,80 +252,100 @@ pub fn run_collective_read(
     }
 }
 
-/// Inter-node stage of the collective read — the write exchange in
-/// reverse, round-structured and arena-backed:
+/// Per-direction storage binding of one exchange: writes mutate the file,
+/// reads share it (per-OST read statistics accumulate in the scratch
+/// slots instead, since the file is immutable on reads).
+pub enum ExchangeIo<'f> {
+    /// Write direction: aggregators persist merged batches.
+    Write(&'f mut LustreFile),
+    /// Read direction: aggregators fill their buffers from the file.
+    Read(&'f LustreFile),
+}
+
+impl ExchangeIo<'_> {
+    /// The direction this binding drives.
+    pub fn direction(&self) -> Direction {
+        match self {
+            ExchangeIo::Write(_) => Direction::Write,
+            ExchangeIo::Read(_) => Direction::Read,
+        }
+    }
+
+    fn file_config(&self) -> &LustreConfig {
+        match self {
+            ExchangeIo::Write(f) => f.config(),
+            ExchangeIo::Read(f) => f.config(),
+        }
+    }
+}
+
+/// The direction-generic inter-node exchange + I/O phase — the single
+/// round loop shared by collective writes and reads, for both TwoPhase
+/// (every rank is a requester) and TAM (the local aggregators are):
 ///
 /// * requesters classify their views against the file domains
-///   (`calc_my_req`, metadata only — no payload travels on the request
-///   side of a read) and send per-aggregator metadata once;
-/// * per round, each global aggregator merges the peer views addressed to
-///   it through the engine, reads the merged segments from `file` in one
-///   vectored [`LustreFile::read_view`] call into its reusable
-///   [`ReadScratch`] buffer, and replies with each peer's bytes
-///   ([`gather_from_buf`]);
-/// * requesters append replies directly into their output payloads: a
-///   sorted view's pieces carry nondecreasing `(round, aggregator)` keys,
-///   so concatenation in drain order reproduces view order with no
-///   reorder pass (self-overlapping views go through their disjoint
-///   union first — see the `prepared` step).
+///   (`calc_my_req`; payload travels with the pieces only on writes) and
+///   send per-aggregator metadata once, covering all rounds;
+/// * per round, requesters and aggregators exchange — batches move
+///   requester → aggregator on writes, replies move aggregator →
+///   requester on reads — costed through the same [`PendingQueue`]
+///   model; each global aggregator merges the peer views addressed to it
+///   through the engine into its reusable [`RoundScratch`] arena and
+///   performs one vectored storage call ([`LustreFile::write_view`] /
+///   [`LustreFile::read_view`]);
+/// * on reads, requesters append replies directly into their output
+///   payloads: a sorted view's pieces carry nondecreasing
+///   `(round, aggregator)` keys, so concatenation in drain order
+///   reproduces view order with no reorder pass (self-overlapping read
+///   views go through [`exchange_read`]'s disjoint-union step first).
 ///
-/// Returns per-requester `(rank, view, payload)` in input order, plus the
-/// outcome.  Engine and storage failures propagate as `Err` out of the
-/// parallel per-aggregator maps instead of aborting a worker thread.
-fn read_exchange(
+/// Returns per-requester `(rank, view, payload)` in input order (payloads
+/// empty on writes), plus the outcome.  Engine and storage failures
+/// propagate as `Err` out of the parallel per-aggregator maps instead of
+/// aborting a worker thread.
+pub fn run_exchange(
     ctx: &CollectiveCtx,
-    requesters: Vec<(usize, FlatView)>,
-    file: &LustreFile,
+    requesters: Vec<(usize, ReqBatch)>,
+    mut io: ExchangeIo<'_>,
 ) -> Result<(Vec<(usize, FlatView, Vec<u8>)>, ExchangeOutcome)> {
+    let direction = io.direction();
     let mut bd = Breakdown::default();
     let mut counters = Counters::default();
 
-    // Aggregate region + domains, as in the write path.
-    let lo = requesters.iter().filter_map(|(_, v)| v.min_offset()).min().unwrap_or(0);
-    let hi = requesters.iter().filter_map(|(_, v)| v.max_end()).max().unwrap_or(0);
+    // Aggregate access region across requesters.
+    let lo = requesters
+        .iter()
+        .filter_map(|(_, b)| b.view.min_offset())
+        .min()
+        .unwrap_or(0);
+    let hi = requesters
+        .iter()
+        .filter_map(|(_, b)| b.view.max_end())
+        .max()
+        .unwrap_or(0);
     let n_agg = ctx.n_global_agg.min(ctx.topo.nprocs()).max(1);
-    let domains = FileDomains::new(*file.config(), lo, hi, n_agg);
+    let domains = FileDomains::new(*io.file_config(), lo, hi, n_agg);
     let agg_ranks = select_global_aggregators(ctx.topo, n_agg, ctx.placement);
 
-    counters.reqs_after_intra = requesters.iter().map(|(_, v)| v.len() as u64).sum();
-    counters.bytes = requesters.iter().map(|(_, v)| v.total_bytes()).sum();
+    counters.reqs_after_intra = requesters.iter().map(|(_, b)| b.view.len() as u64).sum();
+    counters.bytes = requesters.iter().map(|(_, b)| b.view.total_bytes()).sum();
 
-    // Self-overlapping requester views (legal for reads — MPI only
-    // forbids overlapping filetypes for writes; a TAM aggregator view can
-    // also overlap when two members read the same region) are exchanged
-    // as their disjoint union: classification order and reply-assembly
-    // order agree only for non-overlapping views.  The original view's
-    // bytes are gathered back out of the union payload at the end; the
-    // common disjoint case pays nothing.
-    let prepared: Vec<(usize, FlatView, Option<FlatView>)> = requesters
-        .into_iter()
-        .map(|(rank, v)| {
-            if v.has_overlap() {
-                let union = v.disjoint_union();
-                (rank, union, Some(v))
-            } else {
-                (rank, v, None)
-            }
-        })
-        .collect();
-
-    // ---- Calc_my_req on the requester views, concurrent across
-    // requesters → simulated time is the max.
-    let mut my_reqs: Vec<(usize, FlatView, Option<FlatView>, MyReqs)> =
-        par_map(prepared, |(rank, view, original)| {
-            let batch = ReqBatch::new(view, Vec::new());
-            let mr = calc_my_req(&domains, &batch);
-            (rank, batch.view, original, mr)
-        });
+    // ---- ADIOI_LUSTRE_Calc_my_req: classify every requester's view.
+    // Runs concurrently on all requesters → simulated time is the max.
+    let mut my_reqs: Vec<(usize, FlatView, MyReqs)> = par_map(requesters, |(rank, batch)| {
+        let mr = calc_my_req(&domains, &batch);
+        (rank, batch.view, mr)
+    });
     bd.calc_my_req = my_reqs
         .iter()
-        .map(|(_, _, _, mr)| ctx.cpu.calc_req_time(mr.pieces))
+        .map(|(_, _, mr)| ctx.cpu.calc_req_time(mr.pieces))
         .fold(0.0, f64::max);
 
-    // ---- Metadata to the aggregators (who needs what), once, covering
-    // all rounds.
+    // ---- ADIOI_Calc_others_req: metadata to the aggregators (who needs
+    // what), once, covering all rounds.  Per-agg totals come straight off
+    // the dense destination lists.
     let mut meta_msgs: Vec<Message> = Vec::new();
-    for (rank, _, _, mr) in &my_reqs {
+    for (rank, _, mr) in &my_reqs {
         for (agg, n) in mr.reqs_per_agg() {
             meta_msgs.push(Message::new(*rank, agg_ranks[agg], metadata_bytes(n)));
         }
@@ -248,97 +358,195 @@ fn read_exchange(
     let n_rounds = domains.n_rounds();
     counters.rounds = n_rounds;
 
-    // ---- Rounds: aggregator merge + vectored read + reply assembly.
-    let mut payloads: Vec<Vec<u8>> =
-        my_reqs.iter().map(|(_, v, _, _)| vec![0u8; v.total_bytes() as usize]).collect();
-    let mut cursors = vec![0usize; my_reqs.len()];
+    // ---- Rounds: peer exchange, aggregator merge, vectored storage op.
+    // Reply buffers exist only on the read side (writes return no bytes).
+    let mut payloads: Vec<Vec<u8>> = match direction {
+        Direction::Read => my_reqs
+            .iter()
+            .map(|(_, v, _)| vec![0u8; v.total_bytes() as usize])
+            .collect(),
+        Direction::Write => Vec::new(),
+    };
+    let mut cursors: Vec<usize> = match direction {
+        Direction::Read => vec![0; my_reqs.len()],
+        Direction::Write => Vec::new(),
+    };
     let mut pending = PendingQueue::new();
-    let mut scratch: Vec<ReadScratch> = (0..n_agg).map(|_| ReadScratch::default()).collect();
-    for slot in scratch.iter_mut() {
-        slot.stats.resize(file.config().stripe_count, OstStats::default());
+    let mut scratch: Vec<RoundScratch> = (0..n_agg).map(|_| RoundScratch::default()).collect();
+    if direction == Direction::Read {
+        for slot in scratch.iter_mut() {
+            slot.stats.resize(io.file_config().stripe_count, OstStats::default());
+        }
     }
-    let mut reply_msgs: Vec<Message> = Vec::new();
+    let mut data_msgs: Vec<Message> = Vec::new();
     for round in 0..n_rounds {
-        reply_msgs.clear();
+        // Stage this round's batches per aggregator.  Batches are MOVED
+        // out of the requester state (no payload clone on the hot path);
+        // on reads the batch is metadata only and the matching bytes
+        // travel back as the reply.
+        data_msgs.clear();
         for slot in scratch.iter_mut() {
             slot.reset_round();
         }
-        for (i, (rank, _, _, mr)) in my_reqs.iter_mut().enumerate() {
+        for (i, (rank, _, mr)) in my_reqs.iter_mut().enumerate() {
             for (agg, b) in mr.take_round(round) {
-                // The reply travels aggregator → requester; the request
-                // metadata already went in the metadata phase.
-                reply_msgs.push(Message::new(agg_ranks[agg], *rank, b.view.total_bytes()));
-                scratch[agg].batches.push((i, b.view));
+                let bytes = b.view.total_bytes();
+                data_msgs.push(match direction {
+                    Direction::Write => Message::new(*rank, agg_ranks[agg], bytes),
+                    Direction::Read => Message::new(agg_ranks[agg], *rank, bytes),
+                });
+                scratch[agg].stage(i, b);
             }
         }
-        let comm = pending.cost_round(ctx.net, ctx.topo, &reply_msgs);
+        let comm = pending.cost_round(ctx.net, ctx.topo, &data_msgs);
         bd.inter_comm += comm.time;
-        counters.msgs_inter += reply_msgs.len();
+        counters.msgs_inter += data_msgs.len();
         counters.max_in_degree = counters.max_in_degree.max(comm.max_in_degree);
 
-        // Aggregator-side merge + vectored read, concurrent across
-        // aggregators (reads take `&file`).
-        let merged: Vec<Result<ReadScratch>> =
-            par_map(std::mem::take(&mut scratch), |mut slot| {
-                slot.merge_with(ctx.engine)?;
-                if !slot.merged.is_empty() {
-                    file.read_view(&slot.merged, &mut slot.payload, &mut slot.stats)?;
-                }
+        // Aggregator-side merge (+ payload scatter on writes, vectored
+        // file read on reads), concurrent across aggregators → max for
+        // time, real bytes either way.  The engine streams the
+        // already-sorted peer views into the reused merged arena, and an
+        // engine or storage failure propagates as `Err` instead of
+        // aborting a worker thread.
+        let merged: Vec<Result<RoundScratch>> = match &io {
+            ExchangeIo::Write(_) => par_map(std::mem::take(&mut scratch), |mut slot| {
+                slot.merge_scatter(ctx.engine)?;
                 Ok(slot)
-            });
+            }),
+            ExchangeIo::Read(f) => {
+                let file = *f;
+                par_map(std::mem::take(&mut scratch), |mut slot| {
+                    slot.merge_meta(ctx.engine)?;
+                    if !slot.merged.is_empty() {
+                        file.read_view(&slot.merged, &mut slot.payload, &mut slot.stats)?;
+                    }
+                    Ok(slot)
+                })
+            }
+        };
         scratch = merged.into_iter().collect::<Result<Vec<_>>>()?;
 
         let mut sort_t: f64 = 0.0;
         let mut dt_t: f64 = 0.0;
-        for slot in &scratch {
+        if let ExchangeIo::Write(file) = &mut io {
+            file.begin_round();
+        }
+        for (agg, slot) in scratch.iter().enumerate() {
             if slot.k == 0 {
                 continue;
             }
             sort_t = sort_t.max(ctx.cpu.merge_time(slot.n_items, slot.k));
             dt_t = dt_t.max(ctx.cpu.datatype_time(slot.n_items, slot.k));
             counters.reqs_at_io += slot.merged.len() as u64;
-            // Requester-side assembly: ascending aggregator within the
-            // round, ascending rounds overall ⇒ straight concatenation.
-            for (i, view) in &slot.batches {
-                let n = view.total_bytes() as usize;
-                let dst = &mut payloads[*i][cursors[*i]..cursors[*i] + n];
-                gather_from_buf(&slot.merged, &slot.payload, view, dst);
-                cursors[*i] += n;
+            match &mut io {
+                ExchangeIo::Write(file) => {
+                    // The merged batch lies inside this aggregator's round
+                    // domain by construction; land the whole coalesced
+                    // batch in one vectored call.
+                    file.write_view(agg_ranks[agg], &slot.merged, &slot.payload)?;
+                }
+                ExchangeIo::Read(_) => {
+                    // Requester-side assembly: ascending aggregator within
+                    // the round, ascending rounds overall ⇒ straight
+                    // concatenation.
+                    for (i, b) in slot.owners.iter().zip(&slot.batches) {
+                        let n = b.view.total_bytes() as usize;
+                        let dst = &mut payloads[*i][cursors[*i]..cursors[*i] + n];
+                        gather_from_buf(&slot.merged, &slot.payload, &b.view, dst);
+                        cursors[*i] += n;
+                    }
+                }
             }
         }
         bd.inter_sort += sort_t;
         bd.inter_datatype += dt_t;
     }
-    debug_assert!(
-        cursors.iter().zip(&payloads).all(|(c, p)| *c == p.len()),
-        "reply assembly must fill every requester payload exactly"
-    );
 
-    // ---- I/O phase time from the accumulated per-OST read stats.
-    let mut stats = vec![OstStats::default(); file.config().stripe_count];
-    for slot in &scratch {
-        for (acc, s) in stats.iter_mut().zip(&slot.stats) {
-            acc.bytes += s.bytes;
-            acc.extents += s.extents;
+    // ---- I/O phase time: writes account in the file's OST stats, reads
+    // in the per-aggregator scratch stats accumulated across rounds.
+    match &io {
+        ExchangeIo::Write(file) => {
+            bd.io_phase = ctx.io.phase_time(file.stats());
+            counters.lock_conflicts = file.total_lock_conflicts();
+        }
+        ExchangeIo::Read(_) => {
+            debug_assert!(
+                cursors.iter().zip(&payloads).all(|(c, p)| *c == p.len()),
+                "reply assembly must fill every requester payload exactly"
+            );
+            let mut stats = vec![OstStats::default(); io.file_config().stripe_count];
+            for slot in &scratch {
+                for (acc, s) in stats.iter_mut().zip(&slot.stats) {
+                    acc.bytes += s.bytes;
+                    acc.extents += s.extents;
+                }
+            }
+            bd.io_phase = ctx.io.phase_time(&stats);
         }
     }
-    bd.io_phase = ctx.io.phase_time(&stats);
 
-    let filled = my_reqs
+    let filled: Vec<(usize, FlatView, Vec<u8>)> = match direction {
+        Direction::Write => my_reqs
+            .into_iter()
+            .map(|(rank, view, _)| (rank, view, Vec::new()))
+            .collect(),
+        Direction::Read => my_reqs
+            .into_iter()
+            .zip(payloads)
+            .map(|((rank, view, _), payload)| (rank, view, payload))
+            .collect(),
+    };
+    Ok((filled, ExchangeOutcome { breakdown: bd, counters }))
+}
+
+/// Read-side driver of [`run_exchange`]: self-overlapping requester views
+/// (legal for reads — MPI only forbids overlapping filetypes for writes;
+/// a TAM aggregator view can also overlap when two members read the same
+/// region) are exchanged as their disjoint union, because classification
+/// order and reply-assembly order agree only for non-overlapping views.
+/// The original view's bytes are gathered back out of the union payload
+/// at the end; the common disjoint case pays nothing.
+fn exchange_read(
+    ctx: &CollectiveCtx,
+    requesters: Vec<(usize, FlatView)>,
+    file: &LustreFile,
+) -> Result<(Vec<(usize, FlatView, Vec<u8>)>, ExchangeOutcome)> {
+    // Volume counters reflect the views as posted, not their unions.
+    let posted_reqs: u64 = requesters.iter().map(|(_, v)| v.len() as u64).sum();
+    let posted_bytes: u64 = requesters.iter().map(|(_, v)| v.total_bytes()).sum();
+    let mut originals: Vec<Option<FlatView>> = Vec::with_capacity(requesters.len());
+    let prepared: Vec<(usize, ReqBatch)> = requesters
         .into_iter()
-        .zip(payloads)
-        .map(|((rank, view, original, _), payload)| match original {
+        .map(|(rank, v)| {
+            if v.has_overlap() {
+                let union = v.disjoint_union();
+                originals.push(Some(v));
+                (rank, ReqBatch::new(union, Vec::new()))
+            } else {
+                originals.push(None);
+                (rank, ReqBatch::new(v, Vec::new()))
+            }
+        })
+        .collect();
+    let (filled, mut out) = run_exchange(ctx, prepared, ExchangeIo::Read(file))?;
+    out.counters.reqs_after_intra = posted_reqs;
+    out.counters.bytes = posted_bytes;
+    let filled = filled
+        .into_iter()
+        .zip(originals)
+        .map(|((rank, view, payload), original)| match original {
             None => (rank, view, payload),
             Some(orig) => {
                 // Expand the union payload back to the overlapping
                 // original view (duplicated bytes are copied per request).
-                let mut out = vec![0u8; orig.total_bytes() as usize];
-                gather_from_buf(&view, &payload, &orig, &mut out);
-                (rank, orig, out)
+                let mut expanded = vec![0u8; orig.total_bytes() as usize];
+                gather_from_buf(&view, &payload, &orig, &mut expanded);
+                (rank, orig, expanded)
             }
         })
         .collect();
-    Ok((filled, ExchangeOutcome { breakdown: bd, counters }))
+    Ok((filled, out))
 }
 
 #[cfg(test)]
@@ -383,6 +591,23 @@ mod tests {
             _ => panic!(),
         }
         assert!("bogus".parse::<Algorithm>().is_err());
+    }
+
+    #[test]
+    fn direction_parses_and_expands() {
+        assert_eq!("write".parse::<Direction>().unwrap(), Direction::Write);
+        assert_eq!("read".parse::<Direction>().unwrap(), Direction::Read);
+        assert!("sideways".parse::<Direction>().is_err());
+        assert_eq!("write".parse::<DirectionSpec>().unwrap(), DirectionSpec::Write);
+        assert_eq!("read".parse::<DirectionSpec>().unwrap(), DirectionSpec::Read);
+        assert_eq!("both".parse::<DirectionSpec>().unwrap(), DirectionSpec::Both);
+        assert!("neither".parse::<DirectionSpec>().is_err());
+        assert_eq!(DirectionSpec::Write.runs(), &[Direction::Write]);
+        assert_eq!(DirectionSpec::Read.runs(), &[Direction::Read]);
+        assert_eq!(DirectionSpec::Both.runs(), &[Direction::Write, Direction::Read]);
+        assert_eq!(DirectionSpec::default(), DirectionSpec::Write);
+        let shown = format!("{} {} {}", Direction::Write, Direction::Read, DirectionSpec::Both);
+        assert_eq!(shown, "write read both");
     }
 
     #[test]
@@ -437,7 +662,7 @@ mod tests {
 
     #[test]
     fn read_accounts_rounds_and_computation() {
-        // Multi-round read: the round structure and the new computation
+        // Multi-round read: the round structure and the computation
         // components (calc_my_req, inter_sort, inter_datatype) must show
         // up in the outcome, and reqs_at_io must reflect coalescing.
         let (topo, net, cpu, io, eng) = fixture();
@@ -567,6 +792,40 @@ mod tests {
             assert_eq!(got[0].1, vec![7u8; 48], "{}", algo.name());
             assert!(got[1].1.is_empty());
             assert!(got[2].1.is_empty());
+        }
+    }
+
+    #[test]
+    fn one_exchange_loop_drives_both_directions_identically() {
+        // The same requester set driven through run_exchange in both
+        // directions: the round structure, metadata phase and coalescing
+        // counters must agree exactly (the loop is shared), and the read
+        // must return the bytes the write persisted.
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let mut file = LustreFile::new(LustreConfig::new(64, 4));
+        let ranks = make_ranks(&topo);
+        let (_, wrote) =
+            run_exchange(&ctx, ranks.clone(), ExchangeIo::Write(&mut file)).unwrap();
+        let readers: Vec<(usize, ReqBatch)> = ranks
+            .iter()
+            .map(|(r, b)| (*r, ReqBatch::new(b.view.clone(), Vec::new())))
+            .collect();
+        let (filled, read) = run_exchange(&ctx, readers, ExchangeIo::Read(&file)).unwrap();
+        assert_eq!(wrote.counters.rounds, read.counters.rounds);
+        assert_eq!(wrote.counters.msgs_inter, read.counters.msgs_inter);
+        assert_eq!(wrote.counters.reqs_at_io, read.counters.reqs_at_io);
+        assert_eq!(wrote.counters.bytes, read.counters.bytes);
+        for ((rank, _, payload), (_, want)) in filled.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "rank {rank}");
         }
     }
 }

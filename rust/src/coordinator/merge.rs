@@ -9,14 +9,15 @@
 //! ([`crate::runtime::engine`]) interchangeably.
 //!
 //! The streaming pipeline (DESIGN.md §Hot path) is:
-//! [`crate::runtime::engine::SortEngine::merge_sorted`] → [`merge_views`]
-//! (`O(n log k)`, gallop-accelerated on runs) → [`scatter_into_buf`]
-//! (linear two-pointer payload scatter into a reusable buffer).
-//! [`AggScratch`] owns the per-aggregator buffers that survive across
-//! exchange rounds so the steady state allocates nothing.  The read path
-//! runs the same pipeline in reverse: [`ReadScratch`] stages the peer
-//! views, the engine merges them, storage fills the buffer, and
-//! [`gather_from_buf`] copies each peer's bytes back out.
+//! [`crate::runtime::engine::SortEngine::merge_sorted_into`] →
+//! [`merge_views_into`] (`O(n log k)`, gallop-accelerated on runs, merged
+//! view built in a reused arena) → [`scatter_into_buf`] (linear
+//! two-pointer payload scatter into a reusable buffer).  [`RoundScratch`]
+//! owns the per-aggregator buffers that survive across exchange rounds —
+//! for **both directions** of the collective — so the steady state
+//! allocates nothing: writes merge + scatter peer payloads and hand the
+//! buffer to storage, reads merge peer metadata, let storage fill the
+//! buffer, and [`gather_from_buf`] copies each peer's bytes back out.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -58,6 +59,17 @@ fn absorb(last: &mut Option<(u64, u64)>, out: &mut FlatView, off: u64, len: u64)
 
 /// K-way heap merge of sorted views into one sorted, coalesced view.
 ///
+/// Allocating convenience wrapper over [`merge_views_into`].
+pub fn merge_views(views: &[&FlatView]) -> FlatView {
+    let mut out = FlatView::empty();
+    merge_views_into(views, &mut out);
+    out
+}
+
+/// K-way heap merge of sorted views into a caller-owned view (cleared
+/// first; capacity reused across calls — the merged-view arena of the
+/// exchange round loops).
+///
 /// Time `O(n log k)` via a binary heap keyed on `(offset, length, stream)`
 /// — the deterministic tie-break mirrors the L1 bitonic kernel's
 /// lexicographic ordering so both engines produce identical output.
@@ -68,17 +80,17 @@ fn absorb(last: &mut Option<(u64, u64)>, out: &mut FlatView, off: u64, len: u64)
 /// Real file views interleave in block-sized runs (§V-C), so this
 /// collapses most heap traffic while popping in the exact same order as
 /// the plain heap algorithm.
-pub fn merge_views(views: &[&FlatView]) -> FlatView {
+pub fn merge_views_into(views: &[&FlatView], out: &mut FlatView) {
+    out.clear();
     let mut heap: BinaryHeap<Reverse<(u64, u64, usize, usize)>> = views
         .iter()
         .enumerate()
         .filter(|(_, v)| !v.is_empty())
         .map(|(s, v)| Reverse((v.offsets()[0], v.lengths()[0], s, 0usize)))
         .collect();
-    let mut out = FlatView::empty();
     let mut last: Option<(u64, u64)> = None;
     while let Some(Reverse((off, len, s, i))) = heap.pop() {
-        absorb(&mut last, &mut out, off, len);
+        absorb(&mut last, out, off, len);
         let v = views[s];
         let mut i = i;
         loop {
@@ -94,7 +106,7 @@ pub fn merge_views(views: &[&FlatView]) -> FlatView {
                 // Heap empty, or this stream still holds the minimum:
                 // consume directly (identical pop order to the pure heap).
                 _ => {
-                    absorb(&mut last, &mut out, next.0, next.1);
+                    absorb(&mut last, out, next.0, next.1);
                     i += 1;
                 }
             }
@@ -103,7 +115,6 @@ pub fn merge_views(views: &[&FlatView]) -> FlatView {
     if let Some((lo, ll)) = last {
         out.push(lo, ll);
     }
-    out
 }
 
 /// Merge request batches: metadata via [`merge_views`], then payload
@@ -253,102 +264,92 @@ pub fn scatter_into_binary_search(merged: &FlatView, batches: &[ReqBatch]) -> (V
     (payload, moved)
 }
 
-/// Reusable per-aggregator scratch for the exchange round loop: the batch
-/// staging `Vec` and the contiguous payload buffer — the two largest
-/// per-round allocations of the old path — survive across rounds with
-/// their capacity intact (§Perf tentpole; ownership contract in DESIGN.md
-/// §Hot path).  The merged `FlatView` itself is still produced fresh by
-/// the engine each round.
+/// Reusable per-aggregator scratch for one slot of the direction-generic
+/// exchange round loop (`coordinator/collective.rs::run_exchange`): the
+/// batch staging `Vec`s, the merged view and the contiguous payload
+/// buffer — the largest per-round allocations of the pre-arena paths —
+/// survive across rounds with their capacity intact (ownership contract
+/// in DESIGN.md §Direction-generic exchange).
+///
+/// The two directions specialize only what the buffers *mean*:
+///
+/// * **write** — staged batches carry peer payloads;
+///   [`Self::merge_scatter`] merges the views through the engine and
+///   scatters the payloads into `payload`, which storage then persists
+///   ([`crate::lustre::LustreFile::write_view`]);
+/// * **read** — staged batches are metadata only (a read carries no
+///   payload on the request side); [`Self::merge_meta`] merges the views,
+///   storage fills `payload` ([`crate::lustre::LustreFile::read_view`])
+///   and the requester-side [`gather_from_buf`] copies each peer's bytes
+///   back out.  `stats` (per-OST read accounting) keeps its *contents*
+///   across rounds, since the file itself is immutable on reads.
 #[derive(Debug, Default)]
-pub struct AggScratch {
+pub struct RoundScratch {
     /// Batches staged for this aggregator in the current round.
     pub batches: Vec<ReqBatch>,
-    /// Merged, coalesced view (engine output) for the current round.
+    /// Requester index of each staged batch (parallel to `batches`) —
+    /// the read direction's reply-assembly plan.
+    pub owners: Vec<usize>,
+    /// Merged, coalesced view (engine output arena, capacity reused).
     pub merged: FlatView,
-    /// Contiguous payload laid out by `merged` (capacity reused).
+    /// Contiguous bytes laid out by `merged` (capacity reused).
     pub payload: Vec<u8>,
+    /// Per-OST read accounting, accumulated across rounds (read
+    /// direction; empty for writes, which account in the file itself).
+    pub stats: Vec<crate::lustre::OstStats>,
     /// Total input requests staged this round (cost accounting).
     pub n_items: u64,
     /// Number of contributing peer batches this round (cost accounting).
     pub k: usize,
 }
 
-impl AggScratch {
-    /// Reset for a new round, keeping allocated capacity.
-    pub fn reset(&mut self) {
+impl RoundScratch {
+    /// Reset the per-round state, keeping allocated capacity (and the
+    /// cross-round `stats` accumulation of the read direction).
+    pub fn reset_round(&mut self) {
         self.batches.clear();
-        self.merged = FlatView::empty();
+        self.owners.clear();
+        self.merged.clear();
         self.payload.clear();
         self.n_items = 0;
         self.k = 0;
     }
 
-    /// Merge the staged batches through `engine` and scatter their
-    /// payloads into the reusable buffer.  Returns the bytes moved.
-    pub fn merge_with(&mut self, engine: &dyn SortEngine) -> Result<u64> {
+    /// Stage one peer batch for this round on behalf of requester `owner`.
+    pub fn stage(&mut self, owner: usize, batch: ReqBatch) {
+        self.owners.push(owner);
+        self.batches.push(batch);
+    }
+
+    /// Merge the staged views into the `merged` arena; returns whether
+    /// anything was staged.
+    fn merge_into(&mut self, engine: &dyn SortEngine) -> Result<bool> {
         self.k = self.batches.len();
         self.n_items = self.batches.iter().map(|b| b.view.len() as u64).sum();
         if self.batches.is_empty() {
-            self.merged = FlatView::empty();
+            self.merged.clear();
             self.payload.clear();
-            return Ok(0);
+            return Ok(false);
         }
         let views: Vec<&FlatView> = self.batches.iter().map(|b| &b.view).collect();
-        self.merged = engine.merge_sorted(&views)?;
+        engine.merge_sorted_into(&views, &mut self.merged)?;
+        Ok(true)
+    }
+
+    /// Write direction: merge the staged batches through `engine` and
+    /// scatter their payloads into the reusable buffer.  Returns the
+    /// bytes moved.
+    pub fn merge_scatter(&mut self, engine: &dyn SortEngine) -> Result<u64> {
+        if !self.merge_into(engine)? {
+            return Ok(0);
+        }
         Ok(scatter_into_buf(&self.merged, &self.batches, &mut self.payload))
     }
-}
 
-/// Read-side twin of [`AggScratch`]: per-aggregator staging for one round
-/// of the collective-read exchange (DESIGN.md §Read path).
-///
-/// The aggregator merges the peer views addressed to it (metadata only — a
-/// read carries no payload on the request side), reads the merged segments
-/// from storage into the reusable `payload` buffer
-/// ([`crate::lustre::LustreFile::read_view`]), and the requester-side
-/// [`gather_from_buf`] copies each peer's bytes back out.  `batches`,
-/// `payload` and `stats` keep their capacity across rounds; `stats`
-/// additionally keeps its *contents* (per-OST read accounting accumulates
-/// over the whole collective, since the file itself is immutable on
-/// reads).
-#[derive(Debug, Default)]
-pub struct ReadScratch {
-    /// Peer views staged this round: `(requester index, view)`.
-    pub batches: Vec<(usize, FlatView)>,
-    /// Merged, coalesced view (engine output) for the current round.
-    pub merged: FlatView,
-    /// Contiguous bytes of `merged` read from storage (capacity reused).
-    pub payload: Vec<u8>,
-    /// Per-OST read accounting, accumulated across rounds.
-    pub stats: Vec<crate::lustre::OstStats>,
-    /// Total staged requests this round (cost accounting).
-    pub n_items: u64,
-    /// Number of contributing peers this round (cost accounting).
-    pub k: usize,
-}
-
-impl ReadScratch {
-    /// Reset the per-round state, keeping allocated capacity (and the
-    /// cross-round `stats` accumulation).
-    pub fn reset_round(&mut self) {
-        self.batches.clear();
-        self.merged = FlatView::empty();
-        self.payload.clear();
-        self.n_items = 0;
-        self.k = 0;
-    }
-
-    /// Merge the staged peer views through `engine`.
-    pub fn merge_with(&mut self, engine: &dyn SortEngine) -> Result<()> {
-        self.k = self.batches.len();
-        self.n_items = self.batches.iter().map(|(_, v)| v.len() as u64).sum();
-        if self.batches.is_empty() {
-            self.merged = FlatView::empty();
-            self.payload.clear();
-            return Ok(());
-        }
-        let views: Vec<&FlatView> = self.batches.iter().map(|(_, v)| v).collect();
-        self.merged = engine.merge_sorted(&views)?;
+    /// Read direction: merge the staged peer views (metadata only —
+    /// storage fills `payload` afterwards).
+    pub fn merge_meta(&mut self, engine: &dyn SortEngine) -> Result<()> {
+        self.merge_into(engine)?;
         Ok(())
     }
 }
@@ -519,22 +520,30 @@ mod tests {
     }
 
     #[test]
-    fn agg_scratch_merges_and_resets() {
+    fn round_scratch_merges_scatters_and_resets() {
         use crate::runtime::engine::NativeEngine;
-        let mut s = AggScratch::default();
-        s.batches.push(ReqBatch::new(fv(&[(0, 2), (6, 2)]), vec![1, 2, 7, 8]));
-        s.batches.push(ReqBatch::new(fv(&[(2, 2)]), vec![3, 4]));
-        let moved = s.merge_with(&NativeEngine).unwrap();
+        let mut s = RoundScratch::default();
+        s.stage(0, ReqBatch::new(fv(&[(0, 2), (6, 2)]), vec![1, 2, 7, 8]));
+        s.stage(1, ReqBatch::new(fv(&[(2, 2)]), vec![3, 4]));
+        let moved = s.merge_scatter(&NativeEngine).unwrap();
         assert_eq!(moved, 6);
         assert_eq!(s.k, 2);
         assert_eq!(s.n_items, 3);
+        assert_eq!(s.owners, vec![0, 1]);
         assert_eq!(s.merged.iter().collect::<Vec<_>>(), vec![(0, 4), (6, 2)]);
         assert_eq!(s.payload, vec![1, 2, 3, 4, 7, 8]);
-        s.reset();
-        assert!(s.batches.is_empty() && s.merged.is_empty() && s.payload.is_empty());
-        // Empty round: merge_with is a cheap no-op.
-        assert_eq!(s.merge_with(&NativeEngine).unwrap(), 0);
+        s.reset_round();
+        assert!(s.batches.is_empty() && s.owners.is_empty());
+        assert!(s.merged.is_empty() && s.payload.is_empty());
+        // Empty round: merge_scatter is a cheap no-op.
+        assert_eq!(s.merge_scatter(&NativeEngine).unwrap(), 0);
         assert_eq!(s.k, 0);
+        // Re-staged round after reset: the reused arena must not leak
+        // stale segments or payload bytes.
+        s.stage(2, ReqBatch::new(fv(&[(10, 1)]), vec![9]));
+        assert_eq!(s.merge_scatter(&NativeEngine).unwrap(), 1);
+        assert_eq!(s.merged.iter().collect::<Vec<_>>(), vec![(10, 1)]);
+        assert_eq!(s.payload, vec![9]);
     }
 
     #[test]
@@ -604,21 +613,34 @@ mod tests {
     }
 
     #[test]
-    fn read_scratch_merges_and_resets() {
+    fn round_scratch_metadata_only_read_rounds() {
         use crate::runtime::engine::NativeEngine;
-        let mut s = ReadScratch::default();
-        s.batches.push((0, fv(&[(0, 2), (6, 2)])));
-        s.batches.push((1, fv(&[(2, 2)])));
-        s.merge_with(&NativeEngine).unwrap();
+        let mut s = RoundScratch::default();
+        s.stage(0, ReqBatch::new(fv(&[(0, 2), (6, 2)]), Vec::new()));
+        s.stage(1, ReqBatch::new(fv(&[(2, 2)]), Vec::new()));
+        s.merge_meta(&NativeEngine).unwrap();
         assert_eq!(s.k, 2);
         assert_eq!(s.n_items, 3);
         assert_eq!(s.merged.iter().collect::<Vec<_>>(), vec![(0, 4), (6, 2)]);
         s.reset_round();
         assert!(s.batches.is_empty() && s.merged.is_empty() && s.payload.is_empty());
-        // Empty round: merge_with is a cheap no-op.
-        s.merge_with(&NativeEngine).unwrap();
+        // Empty round: merge_meta is a cheap no-op.
+        s.merge_meta(&NativeEngine).unwrap();
         assert_eq!(s.k, 0);
         assert!(s.merged.is_empty());
+    }
+
+    #[test]
+    fn merge_views_into_reuses_arena_without_stale_state() {
+        let a = fv(&[(0, 4), (8, 4)]);
+        let b = fv(&[(4, 4), (100, 2)]);
+        let mut out = fv(&[(500, 7), (600, 1), (700, 1)]);
+        merge_views_into(&[&a, &b], &mut out);
+        assert_eq!(out, merge_views(&[&a, &b]));
+        // Second merge into the same arena, smaller result.
+        let c = fv(&[(3, 1)]);
+        merge_views_into(&[&c], &mut out);
+        assert_eq!(out.iter().collect::<Vec<_>>(), vec![(3, 1)]);
     }
 
     #[test]

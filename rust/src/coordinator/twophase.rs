@@ -8,19 +8,21 @@
 //! is accounted per component exactly as the paper instruments ROMIO:
 //! `calc_my_req`, `calc_others_req`, offset sort, datatype creation,
 //! communication, and the I/O phase.
+//!
+//! The round loop itself lives in
+//! [`crate::coordinator::collective::run_exchange`] — one
+//! direction-generic engine shared with the collective read;
+//! [`write_exchange`] binds it to the write direction.
 
 use crate::cluster::Topology;
 use crate::coordinator::breakdown::{Breakdown, Counters, CpuModel};
-use crate::coordinator::filedomain::FileDomains;
-use crate::coordinator::merge::{AggScratch, ReqBatch};
-use crate::coordinator::placement::{select_global_aggregators, GlobalPlacement};
-use crate::coordinator::reqcalc::{calc_my_req, metadata_bytes, MyReqs};
+use crate::coordinator::collective::{run_exchange, ExchangeIo};
+use crate::coordinator::merge::ReqBatch;
+use crate::coordinator::placement::GlobalPlacement;
 use crate::error::Result;
 use crate::lustre::{IoModel, LustreFile};
-use crate::netmodel::phase::{cost_phase, Message, PendingQueue};
 use crate::netmodel::NetParams;
 use crate::runtime::engine::SortEngine;
-use crate::util::par_map;
 
 /// Shared context for one collective operation.
 pub struct CollectiveCtx<'a> {
@@ -54,125 +56,15 @@ pub struct ExchangeOutcome {
 /// `requesters` are `(rank, batch)` pairs with sorted views; payloads are
 /// written byte-accurately into `file`.  Global aggregators are selected
 /// from the full topology regardless of the requester set (ROMIO selects
-/// at open time).
+/// at open time).  Thin write-direction binding of the shared
+/// [`run_exchange`] round engine.
 pub fn write_exchange(
     ctx: &CollectiveCtx,
     requesters: Vec<(usize, ReqBatch)>,
     file: &mut LustreFile,
 ) -> Result<ExchangeOutcome> {
-    let mut bd = Breakdown::default();
-    let mut counters = Counters::default();
-
-    // Aggregate access region across requesters.
-    let lo = requesters
-        .iter()
-        .filter_map(|(_, b)| b.view.min_offset())
-        .min()
-        .unwrap_or(0);
-    let hi = requesters
-        .iter()
-        .filter_map(|(_, b)| b.view.max_end())
-        .max()
-        .unwrap_or(0);
-    let n_agg = ctx.n_global_agg.min(ctx.topo.nprocs()).max(1);
-    let domains = FileDomains::new(*file.config(), lo, hi, n_agg);
-    let agg_ranks = select_global_aggregators(ctx.topo, n_agg, ctx.placement);
-
-    counters.reqs_after_intra = requesters.iter().map(|(_, b)| b.view.len() as u64).sum();
-    counters.bytes = requesters.iter().map(|(_, b)| b.view.total_bytes()).sum();
-
-    // ---- ADIOI_LUSTRE_Calc_my_req: classify every requester's view.
-    // Runs concurrently on all requesters → simulated time is the max.
-    let my_reqs: Vec<(usize, MyReqs)> = par_map(requesters, |(rank, batch)| {
-        let mr = calc_my_req(&domains, &batch);
-        (rank, mr)
-    });
-    bd.calc_my_req = my_reqs
-        .iter()
-        .map(|(_, mr)| ctx.cpu.calc_req_time(mr.pieces))
-        .fold(0.0, f64::max);
-
-    // ---- ADIOI_Calc_others_req: metadata exchange (offset-length lists
-    // travel to the aggregators once, covering all rounds).  Per-agg
-    // totals come straight off the dense destination lists.
-    let mut meta_msgs: Vec<Message> = Vec::new();
-    for (rank, mr) in &my_reqs {
-        for (agg, n) in mr.reqs_per_agg() {
-            meta_msgs.push(Message::new(*rank, agg_ranks[agg], metadata_bytes(n)));
-        }
-    }
-    let meta_cost = cost_phase(ctx.net, ctx.topo, &meta_msgs);
-    bd.calc_others_req = meta_cost.time;
-    counters.msgs_inter += meta_msgs.len();
-    counters.max_in_degree = counters.max_in_degree.max(meta_cost.max_in_degree);
-
-    let n_rounds = domains.n_rounds();
-    counters.rounds = n_rounds;
-
-    // ---- Rounds: data exchange, aggregator merge, datatype, I/O.
-    let mut pending = PendingQueue::new();
-    let mut my_reqs = my_reqs;
-    // Per-aggregator scratch slots survive the round loop: the batch
-    // staging Vec and the contiguous payload buffer keep their capacity
-    // across rounds, eliminating the old per-round per_agg/payload
-    // allocations (§Perf tentpole).
-    let mut scratch: Vec<AggScratch> = (0..n_agg).map(|_| AggScratch::default()).collect();
-    let mut data_msgs: Vec<Message> = Vec::new();
-    for round in 0..n_rounds {
-        // Collect this round's messages: requester → aggregator batches.
-        // Batches are MOVED out of the requester state (no payload clone
-        // on the hot path — §Perf change 1).
-        data_msgs.clear();
-        for slot in scratch.iter_mut() {
-            slot.reset();
-        }
-        for (rank, mr) in my_reqs.iter_mut() {
-            for (agg, b) in mr.take_round(round) {
-                data_msgs.push(Message::new(*rank, agg_ranks[agg], b.view.total_bytes()));
-                scratch[agg].batches.push(b);
-            }
-        }
-        let comm = pending.cost_round(ctx.net, ctx.topo, &data_msgs);
-        bd.inter_comm += comm.time;
-        counters.msgs_inter += data_msgs.len();
-        counters.max_in_degree = counters.max_in_degree.max(comm.max_in_degree);
-
-        // Aggregator-side merge + datatype + write, concurrent across
-        // aggregators → max for time, real bytes into the file.  The
-        // engine streams the already-sorted peer views (no flatten + full
-        // re-sort), and an engine failure propagates as `Err` instead of
-        // aborting a worker thread.
-        let merged: Vec<Result<AggScratch>> =
-            par_map(std::mem::take(&mut scratch), |mut slot| {
-                slot.merge_with(ctx.engine)?;
-                Ok(slot)
-            });
-        scratch = merged.into_iter().collect::<Result<Vec<_>>>()?;
-
-        let mut sort_t: f64 = 0.0;
-        let mut dt_t: f64 = 0.0;
-        file.begin_round();
-        for (agg, slot) in scratch.iter().enumerate() {
-            if slot.k == 0 {
-                continue;
-            }
-            sort_t = sort_t.max(ctx.cpu.merge_time(slot.n_items, slot.k));
-            dt_t = dt_t.max(ctx.cpu.datatype_time(slot.n_items, slot.k));
-            counters.reqs_at_io += slot.merged.len() as u64;
-            // The merged batch lies inside this aggregator's round domain
-            // by construction; land the whole coalesced batch in one
-            // vectored call.
-            file.write_view(agg_ranks[agg], &slot.merged, &slot.payload)?;
-        }
-        bd.inter_sort += sort_t;
-        bd.inter_datatype += dt_t;
-    }
-
-    // ---- I/O phase time from accumulated OST stats.
-    bd.io_phase = ctx.io.phase_time(file.stats());
-    counters.lock_conflicts = file.total_lock_conflicts();
-
-    Ok(ExchangeOutcome { breakdown: bd, counters })
+    let (_, out) = run_exchange(ctx, requesters, ExchangeIo::Write(file))?;
+    Ok(out)
 }
 
 /// Classic two-phase collective write: every rank is a requester.

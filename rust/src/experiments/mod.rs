@@ -1,23 +1,34 @@
 //! Experiment drivers shared by the CLI and the bench harnesses — one
 //! function per paper artifact (see DESIGN.md §4 experiment index).
+//!
+//! Every driver honours the [`RunConfig::direction`] axis: write runs
+//! execute the collective write (optionally verifying the file by vectored
+//! read-back), read runs pre-populate the file with the workload's image,
+//! drive `run_collective_read`, and **always** verify the gathered bytes
+//! against `deterministic_payload` — so a read panel that prints is a read
+//! panel that round-tripped.
 
 use crate::cluster::Topology;
 use crate::config::RunConfig;
-use crate::coordinator::collective::{run_collective_write, Algorithm, CollectiveOutcome};
+use crate::coordinator::collective::{
+    run_collective_read, run_collective_write, Algorithm, CollectiveOutcome, Direction,
+    DirectionSpec,
+};
 use crate::coordinator::tam::TamConfig;
 use crate::coordinator::twophase::CollectiveCtx;
 use crate::error::{Error, Result};
-use crate::lustre::LustreFile;
+use crate::lustre::{LustreFile, OstStats};
 use crate::metrics::{LabelledRun, ScalingSeries};
 use crate::mpisim::rank::deterministic_payload;
 use crate::netmodel::phase::in_degree_by_rank;
 use crate::runtime::engine::{build_engine, SortEngine};
 use crate::workloads::WorkloadKind;
 
-/// Verification result of a collective write.
+/// Verification result of a collective operation (file read-back for
+/// writes, gathered-byte comparison for reads).
 #[derive(Clone, Debug)]
 pub struct VerifyReport {
-    /// Ranks whose read-back matched.
+    /// Ranks whose bytes matched.
     pub ok: usize,
     /// Ranks checked.
     pub total: usize,
@@ -36,9 +47,9 @@ pub fn build_engine_for(cfg: &RunConfig) -> Result<std::sync::Arc<dyn SortEngine
     build_engine(cfg.engine)
 }
 
-/// Run one collective write per `cfg`; returns the labelled outcome and,
-/// when `cfg.verify`, the byte-accurate read-back report.
-pub fn run_once(cfg: &RunConfig) -> Result<(LabelledRun, Option<VerifyReport>)> {
+/// Run the collective(s) selected by `cfg` — one labelled outcome per
+/// direction in `cfg.direction`, in execution order (write first).
+pub fn run_once(cfg: &RunConfig) -> Result<Vec<(LabelledRun, Option<VerifyReport>)>> {
     let engine = build_engine_for(cfg)?;
     run_once_with_engine(cfg, engine.as_ref())
 }
@@ -48,11 +59,26 @@ pub fn run_once(cfg: &RunConfig) -> Result<(LabelledRun, Option<VerifyReport>)> 
 pub fn run_once_with_engine(
     cfg: &RunConfig,
     engine: &dyn SortEngine,
+) -> Result<Vec<(LabelledRun, Option<VerifyReport>)>> {
+    cfg.direction
+        .runs()
+        .iter()
+        .map(|&dir| run_direction_with_engine(cfg, engine, dir))
+        .collect()
+}
+
+/// Run one collective in one direction per `cfg`; returns the labelled
+/// outcome and the verification report (`Some` whenever `cfg.verify`, and
+/// always for reads — the gathered bytes are already in memory, so the
+/// comparison is nearly free and keeps read panels honest).
+pub fn run_direction_with_engine(
+    cfg: &RunConfig,
+    engine: &dyn SortEngine,
+    direction: Direction,
 ) -> Result<(LabelledRun, Option<VerifyReport>)> {
     let topo = cfg.topology();
     let workload = cfg.workload.build(cfg.scale);
     let ranks = workload.generate(&topo, cfg.seed)?;
-    let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
 
     let ctx = CollectiveCtx {
         topo: &topo,
@@ -63,34 +89,91 @@ pub fn run_once_with_engine(
         placement: cfg.placement,
         n_global_agg: cfg.lustre.stripe_count,
     };
-    let mut file = LustreFile::new(cfg.lustre);
-    let outcome = run_collective_write(&ctx, cfg.algorithm, ranks, &mut file)?;
-
-    let verify = if cfg.verify {
-        let mut ok = 0;
-        for (rank, view) in &views {
-            let want = deterministic_payload(cfg.seed, *rank, view.total_bytes());
-            let mut got = Vec::with_capacity(want.len());
-            for (off, len) in view.iter() {
-                got.extend_from_slice(&file.read_at(off, len));
-            }
-            if got == want {
-                ok += 1;
-            }
+    match direction {
+        Direction::Write => {
+            let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+            let mut file = LustreFile::new(cfg.lustre);
+            let outcome = run_collective_write(&ctx, cfg.algorithm, ranks, &mut file)?;
+            let verify = if cfg.verify {
+                // Vectored read-back through the same storage entry point
+                // the read direction drives (no per-request read_at loop).
+                let mut ok = 0;
+                let mut got = Vec::new();
+                let mut stats = vec![OstStats::default(); file.config().stripe_count];
+                for (rank, view) in &views {
+                    let want = deterministic_payload(cfg.seed, *rank, view.total_bytes());
+                    file.read_view(view, &mut got, &mut stats)?;
+                    if got == want {
+                        ok += 1;
+                    }
+                }
+                Some(VerifyReport { ok, total: views.len() })
+            } else {
+                None
+            };
+            Ok((
+                LabelledRun {
+                    label: cfg.algorithm.name(),
+                    direction,
+                    breakdown: outcome.breakdown,
+                    counters: outcome.counters,
+                },
+                verify,
+            ))
         }
-        Some(VerifyReport { ok, total: views.len() })
-    } else {
-        None
-    };
+        Direction::Read => {
+            // Pre-populate the shared file with the workload's image —
+            // plain per-rank vectored writes, not a collective: the
+            // operation under measurement is the read.
+            let mut file = LustreFile::new(cfg.lustre);
+            file.begin_round();
+            for (rank, batch) in &ranks {
+                if !batch.view.is_empty() {
+                    file.write_view(*rank, &batch.view, &batch.payload)?;
+                }
+            }
+            let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+            let (got, outcome) = run_collective_read(&ctx, cfg.algorithm, views, &file)?;
+            let mut ok = 0;
+            for ((_, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+                if payload == &want.payload {
+                    ok += 1;
+                }
+            }
+            let verify = Some(VerifyReport { ok, total: got.len() });
+            Ok((
+                LabelledRun {
+                    label: cfg.algorithm.name(),
+                    direction,
+                    breakdown: outcome.breakdown,
+                    counters: outcome.counters,
+                },
+                verify,
+            ))
+        }
+    }
+}
 
-    Ok((
-        LabelledRun {
-            label: cfg.algorithm.name(),
-            breakdown: outcome.breakdown,
-            counters: outcome.counters,
-        },
-        verify,
-    ))
+/// Fail loudly when a driver-level run carried a verification report that
+/// did not pass (sweeps must not print panels over corrupt bytes).
+fn ensure_verified(run: &LabelledRun, verify: &Option<VerifyReport>) -> Result<()> {
+    match verify {
+        Some(v) if !v.passed() => Err(Error::Verify(format!(
+            "{} [{}]: {}/{} ranks",
+            run.label, run.direction, v.ok, v.total
+        ))),
+        _ => Ok(()),
+    }
+}
+
+/// Direction selector for the bench harnesses: `TAMIO_BENCH_DIRECTION`
+/// (`write|read|both`), defaulting to both panels — shared by the fig4–7
+/// benches so the env contract cannot drift between them.
+pub fn bench_direction_from_env() -> DirectionSpec {
+    std::env::var("TAMIO_BENCH_DIRECTION")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DirectionSpec::Both)
 }
 
 /// Pick a workload scale divisor so the run materializes roughly
@@ -102,26 +185,36 @@ pub fn auto_scale(kind: WorkloadKind, p: usize, budget_reqs: u64) -> u64 {
 }
 
 /// Figures 4–7: breakdown sweep over `P_L` values, final bar = two-phase.
+///
+/// Runs every direction in `base.direction`, write bars first, then read
+/// bars (read bars verified against `deterministic_payload` — see
+/// [`run_direction_with_engine`]); group with
+/// [`crate::metrics::breakdown_panels`] for per-direction tables.
 pub fn breakdown_sweep(base: &RunConfig, pl_values: &[usize]) -> Result<Vec<LabelledRun>> {
     let engine = build_engine_for(base)?;
     let mut runs = Vec::new();
-    for &pl in pl_values {
+    for &dir in base.direction.runs() {
+        for &pl in pl_values {
+            let mut cfg = base.clone();
+            cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: pl });
+            let (mut run, verify) = run_direction_with_engine(&cfg, engine.as_ref(), dir)?;
+            ensure_verified(&run, &verify)?;
+            run.label = format!("P_L={pl}");
+            runs.push(run);
+        }
         let mut cfg = base.clone();
-        cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: pl });
-        let (mut run, _) = run_once_with_engine(&cfg, engine.as_ref())?;
-        run.label = format!("P_L={pl}");
+        cfg.algorithm = Algorithm::TwoPhase;
+        let (mut run, verify) = run_direction_with_engine(&cfg, engine.as_ref(), dir)?;
+        ensure_verified(&run, &verify)?;
+        run.label = "two-phase".into();
         runs.push(run);
     }
-    let mut cfg = base.clone();
-    cfg.algorithm = Algorithm::TwoPhase;
-    let (mut run, _) = run_once_with_engine(&cfg, engine.as_ref())?;
-    run.label = "two-phase".into();
-    runs.push(run);
     Ok(runs)
 }
 
 /// Figure 3: strong-scaling bandwidth for one workload; returns the
-/// TAM(P_L=256) and two-phase series.
+/// TAM(P_L=256) and two-phase series per direction in `base.direction`
+/// (read series are suffixed `(read)`).
 pub fn fig3_series(
     base: &RunConfig,
     kind: WorkloadKind,
@@ -129,32 +222,41 @@ pub fn fig3_series(
     budget_reqs: u64,
 ) -> Result<Vec<ScalingSeries>> {
     let engine = build_engine_for(base)?;
-    let mut tam_points = Vec::new();
-    let mut two_points = Vec::new();
-    for &p in proc_counts {
-        if p % base.ppn != 0 {
-            return Err(Error::config(format!("P={p} not divisible by ppn={}", base.ppn)));
+    let mut out = Vec::new();
+    for &dir in base.direction.runs() {
+        let mut tam_points = Vec::new();
+        let mut two_points = Vec::new();
+        for &p in proc_counts {
+            if p % base.ppn != 0 {
+                return Err(Error::config(format!("P={p} not divisible by ppn={}", base.ppn)));
+            }
+            let mut cfg = base.clone();
+            cfg.workload = kind;
+            cfg.nodes = p / base.ppn;
+            cfg.scale = auto_scale(kind, p, budget_reqs);
+            cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 256 });
+            let (tam, tam_verify) = run_direction_with_engine(&cfg, engine.as_ref(), dir)?;
+            ensure_verified(&tam, &tam_verify)?;
+            cfg.algorithm = Algorithm::TwoPhase;
+            let (two, two_verify) = run_direction_with_engine(&cfg, engine.as_ref(), dir)?;
+            ensure_verified(&two, &two_verify)?;
+            tam_points.push((p, tam.breakdown.bandwidth(tam.counters.bytes)));
+            two_points.push((p, two.breakdown.bandwidth(two.counters.bytes)));
         }
-        let mut cfg = base.clone();
-        cfg.workload = kind;
-        cfg.nodes = p / base.ppn;
-        cfg.scale = auto_scale(kind, p, budget_reqs);
-        cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 256 });
-        let (tam, _) = run_once_with_engine(&cfg, engine.as_ref())?;
-        cfg.algorithm = Algorithm::TwoPhase;
-        let (two, _) = run_once_with_engine(&cfg, engine.as_ref())?;
-        tam_points.push((p, tam.breakdown.bandwidth(tam.counters.bytes)));
-        two_points.push((p, two.breakdown.bandwidth(two.counters.bytes)));
+        let suffix = match dir {
+            Direction::Write => "",
+            Direction::Read => " (read)",
+        };
+        out.push(ScalingSeries { label: format!("TAM(P_L=256){suffix}"), points: tam_points });
+        out.push(ScalingSeries { label: format!("two-phase{suffix}"), points: two_points });
     }
-    Ok(vec![
-        ScalingSeries { label: "TAM(P_L=256)".into(), points: tam_points },
-        ScalingSeries { label: "two-phase".into(), points: two_points },
-    ])
+    Ok(out)
 }
 
 /// Figure 2: per-global-aggregator in-degree (congestion) for two-phase
 /// vs TAM on the same workload.  Returns `(label, max_in_degree,
-/// mean_in_degree, n_messages)` rows.
+/// mean_in_degree, n_messages)` rows (write direction — the
+/// request-redistribution structure is the figure's subject).
 pub fn fig2_congestion(base: &RunConfig) -> Result<Vec<(String, usize, f64, usize)>> {
     let engine = build_engine_for(base)?;
     let mut rows = Vec::new();
@@ -164,7 +266,7 @@ pub fn fig2_congestion(base: &RunConfig) -> Result<Vec<(String, usize, f64, usiz
     ] {
         let mut cfg = base.clone();
         cfg.algorithm = algo;
-        let (run, _) = run_once_with_engine(&cfg, engine.as_ref())?;
+        let (run, _) = run_direction_with_engine(&cfg, engine.as_ref(), Direction::Write)?;
         let c = &run.counters;
         let mean = if c.msgs_inter == 0 {
             0.0
@@ -197,13 +299,14 @@ pub fn table1_rows(topo: &Topology, budget_reqs: u64) -> Result<Vec<Vec<String>>
 
 /// Figures 4–7 driver: for each node count, sweep `P_L` (powers of four
 /// up to `P`, always including 256 when it fits) plus the two-phase bar,
-/// and print the breakdown table.  Shared by the fig4–fig7 benches and
-/// the CLI.
+/// and print one breakdown panel per direction.  Shared by the fig4–fig7
+/// benches and the CLI.
 pub fn run_breakdown_grid(
     kind: WorkloadKind,
     nodes_list: &[usize],
     ppn: usize,
     budget: u64,
+    direction: DirectionSpec,
 ) -> Result<()> {
     for &nodes in nodes_list {
         let p = nodes * ppn;
@@ -219,31 +322,41 @@ pub fn run_breakdown_grid(
         cfg.ppn = ppn;
         cfg.workload = kind;
         cfg.scale = auto_scale(kind, p, budget);
+        cfg.direction = direction;
         println!(
-            "\n{kind} @ {nodes} nodes x {ppn} ppn (P={p}), scale 1/{}, P_L sweep {pls:?} + two-phase:",
+            "\n{kind} @ {nodes} nodes x {ppn} ppn (P={p}), scale 1/{}, direction {direction}, P_L sweep {pls:?} + two-phase:",
             cfg.scale
         );
         match breakdown_sweep(&cfg, &pls) {
             Ok(runs) => {
-                print!("{}", crate::metrics::breakdown_table(&runs));
-                // §IV-D crossover: report the best P_L.
-                let best = runs
-                    .iter()
-                    .min_by(|a, b| {
-                        a.breakdown.total().partial_cmp(&b.breakdown.total()).unwrap()
-                    })
-                    .unwrap();
-                println!(
-                    "best end-to-end: {} ({:.3} ms)  [paper: P_L=256 minimizes f(P_L)+g(P_L)]",
-                    best.label,
-                    best.breakdown.total() * 1e3
-                );
-                // Coalescing progression (paper §V-B quotes these counts).
-                if let Some(r) = runs.first() {
+                print!("{}", crate::metrics::breakdown_panels(&runs));
+                for &dir in direction.runs() {
+                    let panel: Vec<&LabelledRun> =
+                        runs.iter().filter(|r| r.direction == dir).collect();
+                    if panel.is_empty() {
+                        continue;
+                    }
+                    // §IV-D crossover: report the best P_L per direction.
+                    let best = panel
+                        .iter()
+                        .min_by(|a, b| {
+                            a.breakdown.total().partial_cmp(&b.breakdown.total()).unwrap()
+                        })
+                        .unwrap();
                     println!(
-                        "requests posted={} after-intra={} at-io={} (first bar)",
-                        r.counters.reqs_posted, r.counters.reqs_after_intra, r.counters.reqs_at_io
+                        "best end-to-end [{dir}]: {} ({:.3} ms)  [paper: P_L=256 minimizes f(P_L)+g(P_L)]",
+                        best.label,
+                        best.breakdown.total() * 1e3
                     );
+                    // Coalescing progression (paper §V-B quotes these counts).
+                    if let Some(r) = panel.first() {
+                        println!(
+                            "requests posted={} after-intra={} at-io={} (first {dir} bar)",
+                            r.counters.reqs_posted,
+                            r.counters.reqs_after_intra,
+                            r.counters.reqs_at_io
+                        );
+                    }
                 }
             }
             Err(e) => println!("skipped: {e}"),
@@ -292,9 +405,12 @@ mod tests {
     #[test]
     fn run_once_verifies() {
         let cfg = small_cfg();
-        let (run, verify) = run_once(&cfg).unwrap();
+        let mut out = run_once(&cfg).unwrap();
+        assert_eq!(out.len(), 1);
+        let (run, verify) = out.remove(0);
         let v = verify.unwrap();
         assert!(v.passed(), "verify failed: {}/{}", v.ok, v.total);
+        assert_eq!(run.direction, Direction::Write);
         assert!(run.breakdown.total() > 0.0);
         assert!(run.counters.bytes > 0);
     }
@@ -303,8 +419,44 @@ mod tests {
     fn run_once_tam_verifies() {
         let mut cfg = small_cfg();
         cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 4 });
-        let (_, verify) = run_once(&cfg).unwrap();
-        assert!(verify.unwrap().passed());
+        let mut out = run_once(&cfg).unwrap();
+        assert!(out.remove(0).1.unwrap().passed());
+    }
+
+    #[test]
+    fn run_once_read_direction_verifies_gathered_bytes() {
+        let mut cfg = small_cfg();
+        cfg.direction = DirectionSpec::Read;
+        cfg.verify = false; // read runs verify regardless
+        for algo in [
+            Algorithm::TwoPhase,
+            Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
+        ] {
+            cfg.algorithm = algo;
+            let mut out = run_once(&cfg).unwrap();
+            assert_eq!(out.len(), 1);
+            let (run, verify) = out.remove(0);
+            assert_eq!(run.direction, Direction::Read);
+            let v = verify.expect("read runs always verify");
+            assert!(v.passed(), "{}: {}/{}", run.label, v.ok, v.total);
+            assert!(run.breakdown.total() > 0.0);
+            assert!(run.counters.bytes > 0);
+        }
+    }
+
+    #[test]
+    fn run_once_both_directions_orders_write_then_read() {
+        let mut cfg = small_cfg();
+        cfg.direction = DirectionSpec::Both;
+        let out = run_once(&cfg).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0.direction, Direction::Write);
+        assert_eq!(out[1].0.direction, Direction::Read);
+        for (run, verify) in &out {
+            assert!(verify.as_ref().unwrap().passed(), "{} [{}]", run.label, run.direction);
+        }
+        // Same exchange skeleton both ways: identical round structure.
+        assert_eq!(out[0].0.counters.rounds, out[1].0.counters.rounds);
     }
 
     #[test]
@@ -316,6 +468,19 @@ mod tests {
         assert_eq!(runs[3].label, "two-phase");
         // §IV-D: intra time decreases with more local aggregators.
         assert!(runs[0].breakdown.intra_total() >= runs[2].breakdown.intra_total());
+    }
+
+    #[test]
+    fn breakdown_sweep_both_directions_doubles_bars() {
+        let mut cfg = small_cfg();
+        cfg.verify = false;
+        cfg.direction = DirectionSpec::Both;
+        let runs = breakdown_sweep(&cfg, &[2, 4]).unwrap();
+        assert_eq!(runs.len(), 6);
+        assert!(runs[..3].iter().all(|r| r.direction == Direction::Write));
+        assert!(runs[3..].iter().all(|r| r.direction == Direction::Read));
+        assert_eq!(runs[2].label, "two-phase");
+        assert_eq!(runs[5].label, "two-phase");
     }
 
     #[test]
@@ -333,5 +498,20 @@ mod tests {
         assert_eq!(rows.len(), 2);
         // Row 0: two-phase; row 1: TAM — TAM's in-degree must not exceed.
         assert!(rows[1].1 <= rows[0].1);
+    }
+
+    #[test]
+    fn fig3_series_direction_both_emits_read_series() {
+        let mut cfg = small_cfg();
+        cfg.verify = false;
+        cfg.direction = DirectionSpec::Both;
+        let series = fig3_series(&cfg, WorkloadKind::Strided, &[16], 10_000).unwrap();
+        assert_eq!(series.len(), 4);
+        assert!(series[0].label.starts_with("TAM"));
+        assert!(series[2].label.ends_with("(read)"), "{}", series[2].label);
+        assert!(series[3].label.ends_with("(read)"), "{}", series[3].label);
+        for s in &series {
+            assert!(s.points[0].1 > 0.0, "{} bandwidth must be positive", s.label);
+        }
     }
 }

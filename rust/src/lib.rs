@@ -56,7 +56,8 @@ pub mod prelude {
     pub use crate::config::RunConfig;
     pub use crate::coordinator::breakdown::Breakdown;
     pub use crate::coordinator::collective::{
-        run_collective_read, run_collective_write, Algorithm, CollectiveOutcome,
+        run_collective_read, run_collective_write, Algorithm, CollectiveOutcome, Direction,
+        DirectionSpec,
     };
     pub use crate::coordinator::tam::TamConfig;
     pub use crate::lustre::LustreConfig;

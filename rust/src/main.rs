@@ -3,7 +3,7 @@
 //! ```text
 //! tamio run      [--config file.toml] [--nodes N --ppn Q --workload W
 //!                 --algorithm two-phase|tam|tam:<P_L> --engine native|xla
-//!                 --scale S --verify ...]
+//!                 --direction write|read|both --scale S --verify ...]
 //! tamio sweep    [--pl 16,64,256,...] <run flags>    # Figures 4–7 panels
 //! tamio scaling  [--procs 256,1024,...] <run flags>  # Figure 3 series
 //! tamio table1   [--budget-reqs N]                   # Table I
@@ -17,7 +17,7 @@
 use tamio::config::{KvMap, RunConfig};
 use tamio::error::Result;
 use tamio::experiments;
-use tamio::metrics::{breakdown_table, render_table, scaling_table};
+use tamio::metrics::{breakdown_panels, breakdown_table, render_table, scaling_table};
 use tamio::util::{human_bytes, human_secs};
 use tamio::workloads::WorkloadKind;
 
@@ -70,6 +70,10 @@ USAGE: tamio <run|sweep|scaling|table1|congest|info> [--key value ...]
 Common flags (RunConfig keys):
   --nodes N --ppn Q --workload e3sm-g|e3sm-f|btio|s3d|contig|strided
   --algorithm two-phase|tam|tam:<P_L>   --engine native|xla
+  --direction write|read|both           collective direction(s); read runs
+                                        pre-populate the file and always
+                                        verify the gathered bytes (default
+                                        write)
   --scale S --stripe_size B --stripe_count K --send_mode isend|issend
   --placement spread|cray --seed S --verify --config file.toml
 
@@ -82,43 +86,55 @@ Subcommand flags:
 fn cmd_run(cfg: &RunConfig) -> Result<()> {
     let topo = cfg.topology();
     println!(
-        "run: {} on {} nodes x {} ppn (P={}), algo={}, engine={}, stripes {}x{}",
+        "run: {} on {} nodes x {} ppn (P={}), algo={}, engine={}, direction={}, stripes {}x{}",
         cfg.workload,
         cfg.nodes,
         cfg.ppn,
         topo.nprocs(),
         cfg.algorithm.name(),
         cfg.engine,
+        cfg.direction,
         cfg.lustre.stripe_count,
         human_bytes(cfg.lustre.stripe_size),
     );
     let t0 = std::time::Instant::now();
-    let (run, verify) = experiments::run_once(cfg)?;
+    let results = experiments::run_once(cfg)?;
     let wall = t0.elapsed();
-    print!("{}", breakdown_table(std::slice::from_ref(&run)));
-    let c = &run.counters;
-    println!(
-        "requests: posted={} after-intra={} at-io={}  msgs: intra={} inter={} max-indegree={}",
-        c.reqs_posted, c.reqs_after_intra, c.reqs_at_io, c.msgs_intra, c.msgs_inter,
-        c.max_in_degree
-    );
-    println!(
-        "bytes={}  rounds={}  lock-conflicts={}  sim-time={}  wall={wall:?}",
-        human_bytes(c.bytes),
-        c.rounds,
-        c.lock_conflicts,
-        human_secs(run.breakdown.total()),
-    );
-    if let Some(v) = verify {
+    let mut failed: Option<String> = None;
+    for (run, verify) in &results {
+        print!("{}", breakdown_table(std::slice::from_ref(run)));
+        let c = &run.counters;
         println!(
-            "verify: {}/{} ranks OK{}",
-            v.ok,
-            v.total,
-            if v.passed() { "" } else { "  <-- MISMATCH" }
+            "requests: posted={} after-intra={} at-io={}  msgs: intra={} inter={} max-indegree={}",
+            c.reqs_posted, c.reqs_after_intra, c.reqs_at_io, c.msgs_intra, c.msgs_inter,
+            c.max_in_degree
         );
-        if !v.passed() {
-            return Err(tamio::Error::Verify(format!("{}/{} ranks", v.ok, v.total)));
+        println!(
+            "bytes={}  rounds={}  lock-conflicts={}  sim-time={}",
+            human_bytes(c.bytes),
+            c.rounds,
+            c.lock_conflicts,
+            human_secs(run.breakdown.total()),
+        );
+        if let Some(v) = verify {
+            println!(
+                "verify[{}]: {}/{} ranks OK{}",
+                run.direction,
+                v.ok,
+                v.total,
+                if v.passed() { "" } else { "  <-- MISMATCH" }
+            );
+            if !v.passed() && failed.is_none() {
+                failed = Some(format!(
+                    "{} [{}]: {}/{} ranks",
+                    run.label, run.direction, v.ok, v.total
+                ));
+            }
         }
+    }
+    println!("wall={wall:?} (all directions)");
+    if let Some(msg) = failed {
+        return Err(tamio::Error::Verify(msg));
     }
     Ok(())
 }
@@ -141,19 +157,19 @@ fn cmd_sweep(cfg: &RunConfig, pl: Option<&str>) -> Result<()> {
         .collect();
     let pls = parse_list(pl, &defaults);
     println!(
-        "breakdown sweep: {} P={} pl={:?} (last bar = two-phase)",
-        cfg.workload, p, pls
+        "breakdown sweep: {} P={} pl={:?} direction={} (last bar = two-phase)",
+        cfg.workload, p, pls, cfg.direction
     );
     let runs = experiments::breakdown_sweep(cfg, &pls)?;
-    print!("{}", breakdown_table(&runs));
+    print!("{}", breakdown_panels(&runs));
     Ok(())
 }
 
 fn cmd_scaling(cfg: &RunConfig, procs: Option<&str>, budget: u64) -> Result<()> {
     let procs = parse_list(procs, &[256, 1024, 4096]);
     println!(
-        "strong scaling: {} procs={:?} ppn={} budget={budget} reqs",
-        cfg.workload, procs, cfg.ppn
+        "strong scaling: {} procs={:?} ppn={} direction={} budget={budget} reqs",
+        cfg.workload, procs, cfg.ppn, cfg.direction
     );
     let series = experiments::fig3_series(cfg, cfg.workload, &procs, budget)?;
     print!("{}", scaling_table(&cfg.workload.to_string(), &series));

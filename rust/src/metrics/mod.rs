@@ -9,6 +9,7 @@ pub mod report;
 pub use report::{render_table, write_csv, JsonWriter};
 
 use crate::coordinator::breakdown::{Breakdown, Counters};
+use crate::coordinator::collective::Direction;
 use crate::util::{human_bytes, human_secs};
 
 /// One labelled run (e.g. one bar of a Figure 4–7 panel).
@@ -16,6 +17,9 @@ use crate::util::{human_bytes, human_secs};
 pub struct LabelledRun {
     /// Bar label (e.g. "P_L=256" or "two-phase").
     pub label: String,
+    /// Collective direction this run drove (the paper reports write and
+    /// read panels separately).
+    pub direction: Direction,
     /// Component times.
     pub breakdown: Breakdown,
     /// Volume counters.
@@ -23,10 +27,10 @@ pub struct LabelledRun {
 }
 
 /// Render a Figures-4–7-style breakdown table: one column per run, one
-/// row per component.
+/// row per component.  Columns are labelled with their direction.
 pub fn breakdown_table(runs: &[LabelledRun]) -> String {
     let mut headers = vec!["component".to_string()];
-    headers.extend(runs.iter().map(|r| r.label.clone()));
+    headers.extend(runs.iter().map(|r| format!("{} [{}]", r.label, r.direction)));
     let comp_names: Vec<&'static str> =
         Breakdown::default().rows().iter().map(|(n, _)| *n).collect();
     let mut rows: Vec<Vec<String>> = Vec::new();
@@ -54,6 +58,23 @@ pub fn breakdown_table(runs: &[LabelledRun]) -> String {
     }
     rows.push(row);
     render_table(&headers, &rows)
+}
+
+/// Render one breakdown panel per direction present in `runs` (write
+/// first), each introduced by a `-- <direction> panel --` title — the
+/// Figures 4–7 write/read panel pair when a sweep ran `--direction both`.
+pub fn breakdown_panels(runs: &[LabelledRun]) -> String {
+    let mut out = String::new();
+    for dir in [Direction::Write, Direction::Read] {
+        let panel: Vec<LabelledRun> =
+            runs.iter().filter(|r| r.direction == dir).cloned().collect();
+        if panel.is_empty() {
+            continue;
+        }
+        out.push_str(&format!("-- {dir} panel --\n"));
+        out.push_str(&breakdown_table(&panel));
+    }
+    out
 }
 
 /// A strong-scaling series (Figure 3): `(P, bandwidth_bytes_per_s)`.
@@ -92,6 +113,7 @@ mod tests {
     fn breakdown_table_has_all_components() {
         let run = LabelledRun {
             label: "P_L=4".into(),
+            direction: Direction::Write,
             breakdown: Breakdown { intra_comm: 0.5, ..Default::default() },
             counters: Counters { bytes: 1 << 20, ..Default::default() },
         };
@@ -100,6 +122,30 @@ mod tests {
             assert!(t.contains(name), "missing {name} in:\n{t}");
         }
         assert!(t.contains("P_L=4"));
+        assert!(t.contains("[write]"), "direction label missing:\n{t}");
+    }
+
+    #[test]
+    fn breakdown_panels_split_by_direction_write_first() {
+        let mk = |label: &str, direction| LabelledRun {
+            label: label.into(),
+            direction,
+            breakdown: Breakdown::default(),
+            counters: Counters::default(),
+        };
+        let runs = vec![
+            mk("rd-bar", Direction::Read),
+            mk("wr-bar", Direction::Write),
+        ];
+        let t = breakdown_panels(&runs);
+        let w = t.find("-- write panel --").expect("write panel");
+        let r = t.find("-- read panel --").expect("read panel");
+        assert!(w < r, "write panel must come first:\n{t}");
+        assert!(t.contains("wr-bar") && t.contains("rd-bar"));
+        // Single-direction input produces a single panel.
+        let only = breakdown_panels(&runs[1..]);
+        assert!(only.contains("-- write panel --"));
+        assert!(!only.contains("-- read panel --"));
     }
 
     #[test]

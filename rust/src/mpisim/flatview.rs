@@ -51,6 +51,14 @@ impl FlatView {
         self.lengths.push(length);
     }
 
+    /// Remove every request, keeping the allocated capacity — the
+    /// scratch-arena entry point for views rebuilt each exchange round
+    /// (e.g. the engine's merged output).
+    pub fn clear(&mut self) {
+        self.offsets.clear();
+        self.lengths.clear();
+    }
+
     /// Number of noncontiguous requests.
     pub fn len(&self) -> usize {
         self.offsets.len()
@@ -305,6 +313,16 @@ mod tests {
         let n = FlatView::from_pairs(vec![(0, 300), (50, 10), (320, 4)]).unwrap();
         assert_eq!(n.disjoint_union().iter().collect::<Vec<_>>(), vec![(0, 300), (320, 4)]);
         assert!(FlatView::empty().disjoint_union().is_empty());
+    }
+
+    #[test]
+    fn clear_keeps_capacity_and_empties() {
+        let mut v = FlatView::from_pairs(vec![(0, 4), (10, 6)]).unwrap();
+        v.clear();
+        assert!(v.is_empty());
+        assert_eq!(v.total_bytes(), 0);
+        v.push(5, 3);
+        assert_eq!(v.iter().collect::<Vec<_>>(), vec![(5, 3)]);
     }
 
     #[test]

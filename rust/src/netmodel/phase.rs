@@ -102,17 +102,97 @@ pub fn cost_phase_with_pending(
 /// Reusable dense accumulators for [`cost_phase_into`] — the per-round
 /// scratch of the exchange loops.  Capacity survives across rounds
 /// (scratch-arena treatment of the cost path: one phase evaluation per
-/// round otherwise re-allocates four rank/node-sized `Vec`s).
+/// round otherwise re-allocates four rank/node-sized `Vec`s per shard).
+///
+/// Accumulation is *sharded* for large phases (ROADMAP: parallelize
+/// `cost_phase` at 128k+ messages/round): the message list is split into
+/// contiguous shards whose count depends **only on the message count**
+/// (never on the host's thread count), each shard accumulates into its
+/// own dense vectors on a scoped thread, and the per-rank/per-node
+/// partials are reduced in shard-index order — so results are
+/// deterministic across machines and schedules.  Small phases take a
+/// single-shard path that is the plain serial loop.
 #[derive(Debug, Default)]
 pub struct PhaseScratch {
+    shards: Vec<PhaseShard>,
+}
+
+/// One shard's dense accumulators (rank/node indexed).
+#[derive(Debug, Default)]
+struct PhaseShard {
     recv_time: Vec<f64>,
     send_time: Vec<f64>,
     nic_time: Vec<f64>,
     in_degree: Vec<usize>,
+    total_bytes: u64,
+}
+
+impl PhaseShard {
+    /// Re-zero for a new phase, keeping allocated capacity.
+    fn reset(&mut self, nprocs: usize, nodes: usize) {
+        self.recv_time.clear();
+        self.recv_time.resize(nprocs, 0.0);
+        self.send_time.clear();
+        self.send_time.resize(nprocs, 0.0);
+        self.nic_time.clear();
+        self.nic_time.resize(nodes, 0.0);
+        self.in_degree.clear();
+        self.in_degree.resize(nprocs, 0);
+        self.total_bytes = 0;
+    }
+
+    /// Fold one contiguous message slice into the accumulators.
+    fn accumulate(
+        &mut self,
+        params: &NetParams,
+        topo: &Topology,
+        msgs: &[Message],
+        pending_per_receiver: &[u64],
+    ) {
+        let nprocs = topo.nprocs();
+        for m in msgs {
+            debug_assert!(m.src < nprocs && m.dst < nprocs, "rank outside 0..nprocs");
+            let intra = topo.same_node(m.src, m.dst);
+            let wire = params.msg_cost(intra, m.bytes);
+            // Receiver serializes matching + draining of everything
+            // addressed to it: this is where all-to-many congestion
+            // shows up.
+            let pending = pending_per_receiver.get(m.dst).copied().unwrap_or(0) as f64;
+            self.recv_time[m.dst] +=
+                params.recv_overhead + wire + pending * params.pending_penalty;
+            // Sender serializes injection but overlaps transfer completion.
+            self.send_time[m.src] += params.send_overhead
+                + if intra { 0.0 } else { m.bytes as f64 * params.beta_inter };
+            // Inter-node traffic shares the destination node's NIC:
+            // stacking aggregators on a node concentrates this bound.
+            if !intra {
+                self.nic_time[topo.node_of(m.dst)] += m.bytes as f64 * params.nic_ingest;
+            }
+            self.in_degree[m.dst] += 1;
+            self.total_bytes += m.bytes;
+        }
+    }
+}
+
+/// Messages per shard; below two shards' worth the serial path wins.
+const SHARD_TARGET_MSGS: usize = 16_384;
+/// Cap on the thread fan-out of one phase evaluation.
+const MAX_SHARDS: usize = 16;
+
+/// Shard count for a phase — a pure function of the message count so the
+/// floating-point reduction order (and hence the simulated time) is
+/// machine-independent.
+fn shard_count(n_msgs: usize) -> usize {
+    if n_msgs < 2 * SHARD_TARGET_MSGS {
+        1
+    } else {
+        (n_msgs / SHARD_TARGET_MSGS).min(MAX_SHARDS)
+    }
 }
 
 /// [`cost_phase_with_pending`] into caller-owned scratch accumulators
-/// (cleared and re-zeroed each call, capacity reused).
+/// (cleared and re-zeroed each call, capacity reused; sharded across
+/// scoped threads for large phases — see [`PhaseScratch`]).
 pub fn cost_phase_into(
     params: &NetParams,
     topo: &Topology,
@@ -121,40 +201,92 @@ pub fn cost_phase_into(
     scratch: &mut PhaseScratch,
 ) -> PhaseCost {
     let nprocs = topo.nprocs();
-    scratch.recv_time.clear();
-    scratch.recv_time.resize(nprocs, 0.0);
-    scratch.send_time.clear();
-    scratch.send_time.resize(nprocs, 0.0);
-    scratch.nic_time.clear();
-    scratch.nic_time.resize(topo.nodes, 0.0);
-    scratch.in_degree.clear();
-    scratch.in_degree.resize(nprocs, 0);
-    let recv_time = &mut scratch.recv_time;
-    let send_time = &mut scratch.send_time;
-    let nic_time = &mut scratch.nic_time;
-    let in_degree = &mut scratch.in_degree;
-    let mut total_bytes = 0u64;
+    let n_shards = shard_count(msgs.len());
+    if scratch.shards.len() < n_shards {
+        scratch.shards.resize_with(n_shards, PhaseShard::default);
+    }
+    let shards = &mut scratch.shards[..n_shards];
+    for sh in shards.iter_mut() {
+        sh.reset(nprocs, topo.nodes);
+    }
+    if n_shards == 1 {
+        shards[0].accumulate(params, topo, msgs, pending_per_receiver);
+    } else {
+        let chunk_len = msgs.len().div_ceil(n_shards);
+        crate::util::parallel::par_chunks_mut(&mut *shards, 1, |i, sh| {
+            let lo = (i * chunk_len).min(msgs.len());
+            let hi = ((i + 1) * chunk_len).min(msgs.len());
+            sh[0].accumulate(params, topo, &msgs[lo..hi], pending_per_receiver);
+        });
+    }
 
+    // Reduce in shard-index order (deterministic association).
+    let mut recv_bound = 0.0f64;
+    let mut send_bound = 0.0f64;
+    let mut max_in_degree = 0usize;
+    for r in 0..nprocs {
+        let mut rt = 0.0f64;
+        let mut st = 0.0f64;
+        let mut deg = 0usize;
+        for sh in shards.iter() {
+            rt += sh.recv_time[r];
+            st += sh.send_time[r];
+            deg += sh.in_degree[r];
+        }
+        recv_bound = recv_bound.max(rt);
+        send_bound = send_bound.max(st);
+        max_in_degree = max_in_degree.max(deg);
+    }
+    let mut nic_bound = 0.0f64;
+    for nd in 0..topo.nodes {
+        let mut nt = 0.0f64;
+        for sh in shards.iter() {
+            nt += sh.nic_time[nd];
+        }
+        nic_bound = nic_bound.max(nt);
+    }
+    let total_bytes = shards.iter().map(|sh| sh.total_bytes).sum();
+    PhaseCost {
+        time: recv_bound.max(send_bound).max(nic_bound),
+        recv_bound,
+        send_bound,
+        nic_bound,
+        max_in_degree,
+        n_messages: msgs.len(),
+        total_bytes,
+    }
+}
+
+/// The pre-sharding serial accumulation, kept verbatim as the golden
+/// oracle for the sharded rewrite.  Floating-point sums may differ from
+/// the sharded path by association only (the randomized equivalence test
+/// compares with a relative tolerance; integer fields are exact).
+#[cfg(test)]
+pub(crate) fn cost_phase_serial(
+    params: &NetParams,
+    topo: &Topology,
+    msgs: &[Message],
+    pending_per_receiver: &[u64],
+) -> PhaseCost {
+    let nprocs = topo.nprocs();
+    let mut recv_time = vec![0.0f64; nprocs];
+    let mut send_time = vec![0.0f64; nprocs];
+    let mut nic_time = vec![0.0f64; topo.nodes];
+    let mut in_degree = vec![0usize; nprocs];
+    let mut total_bytes = 0u64;
     for m in msgs {
-        debug_assert!(m.src < nprocs && m.dst < nprocs, "rank outside 0..nprocs");
         let intra = topo.same_node(m.src, m.dst);
         let wire = params.msg_cost(intra, m.bytes);
-        // Receiver serializes matching + draining of everything addressed
-        // to it: this is where all-to-many congestion shows up.
         let pending = pending_per_receiver.get(m.dst).copied().unwrap_or(0) as f64;
         recv_time[m.dst] += params.recv_overhead + wire + pending * params.pending_penalty;
-        // Sender serializes injection but overlaps transfer completion.
         send_time[m.src] +=
             params.send_overhead + if intra { 0.0 } else { m.bytes as f64 * params.beta_inter };
-        // Inter-node traffic shares the destination node's NIC: stacking
-        // aggregators on a node concentrates this bound.
         if !intra {
             nic_time[topo.node_of(m.dst)] += m.bytes as f64 * params.nic_ingest;
         }
         in_degree[m.dst] += 1;
         total_bytes += m.bytes;
     }
-
     let recv_bound = recv_time.iter().copied().fold(0.0, f64::max);
     let send_bound = send_time.iter().copied().fold(0.0, f64::max);
     let nic_bound = nic_time.iter().copied().fold(0.0, f64::max);
@@ -348,6 +480,51 @@ mod tests {
             assert_eq!(reused.max_in_degree, fresh.max_in_degree);
             assert_eq!(reused.total_bytes, fresh.total_bytes);
         }
+    }
+
+    /// Relative comparison for sums that may associate differently across
+    /// shard boundaries.
+    fn assert_close(got: f64, want: f64, what: &str) {
+        let tol = 1e-9 * got.abs().max(want.abs()).max(1e-300);
+        assert!((got - want).abs() <= tol, "{what}: {got} vs {want}");
+    }
+
+    #[test]
+    fn sharded_matches_serial_oracle() {
+        use crate::util::SplitMix64;
+        let p = NetParams::default();
+        let t = Topology::new(8, 16); // 128 ranks
+        let mut rng = SplitMix64::new(0xC057_0AC1);
+        // Sizes straddling the shard threshold: 1-shard, and multi-shard.
+        for &n in &[0usize, 1, 1000, 40_000, 120_000] {
+            let msgs: Vec<Message> = (0..n)
+                .map(|i| {
+                    Message::new(
+                        rng.gen_range(128) as usize,
+                        (i * 7 + rng.gen_range(3) as usize) % 128,
+                        1 + rng.gen_range(1 << 14),
+                    )
+                })
+                .collect();
+            let pending: Vec<u64> = (0..128).map(|_| rng.gen_range(4)).collect();
+            let want = cost_phase_serial(&p, &t, &msgs, &pending);
+            let got = cost_phase_with_pending(&p, &t, &msgs, &pending);
+            assert_eq!(got.n_messages, want.n_messages, "n={n}");
+            assert_eq!(got.total_bytes, want.total_bytes, "n={n}");
+            assert_eq!(got.max_in_degree, want.max_in_degree, "n={n}");
+            assert_close(got.time, want.time, "time");
+            assert_close(got.recv_bound, want.recv_bound, "recv_bound");
+            assert_close(got.send_bound, want.send_bound, "send_bound");
+            assert_close(got.nic_bound, want.nic_bound, "nic_bound");
+        }
+    }
+
+    #[test]
+    fn shard_count_is_deterministic_in_message_count() {
+        assert_eq!(shard_count(0), 1);
+        assert_eq!(shard_count(2 * SHARD_TARGET_MSGS - 1), 1);
+        assert_eq!(shard_count(2 * SHARD_TARGET_MSGS), 2);
+        assert_eq!(shard_count(10_000_000), MAX_SHARDS);
     }
 
     #[test]

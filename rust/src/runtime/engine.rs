@@ -16,7 +16,7 @@
 use std::sync::mpsc;
 use std::sync::Mutex;
 
-use crate::coordinator::merge::{merge_views, sort_coalesce_pairs};
+use crate::coordinator::merge::{merge_views_into, sort_coalesce_pairs};
 use crate::error::{Error, Result};
 use crate::mpisim::FlatView;
 
@@ -81,6 +81,19 @@ pub trait SortEngine: Send + Sync {
         ))
     }
 
+    /// [`Self::merge_sorted`] into a caller-owned view (cleared first;
+    /// capacity reused across calls) — the merged-view arena entry point
+    /// of the exchange round loops, where a fresh per-round `FlatView`
+    /// was the last steady-state allocation.  The default delegates to
+    /// [`Self::merge_sorted`] and moves the result in (the batched XLA
+    /// pipeline materializes a fresh list anyway); [`NativeEngine`]
+    /// overrides it to stream directly into `out`.  Output is
+    /// bit-identical to [`Self::merge_sorted`] on every input.
+    fn merge_sorted_into(&self, views: &[&FlatView], out: &mut FlatView) -> Result<()> {
+        *out = self.merge_sorted(views)?;
+        Ok(())
+    }
+
     /// Engine name for reports.
     fn name(&self) -> &'static str;
 }
@@ -95,7 +108,15 @@ impl SortEngine for NativeEngine {
     }
 
     fn merge_sorted(&self, views: &[&FlatView]) -> Result<FlatView> {
-        Ok(merge_views(views))
+        // Thin allocating wrapper over the arena entry point.
+        let mut out = FlatView::empty();
+        merge_views_into(views, &mut out);
+        Ok(out)
+    }
+
+    fn merge_sorted_into(&self, views: &[&FlatView], out: &mut FlatView) -> Result<()> {
+        merge_views_into(views, out);
+        Ok(())
     }
 
     fn name(&self) -> &'static str {
@@ -271,5 +292,22 @@ mod tests {
             native.iter().collect::<Vec<_>>(),
             vec![(0, 16), (100, 2)]
         );
+    }
+
+    #[test]
+    fn merge_sorted_into_reuses_buffer_and_matches_allocating_path() {
+        let a = FlatView::from_pairs(vec![(0, 4), (8, 4)]).unwrap();
+        let b = FlatView::from_pairs(vec![(4, 4), (100, 2)]).unwrap();
+        let views = [&a, &b];
+        // Arena pre-filled with stale segments: both the native override
+        // and the default (delegating) impl must fully replace it.
+        let mut native_out = FlatView::from_pairs(vec![(900, 3), (901, 3)]).unwrap();
+        NativeEngine.merge_sorted_into(&views, &mut native_out).unwrap();
+        let mut fallback_out = FlatView::from_pairs(vec![(900, 3)]).unwrap();
+        ConcatFallback.merge_sorted_into(&views, &mut fallback_out).unwrap();
+        let want = NativeEngine.merge_sorted(&views).unwrap();
+        assert_eq!(native_out, want);
+        assert_eq!(fallback_out, want);
+        assert_eq!(want.iter().collect::<Vec<_>>(), vec![(0, 12), (100, 2)]);
     }
 }

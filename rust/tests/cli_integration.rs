@@ -30,7 +30,72 @@ fn run_with_verify_succeeds_and_prints_breakdown() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("io_phase"));
-    assert!(text.contains("verify: 8/8 ranks OK"));
+    assert!(text.contains("verify[write]: 8/8 ranks OK"));
+}
+
+#[test]
+fn run_direction_read_verifies_two_phase_and_tam() {
+    for algo in ["two-phase", "tam:4"] {
+        let out = tamio()
+            .args([
+                "run", "--nodes", "2", "--ppn", "4", "--workload", "strided",
+                "--algorithm", algo, "--stripe_size", "4096", "--stripe_count", "4",
+                "--direction", "read",
+            ])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{algo}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("direction=read"), "{algo}:\n{text}");
+        // Read runs verify the gathered bytes even without --verify.
+        assert!(text.contains("verify[read]: 8/8 ranks OK"), "{algo}:\n{text}");
+    }
+}
+
+#[test]
+fn run_direction_both_prints_write_and_read_verdicts() {
+    for algo in ["two-phase", "tam:4"] {
+        let out = tamio()
+            .args([
+                "run", "--nodes", "2", "--ppn", "4", "--workload", "strided",
+                "--algorithm", algo, "--stripe_size", "4096", "--stripe_count", "4",
+                "--direction", "both", "--verify",
+            ])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{algo}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("verify[write]: 8/8 ranks OK"), "{algo}:\n{text}");
+        assert!(text.contains("verify[read]: 8/8 ranks OK"), "{algo}:\n{text}");
+        assert!(text.contains("[write]") && text.contains("[read]"), "{algo}:\n{text}");
+    }
+}
+
+#[test]
+fn sweep_direction_both_prints_write_and_read_panels() {
+    // BTIO at tiny scale (P = 4 is square); the read panel only prints if
+    // every bar's gathered bytes verified (experiments::ensure_verified).
+    let out = tamio()
+        .args([
+            "sweep", "--nodes", "2", "--ppn", "2", "--workload", "btio",
+            "--scale", "100000", "--stripe_size", "4096", "--stripe_count", "4",
+            "--pl", "2,4", "--direction", "both",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("-- write panel --"), "missing write panel:\n{text}");
+    assert!(text.contains("-- read panel --"), "missing read panel:\n{text}");
+    assert!(text.contains("P_L=2") && text.contains("two-phase"), "{text}");
 }
 
 #[test]

@@ -236,9 +236,9 @@ fn two_phase_equivalent_to_tam_with_pl_eq_p() {
     cfg.ppn = 8;
     cfg.workload = WorkloadKind::Strided;
     cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 16 });
-    let (tam_run, _) = run_once(&cfg).unwrap();
+    let (tam_run, _) = run_once(&cfg).unwrap().remove(0);
     cfg.algorithm = Algorithm::TwoPhase;
-    let (two_run, _) = run_once(&cfg).unwrap();
+    let (two_run, _) = run_once(&cfg).unwrap().remove(0);
     assert_eq!(tam_run.counters.msgs_intra, 0);
     assert_eq!(tam_run.counters.msgs_inter, two_run.counters.msgs_inter);
     assert_eq!(tam_run.counters.max_in_degree, two_run.counters.max_in_degree);

@@ -70,11 +70,11 @@ fn full_collective_identical_under_both_engines() {
     cfg.verify = true;
     cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 4 });
 
-    let (xla_run, xla_verify) = run_once_with_engine(&cfg, &xla).unwrap();
+    let (xla_run, xla_verify) = run_once_with_engine(&cfg, &xla).unwrap().remove(0);
     assert!(xla_verify.unwrap().passed(), "xla engine verification");
 
     cfg.engine = EngineKind::Native;
-    let (native_run, native_verify) = run_once(&cfg).unwrap();
+    let (native_run, native_verify) = run_once(&cfg).unwrap().remove(0);
     assert!(native_verify.unwrap().passed());
 
     // Identical aggregation results -> identical counters and times.

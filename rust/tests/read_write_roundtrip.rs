@@ -8,18 +8,23 @@
 //! against the byte-accurate storage model.
 
 use tamio::cluster::Topology;
+use tamio::config::RunConfig;
 use tamio::coordinator::breakdown::CpuModel;
-use tamio::coordinator::collective::{run_collective_read, run_collective_write, Algorithm};
+use tamio::coordinator::collective::{
+    run_collective_read, run_collective_write, Algorithm, Direction, DirectionSpec,
+};
 use tamio::coordinator::merge::ReqBatch;
 use tamio::coordinator::placement::GlobalPlacement;
 use tamio::coordinator::tam::TamConfig;
 use tamio::coordinator::twophase::CollectiveCtx;
+use tamio::experiments::run_once;
 use tamio::lustre::{IoModel, LustreConfig, LustreFile};
 use tamio::mpisim::rank::deterministic_payload;
 use tamio::mpisim::FlatView;
 use tamio::netmodel::NetParams;
 use tamio::runtime::engine::NativeEngine;
 use tamio::util::SplitMix64;
+use tamio::workloads::WorkloadKind;
 
 struct Fx {
     topo: Topology,
@@ -181,6 +186,49 @@ fn roundtrip_uneven_topology_and_single_aggregator() {
     let tam = Algorithm::Tam(TamConfig { total_local_aggregators: 7 });
     check_roundtrip(&fx, 1, 3, 100, &ranks, Algorithm::TwoPhase, &[Algorithm::TwoPhase, tam]);
     check_roundtrip(&fx, 1, 3, 100, &ranks, tam, &[tam]);
+}
+
+#[test]
+fn roundtrip_through_run_once_driver() {
+    // Exercise the config→driver→coordinator plumbing rather than calling
+    // the coordinator directly: `--direction both` through
+    // `experiments::run_once` must produce a verified write and a verified
+    // read for both algorithms, driven off the same RunConfig.
+    let mut cfg = RunConfig::default();
+    cfg.nodes = 2;
+    cfg.ppn = 4;
+    cfg.workload = WorkloadKind::Strided;
+    cfg.lustre = LustreConfig::new(1 << 12, 4);
+    cfg.verify = true;
+    cfg.direction = DirectionSpec::Both;
+    for algo in [
+        Algorithm::TwoPhase,
+        Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
+    ] {
+        cfg.algorithm = algo;
+        let results = run_once(&cfg).unwrap();
+        assert_eq!(results.len(), 2, "{}", algo.name());
+        for ((run, verify), want_dir) in
+            results.iter().zip([Direction::Write, Direction::Read])
+        {
+            assert_eq!(run.direction, want_dir, "{}", algo.name());
+            let v = verify
+                .as_ref()
+                .unwrap_or_else(|| panic!("{} [{}] missing verify", run.label, run.direction));
+            assert!(
+                v.passed(),
+                "{} [{}]: {}/{} ranks",
+                run.label,
+                run.direction,
+                v.ok,
+                v.total
+            );
+            assert!(run.breakdown.total() > 0.0);
+            assert!(run.counters.bytes > 0);
+        }
+        // One exchange engine: both directions ran the same round count.
+        assert_eq!(results[0].0.counters.rounds, results[1].0.counters.rounds);
+    }
 }
 
 #[test]

@@ -39,6 +39,12 @@ else
     echo "warn: clippy not installed; skipping" >&2
 fi
 
+# Benches are harness = false and excluded from `cargo test`; compile
+# them unconditionally so bench-only breakage is caught in tier-1 even
+# when BENCH=1 is not set.
+echo "== cargo bench --no-run (bench compile gate) =="
+cargo bench --no-run
+
 if [ "${BENCH:-0}" = "1" ]; then
     echo "== hot-path bench (writes BENCH_hotpath.json) =="
     cargo bench --bench hotpath
