@@ -29,7 +29,10 @@ use std::time::Duration;
 use tamio::benchkit::{bench, black_box, section, JsonReport};
 use tamio::cluster::Topology;
 use tamio::coordinator::breakdown::CpuModel;
-use tamio::coordinator::collective::{run_collective_read, run_collective_write, Algorithm};
+use tamio::coordinator::collective::{
+    run_collective_read, run_collective_read_with, run_collective_write,
+    run_collective_write_with, Algorithm, ExchangeArena,
+};
 use tamio::coordinator::filedomain::FileDomains;
 use tamio::coordinator::merge::{
     scatter_into_binary_search, scatter_into_buf, sort_coalesce_pairs, ReqBatch,
@@ -44,7 +47,7 @@ use tamio::mpisim::FlatView;
 use tamio::netmodel::phase::{cost_phase, Message};
 use tamio::netmodel::NetParams;
 use tamio::runtime::engine::{NativeEngine, SortEngine};
-use tamio::util::SplitMix64;
+use tamio::util::{par_map, SplitMix64};
 
 /// Request counts per experiment (the ISSUE's 1k/16k/128k grid).
 const SIZES: [usize; 3] = [1_000, 16_000, 128_000];
@@ -388,6 +391,145 @@ fn bench_collective_read(report: &mut JsonReport, budget: Duration) {
     }
 }
 
+/// The paper's headline scale point: 16384 ranks on 256 nodes (§V, the
+/// 29× configuration).  One contiguous 512-byte block per rank (8 pieces)
+/// keeps the byte volume at 8 MiB so the cases measure the *per-rank
+/// machinery* — CSR-slab `calc_my_req` across all ranks, and the
+/// arena-backed round loop end-to-end in both directions with a
+/// persistent `ExchangeArena` (the steady state a sweep runs in).
+fn bench_scale_16k(report: &mut JsonReport, budget: Duration) {
+    const NODES: usize = 256;
+    const PPN: usize = 64;
+    const N_AGG: usize = 64;
+    const BLOCK: u64 = 512;
+    const PIECES: u64 = 8;
+    let topo = Topology::new(NODES, PPN);
+    let p = topo.nprocs();
+    let net = NetParams::default();
+    let cpu = CpuModel::default();
+    let io = IoModel::default();
+    let eng = NativeEngine;
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: N_AGG,
+    };
+    let ranks: Vec<(usize, ReqBatch)> = (0..p)
+        .map(|r| {
+            let base = r as u64 * BLOCK;
+            let q = BLOCK / PIECES;
+            let view =
+                FlatView::from_pairs((0..PIECES).map(|i| (base + i * q, q)).collect()).unwrap();
+            (r, ReqBatch::new(view, deterministic_payload(43, r, BLOCK)))
+        })
+        .collect();
+    let total_reqs = (p as u64) * PIECES;
+
+    section(&format!("scale point: P={p} ({NODES} nodes x {PPN} ppn), {total_reqs} requests"));
+
+    // calc_my_req across every rank (the setup stage the CSR slab + par
+    // classify target), stripe sized so requests straddle boundaries.
+    let domains = FileDomains::new(
+        LustreConfig::new(4096, N_AGG),
+        0,
+        p as u64 * BLOCK,
+        N_AGG,
+    );
+    let meta_batches: Vec<ReqBatch> = ranks
+        .iter()
+        .map(|(_, b)| ReqBatch::new(b.view.clone(), Vec::new()))
+        .collect();
+    let r = bench(&format!("calc_my_req_16k/{total_reqs}"), budget, || {
+        let reqs = par_map(
+            meta_batches.iter().collect::<Vec<_>>(),
+            |b| calc_my_req(black_box(&domains), b),
+        );
+        black_box(reqs.iter().map(|mr| mr.pieces).sum::<u64>());
+    });
+    println!("{r}   ({:.2} Mreqs/s)", r.per_second(total_reqs) / 1e6);
+    report.add(&r);
+
+    // End-to-end, both directions, with the clone cost reported so
+    // readers can subtract it from the collective medians.
+    let clone_cost = bench(&format!("ranks_clone_16k/{total_reqs}"), budget, || {
+        black_box(ranks.clone());
+    });
+    println!("{clone_cost}");
+    report.add(&clone_cost);
+
+    for (label, algo) in [
+        ("collective_write_2p_16k", Algorithm::TwoPhase),
+        (
+            "collective_write_tam_16k",
+            Algorithm::Tam(TamConfig { total_local_aggregators: 256 }),
+        ),
+    ] {
+        let mut arena = ExchangeArena::default();
+        let mut file = LustreFile::new(LustreConfig::new(4096, N_AGG));
+        // Warm-up: overwrite regime + warm arena (the sweep steady state).
+        run_collective_write_with(&ctx, algo, ranks.clone(), &mut file, &mut arena)
+            .expect("warm-up");
+        let r = bench(&format!("{label}/{total_reqs}"), budget, || {
+            black_box(
+                run_collective_write_with(
+                    black_box(&ctx),
+                    black_box(algo),
+                    black_box(ranks.clone()),
+                    black_box(&mut file),
+                    black_box(&mut arena),
+                )
+                .expect("write"),
+            );
+        });
+        println!("{r}   ({:.2} Mreqs/s)", r.per_second(total_reqs) / 1e6);
+        report.add(&r);
+    }
+
+    let mut file = LustreFile::new(LustreConfig::new(4096, N_AGG));
+    run_collective_write(&ctx, Algorithm::TwoPhase, ranks.clone(), &mut file)
+        .expect("seed write");
+    let views: Vec<(usize, FlatView)> =
+        ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+    let views_clone = bench(&format!("views_clone_16k/{total_reqs}"), budget, || {
+        black_box(views.clone());
+    });
+    println!("{views_clone}");
+    report.add(&views_clone);
+    for (label, algo) in [
+        ("collective_read_2p_16k", Algorithm::TwoPhase),
+        (
+            "collective_read_tam_16k",
+            Algorithm::Tam(TamConfig { total_local_aggregators: 256 }),
+        ),
+    ] {
+        let mut arena = ExchangeArena::default();
+        // Correctness pin + arena warm-up in one pass.
+        let (got, _) = run_collective_read_with(&ctx, algo, views.clone(), &file, &mut arena)
+            .expect("pin read");
+        for ((r, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "{label} rank {r} mismatch");
+        }
+        let r = bench(&format!("{label}/{total_reqs}"), budget, || {
+            black_box(
+                run_collective_read_with(
+                    black_box(&ctx),
+                    black_box(algo),
+                    black_box(views.clone()),
+                    black_box(&file),
+                    black_box(&mut arena),
+                )
+                .expect("read"),
+            );
+        });
+        println!("{r}   ({:.2} Mreqs/s)", r.per_second(total_reqs) / 1e6);
+        report.add(&r);
+    }
+}
+
 fn main() {
     let budget = Duration::from_millis(300);
     let mut report = JsonReport::new();
@@ -398,6 +540,7 @@ fn main() {
     bench_read_view(&mut report, budget);
     bench_collective_write(&mut report, budget);
     bench_collective_read(&mut report, budget);
+    bench_scale_16k(&mut report, budget);
     report.write("BENCH_hotpath.json").expect("write BENCH_hotpath.json");
     println!("\nwrote BENCH_hotpath.json");
 }

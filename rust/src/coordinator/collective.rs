@@ -21,7 +21,7 @@
 
 use crate::coordinator::breakdown::{Breakdown, Counters};
 use crate::coordinator::filedomain::FileDomains;
-use crate::coordinator::merge::{gather_from_buf, ReqBatch, RoundScratch};
+use crate::coordinator::merge::{gather_from_buf, gather_slices_from_buf, ReqBatch, RoundScratch};
 use crate::coordinator::placement::select_global_aggregators;
 use crate::coordinator::reqcalc::{calc_my_req, metadata_bytes, MyReqs};
 use crate::coordinator::tam::{intra_node_read_views, tam_write, TamConfig};
@@ -31,6 +31,34 @@ use crate::lustre::{LustreConfig, LustreFile, OstStats};
 use crate::mpisim::FlatView;
 use crate::netmodel::phase::{cost_phase, Message, PendingQueue};
 use crate::util::par_map;
+
+/// Persistent buffers of the exchange round loop, owned by the caller so
+/// their capacity survives across rounds *and* across `run_*` invocations
+/// within a sweep (DESIGN.md §Memory layout): the per-aggregator
+/// [`RoundScratch`] slots (staging slabs, merged-view arena, payload
+/// buffer, merge-heap storage), the per-round message list, the
+/// [`PendingQueue`] (with its sharded phase-cost scratch) and the dense
+/// metadata-phase accumulator.  A
+/// steady-state round allocates (near-)zero — enforced by the
+/// counting-allocator test `tests/alloc_steady_state.rs` — which is what
+/// makes the paper's 16384-rank/256-node sweep point tractable.
+///
+/// `Default::default()` is an empty arena; every `run_*` entry point that
+/// does not take one constructs its own (one-shot callers pay only the
+/// warm-up they always paid).
+#[derive(Debug, Default)]
+pub struct ExchangeArena {
+    /// Per-aggregator round scratch (grown to the exchange's `n_agg` on
+    /// demand; surplus slots from a larger previous exchange stay warm
+    /// and idle).
+    pub scratch: Vec<RoundScratch>,
+    /// Per-round exchange message list.
+    pub data_msgs: Vec<Message>,
+    /// Pending-send queue (Isend model) + sharded phase-cost scratch.
+    pub pending: PendingQueue,
+    /// Dense per-aggregator request totals for the metadata phase.
+    pub meta_reqs: Vec<u64>,
+}
 
 /// Direction axis of the collective pipeline: one round-exchange engine
 /// ([`run_exchange`]) serves both directions.
@@ -164,16 +192,29 @@ pub struct CollectiveOutcome {
     pub counters: Counters,
 }
 
-/// Run a collective write with the selected algorithm.
+/// Run a collective write with the selected algorithm (one-shot arena;
+/// sweeps use [`run_collective_write_with`]).
 pub fn run_collective_write(
     ctx: &CollectiveCtx,
     algo: Algorithm,
     ranks: Vec<(usize, ReqBatch)>,
     file: &mut LustreFile,
 ) -> Result<CollectiveOutcome> {
+    run_collective_write_with(ctx, algo, ranks, file, &mut ExchangeArena::default())
+}
+
+/// [`run_collective_write`] with a caller-owned [`ExchangeArena`], so
+/// repeated collectives (sweeps, benches) reuse every exchange buffer.
+pub fn run_collective_write_with(
+    ctx: &CollectiveCtx,
+    algo: Algorithm,
+    ranks: Vec<(usize, ReqBatch)>,
+    file: &mut LustreFile,
+    arena: &mut ExchangeArena,
+) -> Result<CollectiveOutcome> {
     let out = match algo {
-        Algorithm::TwoPhase => two_phase_write(ctx, ranks, file)?,
-        Algorithm::Tam(tam) => tam_write(ctx, &tam, ranks, file)?,
+        Algorithm::TwoPhase => two_phase_write(ctx, ranks, file, arena)?,
+        Algorithm::Tam(tam) => tam_write(ctx, &tam, ranks, file, arena)?,
     };
     Ok(CollectiveOutcome { breakdown: out.breakdown, counters: out.counters })
 }
@@ -191,10 +232,22 @@ pub fn run_collective_read(
     views: Vec<(usize, FlatView)>,
     file: &LustreFile,
 ) -> Result<(Vec<(usize, Vec<u8>)>, CollectiveOutcome)> {
+    run_collective_read_with(ctx, algo, views, file, &mut ExchangeArena::default())
+}
+
+/// [`run_collective_read`] with a caller-owned [`ExchangeArena`] (the
+/// write twin is [`run_collective_write_with`]).
+pub fn run_collective_read_with(
+    ctx: &CollectiveCtx,
+    algo: Algorithm,
+    views: Vec<(usize, FlatView)>,
+    file: &LustreFile,
+    arena: &mut ExchangeArena,
+) -> Result<(Vec<(usize, Vec<u8>)>, CollectiveOutcome)> {
     let posted: u64 = views.iter().map(|(_, v)| v.len() as u64).sum();
     match algo {
         Algorithm::TwoPhase => {
-            let (filled, out) = exchange_read(ctx, views, file)?;
+            let (filled, out) = exchange_read(ctx, views, file, arena)?;
             let mut counters = out.counters;
             counters.reqs_posted = posted;
             Ok((
@@ -205,7 +258,7 @@ pub fn run_collective_read(
         Algorithm::Tam(tam) => {
             let intra = intra_node_read_views(ctx, &tam, &views)?;
             let assignment = intra.assignment;
-            let (agg_filled, out) = exchange_read(ctx, intra.agg_views, file)?;
+            let (agg_filled, out) = exchange_read(ctx, intra.agg_views, file, arena)?;
             let mut bd = out.breakdown;
             let mut counters = out.counters;
             bd.intra_sort = intra.sort;
@@ -302,11 +355,14 @@ impl ExchangeIo<'_> {
 /// Returns per-requester `(rank, view, payload)` in input order (payloads
 /// empty on writes), plus the outcome.  Engine and storage failures
 /// propagate as `Err` out of the parallel per-aggregator maps instead of
-/// aborting a worker thread.
+/// aborting a worker thread (on that error path the arena's scratch slots
+/// are dropped and re-grown by the next exchange — capacity, never
+/// correctness, is lost).
 pub fn run_exchange(
     ctx: &CollectiveCtx,
     requesters: Vec<(usize, ReqBatch)>,
     mut io: ExchangeIo<'_>,
+    arena: &mut ExchangeArena,
 ) -> Result<(Vec<(usize, FlatView, Vec<u8>)>, ExchangeOutcome)> {
     let direction = io.direction();
     let mut bd = Breakdown::default();
@@ -331,8 +387,10 @@ pub fn run_exchange(
     counters.bytes = requesters.iter().map(|(_, b)| b.view.total_bytes()).sum();
 
     // ---- ADIOI_LUSTRE_Calc_my_req: classify every requester's view.
-    // Runs concurrently on all requesters → simulated time is the max.
-    let mut my_reqs: Vec<(usize, FlatView, MyReqs)> = par_map(requesters, |(rank, batch)| {
+    // Runs concurrently on all requesters (the same par_map machinery the
+    // aggregator merge uses — at 16384 ranks the serial per-rank request
+    // build dominated setup) → simulated time is the max.
+    let my_reqs: Vec<(usize, FlatView, MyReqs)> = par_map(requesters, |(rank, batch)| {
         let mr = calc_my_req(&domains, &batch);
         (rank, batch.view, mr)
     });
@@ -342,12 +400,17 @@ pub fn run_exchange(
         .fold(0.0, f64::max);
 
     // ---- ADIOI_Calc_others_req: metadata to the aggregators (who needs
-    // what), once, covering all rounds.  Per-agg totals come straight off
-    // the dense destination lists.
+    // what), once, covering all rounds.  Per-agg totals accumulate into
+    // the arena's dense counter instead of a fresh Vec per rank.
     let mut meta_msgs: Vec<Message> = Vec::new();
     for (rank, _, mr) in &my_reqs {
-        for (agg, n) in mr.reqs_per_agg() {
-            meta_msgs.push(Message::new(*rank, agg_ranks[agg], metadata_bytes(n)));
+        arena.meta_reqs.clear();
+        arena.meta_reqs.resize(n_agg, 0);
+        mr.reqs_per_agg_into(&mut arena.meta_reqs);
+        for (agg, &n) in arena.meta_reqs.iter().enumerate() {
+            if n > 0 {
+                meta_msgs.push(Message::new(*rank, agg_ranks[agg], metadata_bytes(n)));
+            }
         }
     }
     let meta_cost = cost_phase(ctx.net, ctx.topo, &meta_msgs);
@@ -371,36 +434,43 @@ pub fn run_exchange(
         Direction::Read => vec![0; my_reqs.len()],
         Direction::Write => Vec::new(),
     };
-    let mut pending = PendingQueue::new();
-    let mut scratch: Vec<RoundScratch> = (0..n_agg).map(|_| RoundScratch::default()).collect();
-    if direction == Direction::Read {
-        for slot in scratch.iter_mut() {
-            slot.stats.resize(io.file_config().stripe_count, OstStats::default());
-        }
+    // Arena slots: grow to n_agg, re-zero per-exchange state (stats slots
+    // exist on reads only), keep all capacity.
+    arena.pending.reset();
+    if arena.scratch.len() < n_agg {
+        arena.scratch.resize_with(n_agg, RoundScratch::default);
     }
-    let mut data_msgs: Vec<Message> = Vec::new();
+    let n_osts = match direction {
+        Direction::Read => io.file_config().stripe_count,
+        Direction::Write => 0,
+    };
+    for slot in arena.scratch.iter_mut() {
+        slot.reset_exchange(n_osts);
+    }
+    let mut scratch = std::mem::take(&mut arena.scratch);
     for round in 0..n_rounds {
-        // Stage this round's batches per aggregator.  Batches are MOVED
-        // out of the requester state (no payload clone on the hot path);
-        // on reads the batch is metadata only and the matching bytes
-        // travel back as the reply.
-        data_msgs.clear();
+        // Stage this round's requests per aggregator: slab slices out of
+        // the requester's MyReqs are memcpy'd into the aggregator's
+        // staging slab (capacity-warm after round 0 — the simulator's
+        // stand-in for the message landing in a receive buffer); on reads
+        // the slice is metadata only and the matching bytes travel back
+        // as the reply.
+        arena.data_msgs.clear();
         for slot in scratch.iter_mut() {
             slot.reset_round();
         }
-        for (i, (rank, _, mr)) in my_reqs.iter_mut().enumerate() {
-            for (agg, b) in mr.take_round(round) {
-                let bytes = b.view.total_bytes();
-                data_msgs.push(match direction {
-                    Direction::Write => Message::new(*rank, agg_ranks[agg], bytes),
-                    Direction::Read => Message::new(agg_ranks[agg], *rank, bytes),
+        for (i, (rank, _, mr)) in my_reqs.iter().enumerate() {
+            for (agg, s) in mr.slices_in_round(round) {
+                arena.data_msgs.push(match direction {
+                    Direction::Write => Message::new(*rank, agg_ranks[agg], s.bytes),
+                    Direction::Read => Message::new(agg_ranks[agg], *rank, s.bytes),
                 });
-                scratch[agg].stage(i, b);
+                scratch[agg].stage(i, s.offsets, s.lengths, s.payload, s.bytes);
             }
         }
-        let comm = pending.cost_round(ctx.net, ctx.topo, &data_msgs);
+        let comm = arena.pending.cost_round(ctx.net, ctx.topo, &arena.data_msgs);
         bd.inter_comm += comm.time;
-        counters.msgs_inter += data_msgs.len();
+        counters.msgs_inter += arena.data_msgs.len();
         counters.max_in_degree = counters.max_in_degree.max(comm.max_in_degree);
 
         // Aggregator-side merge (+ payload scatter on writes, vectored
@@ -449,12 +519,14 @@ pub fn run_exchange(
                 ExchangeIo::Read(_) => {
                     // Requester-side assembly: ascending aggregator within
                     // the round, ascending rounds overall ⇒ straight
-                    // concatenation.
-                    for (i, b) in slot.owners.iter().zip(&slot.batches) {
-                        let n = b.view.total_bytes() as usize;
-                        let dst = &mut payloads[*i][cursors[*i]..cursors[*i] + n];
-                        gather_from_buf(&slot.merged, &slot.payload, &b.view, dst);
-                        cursors[*i] += n;
+                    // concatenation, gathered per staged stream slice.
+                    for s in 0..slot.k {
+                        let i = slot.owners[s];
+                        let (vo, vl) = slot.stream(s);
+                        let n = slot.stream_bytes(s);
+                        let dst = &mut payloads[i][cursors[i]..cursors[i] + n];
+                        gather_slices_from_buf(&slot.merged, &slot.payload, vo, vl, dst);
+                        cursors[i] += n;
                     }
                 }
             }
@@ -486,6 +558,9 @@ pub fn run_exchange(
         }
     }
 
+    // Hand the (still warm) slots back to the arena for the next exchange.
+    arena.scratch = scratch;
+
     let filled: Vec<(usize, FlatView, Vec<u8>)> = match direction {
         Direction::Write => my_reqs
             .into_iter()
@@ -511,6 +586,7 @@ fn exchange_read(
     ctx: &CollectiveCtx,
     requesters: Vec<(usize, FlatView)>,
     file: &LustreFile,
+    arena: &mut ExchangeArena,
 ) -> Result<(Vec<(usize, FlatView, Vec<u8>)>, ExchangeOutcome)> {
     // Volume counters reflect the views as posted, not their unions.
     let posted_reqs: u64 = requesters.iter().map(|(_, v)| v.len() as u64).sum();
@@ -529,7 +605,7 @@ fn exchange_read(
             }
         })
         .collect();
-    let (filled, mut out) = run_exchange(ctx, prepared, ExchangeIo::Read(file))?;
+    let (filled, mut out) = run_exchange(ctx, prepared, ExchangeIo::Read(file), arena)?;
     out.counters.reqs_after_intra = posted_reqs;
     out.counters.bytes = posted_bytes;
     let filled = filled
@@ -813,19 +889,81 @@ mod tests {
         };
         let mut file = LustreFile::new(LustreConfig::new(64, 4));
         let ranks = make_ranks(&topo);
+        // ONE arena across both directions: write-exchange state (staging
+        // payloads, pending counts) must not leak into the read.
+        let mut arena = ExchangeArena::default();
         let (_, wrote) =
-            run_exchange(&ctx, ranks.clone(), ExchangeIo::Write(&mut file)).unwrap();
+            run_exchange(&ctx, ranks.clone(), ExchangeIo::Write(&mut file), &mut arena)
+                .unwrap();
         let readers: Vec<(usize, ReqBatch)> = ranks
             .iter()
             .map(|(r, b)| (*r, ReqBatch::new(b.view.clone(), Vec::new())))
             .collect();
-        let (filled, read) = run_exchange(&ctx, readers, ExchangeIo::Read(&file)).unwrap();
+        let (filled, read) =
+            run_exchange(&ctx, readers, ExchangeIo::Read(&file), &mut arena).unwrap();
         assert_eq!(wrote.counters.rounds, read.counters.rounds);
         assert_eq!(wrote.counters.msgs_inter, read.counters.msgs_inter);
         assert_eq!(wrote.counters.reqs_at_io, read.counters.reqs_at_io);
         assert_eq!(wrote.counters.bytes, read.counters.bytes);
         for ((rank, _, payload), (_, want)) in filled.iter().zip(ranks.iter()) {
             assert_eq!(payload, &want.payload, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn reused_arena_matches_fresh_arena_exactly() {
+        // A warm arena (sized by a bigger earlier exchange, pending queue
+        // exercised under Isend) must reproduce the fresh-arena outcome
+        // bit-for-bit — the cross-invocation reuse contract of the sweep
+        // drivers.
+        let (topo, mut net, cpu, io, eng) = fixture();
+        net.send_mode = crate::netmodel::SendMode::Isend;
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let ranks = make_ranks(&topo);
+        // Fresh-arena reference.
+        let mut f1 = LustreFile::new(LustreConfig::new(64, 4));
+        let fresh = run_collective_write(&ctx, Algorithm::TwoPhase, ranks.clone(), &mut f1)
+            .unwrap();
+        // Warm the arena on a different-shaped exchange (more bytes, more
+        // rounds), then rerun the reference exchange through it.
+        let mut arena = ExchangeArena::default();
+        let big: Vec<(usize, ReqBatch)> = (0..topo.nprocs())
+            .map(|r| {
+                let view = FlatView::from_pairs(vec![(r as u64 * 512, 512)]).unwrap();
+                (r, ReqBatch::new(view, deterministic_payload(31, r, 512)))
+            })
+            .collect();
+        let mut fwarm = LustreFile::new(LustreConfig::new(64, 4));
+        run_collective_write_with(&ctx, Algorithm::TwoPhase, big, &mut fwarm, &mut arena)
+            .unwrap();
+        let mut f2 = LustreFile::new(LustreConfig::new(64, 4));
+        let warm =
+            run_collective_write_with(&ctx, Algorithm::TwoPhase, ranks.clone(), &mut f2, &mut arena)
+                .unwrap();
+        assert_eq!(fresh.counters.rounds, warm.counters.rounds);
+        assert_eq!(fresh.counters.msgs_inter, warm.counters.msgs_inter);
+        assert_eq!(fresh.counters.reqs_at_io, warm.counters.reqs_at_io);
+        assert_eq!(fresh.counters.max_in_degree, warm.counters.max_in_degree);
+        assert_eq!(fresh.breakdown.inter_comm, warm.breakdown.inter_comm);
+        assert_eq!(fresh.breakdown.inter_sort, warm.breakdown.inter_sort);
+        assert_eq!(fresh.breakdown.io_phase, warm.breakdown.io_phase);
+        let total = topo.nprocs() as u64 * 100;
+        assert_eq!(f1.read_at(0, total), f2.read_at(0, total));
+        // Read direction through the same (now twice-warmed) arena.
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let (got, _) =
+            run_collective_read_with(&ctx, Algorithm::TwoPhase, views, &f2, &mut arena).unwrap();
+        for ((r, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "rank {r} warm-arena read");
         }
     }
 }

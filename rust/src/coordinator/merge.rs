@@ -8,16 +8,20 @@
 //! metadata step can also be executed by the XLA engine
 //! ([`crate::runtime::engine`]) interchangeably.
 //!
-//! The streaming pipeline (DESIGN.md §Hot path) is:
-//! [`crate::runtime::engine::SortEngine::merge_sorted_into`] →
-//! [`merge_views_into`] (`O(n log k)`, gallop-accelerated on runs, merged
-//! view built in a reused arena) → [`scatter_into_buf`] (linear
-//! two-pointer payload scatter into a reusable buffer).  [`RoundScratch`]
-//! owns the per-aggregator buffers that survive across exchange rounds —
-//! for **both directions** of the collective — so the steady state
-//! allocates nothing: writes merge + scatter peer payloads and hand the
-//! buffer to storage, reads merge peer metadata, let storage fill the
-//! buffer, and [`gather_from_buf`] copies each peer's bytes back out.
+//! The streaming pipeline (DESIGN.md §Hot path, §Memory layout) is:
+//! [`crate::runtime::engine::SortEngine::merge_sorted_csr_into`] →
+//! [`merge_csr_into`] (`O(n log k)`, gallop-accelerated on runs, merged
+//! view built in a reused arena, heap storage reused via
+//! [`MergeScratch`]) → [`scatter_csr_into_buf`] (linear two-pointer
+//! payload scatter into a reusable buffer).  [`RoundScratch`] owns the
+//! per-aggregator buffers that survive across exchange rounds *and
+//! exchanges* (its slots live in the `ExchangeArena`) — for **both
+//! directions** of the collective — so the steady state allocates
+//! nothing: writes merge + scatter peer payloads and hand the buffer to
+//! storage, reads merge peer metadata, let storage fill the buffer, and
+//! [`gather_slices_from_buf`] copies each peer's bytes back out.  The
+//! slice-per-stream twins ([`merge_views_into`], [`scatter_into_buf`],
+//! [`gather_from_buf`]) remain the off-hot-path and reference forms.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -117,6 +121,68 @@ pub fn merge_views_into(views: &[&FlatView], out: &mut FlatView) {
     }
 }
 
+/// Reusable backing storage for the CSR heap merge — the heap's `Vec` is
+/// borrowed out, heapified in place, and handed back after the merge, so
+/// a steady-state round performs no allocation at all (the last per-call
+/// allocation of the pre-arena merge path).
+#[derive(Debug, Default)]
+pub struct MergeScratch {
+    heap: Vec<Reverse<(u64, u64, usize, usize)>>,
+}
+
+/// [`merge_views_into`] over CSR-staged streams: stream `s` is rows
+/// `starts[s]..starts[s + 1]` of the `offsets`/`lengths` slab (the
+/// [`RoundScratch`] staging layout).  Pops in the exact order of the
+/// slice-per-stream algorithm — heap entries carry absolute slab rows,
+/// and two entries of the same stream never coexist in the heap, so the
+/// `(offset, length, stream)` tie-break is untouched.
+pub fn merge_csr_into(
+    offsets: &[u64],
+    lengths: &[u64],
+    starts: &[usize],
+    scratch: &mut MergeScratch,
+    out: &mut FlatView,
+) {
+    out.clear();
+    let k = starts.len().saturating_sub(1);
+    scratch.heap.clear();
+    for s in 0..k {
+        let lo = starts[s];
+        if lo < starts[s + 1] {
+            scratch.heap.push(Reverse((offsets[lo], lengths[lo], s, lo)));
+        }
+    }
+    // Heapify in place (no allocation); the Vec is recovered at the end.
+    let mut heap = BinaryHeap::from(std::mem::take(&mut scratch.heap));
+    let mut last: Option<(u64, u64)> = None;
+    while let Some(Reverse((off, len, s, i))) = heap.pop() {
+        absorb(&mut last, out, off, len);
+        let hi = starts[s + 1];
+        let mut i = i;
+        loop {
+            if i + 1 >= hi {
+                break;
+            }
+            let next = (offsets[i + 1], lengths[i + 1], s, i + 1);
+            match heap.peek() {
+                Some(&Reverse(top)) if next > top => {
+                    heap.push(Reverse(next));
+                    break;
+                }
+                _ => {
+                    absorb(&mut last, out, next.0, next.1);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if let Some((lo, ll)) = last {
+        out.push(lo, ll);
+    }
+    scratch.heap = heap.into_vec();
+    scratch.heap.clear();
+}
+
 /// Merge request batches: metadata via [`merge_views`], then payload
 /// scatter into one contiguous buffer ordered by the merged view.
 ///
@@ -185,6 +251,61 @@ pub fn scatter_into_buf(merged: &FlatView, batches: &[ReqBatch], payload: &mut V
     moved
 }
 
+/// [`scatter_into_buf`] over CSR-staged streams (the [`RoundScratch`]
+/// staging layout): stream `s` is slab rows `starts[s]..starts[s + 1]`
+/// with shipped payload bytes `pay_starts[s]..pay_starts[s + 1]` of
+/// `in_payload`.  A metadata-only stream (empty payload span) is
+/// skipped, its region staying zero-filled — exactly
+/// [`scatter_into_buf`]'s treatment of empty-payload batches.  Returns
+/// the bytes moved.
+#[allow(clippy::too_many_arguments)]
+pub fn scatter_csr_into_buf(
+    merged: &FlatView,
+    in_offsets: &[u64],
+    in_lengths: &[u64],
+    starts: &[usize],
+    pay_starts: &[usize],
+    in_payload: &[u8],
+    payload_out: &mut Vec<u8>,
+) -> u64 {
+    let total = merged.total_bytes() as usize;
+    payload_out.clear();
+    payload_out.resize(total, 0);
+    if in_payload.is_empty() {
+        return 0;
+    }
+    let seg_offsets = merged.offsets();
+    let seg_lengths = merged.lengths();
+    let mut moved = 0u64;
+    let k = starts.len().saturating_sub(1);
+    for s in 0..k {
+        let mut cursor = pay_starts[s];
+        if cursor == pay_starts[s + 1] {
+            // Metadata-only stream: no bytes shipped, region stays zero.
+            continue;
+        }
+        let mut seg = 0usize;
+        // Payload position of segment `seg` within the merged buffer.
+        let mut seg_start = 0u64;
+        for i in starts[s]..starts[s + 1] {
+            let (off, len) = (in_offsets[i], in_lengths[i]);
+            while seg + 1 < seg_offsets.len() && seg_offsets[seg + 1] <= off {
+                seg_start += seg_lengths[seg];
+                seg += 1;
+            }
+            let within = off - seg_offsets[seg];
+            debug_assert!(within + len <= seg_lengths[seg]);
+            let dst = (seg_start + within) as usize;
+            payload_out[dst..dst + len as usize]
+                .copy_from_slice(&in_payload[cursor..cursor + len as usize]);
+            cursor += len as usize;
+            moved += len;
+        }
+        debug_assert_eq!(cursor, pay_starts[s + 1], "stream payload span fully consumed");
+    }
+    moved
+}
+
 /// Reverse of [`scatter_into_buf`]: copy the bytes of each request of
 /// `view` *out of* the contiguous buffer `payload` laid out by `merged`
 /// into `out` (view order) — the requester-side reply assembly of the
@@ -195,8 +316,22 @@ pub fn scatter_into_buf(merged: &FlatView, batches: &[ReqBatch], payload: &mut V
 /// `merged` must cover every nonzero request of `view` (it is the engine
 /// merge of the peer views, which include `view`).  Returns bytes moved.
 pub fn gather_from_buf(merged: &FlatView, payload: &[u8], view: &FlatView, out: &mut [u8]) -> u64 {
-    debug_assert_eq!(payload.len() as u64, merged.total_bytes());
     debug_assert_eq!(out.len() as u64, view.total_bytes());
+    gather_slices_from_buf(merged, payload, view.offsets(), view.lengths(), out)
+}
+
+/// [`gather_from_buf`] over a raw `(offsets, lengths)` request slice —
+/// the form the CSR-staged read path holds its streams in (no `FlatView`
+/// is materialized per stream on the hot path).
+pub fn gather_slices_from_buf(
+    merged: &FlatView,
+    payload: &[u8],
+    offsets: &[u64],
+    lengths: &[u64],
+    out: &mut [u8],
+) -> u64 {
+    debug_assert_eq!(payload.len() as u64, merged.total_bytes());
+    debug_assert_eq!(offsets.len(), lengths.len());
     let seg_offsets = merged.offsets();
     let seg_lengths = merged.lengths();
     let mut cursor = 0usize;
@@ -204,7 +339,7 @@ pub fn gather_from_buf(merged: &FlatView, payload: &[u8], view: &FlatView, out: 
     // Payload position of segment `seg` within the merged buffer.
     let mut seg_start = 0u64;
     let mut moved = 0u64;
-    for (off, len) in view.iter() {
+    for (&off, &len) in offsets.iter().zip(lengths) {
         // Zero-length requests occupy no bytes on either side.
         if len == 0 {
             continue;
@@ -266,28 +401,56 @@ pub fn scatter_into_binary_search(merged: &FlatView, batches: &[ReqBatch]) -> (V
 
 /// Reusable per-aggregator scratch for one slot of the direction-generic
 /// exchange round loop (`coordinator/collective.rs::run_exchange`): the
-/// batch staging `Vec`s, the merged view and the contiguous payload
-/// buffer — the largest per-round allocations of the pre-arena paths —
-/// survive across rounds with their capacity intact (ownership contract
-/// in DESIGN.md §Direction-generic exchange).
+/// staging slabs, the merged view and the contiguous payload buffer —
+/// every per-round allocation of the pre-arena paths — survive across
+/// rounds *and across exchanges* with their capacity intact (the slots
+/// live in `collective.rs::ExchangeArena`; ownership contract in
+/// DESIGN.md §Memory layout).
+///
+/// Staging is CSR, not per-batch: peer requests land in one flat
+/// `in_offsets`/`in_lengths`/`in_payload` slab via [`Self::stage`]
+/// (`extend_from_slice` of the requester's [`MyReqs` slab
+/// spans](crate::coordinator::reqcalc::ReqSlice) — a memcpy into warm
+/// capacity, the simulator's stand-in for the message landing in the
+/// receiver's staging buffer), with stream boundaries in
+/// `starts`/`byte_starts`.  The pre-slab `Vec<ReqBatch>` staging moved
+/// one three-`Vec` batch per peer per round.
 ///
 /// The two directions specialize only what the buffers *mean*:
 ///
-/// * **write** — staged batches carry peer payloads;
+/// * **write** — staged streams carry peer payloads;
 ///   [`Self::merge_scatter`] merges the views through the engine and
 ///   scatters the payloads into `payload`, which storage then persists
 ///   ([`crate::lustre::LustreFile::write_view`]);
-/// * **read** — staged batches are metadata only (a read carries no
+/// * **read** — staged streams are metadata only (a read carries no
 ///   payload on the request side); [`Self::merge_meta`] merges the views,
 ///   storage fills `payload` ([`crate::lustre::LustreFile::read_view`])
-///   and the requester-side [`gather_from_buf`] copies each peer's bytes
-///   back out.  `stats` (per-OST read accounting) keeps its *contents*
-///   across rounds, since the file itself is immutable on reads.
+///   and the requester-side [`gather_slices_from_buf`] copies each peer's
+///   bytes back out.  `stats` (per-OST read accounting) keeps its
+///   *contents* across rounds, since the file itself is immutable on
+///   reads.
 #[derive(Debug, Default)]
 pub struct RoundScratch {
-    /// Batches staged for this aggregator in the current round.
-    pub batches: Vec<ReqBatch>,
-    /// Requester index of each staged batch (parallel to `batches`) —
+    /// Staged request offsets, all peers concatenated (stream `s` is rows
+    /// `starts[s]..starts[s + 1]`).
+    pub in_offsets: Vec<u64>,
+    /// Staged request lengths, parallel to `in_offsets`.
+    pub in_lengths: Vec<u64>,
+    /// Staged payload bytes in slab order (empty on reads).
+    pub in_payload: Vec<u8>,
+    /// Stream row boundaries (`k + 1` entries once staged).
+    pub starts: Vec<usize>,
+    /// Stream *view*-byte boundaries (`k + 1` entries; maintained for
+    /// reads too, where they size the reply spans).
+    pub byte_starts: Vec<usize>,
+    /// Stream boundaries into `in_payload` (`k + 1` entries) — the
+    /// bytes a stream actually shipped.  Equal to `byte_starts` when
+    /// every stream carries payload; a metadata-only stream contributes
+    /// an empty span here while still advancing `byte_starts`, so mixed
+    /// staging scatters correctly (the empty-payload stream's region
+    /// stays zero-filled, matching [`scatter_into_buf`]'s skip).
+    pub pay_starts: Vec<usize>,
+    /// Requester index of each staged stream (parallel to streams) —
     /// the read direction's reply-assembly plan.
     pub owners: Vec<usize>,
     /// Merged, coalesced view (engine output arena, capacity reused).
@@ -297,9 +460,11 @@ pub struct RoundScratch {
     /// Per-OST read accounting, accumulated across rounds (read
     /// direction; empty for writes, which account in the file itself).
     pub stats: Vec<crate::lustre::OstStats>,
+    /// Reused heap storage for the CSR merge.
+    pub merge_scratch: MergeScratch,
     /// Total input requests staged this round (cost accounting).
     pub n_items: u64,
-    /// Number of contributing peer batches this round (cost accounting).
+    /// Number of contributing peer streams this round (cost accounting).
     pub k: usize,
 }
 
@@ -307,7 +472,15 @@ impl RoundScratch {
     /// Reset the per-round state, keeping allocated capacity (and the
     /// cross-round `stats` accumulation of the read direction).
     pub fn reset_round(&mut self) {
-        self.batches.clear();
+        self.in_offsets.clear();
+        self.in_lengths.clear();
+        self.in_payload.clear();
+        self.starts.clear();
+        self.starts.push(0);
+        self.byte_starts.clear();
+        self.byte_starts.push(0);
+        self.pay_starts.clear();
+        self.pay_starts.push(0);
         self.owners.clear();
         self.merged.clear();
         self.payload.clear();
@@ -315,35 +488,98 @@ impl RoundScratch {
         self.k = 0;
     }
 
-    /// Stage one peer batch for this round on behalf of requester `owner`.
-    pub fn stage(&mut self, owner: usize, batch: ReqBatch) {
+    /// Reset for a fresh exchange: per-round state plus the cross-round
+    /// `stats` accumulation (`n_osts` slots; 0 for writes) — the arena
+    /// persists across `run_exchange` invocations, so per-exchange state
+    /// must be re-zeroed here, never in the constructor.
+    pub fn reset_exchange(&mut self, n_osts: usize) {
+        self.reset_round();
+        self.stats.clear();
+        self.stats.resize(n_osts, crate::lustre::OstStats::default());
+    }
+
+    /// Stage one peer stream for this round on behalf of requester
+    /// `owner`: append its rows (and payload, when present) to the slabs.
+    /// `bytes` is the stream's byte total (known `O(1)` by the caller;
+    /// equals `payload.len()` when a payload travels).
+    pub fn stage(
+        &mut self,
+        owner: usize,
+        offsets: &[u64],
+        lengths: &[u64],
+        payload: &[u8],
+        bytes: u64,
+    ) {
+        debug_assert_eq!(offsets.len(), lengths.len());
+        debug_assert!(payload.is_empty() || payload.len() as u64 == bytes);
+        if self.starts.is_empty() {
+            self.starts.push(0);
+            self.byte_starts.push(0);
+            self.pay_starts.push(0);
+        }
         self.owners.push(owner);
-        self.batches.push(batch);
+        self.in_offsets.extend_from_slice(offsets);
+        self.in_lengths.extend_from_slice(lengths);
+        self.in_payload.extend_from_slice(payload);
+        self.starts.push(self.in_offsets.len());
+        let prev = *self.byte_starts.last().expect("byte_starts seeded above");
+        self.byte_starts.push(prev + bytes as usize);
+        self.pay_starts.push(self.in_payload.len());
+    }
+
+    /// [`Self::stage`] from an owned/borrowed batch (tests, benches and
+    /// the intra-node layer — the exchange loop stages slab slices).
+    pub fn stage_batch(&mut self, owner: usize, b: &ReqBatch) {
+        self.stage(owner, b.view.offsets(), b.view.lengths(), &b.payload, b.view.total_bytes());
+    }
+
+    /// Row range of staged stream `s` — `(offsets, lengths)` slices.
+    pub fn stream(&self, s: usize) -> (&[u64], &[u64]) {
+        let (lo, hi) = (self.starts[s], self.starts[s + 1]);
+        (&self.in_offsets[lo..hi], &self.in_lengths[lo..hi])
+    }
+
+    /// Byte total of staged stream `s`.
+    pub fn stream_bytes(&self, s: usize) -> usize {
+        self.byte_starts[s + 1] - self.byte_starts[s]
     }
 
     /// Merge the staged views into the `merged` arena; returns whether
     /// anything was staged.
     fn merge_into(&mut self, engine: &dyn SortEngine) -> Result<bool> {
-        self.k = self.batches.len();
-        self.n_items = self.batches.iter().map(|b| b.view.len() as u64).sum();
-        if self.batches.is_empty() {
+        self.k = self.owners.len();
+        self.n_items = self.in_offsets.len() as u64;
+        if self.k == 0 {
             self.merged.clear();
             self.payload.clear();
             return Ok(false);
         }
-        let views: Vec<&FlatView> = self.batches.iter().map(|b| &b.view).collect();
-        engine.merge_sorted_into(&views, &mut self.merged)?;
+        engine.merge_sorted_csr_into(
+            &self.in_offsets,
+            &self.in_lengths,
+            &self.starts,
+            &mut self.merge_scratch,
+            &mut self.merged,
+        )?;
         Ok(true)
     }
 
-    /// Write direction: merge the staged batches through `engine` and
+    /// Write direction: merge the staged streams through `engine` and
     /// scatter their payloads into the reusable buffer.  Returns the
     /// bytes moved.
     pub fn merge_scatter(&mut self, engine: &dyn SortEngine) -> Result<u64> {
         if !self.merge_into(engine)? {
             return Ok(0);
         }
-        Ok(scatter_into_buf(&self.merged, &self.batches, &mut self.payload))
+        Ok(scatter_csr_into_buf(
+            &self.merged,
+            &self.in_offsets,
+            &self.in_lengths,
+            &self.starts,
+            &self.pay_starts,
+            &self.in_payload,
+            &mut self.payload,
+        ))
     }
 
     /// Read direction: merge the staged peer views (metadata only —
@@ -523,27 +759,129 @@ mod tests {
     fn round_scratch_merges_scatters_and_resets() {
         use crate::runtime::engine::NativeEngine;
         let mut s = RoundScratch::default();
-        s.stage(0, ReqBatch::new(fv(&[(0, 2), (6, 2)]), vec![1, 2, 7, 8]));
-        s.stage(1, ReqBatch::new(fv(&[(2, 2)]), vec![3, 4]));
+        s.stage_batch(0, &ReqBatch::new(fv(&[(0, 2), (6, 2)]), vec![1, 2, 7, 8]));
+        s.stage_batch(1, &ReqBatch::new(fv(&[(2, 2)]), vec![3, 4]));
         let moved = s.merge_scatter(&NativeEngine).unwrap();
         assert_eq!(moved, 6);
         assert_eq!(s.k, 2);
         assert_eq!(s.n_items, 3);
         assert_eq!(s.owners, vec![0, 1]);
+        assert_eq!(s.starts, vec![0, 2, 3]);
+        assert_eq!(s.byte_starts, vec![0, 4, 6]);
+        assert_eq!(s.pay_starts, vec![0, 4, 6]);
+        assert_eq!(s.stream(1), (&[2u64][..], &[2u64][..]));
+        assert_eq!(s.stream_bytes(0), 4);
         assert_eq!(s.merged.iter().collect::<Vec<_>>(), vec![(0, 4), (6, 2)]);
         assert_eq!(s.payload, vec![1, 2, 3, 4, 7, 8]);
         s.reset_round();
-        assert!(s.batches.is_empty() && s.owners.is_empty());
+        assert!(s.in_offsets.is_empty() && s.owners.is_empty());
         assert!(s.merged.is_empty() && s.payload.is_empty());
+        assert_eq!(s.starts, vec![0]);
         // Empty round: merge_scatter is a cheap no-op.
         assert_eq!(s.merge_scatter(&NativeEngine).unwrap(), 0);
         assert_eq!(s.k, 0);
         // Re-staged round after reset: the reused arena must not leak
         // stale segments or payload bytes.
-        s.stage(2, ReqBatch::new(fv(&[(10, 1)]), vec![9]));
+        s.stage_batch(2, &ReqBatch::new(fv(&[(10, 1)]), vec![9]));
         assert_eq!(s.merge_scatter(&NativeEngine).unwrap(), 1);
         assert_eq!(s.merged.iter().collect::<Vec<_>>(), vec![(10, 1)]);
         assert_eq!(s.payload, vec![9]);
+        // reset_exchange additionally re-zeroes the stats slots.
+        s.stats.resize(3, crate::lustre::OstStats::default());
+        s.stats[1].bytes = 7;
+        s.reset_exchange(3);
+        assert!(s.stats.iter().all(|st| st.bytes == 0 && st.extents == 0));
+        s.reset_exchange(0);
+        assert!(s.stats.is_empty());
+    }
+
+    #[test]
+    fn csr_merge_and_scatter_match_batch_path() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0xC5_12AB);
+        let mut scratch = MergeScratch::default();
+        let mut csr_out = FlatView::empty();
+        for case in 0..60 {
+            let k = 1 + rng.gen_range(7) as usize;
+            let mut batches = Vec::new();
+            for tag in 0..k {
+                let n = rng.gen_range(25) as usize;
+                let mut pairs = Vec::new();
+                let mut cursor = rng.gen_range(64);
+                for _ in 0..n {
+                    let len = rng.gen_range(9); // includes zero-length
+                    if rng.gen_bool(0.5) {
+                        cursor += rng.gen_range(40);
+                    }
+                    pairs.push((cursor, len));
+                    cursor += len;
+                }
+                let view = fv(&pairs);
+                // Occasionally a metadata-only batch mixed among payload
+                // batches: the scatter must skip it (zeros land in its
+                // region), exactly like the batch reference path.
+                let payload: Vec<u8> = if rng.gen_bool(0.2) {
+                    Vec::new()
+                } else {
+                    (0..view.total_bytes())
+                        .map(|i| (i as u8).wrapping_mul(31) ^ tag as u8)
+                        .collect()
+                };
+                batches.push(ReqBatch::new(view, payload));
+            }
+            // Stage the batches into the CSR slabs.
+            let mut s = RoundScratch::default();
+            s.reset_round();
+            for (i, b) in batches.iter().enumerate() {
+                s.stage_batch(i, b);
+            }
+            // Merge: CSR vs the slice-per-stream algorithm.
+            let views: Vec<&FlatView> = batches.iter().map(|b| &b.view).collect();
+            let want = merge_views(&views);
+            merge_csr_into(&s.in_offsets, &s.in_lengths, &s.starts, &mut scratch, &mut csr_out);
+            assert_eq!(csr_out, want, "case {case}: merge mismatch");
+            // Scatter: CSR vs the batch two-pointer path.
+            let mut want_buf = Vec::new();
+            let want_moved = scatter_into_buf(&want, &batches, &mut want_buf);
+            let mut got_buf = Vec::new();
+            let got_moved = scatter_csr_into_buf(
+                &want,
+                &s.in_offsets,
+                &s.in_lengths,
+                &s.starts,
+                &s.pay_starts,
+                &s.in_payload,
+                &mut got_buf,
+            );
+            assert_eq!(got_buf, want_buf, "case {case}: scatter mismatch");
+            assert_eq!(got_moved, want_moved, "case {case}");
+            // Gather: slice form vs FlatView form, per stream.
+            for (i, b) in batches.iter().enumerate() {
+                let mut out_a = vec![0u8; b.view.total_bytes() as usize];
+                let mut out_b = vec![0u8; b.view.total_bytes() as usize];
+                gather_from_buf(&want, &want_buf, &b.view, &mut out_a);
+                let (vo, vl) = s.stream(i);
+                gather_slices_from_buf(&want, &want_buf, vo, vl, &mut out_b);
+                assert_eq!(out_a, out_b, "case {case} stream {i}");
+                assert_eq!(s.stream_bytes(i) as u64, b.view.total_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn csr_merge_empty_and_single_stream() {
+        let mut scratch = MergeScratch::default();
+        let mut out = fv(&[(9, 9)]);
+        merge_csr_into(&[], &[], &[], &mut scratch, &mut out);
+        assert!(out.is_empty());
+        merge_csr_into(&[], &[], &[0], &mut scratch, &mut out);
+        assert!(out.is_empty());
+        // Single stream gallops to the end with an empty heap.
+        merge_csr_into(&[0, 4, 10], &[4, 4, 2], &[0, 3], &mut scratch, &mut out);
+        assert_eq!(out.iter().collect::<Vec<_>>(), vec![(0, 8), (10, 2)]);
+        // Reused scratch across calls stays clean.
+        merge_csr_into(&[5, 7], &[2, 1], &[0, 1, 2], &mut scratch, &mut out);
+        assert_eq!(out.iter().collect::<Vec<_>>(), vec![(5, 3)]);
     }
 
     #[test]
@@ -616,14 +954,20 @@ mod tests {
     fn round_scratch_metadata_only_read_rounds() {
         use crate::runtime::engine::NativeEngine;
         let mut s = RoundScratch::default();
-        s.stage(0, ReqBatch::new(fv(&[(0, 2), (6, 2)]), Vec::new()));
-        s.stage(1, ReqBatch::new(fv(&[(2, 2)]), Vec::new()));
+        s.stage_batch(0, &ReqBatch::new(fv(&[(0, 2), (6, 2)]), Vec::new()));
+        s.stage_batch(1, &ReqBatch::new(fv(&[(2, 2)]), Vec::new()));
         s.merge_meta(&NativeEngine).unwrap();
         assert_eq!(s.k, 2);
         assert_eq!(s.n_items, 3);
         assert_eq!(s.merged.iter().collect::<Vec<_>>(), vec![(0, 4), (6, 2)]);
+        // Metadata staging still tracks view-byte spans (reply sizing)
+        // while shipping no payload bytes.
+        assert_eq!(s.stream_bytes(0), 4);
+        assert_eq!(s.stream_bytes(1), 2);
+        assert!(s.in_payload.is_empty());
+        assert_eq!(s.pay_starts, vec![0, 0, 0]);
         s.reset_round();
-        assert!(s.batches.is_empty() && s.merged.is_empty() && s.payload.is_empty());
+        assert!(s.in_offsets.is_empty() && s.merged.is_empty() && s.payload.is_empty());
         // Empty round: merge_meta is a cheap no-op.
         s.merge_meta(&NativeEngine).unwrap();
         assert_eq!(s.k, 0);

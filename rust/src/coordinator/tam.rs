@@ -3,6 +3,7 @@
 //! requesters.
 
 use crate::coordinator::breakdown::Counters;
+use crate::coordinator::collective::ExchangeArena;
 use crate::coordinator::merge::{scatter_into, ReqBatch};
 use crate::coordinator::placement::{per_node_count_for_total, select_local_aggregators};
 use crate::coordinator::reqcalc::metadata_bytes;
@@ -59,9 +60,12 @@ pub fn intra_node_aggregate(
     let reqs_before: u64 = ranks.iter().map(|(_, b)| b.view.len() as u64).sum();
 
     // Gather messages: every non-aggregator sends metadata + payload to its
-    // local aggregator (many-to-one within each node, §IV-A).
+    // local aggregator (many-to-one within each node, §IV-A).  Grouping is
+    // dense by rank — local aggregators are rank ids (the dense-rank
+    // invariant), so no hash map and no key sort, same as the read side.
     let mut msgs: Vec<Message> = Vec::new();
-    let mut per_agg: std::collections::HashMap<usize, Vec<ReqBatch>> = Default::default();
+    let mut per_agg: Vec<Vec<ReqBatch>> = Vec::new();
+    per_agg.resize_with(topo.nprocs(), Vec::new);
     for (rank, batch) in ranks {
         let agg = locals.assignment[rank];
         if rank != agg {
@@ -69,17 +73,20 @@ pub fn intra_node_aggregate(
             let bytes = batch.view.total_bytes() + 16 * batch.view.len() as u64;
             msgs.push(Message::new(rank, agg, bytes));
         }
-        per_agg.entry(agg).or_default().push(batch);
+        per_agg[agg].push(batch);
     }
     let comm_cost = cost_phase(ctx.net, ctx.topo, &msgs);
 
     // Local aggregators merge-sort + coalesce concurrently (engine hot
-    // path) and build contiguous payload buffers.
-    let items: Vec<(usize, Vec<ReqBatch>)> = {
-        let mut v: Vec<_> = per_agg.into_iter().collect();
-        v.sort_unstable_by_key(|(agg, _)| *agg);
-        v
-    };
+    // path) and build contiguous payload buffers.  Aggregators with at
+    // least one member batch, ascending by rank.
+    let mut items: Vec<(usize, Vec<ReqBatch>)> = Vec::with_capacity(locals.ranks.len());
+    for &a in &locals.ranks {
+        let batches = std::mem::take(&mut per_agg[a]);
+        if !batches.is_empty() {
+            items.push((a, batches));
+        }
+    }
     // The engine streams each member's already-sorted view (no flatten +
     // full re-sort on the native path); engine errors propagate as `Err`
     // instead of aborting the worker thread.
@@ -188,10 +195,11 @@ pub fn tam_write(
     tam: &TamConfig,
     ranks: Vec<(usize, ReqBatch)>,
     file: &mut LustreFile,
+    arena: &mut ExchangeArena,
 ) -> Result<ExchangeOutcome> {
     let mut intra = intra_node_aggregate(ctx, tam, ranks)?;
     let local_batches = std::mem::take(&mut intra.local_batches);
-    let mut out = write_exchange(ctx, local_batches, file)?;
+    let mut out = write_exchange(ctx, local_batches, file, arena)?;
     out.breakdown.intra_comm = intra.comm;
     out.breakdown.intra_sort = intra.sort;
     out.breakdown.intra_memcpy = intra.memcpy;
@@ -303,7 +311,8 @@ mod tests {
         let ctx = f.ctx(4);
         let tam = TamConfig { total_local_aggregators: 4 };
         let mut file = LustreFile::new(LustreConfig::new(64, 4));
-        tam_write(&ctx, &tam, block_ranks(&f.topo, 256, 4), &mut file).unwrap();
+        let mut arena = ExchangeArena::default();
+        tam_write(&ctx, &tam, block_ranks(&f.topo, 256, 4), &mut file, &mut arena).unwrap();
         for r in 0..f.topo.nprocs() {
             let want = deterministic_payload(11, r, 256);
             assert_eq!(file.read_at(r as u64 * 256, 256), want, "rank {r}");
@@ -320,6 +329,7 @@ mod tests {
             &ctx,
             block_ranks(&f.topo, 128, 2),
             &mut f1,
+            &mut ExchangeArena::default(),
         )
         .unwrap();
         tam_write(
@@ -327,6 +337,7 @@ mod tests {
             &TamConfig { total_local_aggregators: 2 },
             block_ranks(&f.topo, 128, 2),
             &mut f2,
+            &mut ExchangeArena::default(),
         )
         .unwrap();
         let total = 8 * 128;
@@ -353,14 +364,20 @@ mod tests {
         let ctx = f.ctx(2);
         let ranks = block_ranks(&f.topo, 128, 4);
         let mut f1 = LustreFile::new(LustreConfig::new(256, 2));
-        let two = crate::coordinator::twophase::two_phase_write(&ctx, ranks.clone(), &mut f1)
-            .unwrap();
+        let two = crate::coordinator::twophase::two_phase_write(
+            &ctx,
+            ranks.clone(),
+            &mut f1,
+            &mut ExchangeArena::default(),
+        )
+        .unwrap();
         let mut f2 = LustreFile::new(LustreConfig::new(256, 2));
         let tam = tam_write(
             &ctx,
             &TamConfig { total_local_aggregators: 4 },
             ranks,
             &mut f2,
+            &mut ExchangeArena::default(),
         )
         .unwrap();
         assert!(

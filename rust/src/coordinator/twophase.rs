@@ -16,7 +16,7 @@
 
 use crate::cluster::Topology;
 use crate::coordinator::breakdown::{Breakdown, Counters, CpuModel};
-use crate::coordinator::collective::{run_exchange, ExchangeIo};
+use crate::coordinator::collective::{run_exchange, ExchangeArena, ExchangeIo};
 use crate::coordinator::merge::ReqBatch;
 use crate::coordinator::placement::GlobalPlacement;
 use crate::error::Result;
@@ -57,13 +57,15 @@ pub struct ExchangeOutcome {
 /// written byte-accurately into `file`.  Global aggregators are selected
 /// from the full topology regardless of the requester set (ROMIO selects
 /// at open time).  Thin write-direction binding of the shared
-/// [`run_exchange`] round engine.
+/// [`run_exchange`] round engine; `arena` carries the persistent round
+/// buffers (sweeps thread one arena through every collective).
 pub fn write_exchange(
     ctx: &CollectiveCtx,
     requesters: Vec<(usize, ReqBatch)>,
     file: &mut LustreFile,
+    arena: &mut ExchangeArena,
 ) -> Result<ExchangeOutcome> {
-    let (_, out) = run_exchange(ctx, requesters, ExchangeIo::Write(file))?;
+    let (_, out) = run_exchange(ctx, requesters, ExchangeIo::Write(file), arena)?;
     Ok(out)
 }
 
@@ -72,9 +74,10 @@ pub fn two_phase_write(
     ctx: &CollectiveCtx,
     ranks: Vec<(usize, ReqBatch)>,
     file: &mut LustreFile,
+    arena: &mut ExchangeArena,
 ) -> Result<ExchangeOutcome> {
     let posted: u64 = ranks.iter().map(|(_, b)| b.view.len() as u64).sum();
-    let mut out = write_exchange(ctx, ranks, file)?;
+    let mut out = write_exchange(ctx, ranks, file, arena)?;
     out.counters.reqs_posted = posted;
     Ok(out)
 }
@@ -132,7 +135,7 @@ mod tests {
         let c = ctx(&topo, &net, &cpu, &io, &eng);
         let mut file = LustreFile::new(LustreConfig::new(64, 4));
         let reqs = requesters(&topo, 256);
-        two_phase_write(&c, reqs, &mut file).unwrap();
+        two_phase_write(&c, reqs, &mut file, &mut ExchangeArena::default()).unwrap();
         for r in 0..topo.nprocs() {
             let want = deterministic_payload(7, r, 256);
             let got = file.read_at(r as u64 * 256, 256);
@@ -147,7 +150,8 @@ mod tests {
             (NetParams::default(), CpuModel::default(), IoModel::default(), NativeEngine);
         let c = ctx(&topo, &net, &cpu, &io, &eng);
         let mut file = LustreFile::new(LustreConfig::new(64, 4));
-        let out = two_phase_write(&c, requesters(&topo, 256), &mut file).unwrap();
+        let mut arena = ExchangeArena::default();
+        let out = two_phase_write(&c, requesters(&topo, 256), &mut file, &mut arena).unwrap();
         // 8 ranks × 256B = 2048B = 32 stripes of 64B over 4 aggs → 8 rounds.
         assert_eq!(out.counters.rounds, 8);
         assert_eq!(out.counters.lock_conflicts, 0, "stripe-aligned domains must not conflict");
@@ -163,7 +167,8 @@ mod tests {
         let mut c = ctx(&topo, &net, &cpu, &io, &eng);
         c.n_global_agg = 2;
         let mut file = LustreFile::new(LustreConfig::new(1 << 16, 2));
-        let out = two_phase_write(&c, requesters(&topo, 256), &mut file).unwrap();
+        let mut arena = ExchangeArena::default();
+        let out = two_phase_write(&c, requesters(&topo, 256), &mut file, &mut arena).unwrap();
         // All 4 ranks' pieces are contiguous → one segment per agg/round.
         assert_eq!(out.counters.reqs_posted, 16);
         assert!(out.counters.reqs_at_io <= 2);
@@ -176,7 +181,7 @@ mod tests {
             (NetParams::default(), CpuModel::default(), IoModel::default(), NativeEngine);
         let c = ctx(&topo, &net, &cpu, &io, &eng);
         let mut file = LustreFile::new(LustreConfig::new(64, 4));
-        let out = two_phase_write(&c, vec![], &mut file).unwrap();
+        let out = two_phase_write(&c, vec![], &mut file, &mut ExchangeArena::default()).unwrap();
         assert_eq!(out.counters.rounds, 0);
         assert_eq!(file.total_bytes_written(), 0);
         assert_eq!(out.breakdown.total(), 0.0);

@@ -11,8 +11,8 @@
 use crate::cluster::Topology;
 use crate::config::RunConfig;
 use crate::coordinator::collective::{
-    run_collective_read, run_collective_write, Algorithm, CollectiveOutcome, Direction,
-    DirectionSpec,
+    run_collective_read_with, run_collective_write_with, Algorithm, CollectiveOutcome,
+    Direction, DirectionSpec, ExchangeArena,
 };
 use crate::coordinator::tam::TamConfig;
 use crate::coordinator::twophase::CollectiveCtx;
@@ -55,26 +55,42 @@ pub fn run_once(cfg: &RunConfig) -> Result<Vec<(LabelledRun, Option<VerifyReport
 }
 
 /// [`run_once`] with a caller-provided engine (avoids reloading XLA
-/// artifacts inside sweeps).
+/// artifacts inside sweeps).  One [`ExchangeArena`] serves every
+/// direction of the run.
 pub fn run_once_with_engine(
     cfg: &RunConfig,
     engine: &dyn SortEngine,
 ) -> Result<Vec<(LabelledRun, Option<VerifyReport>)>> {
+    let mut arena = ExchangeArena::default();
     cfg.direction
         .runs()
         .iter()
-        .map(|&dir| run_direction_with_engine(cfg, engine, dir))
+        .map(|&dir| run_direction_with_arena(cfg, engine, dir, &mut arena))
         .collect()
+}
+
+/// [`run_direction_with_arena`] with a one-shot arena (kept for callers
+/// outside the sweep loops).
+pub fn run_direction_with_engine(
+    cfg: &RunConfig,
+    engine: &dyn SortEngine,
+    direction: Direction,
+) -> Result<(LabelledRun, Option<VerifyReport>)> {
+    run_direction_with_arena(cfg, engine, direction, &mut ExchangeArena::default())
 }
 
 /// Run one collective in one direction per `cfg`; returns the labelled
 /// outcome and the verification report (`Some` whenever `cfg.verify`, and
 /// always for reads — the gathered bytes are already in memory, so the
-/// comparison is nearly free and keeps read panels honest).
-pub fn run_direction_with_engine(
+/// comparison is nearly free and keeps read panels honest).  `arena` is
+/// the persistent exchange-buffer set the sweep drivers thread through
+/// every collective they run (§Perf tentpole: capacity reuse across
+/// `run_once` invocations, not just across rounds).
+pub fn run_direction_with_arena(
     cfg: &RunConfig,
     engine: &dyn SortEngine,
     direction: Direction,
+    arena: &mut ExchangeArena,
 ) -> Result<(LabelledRun, Option<VerifyReport>)> {
     let topo = cfg.topology();
     let workload = cfg.workload.build(cfg.scale);
@@ -93,7 +109,8 @@ pub fn run_direction_with_engine(
         Direction::Write => {
             let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
             let mut file = LustreFile::new(cfg.lustre);
-            let outcome = run_collective_write(&ctx, cfg.algorithm, ranks, &mut file)?;
+            let outcome =
+                run_collective_write_with(&ctx, cfg.algorithm, ranks, &mut file, arena)?;
             let verify = if cfg.verify {
                 // Vectored read-back through the same storage entry point
                 // the read direction drives (no per-request read_at loop).
@@ -133,7 +150,8 @@ pub fn run_direction_with_engine(
                 }
             }
             let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
-            let (got, outcome) = run_collective_read(&ctx, cfg.algorithm, views, &file)?;
+            let (got, outcome) =
+                run_collective_read_with(&ctx, cfg.algorithm, views, &file, arena)?;
             let mut ok = 0;
             for ((_, payload), (_, want)) in got.iter().zip(ranks.iter()) {
                 if payload == &want.payload {
@@ -192,19 +210,24 @@ pub fn auto_scale(kind: WorkloadKind, p: usize, budget_reqs: u64) -> u64 {
 /// [`crate::metrics::breakdown_panels`] for per-direction tables.
 pub fn breakdown_sweep(base: &RunConfig, pl_values: &[usize]) -> Result<Vec<LabelledRun>> {
     let engine = build_engine_for(base)?;
+    // One arena for every bar of the sweep — the round buffers stay warm
+    // across collectives (the tentpole's cross-invocation reuse).
+    let mut arena = ExchangeArena::default();
     let mut runs = Vec::new();
     for &dir in base.direction.runs() {
         for &pl in pl_values {
             let mut cfg = base.clone();
             cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: pl });
-            let (mut run, verify) = run_direction_with_engine(&cfg, engine.as_ref(), dir)?;
+            let (mut run, verify) =
+                run_direction_with_arena(&cfg, engine.as_ref(), dir, &mut arena)?;
             ensure_verified(&run, &verify)?;
             run.label = format!("P_L={pl}");
             runs.push(run);
         }
         let mut cfg = base.clone();
         cfg.algorithm = Algorithm::TwoPhase;
-        let (mut run, verify) = run_direction_with_engine(&cfg, engine.as_ref(), dir)?;
+        let (mut run, verify) =
+            run_direction_with_arena(&cfg, engine.as_ref(), dir, &mut arena)?;
         ensure_verified(&run, &verify)?;
         run.label = "two-phase".into();
         runs.push(run);
@@ -222,6 +245,7 @@ pub fn fig3_series(
     budget_reqs: u64,
 ) -> Result<Vec<ScalingSeries>> {
     let engine = build_engine_for(base)?;
+    let mut arena = ExchangeArena::default();
     let mut out = Vec::new();
     for &dir in base.direction.runs() {
         let mut tam_points = Vec::new();
@@ -235,10 +259,12 @@ pub fn fig3_series(
             cfg.nodes = p / base.ppn;
             cfg.scale = auto_scale(kind, p, budget_reqs);
             cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 256 });
-            let (tam, tam_verify) = run_direction_with_engine(&cfg, engine.as_ref(), dir)?;
+            let (tam, tam_verify) =
+                run_direction_with_arena(&cfg, engine.as_ref(), dir, &mut arena)?;
             ensure_verified(&tam, &tam_verify)?;
             cfg.algorithm = Algorithm::TwoPhase;
-            let (two, two_verify) = run_direction_with_engine(&cfg, engine.as_ref(), dir)?;
+            let (two, two_verify) =
+                run_direction_with_arena(&cfg, engine.as_ref(), dir, &mut arena)?;
             ensure_verified(&two, &two_verify)?;
             tam_points.push((p, tam.breakdown.bandwidth(tam.counters.bytes)));
             two_points.push((p, two.breakdown.bandwidth(two.counters.bytes)));
@@ -259,6 +285,7 @@ pub fn fig3_series(
 /// request-redistribution structure is the figure's subject).
 pub fn fig2_congestion(base: &RunConfig) -> Result<Vec<(String, usize, f64, usize)>> {
     let engine = build_engine_for(base)?;
+    let mut arena = ExchangeArena::default();
     let mut rows = Vec::new();
     for algo in [
         Algorithm::TwoPhase,
@@ -266,7 +293,8 @@ pub fn fig2_congestion(base: &RunConfig) -> Result<Vec<(String, usize, f64, usiz
     ] {
         let mut cfg = base.clone();
         cfg.algorithm = algo;
-        let (run, _) = run_direction_with_engine(&cfg, engine.as_ref(), Direction::Write)?;
+        let (run, _) =
+            run_direction_with_arena(&cfg, engine.as_ref(), Direction::Write, &mut arena)?;
         let c = &run.counters;
         let mean = if c.msgs_inter == 0 {
             0.0

@@ -56,8 +56,9 @@ pub mod prelude {
     pub use crate::config::RunConfig;
     pub use crate::coordinator::breakdown::Breakdown;
     pub use crate::coordinator::collective::{
-        run_collective_read, run_collective_write, Algorithm, CollectiveOutcome, Direction,
-        DirectionSpec,
+        run_collective_read, run_collective_read_with, run_collective_write,
+        run_collective_write_with, Algorithm, CollectiveOutcome, Direction, DirectionSpec,
+        ExchangeArena,
     };
     pub use crate::coordinator::tam::TamConfig;
     pub use crate::lustre::LustreConfig;

@@ -115,6 +115,26 @@ pub fn cost_phase_with_pending(
 #[derive(Debug, Default)]
 pub struct PhaseScratch {
     shards: Vec<PhaseShard>,
+    /// Shards used by the most recent [`cost_phase_into`] call (older,
+    /// larger phases may have left extra shards allocated behind it).
+    active: usize,
+}
+
+impl PhaseScratch {
+    /// Fold the most recently costed phase's per-receiver in-degree into
+    /// `pending` — the sharded twin of the serial `pending[m.dst] += 1`
+    /// walk (ROADMAP item): the per-shard `in_degree` accumulators were
+    /// already filled (in parallel, for large phases) during costing, so
+    /// the post-cost update is a dense vector add instead of a second
+    /// serial pass over the message list.  Integer counts are exact, so
+    /// no tolerance is involved (unlike the float reductions).
+    pub fn add_in_degree_to(&self, pending: &mut [u64]) {
+        for sh in &self.shards[..self.active] {
+            for (p, &d) in pending.iter_mut().zip(&sh.in_degree) {
+                *p += d as u64;
+            }
+        }
+    }
 }
 
 /// One shard's dense accumulators (rank/node indexed).
@@ -205,6 +225,7 @@ pub fn cost_phase_into(
     if scratch.shards.len() < n_shards {
         scratch.shards.resize_with(n_shards, PhaseShard::default);
     }
+    scratch.active = n_shards;
     let shards = &mut scratch.shards[..n_shards];
     for sh in shards.iter_mut() {
         sh.reset(nprocs, topo.nodes);
@@ -325,7 +346,20 @@ impl PendingQueue {
         Self::default()
     }
 
+    /// Re-zero the pending counts, keeping every allocation (the queue
+    /// lives in the persistent `ExchangeArena` and must start each
+    /// exchange empty — a collective's unmatched sends do not leak into
+    /// the next collective of a sweep).
+    pub fn reset(&mut self) {
+        self.pending.fill(0);
+    }
+
     /// Cost a round and update the queue according to the send mode.
+    ///
+    /// The pending update reuses the per-shard `in_degree` accumulators
+    /// the costing pass just filled ([`PhaseScratch::add_in_degree_to`])
+    /// instead of a second serial walk over the message list — the
+    /// `#[cfg(test)]` [`pending_update_serial`] walk is the oracle.
     pub fn cost_round(
         &mut self,
         params: &NetParams,
@@ -339,9 +373,7 @@ impl PendingQueue {
         if params.carries_pending() {
             // A fraction of this round's small sends stay unmatched when the
             // senders race ahead; accumulate them on the receivers.
-            for m in msgs {
-                self.pending[m.dst] += 1;
-            }
+            self.scratch.add_in_degree_to(&mut self.pending);
         } else {
             self.pending.fill(0);
         }
@@ -351,6 +383,15 @@ impl PendingQueue {
     /// Current pending count for a rank (tests/diagnostics).
     pub fn pending_for(&self, rank: usize) -> u64 {
         self.pending.get(rank).copied().unwrap_or(0)
+    }
+}
+
+/// The pre-sharding pending update, kept verbatim as the golden oracle
+/// for [`PhaseScratch::add_in_degree_to`].
+#[cfg(test)]
+pub(crate) fn pending_update_serial(msgs: &[Message], pending: &mut [u64]) {
+    for m in msgs {
+        pending[m.dst] += 1;
     }
 }
 
@@ -517,6 +558,48 @@ mod tests {
             assert_close(got.send_bound, want.send_bound, "send_bound");
             assert_close(got.nic_bound, want.nic_bound, "nic_bound");
         }
+    }
+
+    #[test]
+    fn sharded_pending_update_matches_serial_oracle() {
+        use crate::util::SplitMix64;
+        let mut p = NetParams::default();
+        p.send_mode = super::super::SendMode::Isend;
+        let t = Topology::new(8, 16); // 128 ranks
+        let mut rng = SplitMix64::new(0x9E_4D1);
+        // Round sizes straddling the shard threshold, driven through the
+        // same queue so carried counts compound across rounds.
+        let rounds: Vec<Vec<Message>> = [3usize, 40_000, 0, 1000, 70_000]
+            .iter()
+            .map(|&n| {
+                (0..n)
+                    .map(|i| {
+                        Message::new(
+                            rng.gen_range(128) as usize,
+                            (i * 11 + rng.gen_range(5) as usize) % 128,
+                            1 + rng.gen_range(1 << 10),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut q = PendingQueue::new();
+        let mut oracle = vec![0u64; 128];
+        for (i, msgs) in rounds.iter().enumerate() {
+            let want_cost = cost_phase_serial(&p, &t, msgs, &oracle);
+            let got_cost = q.cost_round(&p, &t, msgs);
+            pending_update_serial(msgs, &mut oracle);
+            // Integer pending counts are exact (no float association).
+            for r in 0..128 {
+                assert_eq!(q.pending_for(r), oracle[r], "round {i} rank {r}");
+            }
+            assert_eq!(got_cost.max_in_degree, want_cost.max_in_degree, "round {i}");
+            assert_eq!(got_cost.total_bytes, want_cost.total_bytes, "round {i}");
+            assert_close(got_cost.time, want_cost.time, "time");
+        }
+        // reset() re-zeroes the counts without dropping capacity.
+        q.reset();
+        assert!((0..128).all(|r| q.pending_for(r) == 0));
     }
 
     #[test]

@@ -16,7 +16,9 @@
 use std::sync::mpsc;
 use std::sync::Mutex;
 
-use crate::coordinator::merge::{merge_views_into, sort_coalesce_pairs};
+use crate::coordinator::merge::{
+    merge_csr_into, merge_views_into, sort_coalesce_pairs, MergeScratch,
+};
 use crate::error::{Error, Result};
 use crate::mpisim::FlatView;
 
@@ -94,6 +96,35 @@ pub trait SortEngine: Send + Sync {
         Ok(())
     }
 
+    /// [`Self::merge_sorted_into`] over CSR-staged streams — the form the
+    /// exchange round loop holds its peer requests in (stream `s` is rows
+    /// `starts[s]..starts[s + 1]` of one flat slab; see
+    /// [`crate::coordinator::merge::RoundScratch`]): no per-stream
+    /// `FlatView` is materialized on the hot path, and `scratch` carries
+    /// the reused heap storage so a steady-state call allocates nothing.
+    /// The default flattens and reuses [`Self::merge_coalesce`] (the
+    /// batched XLA pipeline re-sorts the concatenation anyway);
+    /// [`NativeEngine`] overrides it with the direct CSR heap merge.
+    /// Output is bit-identical to [`Self::merge_sorted_into`] over the
+    /// per-stream views on every input.
+    fn merge_sorted_csr_into(
+        &self,
+        offsets: &[u64],
+        lengths: &[u64],
+        _starts: &[usize],
+        _scratch: &mut MergeScratch,
+        out: &mut FlatView,
+    ) -> Result<()> {
+        let pairs: Vec<(u64, u64)> =
+            offsets.iter().copied().zip(lengths.iter().copied()).collect();
+        let merged = self.merge_coalesce(pairs)?;
+        out.clear();
+        for (o, l) in merged {
+            out.push(o, l);
+        }
+        Ok(())
+    }
+
     /// Engine name for reports.
     fn name(&self) -> &'static str;
 }
@@ -116,6 +147,18 @@ impl SortEngine for NativeEngine {
 
     fn merge_sorted_into(&self, views: &[&FlatView], out: &mut FlatView) -> Result<()> {
         merge_views_into(views, out);
+        Ok(())
+    }
+
+    fn merge_sorted_csr_into(
+        &self,
+        offsets: &[u64],
+        lengths: &[u64],
+        starts: &[usize],
+        scratch: &mut MergeScratch,
+        out: &mut FlatView,
+    ) -> Result<()> {
+        merge_csr_into(offsets, lengths, starts, scratch, out);
         Ok(())
     }
 
@@ -292,6 +335,33 @@ mod tests {
             native.iter().collect::<Vec<_>>(),
             vec![(0, 16), (100, 2)]
         );
+    }
+
+    #[test]
+    fn merge_sorted_csr_native_matches_default_fallback() {
+        // Two streams staged CSR-style; native override vs the trait's
+        // flatten + re-sort default must agree bit-for-bit.
+        let offsets = [0u64, 8, 16, 4, 12, 100];
+        let lengths = [4u64, 4, 0, 4, 4, 2];
+        let starts = [0usize, 3, 6];
+        let mut scratch = MergeScratch::default();
+        let mut native_out = FlatView::from_pairs(vec![(900, 3)]).unwrap();
+        NativeEngine
+            .merge_sorted_csr_into(&offsets, &lengths, &starts, &mut scratch, &mut native_out)
+            .unwrap();
+        let mut fallback_out = FlatView::from_pairs(vec![(900, 3), (903, 1)]).unwrap();
+        ConcatFallback
+            .merge_sorted_csr_into(&offsets, &lengths, &starts, &mut scratch, &mut fallback_out)
+            .unwrap();
+        assert_eq!(native_out, fallback_out);
+        assert_eq!(
+            native_out.iter().collect::<Vec<_>>(),
+            vec![(0, 16), (100, 2)]
+        );
+        // Both must also match the per-stream-views entry point.
+        let a = FlatView::from_pairs(vec![(0, 4), (8, 4), (16, 0)]).unwrap();
+        let b = FlatView::from_pairs(vec![(4, 4), (12, 4), (100, 2)]).unwrap();
+        assert_eq!(native_out, NativeEngine.merge_sorted(&[&a, &b]).unwrap());
     }
 
     #[test]

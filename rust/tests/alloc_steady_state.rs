@@ -1,0 +1,206 @@
+//! Counting-allocator guard for the arena-backed round loop (§Perf
+//! tentpole): after a warm-up round, steady-state exchange rounds must
+//! perform (near-)zero heap allocations, and a warm `ExchangeArena` must
+//! make a repeat collective strictly cheaper than its cold run — the
+//! property that makes the paper's 16384-rank sweep point tractable.
+//!
+//! The whole file is ONE `#[test]` on purpose: the global allocator's
+//! counter is process-wide, and concurrent sibling tests would pollute
+//! the deltas.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use tamio::cluster::Topology;
+use tamio::coordinator::breakdown::CpuModel;
+use tamio::coordinator::collective::{
+    run_collective_read_with, run_collective_write_with, Algorithm, ExchangeArena,
+};
+use tamio::coordinator::filedomain::FileDomains;
+use tamio::coordinator::merge::{ReqBatch, RoundScratch};
+use tamio::coordinator::placement::GlobalPlacement;
+use tamio::coordinator::reqcalc::{calc_my_req, MyReqs};
+use tamio::coordinator::twophase::CollectiveCtx;
+use tamio::lustre::{IoModel, LustreConfig, LustreFile};
+use tamio::mpisim::rank::deterministic_payload;
+use tamio::mpisim::FlatView;
+use tamio::netmodel::phase::{Message, PendingQueue};
+use tamio::netmodel::NetParams;
+use tamio::runtime::engine::NativeEngine;
+
+/// Allocation-counting wrapper over the system allocator.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Single-threaded replica of the `run_exchange` round loop's staging +
+/// costing + merge/scatter core (no `par_map` threads, whose spawn-time
+/// allocations are outside the arena's contract and would drown the
+/// signal).  Uniform per-round work so round 0 sizes every buffer.
+fn steady_state_rounds_allocate_nothing() {
+    const N_AGG: usize = 4;
+    const STRIPE: u64 = 64;
+    const RANKS: usize = 8;
+    const BLOCK: u64 = 4096; // per rank, contiguous ⇒ 16 uniform rounds each
+    let topo = Topology::new(1, RANKS);
+    let net = NetParams::default();
+    let engine = NativeEngine;
+    let domains = FileDomains::new(
+        LustreConfig::new(STRIPE, N_AGG),
+        0,
+        RANKS as u64 * BLOCK,
+        N_AGG,
+    );
+    let n_rounds = domains.n_rounds();
+    assert!(n_rounds >= 16, "need enough rounds to measure, got {n_rounds}");
+
+    let my_reqs: Vec<MyReqs> = (0..RANKS)
+        .map(|r| {
+            let view = FlatView::from_pairs(vec![(r as u64 * BLOCK, BLOCK)]).unwrap();
+            let payload = deterministic_payload(7, r, BLOCK);
+            calc_my_req(&domains, &ReqBatch::new(view, payload))
+        })
+        .collect();
+
+    let mut scratch: Vec<RoundScratch> = (0..N_AGG).map(|_| RoundScratch::default()).collect();
+    for slot in &mut scratch {
+        slot.reset_exchange(0);
+    }
+    let mut pending = PendingQueue::new();
+    let mut data_msgs: Vec<Message> = Vec::new();
+
+    const WARMUP: u64 = 2;
+    let mut base = 0u64;
+    for round in 0..n_rounds {
+        if round == WARMUP {
+            base = allocs();
+        }
+        data_msgs.clear();
+        for slot in &mut scratch {
+            slot.reset_round();
+        }
+        for (i, mr) in my_reqs.iter().enumerate() {
+            for (agg, s) in mr.slices_in_round(round) {
+                data_msgs.push(Message::new(i, agg, s.bytes));
+                scratch[agg].stage(i, s.offsets, s.lengths, s.payload, s.bytes);
+            }
+        }
+        pending.cost_round(&net, &topo, &data_msgs);
+        for slot in &mut scratch {
+            slot.merge_scatter(&engine).unwrap();
+        }
+    }
+    let steady = allocs() - base;
+    let measured_rounds = n_rounds - WARMUP;
+    // The threshold exists so the arena cannot silently regress: a return
+    // to per-batch staging would cost ~3 allocations per peer stream per
+    // round (hundreds here).  Zero is the expectation; a tiny slack
+    // absorbs allocator-internal noise.
+    assert!(
+        steady <= 8,
+        "steady-state rounds allocated {steady} times over {measured_rounds} rounds \
+         (expected ~0: the arena regressed)"
+    );
+}
+
+/// End-to-end: the second collective through a warm arena must allocate
+/// strictly less than the cold first one (both pay the same per-call
+/// costs — rank clones, `calc_my_req` slabs, thread spawns — so the
+/// difference isolates the arena's buffers).
+fn warm_arena_beats_cold(algo: Algorithm, label: &str) {
+    let topo = Topology::new(2, 8);
+    let net = NetParams::default();
+    let cpu = CpuModel::default();
+    let io = IoModel::default();
+    let eng = NativeEngine;
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 4,
+    };
+    let ranks: Vec<(usize, ReqBatch)> = (0..topo.nprocs())
+        .map(|r| {
+            let base = r as u64 * 2048;
+            let view = FlatView::from_pairs(
+                (0..8).map(|i| (base + i * 256, 200)).collect(),
+            )
+            .unwrap();
+            (r, ReqBatch::new(view, deterministic_payload(13, r, 1600)))
+        })
+        .collect();
+
+    let mut arena = ExchangeArena::default();
+    let mut file = LustreFile::new(LustreConfig::new(256, 4));
+
+    let t0 = allocs();
+    run_collective_write_with(&ctx, algo, ranks.clone(), &mut file, &mut arena).unwrap();
+    let cold = allocs() - t0;
+    let t1 = allocs();
+    run_collective_write_with(&ctx, algo, ranks.clone(), &mut file, &mut arena).unwrap();
+    let warm = allocs() - t1;
+    assert!(
+        warm < cold,
+        "{label} write: warm arena saved nothing (cold={cold} allocs, warm={warm})"
+    );
+
+    // Read direction through the same arena: cold read (first read-shaped
+    // exchange, stats + reply staging grow) vs warm repeat.
+    let views: Vec<(usize, FlatView)> =
+        ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+    let t2 = allocs();
+    let (got, _) =
+        run_collective_read_with(&ctx, algo, views.clone(), &file, &mut arena).unwrap();
+    let cold_read = allocs() - t2;
+    for ((r, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+        assert_eq!(payload, &want.payload, "{label} rank {r} read-back");
+    }
+    let t3 = allocs();
+    run_collective_read_with(&ctx, algo, views, &file, &mut arena).unwrap();
+    let warm_read = allocs() - t3;
+    assert!(
+        warm_read < cold_read,
+        "{label} read: warm arena saved nothing (cold={cold_read}, warm={warm_read})"
+    );
+}
+
+#[test]
+fn arena_keeps_steady_state_rounds_allocation_free() {
+    steady_state_rounds_allocate_nothing();
+    warm_arena_beats_cold(Algorithm::TwoPhase, "two-phase");
+    warm_arena_beats_cold(
+        Algorithm::Tam(tamio::coordinator::tam::TamConfig { total_local_aggregators: 4 }),
+        "tam",
+    );
+}

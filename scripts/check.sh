@@ -3,6 +3,8 @@
 #
 #   scripts/check.sh            # tier-1 + fmt + clippy
 #   BENCH=1 scripts/check.sh    # additionally regenerate BENCH_hotpath.json
+#   SCALE=1 scripts/check.sh    # additionally smoke the paper's 16384-rank
+#                               # point (verification-gated sweep, ~minutes)
 #
 # fmt/clippy are skipped with a warning when the components are not
 # installed (the offline image ships a bare toolchain).
@@ -48,6 +50,18 @@ cargo bench --no-run
 if [ "${BENCH:-0}" = "1" ]; then
     echo "== hot-path bench (writes BENCH_hotpath.json) =="
     cargo bench --bench hotpath
+fi
+
+if [ "${SCALE:-0}" = "1" ]; then
+    # The ROADMAP scale-sweep item: a small sweep at 16384 ranks on 256
+    # nodes, both directions.  E3SM-G at scale 1024 keeps it ~170k
+    # requests / ~89 MiB.  Write bars verify by vectored read-back
+    # (--verify), read bars always verify the gathered bytes; any
+    # mismatch fails the sweep (nonzero exit) and therefore this gate.
+    echo "== SCALE=1: 16384-rank / 256-node sweep smoke (both directions) =="
+    cargo run --release --bin tamio -- sweep \
+        --nodes 256 --ppn 64 --workload e3sm-g --scale 1024 \
+        --pl 256 --direction both --verify
 fi
 
 echo "check.sh: all gates passed"
