@@ -1,0 +1,90 @@
+//! Hierarchy-depth ablation at the paper's 16384-rank × 256-node point:
+//! the same E3SM G-case collective driven through aggregation trees of
+//! increasing depth — two-phase (depth 0), TAM / `tree:node=1` (depth 1,
+//! bit-identical by construction), a socket+node tree (depth 2) and a
+//! socket+node+switch tree (depth 3) — on a 4-sockets-per-node,
+//! 16-nodes-per-switch topology priced by the per-tier link table.
+//!
+//! `cargo bench --bench ablation_depth`
+//! Env: TAMIO_BENCH_BUDGET=N requests (default 150k);
+//!      TAMIO_BENCH_DIRECTION=write|read|both (default both).
+
+use tamio::config::RunConfig;
+use tamio::coordinator::collective::{Algorithm, ExchangeArena};
+use tamio::experiments::{
+    auto_scale, bench_direction_from_env, build_engine_for, run_direction_with_arena,
+};
+use tamio::metrics::breakdown_panels;
+use tamio::workloads::WorkloadKind;
+
+fn main() {
+    const NODES: usize = 256;
+    const PPN: usize = 64;
+    let budget: u64 = std::env::var("TAMIO_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150_000);
+    let direction = bench_direction_from_env();
+
+    let mut base = RunConfig::default();
+    base.nodes = NODES;
+    base.ppn = PPN;
+    base.sockets_per_node = 4;
+    base.nodes_per_switch = 16;
+    base.workload = WorkloadKind::E3smG;
+    base.scale = auto_scale(WorkloadKind::E3smG, NODES * PPN, budget);
+    base.direction = direction;
+    // Write bars verify by vectored read-back (reads always verify) so
+    // the assert below gates BOTH directions — a panel that prints is a
+    // panel whose bytes round-tripped.
+    base.verify = true;
+    println!(
+        "Depth ablation: e3sm-g @ {NODES} nodes x {PPN} ppn (P={}), \
+         4 sockets/node, 16 nodes/switch, scale 1/{}, direction {direction}",
+        NODES * PPN,
+        base.scale
+    );
+
+    // Depth 0 → 3.  `tree:node=1` is the depth-1 plan TAM(P_L=256)
+    // resolves to on 256 nodes — the bit-identity the panel asserts.
+    let algos = [
+        "two-phase",
+        "tam:256",
+        "tree:node=1",
+        "tree:socket=2,node=2",
+        "tree:socket=4,node=2,switch=1",
+    ];
+    let engine = build_engine_for(&base).expect("engine");
+    let mut arena = ExchangeArena::default();
+    let mut runs = Vec::new();
+    for &dir in direction.runs() {
+        for name in algos {
+            let mut cfg = base.clone();
+            cfg.algorithm = name.parse::<Algorithm>().expect("algorithm");
+            let (mut run, verify) =
+                run_direction_with_arena(&cfg, engine.as_ref(), dir, &mut arena)
+                    .expect("ablation run");
+            if let Some(v) = verify {
+                assert!(v.passed(), "{name} [{dir}]: verify {}/{}", v.ok, v.total);
+            }
+            run.label = name.to_string();
+            runs.push(run);
+        }
+    }
+    print!("{}", breakdown_panels(&runs));
+
+    // Self-check: the depth-1 tree and TAM are the same plan.
+    let per_dir = algos.len();
+    for (d, dir) in direction.runs().iter().enumerate() {
+        let tam = &runs[d * per_dir + 1];
+        let tree1 = &runs[d * per_dir + 2];
+        assert_eq!(
+            tam.breakdown.total(),
+            tree1.breakdown.total(),
+            "[{dir}] depth-1 tree must be bit-identical to tam:256"
+        );
+        assert_eq!(tam.counters.msgs_intra, tree1.counters.msgs_intra, "[{dir}]");
+        assert_eq!(tam.counters.msgs_inter, tree1.counters.msgs_inter, "[{dir}]");
+    }
+    println!("ablation_depth: tree:node=1 == tam:256 (bit-identical) ok");
+}

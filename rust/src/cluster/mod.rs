@@ -1,24 +1,139 @@
-//! Compute-node topology: ranks ↔ (node, local rank).
+//! Compute-machine topology: ranks ↔ (node, local rank) plus the machine
+//! hierarchy the aggregation tree is built over.
 //!
 //! The paper's testbed is `nodes × ppn` MPI ranks with contiguous rank ids
 //! per node (block placement, the ALPS/aprun default on the Cray XC40).
-//! All aggregator-selection policies and the intra-/inter-node distinction
-//! in the network model are defined in terms of this mapping.
+//! All aggregator-selection policies are defined in terms of this mapping.
+//!
+//! On top of the flat node grid the topology can expose two further
+//! hierarchy levels (DESIGN.md §Aggregation tree):
+//!
+//! * **sockets** — `sockets_per_node` NUMA domains inside each node, with
+//!   [`RankPlacement::Block`] (contiguous local ranks per socket) or
+//!   [`RankPlacement::RoundRobin`] (strided) rank placement;
+//! * **switch groups** — `nodes_per_switch` nodes behind one leaf switch,
+//!   again block or round-robin over node ids.
+//!
+//! The default `Topology::new(nodes, ppn)` is the 2-level degenerate form
+//! (1 socket per node, a single switch tier): every existing flat-topology
+//! call site behaves exactly as before.  The network model prices each
+//! message by its [`LinkTier`] — the innermost hierarchy level containing
+//! both endpoints — so cost attribution follows the aggregation tree.
 
-/// Cluster topology: `nodes` compute nodes, `ppn` MPI processes per node.
+/// Named machine-hierarchy levels, innermost (closest to a rank) first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelKind {
+    /// NUMA domain / socket inside a node.
+    Socket,
+    /// Compute node.
+    Node,
+    /// Leaf-switch group of nodes.
+    Switch,
+}
+
+impl LevelKind {
+    /// Short label for plans, metrics rows and CLI syntax.
+    pub fn label(self) -> &'static str {
+        match self {
+            LevelKind::Socket => "socket",
+            LevelKind::Node => "node",
+            LevelKind::Switch => "switch",
+        }
+    }
+}
+
+impl std::fmt::Display for LevelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// How ranks (or nodes) are dealt into the groups of a hierarchy level.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RankPlacement {
+    /// Contiguous ids per group (the ALPS/aprun default).
+    #[default]
+    Block,
+    /// Strided ids (`id % groups`), the cyclic launcher layout.
+    RoundRobin,
+}
+
+impl std::fmt::Display for RankPlacement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RankPlacement::Block => write!(f, "block"),
+            RankPlacement::RoundRobin => write!(f, "round-robin"),
+        }
+    }
+}
+
+/// Link tier of one message: the innermost hierarchy level containing both
+/// endpoints.  The network model holds one α–β row per tier
+/// ([`crate::netmodel::NetParams::msg_cost_tier`]); on a flat topology only
+/// [`LinkTier::Node`] and [`LinkTier::Global`] occur, reproducing the old
+/// binary intra/inter split bit-for-bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LinkTier {
+    /// Same node, same socket (shared L3 / NUMA-local memory).
+    Socket,
+    /// Same node, cross-socket (shared memory over the inter-socket bus).
+    Node,
+    /// Different nodes behind the same leaf switch.
+    Switch,
+    /// Different switch groups (full network traversal).
+    Global,
+}
+
+impl LinkTier {
+    /// Whether the message never leaves the node (no NIC involvement).
+    pub fn is_local(self) -> bool {
+        matches!(self, LinkTier::Socket | LinkTier::Node)
+    }
+}
+
+/// Cluster topology: `nodes` compute nodes, `ppn` MPI processes per node,
+/// plus the optional socket and switch hierarchy levels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Topology {
     /// Number of compute nodes.
     pub nodes: usize,
     /// MPI processes per node (`q` in the paper).
     pub ppn: usize,
+    /// NUMA domains per node (1 = no sub-node level).
+    pub sockets_per_node: usize,
+    /// Nodes per leaf-switch group (0 = single flat switch tier).
+    pub nodes_per_switch: usize,
+    /// Rank→socket and node→switch placement within the hierarchy levels
+    /// (node placement itself is always block — rank ids are contiguous
+    /// per node, the invariant every dense accumulator relies on).
+    pub placement: RankPlacement,
 }
 
 impl Topology {
-    /// Create a topology; panics on zero sizes (a config-layer invariant).
+    /// Create a flat topology; panics on zero sizes (a config-layer
+    /// invariant).  The degenerate hierarchy: one socket per node, one
+    /// switch tier.
     pub fn new(nodes: usize, ppn: usize) -> Self {
+        Self::hierarchical(nodes, ppn, 1, 0, RankPlacement::Block)
+    }
+
+    /// Create a topology with explicit hierarchy levels.
+    ///
+    /// `sockets_per_node == 1` disables the socket level;
+    /// `nodes_per_switch == 0` (or `>= nodes`) disables the switch level.
+    pub fn hierarchical(
+        nodes: usize,
+        ppn: usize,
+        sockets_per_node: usize,
+        nodes_per_switch: usize,
+        placement: RankPlacement,
+    ) -> Self {
         assert!(nodes > 0 && ppn > 0, "topology must be non-empty");
-        Self { nodes, ppn }
+        assert!(
+            sockets_per_node >= 1 && sockets_per_node <= ppn,
+            "sockets_per_node must be in 1..=ppn"
+        );
+        Self { nodes, ppn, sockets_per_node, nodes_per_switch, placement }
     }
 
     /// Total number of MPI processes `P`.
@@ -51,6 +166,104 @@ impl Topology {
     /// All ranks on `node`, ascending.
     pub fn ranks_on_node(&self, node: usize) -> std::ops::Range<usize> {
         (node * self.ppn)..((node + 1) * self.ppn)
+    }
+
+    // ---- socket level ----
+
+    /// Socket index of `rank` within its node.
+    pub fn socket_in_node(&self, rank: usize) -> usize {
+        let l = self.local_rank(rank);
+        match self.placement {
+            // Balanced contiguous split: the first `ppn % spn` sockets get
+            // one extra local rank.
+            RankPlacement::Block => l * self.sockets_per_node / self.ppn,
+            RankPlacement::RoundRobin => l % self.sockets_per_node,
+        }
+    }
+
+    /// Global socket id of `rank` (node-major).
+    pub fn socket_of(&self, rank: usize) -> usize {
+        self.node_of(rank) * self.sockets_per_node + self.socket_in_node(rank)
+    }
+
+    /// Total socket groups across the machine.
+    pub fn n_sockets(&self) -> usize {
+        self.nodes * self.sockets_per_node
+    }
+
+    /// Whether two ranks share a socket (implies sharing a node).
+    pub fn same_socket(&self, a: usize, b: usize) -> bool {
+        self.socket_of(a) == self.socket_of(b)
+    }
+
+    // ---- switch level ----
+
+    /// Number of leaf-switch groups (1 = flat switch tier).
+    pub fn n_switches(&self) -> usize {
+        if self.nodes_per_switch == 0 || self.nodes_per_switch >= self.nodes {
+            1
+        } else {
+            self.nodes.div_ceil(self.nodes_per_switch)
+        }
+    }
+
+    /// Switch group of a node.
+    pub fn switch_of_node(&self, node: usize) -> usize {
+        let n_sw = self.n_switches();
+        if n_sw == 1 {
+            return 0;
+        }
+        match self.placement {
+            RankPlacement::Block => node / self.nodes_per_switch,
+            RankPlacement::RoundRobin => node % n_sw,
+        }
+    }
+
+    /// Switch group of `rank`.
+    pub fn switch_of(&self, rank: usize) -> usize {
+        self.switch_of_node(self.node_of(rank))
+    }
+
+    /// Whether two ranks sit behind the same leaf switch.
+    pub fn same_switch(&self, a: usize, b: usize) -> bool {
+        self.switch_of(a) == self.switch_of(b)
+    }
+
+    // ---- generic level access (the aggregation tree's view) ----
+
+    /// Number of groups at a hierarchy level.
+    pub fn n_groups(&self, kind: LevelKind) -> usize {
+        match kind {
+            LevelKind::Socket => self.n_sockets(),
+            LevelKind::Node => self.nodes,
+            LevelKind::Switch => self.n_switches(),
+        }
+    }
+
+    /// Group id of `rank` at a hierarchy level.
+    pub fn group_of(&self, kind: LevelKind, rank: usize) -> usize {
+        match kind {
+            LevelKind::Socket => self.socket_of(rank),
+            LevelKind::Node => self.node_of(rank),
+            LevelKind::Switch => self.switch_of(rank),
+        }
+    }
+
+    /// Link tier of a message between two ranks: the innermost level
+    /// containing both.  Flat topologies produce only `Node`/`Global`,
+    /// matching the pre-hierarchy intra/inter split exactly.
+    pub fn tier_of(&self, a: usize, b: usize) -> LinkTier {
+        if self.same_node(a, b) {
+            if self.sockets_per_node > 1 && self.socket_in_node(a) == self.socket_in_node(b) {
+                LinkTier::Socket
+            } else {
+                LinkTier::Node
+            }
+        } else if self.n_switches() > 1 && self.same_switch(a, b) {
+            LinkTier::Switch
+        } else {
+            LinkTier::Global
+        }
     }
 }
 
@@ -93,5 +306,119 @@ mod tests {
     #[should_panic]
     fn zero_topology_panics() {
         Topology::new(0, 4);
+    }
+
+    #[test]
+    fn flat_topology_degenerates_to_node_and_global_tiers() {
+        let t = Topology::new(2, 4);
+        assert_eq!(t.n_sockets(), 2);
+        assert_eq!(t.n_switches(), 1);
+        assert_eq!(t.tier_of(0, 3), LinkTier::Node);
+        assert_eq!(t.tier_of(0, 4), LinkTier::Global);
+        // Every rank pair hits exactly the old binary split.
+        for a in 0..t.nprocs() {
+            for b in 0..t.nprocs() {
+                let tier = t.tier_of(a, b);
+                if t.same_node(a, b) {
+                    assert_eq!(tier, LinkTier::Node);
+                } else {
+                    assert_eq!(tier, LinkTier::Global);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn socket_block_placement_splits_contiguously() {
+        let t = Topology::hierarchical(2, 8, 2, 0, RankPlacement::Block);
+        // Local ranks 0..4 → socket 0, 4..8 → socket 1, on each node.
+        assert_eq!(t.socket_in_node(0), 0);
+        assert_eq!(t.socket_in_node(3), 0);
+        assert_eq!(t.socket_in_node(4), 1);
+        assert_eq!(t.socket_of(8), 2); // node 1, socket 0
+        assert_eq!(t.socket_of(12), 3);
+        assert!(t.same_socket(0, 3));
+        assert!(!t.same_socket(3, 4));
+        assert!(!t.same_socket(0, 8)); // same local socket id, other node
+        assert_eq!(t.tier_of(0, 3), LinkTier::Socket);
+        assert_eq!(t.tier_of(3, 4), LinkTier::Node);
+    }
+
+    #[test]
+    fn socket_block_placement_uneven_ppn() {
+        // 5 local ranks over 2 sockets: balanced split 3 + 2.
+        let t = Topology::hierarchical(1, 5, 2, 0, RankPlacement::Block);
+        let sockets: Vec<usize> = (0..5).map(|r| t.socket_in_node(r)).collect();
+        assert_eq!(sockets, vec![0, 0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn socket_round_robin_placement_strides() {
+        let t = Topology::hierarchical(1, 8, 2, 0, RankPlacement::RoundRobin);
+        let sockets: Vec<usize> = (0..8).map(|r| t.socket_in_node(r)).collect();
+        assert_eq!(sockets, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn switch_groups_block_and_round_robin() {
+        let tb = Topology::hierarchical(6, 2, 1, 2, RankPlacement::Block);
+        assert_eq!(tb.n_switches(), 3);
+        let groups: Vec<usize> = (0..6).map(|n| tb.switch_of_node(n)).collect();
+        assert_eq!(groups, vec![0, 0, 1, 1, 2, 2]);
+        assert_eq!(tb.tier_of(0, 2), LinkTier::Switch); // nodes 0,1 share switch 0
+        assert_eq!(tb.tier_of(0, 4), LinkTier::Global); // nodes 0,2 do not
+
+        let tr = Topology::hierarchical(6, 2, 1, 2, RankPlacement::RoundRobin);
+        let groups: Vec<usize> = (0..6).map(|n| tr.switch_of_node(n)).collect();
+        assert_eq!(groups, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn switch_group_counts_partial_last_group() {
+        let t = Topology::hierarchical(5, 1, 1, 2, RankPlacement::Block);
+        assert_eq!(t.n_switches(), 3);
+        assert_eq!(t.switch_of_node(4), 2);
+        // nodes_per_switch >= nodes collapses to one switch.
+        let flat = Topology::hierarchical(5, 1, 1, 8, RankPlacement::Block);
+        assert_eq!(flat.n_switches(), 1);
+    }
+
+    #[test]
+    fn generic_level_access_matches_specific() {
+        let t = Topology::hierarchical(4, 6, 3, 2, RankPlacement::Block);
+        assert_eq!(t.n_groups(LevelKind::Socket), 12);
+        assert_eq!(t.n_groups(LevelKind::Node), 4);
+        assert_eq!(t.n_groups(LevelKind::Switch), 2);
+        for r in 0..t.nprocs() {
+            assert_eq!(t.group_of(LevelKind::Socket, r), t.socket_of(r));
+            assert_eq!(t.group_of(LevelKind::Node, r), t.node_of(r));
+            assert_eq!(t.group_of(LevelKind::Switch, r), t.switch_of(r));
+        }
+    }
+
+    #[test]
+    fn levels_nest_socket_in_node_in_switch() {
+        for placement in [RankPlacement::Block, RankPlacement::RoundRobin] {
+            let t = Topology::hierarchical(6, 8, 4, 2, placement);
+            for a in 0..t.nprocs() {
+                for b in 0..t.nprocs() {
+                    if t.same_socket(a, b) {
+                        assert!(t.same_node(a, b), "socket level must nest in node");
+                    }
+                    if t.same_node(a, b) {
+                        assert!(t.same_switch(a, b), "node level must nest in switch");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn level_kind_labels() {
+        assert_eq!(LevelKind::Socket.label(), "socket");
+        assert_eq!(LevelKind::Node.to_string(), "node");
+        assert_eq!(LevelKind::Switch.to_string(), "switch");
+        assert!(LinkTier::Socket.is_local() && LinkTier::Node.is_local());
+        assert!(!LinkTier::Switch.is_local() && !LinkTier::Global.is_local());
     }
 }

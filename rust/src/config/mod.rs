@@ -3,7 +3,7 @@
 
 pub mod kv;
 
-use crate::cluster::Topology;
+use crate::cluster::{RankPlacement, Topology};
 use crate::coordinator::breakdown::CpuModel;
 use crate::coordinator::collective::{Algorithm, DirectionSpec};
 use crate::coordinator::placement::GlobalPlacement;
@@ -22,6 +22,12 @@ pub struct RunConfig {
     pub nodes: usize,
     /// MPI processes per node.
     pub ppn: usize,
+    /// NUMA/socket domains per node (1 = flat; enables `tree:socket=...`).
+    pub sockets_per_node: usize,
+    /// Nodes per leaf-switch group (0 = flat; enables `tree:switch=...`).
+    pub nodes_per_switch: usize,
+    /// Rank→socket and node→switch placement within hierarchy groups.
+    pub rank_placement: RankPlacement,
     /// Workload.
     pub workload: WorkloadKind,
     /// Workload scale divisor (1 = paper scale).
@@ -54,6 +60,9 @@ impl Default for RunConfig {
         RunConfig {
             nodes: 4,
             ppn: 16,
+            sockets_per_node: 1,
+            nodes_per_switch: 0,
+            rank_placement: RankPlacement::Block,
             workload: WorkloadKind::E3smG,
             scale: 4096,
             algorithm: Algorithm::TwoPhase,
@@ -71,9 +80,23 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
-    /// Cluster topology.
+    /// Cluster topology (including the socket/switch hierarchy levels).
+    ///
+    /// # Panics
+    ///
+    /// An out-of-range `sockets_per_node` (0 or > `ppn`) panics in the
+    /// [`Topology::hierarchical`] constructor with a message naming the
+    /// constraint — the same config-layer treatment as zero `nodes`/`ppn`
+    /// (silently clamping would report costs for a different NUMA
+    /// geometry than the one requested).
     pub fn topology(&self) -> Topology {
-        Topology::new(self.nodes, self.ppn)
+        Topology::hierarchical(
+            self.nodes,
+            self.ppn,
+            self.sockets_per_node,
+            self.nodes_per_switch,
+            self.rank_placement,
+        )
     }
 
     /// Apply `--key value` overrides (also used for config-file keys).
@@ -96,6 +119,19 @@ impl RunConfig {
         match key {
             "nodes" => self.nodes = parse_u64(value)? as usize,
             "ppn" => self.ppn = parse_u64(value)? as usize,
+            "sockets_per_node" | "spn" => self.sockets_per_node = parse_u64(value)? as usize,
+            "nodes_per_switch" | "nps" => self.nodes_per_switch = parse_u64(value)? as usize,
+            "rank_placement" => {
+                self.rank_placement = match value {
+                    "block" => RankPlacement::Block,
+                    "rr" | "round-robin" | "roundrobin" => RankPlacement::RoundRobin,
+                    _ => {
+                        return Err(Error::config(format!(
+                            "bad rank_placement '{value}' (block|round-robin)"
+                        )))
+                    }
+                }
+            }
             "workload" => self.workload = value.parse()?,
             "scale" => self.scale = parse_u64(value)?,
             "algorithm" | "algo" => self.algorithm = value.parse()?,
@@ -127,8 +163,12 @@ impl RunConfig {
             }
             "net.alpha_inter" => self.net.alpha_inter = parse_f64(value)?,
             "net.alpha_intra" => self.net.alpha_intra = parse_f64(value)?,
+            "net.alpha_socket" => self.net.alpha_socket = parse_f64(value)?,
+            "net.alpha_switch" => self.net.alpha_switch = parse_f64(value)?,
             "net.beta_inter" => self.net.beta_inter = parse_f64(value)?,
             "net.beta_intra" => self.net.beta_intra = parse_f64(value)?,
+            "net.beta_socket" => self.net.beta_socket = parse_f64(value)?,
+            "net.beta_switch" => self.net.beta_switch = parse_f64(value)?,
             "net.recv_overhead" => self.net.recv_overhead = parse_f64(value)?,
             "net.send_overhead" => self.net.send_overhead = parse_f64(value)?,
             "net.pending_penalty" => self.net.pending_penalty = parse_f64(value)?,
@@ -191,6 +231,46 @@ mod tests {
         assert_eq!(c.direction, DirectionSpec::Read);
         let bad = KvMap::from_pairs(vec![("direction".into(), "sideways".into())]);
         assert!(c.apply(&bad).is_err());
+    }
+
+    #[test]
+    fn hierarchy_keys_build_hierarchical_topology() {
+        let mut c = RunConfig::default();
+        let kv = KvMap::from_pairs(vec![
+            ("nodes".into(), "4".into()),
+            ("ppn".into(), "8".into()),
+            ("sockets_per_node".into(), "2".into()),
+            ("nodes_per_switch".into(), "2".into()),
+            ("rank_placement".into(), "round-robin".into()),
+            ("algorithm".into(), "tree:socket=2,node=1".into()),
+            ("net.alpha_socket".into(), "1e-7".into()),
+            ("net.beta_switch".into(), "2e-10".into()),
+        ]);
+        c.apply(&kv).unwrap();
+        let topo = c.topology();
+        assert_eq!(topo.sockets_per_node, 2);
+        assert_eq!(topo.n_switches(), 2);
+        assert_eq!(topo.placement, RankPlacement::RoundRobin);
+        assert!(matches!(c.algorithm, Algorithm::Tree(s) if s.depth() == 2));
+        assert_eq!(c.net.alpha_socket, 1e-7);
+        assert_eq!(c.net.beta_switch, 2e-10);
+        // Bad placement rejected.
+        let bad = KvMap::from_pairs(vec![("rank_placement".into(), "spiral".into())]);
+        assert!(c.apply(&bad).is_err());
+        // Defaults stay flat: the degenerate 2-level topology.
+        let d = RunConfig::default();
+        assert_eq!(d.topology(), Topology::new(d.nodes, d.ppn));
+    }
+
+    #[test]
+    #[should_panic(expected = "sockets_per_node")]
+    fn out_of_range_sockets_per_node_panics_not_clamps() {
+        // More sockets than ranks per node must fail loudly — a silent
+        // clamp would price a different NUMA geometry than requested.
+        let mut c = RunConfig::default();
+        c.ppn = 4;
+        c.sockets_per_node = 8;
+        let _ = c.topology();
     }
 
     #[test]

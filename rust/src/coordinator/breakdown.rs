@@ -63,6 +63,30 @@ impl CpuModel {
     }
 }
 
+/// Intra-aggregation time of one tree level (innermost level first in
+/// [`Breakdown::levels`]): the per-level split of the `intra_*` sums, so
+/// reports can attribute cost to the socket/node/switch tier it accrued
+/// at.  For reads, `comm` covers both the gather (metadata up) and the
+/// scatter (replies down) of the level.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LevelTime {
+    /// Level label (`socket` / `node` / `switch`).
+    pub label: &'static str,
+    /// Gather (+ reply scatter on reads) communication at this level.
+    pub comm: f64,
+    /// Merge-sort time at this level's aggregators.
+    pub sort: f64,
+    /// Contiguous-buffer movement at this level.
+    pub memcpy: f64,
+}
+
+impl LevelTime {
+    /// Total time attributed to this level.
+    pub fn total(&self) -> f64 {
+        self.comm + self.sort + self.memcpy
+    }
+}
+
 /// Simulated-time breakdown of one collective operation, with the exact
 /// component set the paper plots.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -90,6 +114,11 @@ pub struct Breakdown {
     // ---- I/O phase ----
     /// File-system time at the global aggregators.
     pub io_phase: f64,
+
+    /// Per-tree-level split of the `intra_*` sums, innermost level first
+    /// (empty for depth-0 plans / plain two-phase).  The sums above remain
+    /// the totals; this is reporting detail, not a separate cost.
+    pub levels: Vec<LevelTime>,
 }
 
 impl Breakdown {
@@ -170,11 +199,24 @@ mod tests {
             inter_datatype: 7.0,
             inter_comm: 8.0,
             io_phase: 9.0,
+            levels: Vec::new(),
         };
         assert_eq!(b.intra_total(), 6.0);
         assert_eq!(b.inter_total(), 30.0);
         assert_eq!(b.total(), 45.0);
         assert_eq!(b.rows().len(), 9);
+    }
+
+    #[test]
+    fn level_times_are_reporting_detail_not_extra_cost() {
+        let mut b = Breakdown { intra_comm: 1.0, intra_sort: 0.5, ..Default::default() };
+        b.levels.push(LevelTime { label: "socket", comm: 0.6, sort: 0.3, memcpy: 0.0 });
+        b.levels.push(LevelTime { label: "node", comm: 0.4, sort: 0.2, memcpy: 0.0 });
+        // The per-level split sums to the intra totals; total() ignores it.
+        let split: f64 = b.levels.iter().map(LevelTime::total).sum();
+        assert!((split - b.intra_total()).abs() < 1e-12);
+        assert_eq!(b.total(), 1.5);
+        assert_eq!(b.levels[0].label, "socket");
     }
 
     #[test]

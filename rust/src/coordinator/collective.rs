@@ -15,16 +15,19 @@
 //! `read_view`, and where the I/O-phase statistics accumulate
 //! (DESIGN.md §Direction-generic exchange).
 //!
-//! Both TwoPhase and TAM drive the same loop: TAM stacks its intra-node
-//! layer on top and hands the local aggregators to [`run_exchange`] as
-//! the requester set, in either direction.
+//! Every algorithm drives the same loop through an N-level
+//! [`AggregationPlan`]: two-phase is the depth-0 plan (every rank is a
+//! requester), TAM the depth-1 node-level plan, and `tree:` specs stack
+//! arbitrary socket/node/switch levels on top — in either direction
+//! ([`crate::coordinator::tree`]).
 
 use crate::coordinator::breakdown::{Breakdown, Counters};
 use crate::coordinator::filedomain::FileDomains;
 use crate::coordinator::merge::{gather_from_buf, gather_slices_from_buf, ReqBatch, RoundScratch};
 use crate::coordinator::placement::select_global_aggregators;
 use crate::coordinator::reqcalc::{calc_my_req, metadata_bytes, MyReqs};
-use crate::coordinator::tam::{intra_node_read_views, tam_write, TamConfig};
+use crate::coordinator::tam::{tam_write, TamConfig};
+use crate::coordinator::tree::{tree_read, tree_write, AggregationPlan, TreeSpec};
 use crate::coordinator::twophase::{two_phase_write, CollectiveCtx, ExchangeOutcome};
 use crate::error::Result;
 use crate::lustre::{LustreConfig, LustreFile, OstStats};
@@ -58,6 +61,113 @@ pub struct ExchangeArena {
     pub pending: PendingQueue,
     /// Dense per-aggregator request totals for the metadata phase.
     pub meta_reqs: Vec<u64>,
+    /// Per-(tree level, aggregator) scratch slots for the aggregation
+    /// tree's intra stages (`levels[ℓ][slot]`; empty for depth-0 plans).
+    pub levels: Vec<Vec<RoundScratch>>,
+    /// Pooled read-reply slab keyed by requester — the read direction's
+    /// per-requester reply payloads, one warm allocation instead of one
+    /// `Vec` per requester per exchange (the last per-exchange allocation
+    /// that scaled with `P`).  Valid until the next read exchange through
+    /// this arena.
+    pub reply: ReplySlab,
+}
+
+/// Pooled reply storage of one read exchange: requester `i`'s reply bytes
+/// occupy `bytes[starts[i]..starts[i + 1]]`, assembled in round order
+/// through per-requester cursors.  All three vectors keep their capacity
+/// across exchanges (the slab lives in the [`ExchangeArena`]).
+#[derive(Debug, Default)]
+pub struct ReplySlab {
+    /// Reply bytes, all requesters concatenated.
+    bytes: Vec<u8>,
+    /// Requester span boundaries (`R + 1` entries once reset).
+    starts: Vec<usize>,
+    /// Per-requester assembly cursor (bytes written so far).
+    cursors: Vec<usize>,
+}
+
+impl ReplySlab {
+    /// Lay the slab out for a new exchange: one span per requester byte
+    /// total, zero-filled, cursors rewound.  Capacity is reused.
+    pub fn reset(&mut self, totals: impl Iterator<Item = usize>) {
+        self.starts.clear();
+        self.starts.push(0);
+        let mut acc = 0usize;
+        for t in totals {
+            acc += t;
+            self.starts.push(acc);
+        }
+        self.cursors.clear();
+        self.cursors.resize(self.starts.len() - 1, 0);
+        self.bytes.clear();
+        self.bytes.resize(acc, 0);
+    }
+
+    /// Number of requester spans.
+    pub fn len(&self) -> usize {
+        self.starts.len().saturating_sub(1)
+    }
+
+    /// True when the slab holds no spans.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Requester `i`'s (fully or partially assembled) reply bytes.
+    pub fn of(&self, i: usize) -> &[u8] {
+        &self.bytes[self.starts[i]..self.starts[i + 1]]
+    }
+
+    /// The next `n` unwritten bytes of requester `i`'s span, advancing
+    /// its cursor — the assembly target of one staged round stream.
+    ///
+    /// # Panics
+    ///
+    /// Panics (in release builds too) when the write would overrun
+    /// requester `i`'s span: the slab is shared, so an accounting bug
+    /// upstream would otherwise silently corrupt the *next* requester's
+    /// reply instead of crashing the way the old per-requester `Vec`s
+    /// did.  One compare per staged stream — not per byte.
+    pub fn append_slot(&mut self, i: usize, n: usize) -> &mut [u8] {
+        let lo = self.starts[i] + self.cursors[i];
+        self.cursors[i] += n;
+        assert!(
+            self.starts[i] + self.cursors[i] <= self.starts[i + 1],
+            "reply span overflow for requester {i}"
+        );
+        &mut self.bytes[lo..lo + n]
+    }
+
+    /// Whether every span has been assembled exactly (the end-of-exchange
+    /// invariant of the read direction).
+    pub fn fully_assembled(&self) -> bool {
+        self.cursors
+            .iter()
+            .enumerate()
+            .all(|(i, &c)| self.starts[i] + c == self.starts[i + 1])
+    }
+}
+
+/// Where one requester's read-exchange reply lives: in the arena's pooled
+/// slab (the common, non-overlapping case) or in an owned buffer (views
+/// that had to be exchanged as their disjoint union).  Resolve with
+/// [`ReadReply::bytes`].
+#[derive(Debug)]
+pub enum ReadReply {
+    /// Requester index into [`ExchangeArena::reply`].
+    Slab(usize),
+    /// Overlap-expanded bytes (self-overlapping views only).
+    Owned(Vec<u8>),
+}
+
+impl ReadReply {
+    /// The reply bytes, wherever they live.
+    pub fn bytes<'a>(&'a self, arena: &'a ExchangeArena) -> &'a [u8] {
+        match self {
+            ReadReply::Slab(i) => arena.reply.of(*i),
+            ReadReply::Owned(v) => v,
+        }
+    }
 }
 
 /// Direction axis of the collective pipeline: one round-exchange engine
@@ -142,13 +252,18 @@ impl std::str::FromStr for DirectionSpec {
     }
 }
 
-/// Collective-I/O algorithm selector.
+/// Collective-I/O algorithm selector.  All three are depths of the same
+/// hierarchical pipeline ([`AggregationPlan`]): two-phase is depth 0, TAM
+/// is the depth-1 node-level tree, `Tree` is the general N-level form.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algorithm {
-    /// ROMIO's classic two-phase I/O (baseline).
+    /// ROMIO's classic two-phase I/O (baseline; the depth-0 tree).
     TwoPhase,
-    /// The paper's two-layer aggregation method.
+    /// The paper's two-layer aggregation method (the depth-1 node tree).
     Tam(TamConfig),
+    /// An N-level aggregation tree over the machine hierarchy
+    /// (`tree:socket=4,node=2,switch=1`).
+    Tree(TreeSpec),
 }
 
 impl Algorithm {
@@ -157,6 +272,7 @@ impl Algorithm {
         match self {
             Algorithm::TwoPhase => "two-phase".into(),
             Algorithm::Tam(t) => format!("tam(P_L={})", t.total_local_aggregators),
+            Algorithm::Tree(spec) => format!("tree({spec})"),
         }
     }
 }
@@ -177,8 +293,14 @@ impl std::str::FromStr for Algorithm {
                 .map_err(|_| crate::Error::config(format!("bad P_L in '{s}'")))?;
             return Ok(Algorithm::Tam(TamConfig { total_local_aggregators: total }));
         }
+        if s == "tree" {
+            return Ok(Algorithm::Tree(TreeSpec::default()));
+        }
+        if let Some(spec) = s.strip_prefix("tree:") {
+            return Ok(Algorithm::Tree(spec.parse()?));
+        }
         Err(crate::Error::config(format!(
-            "unknown algorithm '{s}' (expected two-phase|tam|tam:<P_L>)"
+            "unknown algorithm '{s}' (expected two-phase|tam|tam:<P_L>|tree:<levels>)"
         )))
     }
 }
@@ -215,6 +337,10 @@ pub fn run_collective_write_with(
     let out = match algo {
         Algorithm::TwoPhase => two_phase_write(ctx, ranks, file, arena)?,
         Algorithm::Tam(tam) => tam_write(ctx, &tam, ranks, file, arena)?,
+        Algorithm::Tree(spec) => {
+            let plan = AggregationPlan::from_spec(ctx.topo, &spec);
+            tree_write(ctx, &plan, ranks, file, arena)?
+        }
     };
     Ok(CollectiveOutcome { breakdown: out.breakdown, counters: out.counters })
 }
@@ -222,10 +348,12 @@ pub fn run_collective_write_with(
 /// Run a collective read: each requester's `view` is filled from `file`.
 ///
 /// Returns the per-rank payloads (view order) and the outcome.  The
-/// communication structure mirrors the write in reverse: for TAM, reads
-/// flow file → global aggregators → local aggregators → ranks, with the
-/// local aggregators merging their members' view metadata first
-/// ([`intra_node_read_views`]) and scattering the reply bytes back last.
+/// communication structure mirrors the write in reverse through the
+/// algorithm's [`AggregationPlan`]: reads flow file → global aggregators →
+/// down the aggregation tree → ranks, with each level's aggregators
+/// merging their members' view metadata on the way up and scattering the
+/// reply bytes back on the way down
+/// ([`crate::coordinator::tree::tree_read`]).
 pub fn run_collective_read(
     ctx: &CollectiveCtx,
     algo: Algorithm,
@@ -244,65 +372,8 @@ pub fn run_collective_read_with(
     file: &LustreFile,
     arena: &mut ExchangeArena,
 ) -> Result<(Vec<(usize, Vec<u8>)>, CollectiveOutcome)> {
-    let posted: u64 = views.iter().map(|(_, v)| v.len() as u64).sum();
-    match algo {
-        Algorithm::TwoPhase => {
-            let (filled, out) = exchange_read(ctx, views, file, arena)?;
-            let mut counters = out.counters;
-            counters.reqs_posted = posted;
-            Ok((
-                filled.into_iter().map(|(rank, _, payload)| (rank, payload)).collect(),
-                CollectiveOutcome { breakdown: out.breakdown, counters },
-            ))
-        }
-        Algorithm::Tam(tam) => {
-            let intra = intra_node_read_views(ctx, &tam, &views)?;
-            let assignment = intra.assignment;
-            let (agg_filled, out) = exchange_read(ctx, intra.agg_views, file, arena)?;
-            let mut bd = out.breakdown;
-            let mut counters = out.counters;
-            bd.intra_sort = intra.sort;
-            counters.reqs_posted = posted;
-
-            // Scatter from local aggregators back to member ranks: each
-            // member's bytes are gathered out of its aggregator's
-            // contiguous reply buffer with the same two-pointer walk the
-            // write path scatters with (both views are sorted).  Members
-            // are independent (each reads only its aggregator's immutable
-            // buffer), so the gathers run concurrently like every other
-            // per-rank stage of the read path.
-            let mut slot_of = vec![usize::MAX; ctx.topo.nprocs()];
-            for (i, (agg, _, _)) in agg_filled.iter().enumerate() {
-                slot_of[*agg] = i;
-            }
-            let gathered: Vec<(usize, Vec<u8>, u64, Option<Message>)> =
-                par_map(views, |(rank, view)| {
-                    let agg = assignment[rank];
-                    let mut payload = vec![0u8; view.total_bytes() as usize];
-                    if !view.is_empty() {
-                        let slot = slot_of[agg];
-                        debug_assert_ne!(slot, usize::MAX, "member view without aggregator");
-                        let (_, aview, apayload) = &agg_filled[slot];
-                        gather_from_buf(aview, apayload, &view, &mut payload);
-                    }
-                    let msg = if rank != agg {
-                        Some(Message::new(agg, rank, view.total_bytes()))
-                    } else {
-                        None
-                    };
-                    (rank, payload, view.total_bytes(), msg)
-                });
-            let scatter_msgs: Vec<Message> =
-                gathered.iter().filter_map(|(_, _, _, m)| *m).collect();
-            let scattered_bytes: u64 = gathered.iter().map(|(_, _, b, _)| *b).sum();
-            let filled: Vec<(usize, Vec<u8>)> =
-                gathered.into_iter().map(|(rank, payload, _, _)| (rank, payload)).collect();
-            bd.intra_comm = intra.comm + cost_phase(ctx.net, ctx.topo, &scatter_msgs).time;
-            bd.intra_memcpy = ctx.cpu.memcpy_time(scattered_bytes);
-            counters.msgs_intra = intra.msgs + scatter_msgs.len();
-            Ok((filled, CollectiveOutcome { breakdown: bd, counters }))
-        }
-    }
+    let plan = AggregationPlan::for_algorithm(ctx.topo, &algo);
+    tree_read(ctx, &plan, views, file, arena)
 }
 
 /// Per-direction storage binding of one exchange: writes mutate the file,
@@ -346,24 +417,26 @@ impl ExchangeIo<'_> {
 ///   through the engine into its reusable [`RoundScratch`] arena and
 ///   performs one vectored storage call ([`LustreFile::write_view`] /
 ///   [`LustreFile::read_view`]);
-/// * on reads, requesters append replies directly into their output
-///   payloads: a sorted view's pieces carry nondecreasing
-///   `(round, aggregator)` keys, so concatenation in drain order
-///   reproduces view order with no reorder pass (self-overlapping read
-///   views go through [`exchange_read`]'s disjoint-union step first).
+/// * on reads, requesters append replies directly into their spans of the
+///   arena's pooled [`ReplySlab`]: a sorted view's pieces carry
+///   nondecreasing `(round, aggregator)` keys, so concatenation in drain
+///   order reproduces view order with no reorder pass (self-overlapping
+///   read views go through [`exchange_read`]'s disjoint-union step first).
 ///
-/// Returns per-requester `(rank, view, payload)` in input order (payloads
-/// empty on writes), plus the outcome.  Engine and storage failures
-/// propagate as `Err` out of the parallel per-aggregator maps instead of
-/// aborting a worker thread (on that error path the arena's scratch slots
-/// are dropped and re-grown by the next exchange — capacity, never
-/// correctness, is lost).
+/// Returns per-requester `(rank, view)` in input order, plus the outcome;
+/// on reads, requester `i`'s reply bytes are `arena.reply.of(i)` (valid
+/// until the next read exchange through this arena — the slab replaces
+/// the per-requester `Vec` allocations that scaled with `P`).  Engine and
+/// storage failures propagate as `Err` out of the parallel per-aggregator
+/// maps instead of aborting a worker thread (on that error path the
+/// arena's scratch slots are dropped and re-grown by the next exchange —
+/// capacity, never correctness, is lost).
 pub fn run_exchange(
     ctx: &CollectiveCtx,
     requesters: Vec<(usize, ReqBatch)>,
     mut io: ExchangeIo<'_>,
     arena: &mut ExchangeArena,
-) -> Result<(Vec<(usize, FlatView, Vec<u8>)>, ExchangeOutcome)> {
+) -> Result<(Vec<(usize, FlatView)>, ExchangeOutcome)> {
     let direction = io.direction();
     let mut bd = Breakdown::default();
     let mut counters = Counters::default();
@@ -422,18 +495,12 @@ pub fn run_exchange(
     counters.rounds = n_rounds;
 
     // ---- Rounds: peer exchange, aggregator merge, vectored storage op.
-    // Reply buffers exist only on the read side (writes return no bytes).
-    let mut payloads: Vec<Vec<u8>> = match direction {
-        Direction::Read => my_reqs
-            .iter()
-            .map(|(_, v, _)| vec![0u8; v.total_bytes() as usize])
-            .collect(),
-        Direction::Write => Vec::new(),
-    };
-    let mut cursors: Vec<usize> = match direction {
-        Direction::Read => vec![0; my_reqs.len()],
-        Direction::Write => Vec::new(),
-    };
+    // Reply spans exist only on the read side (writes return no bytes):
+    // the arena's pooled slab replaces one zero-filled `Vec` per
+    // requester — the last per-exchange allocation that scaled with `P`.
+    if direction == Direction::Read {
+        arena.reply.reset(my_reqs.iter().map(|(_, v, _)| v.total_bytes() as usize));
+    }
     // Arena slots: grow to n_agg, re-zero per-exchange state (stats slots
     // exist on reads only), keep all capacity.
     arena.pending.reset();
@@ -519,14 +586,14 @@ pub fn run_exchange(
                 ExchangeIo::Read(_) => {
                     // Requester-side assembly: ascending aggregator within
                     // the round, ascending rounds overall ⇒ straight
-                    // concatenation, gathered per staged stream slice.
+                    // concatenation into each requester's slab span,
+                    // gathered per staged stream slice.
                     for s in 0..slot.k {
                         let i = slot.owners[s];
                         let (vo, vl) = slot.stream(s);
                         let n = slot.stream_bytes(s);
-                        let dst = &mut payloads[i][cursors[i]..cursors[i] + n];
+                        let dst = arena.reply.append_slot(i, n);
                         gather_slices_from_buf(&slot.merged, &slot.payload, vo, vl, dst);
-                        cursors[i] += n;
                     }
                 }
             }
@@ -544,8 +611,8 @@ pub fn run_exchange(
         }
         ExchangeIo::Read(_) => {
             debug_assert!(
-                cursors.iter().zip(&payloads).all(|(c, p)| *c == p.len()),
-                "reply assembly must fill every requester payload exactly"
+                arena.reply.fully_assembled(),
+                "reply assembly must fill every requester span exactly"
             );
             let mut stats = vec![OstStats::default(); io.file_config().stripe_count];
             for slot in &scratch {
@@ -561,33 +628,26 @@ pub fn run_exchange(
     // Hand the (still warm) slots back to the arena for the next exchange.
     arena.scratch = scratch;
 
-    let filled: Vec<(usize, FlatView, Vec<u8>)> = match direction {
-        Direction::Write => my_reqs
-            .into_iter()
-            .map(|(rank, view, _)| (rank, view, Vec::new()))
-            .collect(),
-        Direction::Read => my_reqs
-            .into_iter()
-            .zip(payloads)
-            .map(|((rank, view, _), payload)| (rank, view, payload))
-            .collect(),
-    };
+    let filled: Vec<(usize, FlatView)> =
+        my_reqs.into_iter().map(|(rank, view, _)| (rank, view)).collect();
     Ok((filled, ExchangeOutcome { breakdown: bd, counters }))
 }
 
 /// Read-side driver of [`run_exchange`]: self-overlapping requester views
 /// (legal for reads — MPI only forbids overlapping filetypes for writes;
-/// a TAM aggregator view can also overlap when two members read the same
-/// region) are exchanged as their disjoint union, because classification
-/// order and reply-assembly order agree only for non-overlapping views.
-/// The original view's bytes are gathered back out of the union payload
-/// at the end; the common disjoint case pays nothing.
-fn exchange_read(
+/// an aggregation-tree view can also overlap when two members read the
+/// same region) are exchanged as their disjoint union, because
+/// classification order and reply-assembly order agree only for
+/// non-overlapping views.  The original view's bytes are gathered back
+/// out of the union payload at the end; the common disjoint case pays
+/// nothing and its reply stays in the arena's pooled slab
+/// ([`ReadReply::Slab`]).
+pub(crate) fn exchange_read(
     ctx: &CollectiveCtx,
     requesters: Vec<(usize, FlatView)>,
     file: &LustreFile,
     arena: &mut ExchangeArena,
-) -> Result<(Vec<(usize, FlatView, Vec<u8>)>, ExchangeOutcome)> {
+) -> Result<(Vec<(usize, FlatView, ReadReply)>, ExchangeOutcome)> {
     // Volume counters reflect the views as posted, not their unions.
     let posted_reqs: u64 = requesters.iter().map(|(_, v)| v.len() as u64).sum();
     let posted_bytes: u64 = requesters.iter().map(|(_, v)| v.total_bytes()).sum();
@@ -608,17 +668,19 @@ fn exchange_read(
     let (filled, mut out) = run_exchange(ctx, prepared, ExchangeIo::Read(file), arena)?;
     out.counters.reqs_after_intra = posted_reqs;
     out.counters.bytes = posted_bytes;
+    let reply_slab = &arena.reply;
     let filled = filled
         .into_iter()
         .zip(originals)
-        .map(|((rank, view, payload), original)| match original {
-            None => (rank, view, payload),
+        .enumerate()
+        .map(|(i, ((rank, view), original))| match original {
+            None => (rank, view, ReadReply::Slab(i)),
             Some(orig) => {
                 // Expand the union payload back to the overlapping
                 // original view (duplicated bytes are copied per request).
                 let mut expanded = vec![0u8; orig.total_bytes() as usize];
-                gather_from_buf(&view, &payload, &orig, &mut expanded);
-                (rank, orig, expanded)
+                gather_from_buf(&view, reply_slab.of(i), &orig, &mut expanded);
+                (rank, orig, ReadReply::Owned(expanded))
             }
         })
         .collect();
@@ -905,9 +967,87 @@ mod tests {
         assert_eq!(wrote.counters.msgs_inter, read.counters.msgs_inter);
         assert_eq!(wrote.counters.reqs_at_io, read.counters.reqs_at_io);
         assert_eq!(wrote.counters.bytes, read.counters.bytes);
-        for ((rank, _, payload), (_, want)) in filled.iter().zip(ranks.iter()) {
-            assert_eq!(payload, &want.payload, "rank {rank}");
+        // Replies live in the arena's pooled slab, keyed by requester
+        // position.
+        assert_eq!(arena.reply.len(), filled.len());
+        assert!(arena.reply.fully_assembled());
+        for (i, ((rank, _), (_, want))) in filled.iter().zip(ranks.iter()).enumerate() {
+            assert_eq!(arena.reply.of(i), &want.payload[..], "rank {rank}");
         }
+    }
+
+    #[test]
+    fn reply_slab_lays_out_spans_and_reuses_capacity() {
+        let mut slab = ReplySlab::default();
+        slab.reset([4usize, 0, 2].into_iter());
+        assert_eq!(slab.len(), 3);
+        assert!(!slab.is_empty());
+        assert!(!slab.fully_assembled());
+        slab.append_slot(0, 3).copy_from_slice(&[1, 2, 3]);
+        slab.append_slot(0, 1).copy_from_slice(&[4]);
+        slab.append_slot(2, 2).copy_from_slice(&[9, 8]);
+        assert!(slab.fully_assembled());
+        assert_eq!(slab.of(0), &[1, 2, 3, 4]);
+        assert_eq!(slab.of(1), &[] as &[u8]);
+        assert_eq!(slab.of(2), &[9, 8]);
+        // Re-laid-out slab starts zeroed with rewound cursors.
+        slab.reset([2usize].into_iter());
+        assert_eq!(slab.len(), 1);
+        assert_eq!(slab.of(0), &[0, 0]);
+        assert!(!slab.fully_assembled());
+    }
+
+    #[test]
+    #[should_panic(expected = "reply span overflow")]
+    fn reply_slab_span_overflow_panics_in_release_too() {
+        // The slab is shared across requesters: an overrun must crash
+        // loudly (like the old per-requester Vecs did), never bleed into
+        // the next requester's span.
+        let mut slab = ReplySlab::default();
+        slab.reset([4usize, 2].into_iter());
+        slab.append_slot(0, 4);
+        slab.append_slot(0, 1);
+    }
+
+    #[test]
+    fn tree_algorithm_parses_and_round_trips() {
+        assert!(matches!("tree".parse::<Algorithm>().unwrap(), Algorithm::Tree(_)));
+        match "tree:node=2".parse::<Algorithm>().unwrap() {
+            Algorithm::Tree(spec) => {
+                assert_eq!(spec, crate::coordinator::tree::TreeSpec {
+                    per_socket: 0,
+                    per_node: 2,
+                    per_switch: 0,
+                });
+                assert_eq!(Algorithm::Tree(spec).name(), "tree(node=2)");
+            }
+            other => panic!("expected tree, got {other:?}"),
+        }
+        assert!("tree:rack=9".parse::<Algorithm>().is_err());
+
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let mut file = LustreFile::new(LustreConfig::new(64, 4));
+        let ranks = make_ranks(&topo);
+        let algo = "tree:node=2".parse::<Algorithm>().unwrap();
+        run_collective_write(&ctx, algo, ranks.clone(), &mut file).unwrap();
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let (got, outcome) = run_collective_read(&ctx, algo, views, &file).unwrap();
+        for ((r, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "rank {r} tree read-back");
+        }
+        assert!(outcome.breakdown.intra_comm > 0.0, "tree read has intra traffic");
+        assert_eq!(outcome.breakdown.levels.len(), 1);
+        assert_eq!(outcome.breakdown.levels[0].label, "node");
     }
 
     #[test]

@@ -9,9 +9,13 @@
 //! * [`merge`] — k-way heap merge + coalescing of sorted request lists
 //!   (the §IV-A/B sort step; native twin of the L1 Pallas kernels).
 //! * [`breakdown`] — per-phase timing records matching Figures 4–7.
-//! * [`twophase`] — ROMIO's two-phase collective write/read (baseline).
-//! * [`tam`] — the two-layer aggregation method: intra-node aggregation,
-//!   then inter-node aggregation over local aggregators only.
+//! * [`twophase`] — ROMIO's two-phase collective write/read (baseline);
+//!   a thin binding of the depth-0 aggregation plan.
+//! * [`tam`] — the two-layer aggregation method; a thin binding of the
+//!   depth-1 (node-level) aggregation plan.
+//! * [`tree`] — N-level aggregation trees over the machine hierarchy
+//!   (socket → node → switch group), the generic pipeline both of the
+//!   above are special cases of.
 //! * [`collective`] — the public entry points dispatching on algorithm.
 
 pub mod breakdown;
@@ -21,4 +25,5 @@ pub mod merge;
 pub mod placement;
 pub mod reqcalc;
 pub mod tam;
+pub mod tree;
 pub mod twophase;

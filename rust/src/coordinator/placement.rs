@@ -12,8 +12,17 @@
 //! `ceil(q/c)·i` for `i in 0..e` and `ceil(q/c)·e + floor(q/c)·(i-e)` for
 //! `i in e..c` — evenly spread.  Each local aggregator serves the ranks
 //! from itself up to (not including) the next local aggregator.
+//!
+//! The same §IV-A selection rule generalizes to every level of the machine
+//! hierarchy ([`select_level_aggregators`]): within each group of a level
+//! (socket, node, or switch group), the members participating at that
+//! level — all ranks at the innermost level, the previous level's
+//! aggregators above it — elect evenly-spread aggregators by *position* in
+//! the ascending member list.  A chain of [`LevelAggregators`] is an
+//! N-level aggregation tree; the node-only chain is exactly the paper's
+//! TAM selection, and the empty chain is two-phase I/O.
 
-use crate::cluster::Topology;
+use crate::cluster::{LevelKind, Topology};
 
 /// Global-aggregator placement policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -105,26 +114,90 @@ pub struct LocalAggregators {
 ///
 /// A local aggregator serves ranks from itself up to (not including) the
 /// next local aggregator on the node (§IV-A's `c=2, q=5 → {r0,r1,r2},
-/// {r3,r4}` example).
+/// {r3,r4}` example).  Thin uniform-count binding of the generic
+/// [`select_level_aggregators`] at the node level.
 pub fn select_local_aggregators(topo: &Topology, c: usize) -> LocalAggregators {
-    let locals = select_local_aggregators_on_node(topo.ppn, c);
-    let mut ranks = Vec::with_capacity(topo.nodes * locals.len());
-    let mut assignment = vec![0usize; topo.nprocs()];
-    for node in 0..topo.nodes {
-        for (i, &l) in locals.iter().enumerate() {
-            let agg_rank = topo.rank_of(node, l);
-            ranks.push(agg_rank);
-            let next = locals.get(i + 1).copied().unwrap_or(topo.ppn);
-            for local in l..next {
-                assignment[topo.rank_of(node, local)] = agg_rank;
+    let members: Vec<usize> = (0..topo.nprocs()).collect();
+    let counts = vec![c; topo.nodes];
+    let level = select_level_aggregators(topo, LevelKind::Node, &members, &counts);
+    LocalAggregators { ranks: level.ranks, assignment: level.assignment }
+}
+
+/// Aggregator selection at one level of an aggregation tree: the chosen
+/// aggregator ranks plus the member → aggregator assignment.  A chain of
+/// these (innermost level first) is an
+/// [`AggregationPlan`](crate::coordinator::tree::AggregationPlan).
+#[derive(Clone, Debug)]
+pub struct LevelAggregators {
+    /// Hierarchy level this selection was made at.
+    pub kind: LevelKind,
+    /// Global ranks of this level's aggregators, ascending.
+    pub ranks: Vec<usize>,
+    /// For every *member* rank of this level: the aggregator it forwards
+    /// to (dense by global rank; non-members hold `usize::MAX`).
+    pub assignment: Vec<usize>,
+}
+
+impl LevelAggregators {
+    /// Number of aggregators at this level.
+    pub fn count(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// The aggregator serving member `rank` at this level.
+    ///
+    /// # Panics
+    ///
+    /// Debug-asserts that `rank` participates at this level.
+    pub fn parent_of(&self, rank: usize) -> usize {
+        let a = self.assignment[rank];
+        debug_assert_ne!(a, usize::MAX, "rank {rank} is not a member at the {} level", self.kind);
+        a
+    }
+}
+
+/// §IV-A selection generalized to any hierarchy level: within each group
+/// of `kind`, the participating `members` (ascending global ranks) elect
+/// `counts[group]` aggregators — evenly spread by *position* in the
+/// group's member list, so the node level over the full rank set
+/// reproduces [`select_local_aggregators`] exactly.  Each member is
+/// assigned to the chosen member at or below its own position; aggregators
+/// of empty groups do not exist (a group only appears in the tree when
+/// someone forwards through it).
+pub fn select_level_aggregators(
+    topo: &Topology,
+    kind: LevelKind,
+    members: &[usize],
+    counts: &[usize],
+) -> LevelAggregators {
+    let n_groups = topo.n_groups(kind);
+    debug_assert_eq!(counts.len(), n_groups, "one aggregator count per {kind} group");
+    debug_assert!(members.windows(2).all(|w| w[0] < w[1]), "members must be ascending");
+    // Bucket members by group, preserving ascending rank order.
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+    for &r in members {
+        groups[topo.group_of(kind, r)].push(r);
+    }
+    let mut ranks = Vec::new();
+    let mut assignment = vec![usize::MAX; topo.nprocs()];
+    for (g, ms) in groups.iter().enumerate() {
+        if ms.is_empty() {
+            continue;
+        }
+        let chosen = select_local_aggregators_on_node(ms.len(), counts[g]);
+        for (i, &pos) in chosen.iter().enumerate() {
+            let agg = ms[pos];
+            ranks.push(agg);
+            let next = chosen.get(i + 1).copied().unwrap_or(ms.len());
+            for &m in &ms[pos..next] {
+                assignment[m] = agg;
             }
         }
-        // Ranks before the first local aggregator (possible only when the
-        // formula's first id > 0 — it never is, ceil*0 == 0) — guarded by
-        // debug assert.
-        debug_assert_eq!(locals[0], 0);
     }
-    LocalAggregators { ranks, assignment }
+    // Groups are not rank-contiguous under round-robin placement; the
+    // ascending-rank invariant is restored here.
+    ranks.sort_unstable();
+    LevelAggregators { kind, ranks, assignment }
 }
 
 impl LocalAggregators {
@@ -144,10 +217,21 @@ impl LocalAggregators {
     }
 }
 
-/// Derive the per-node local aggregator count `c` from a target total
-/// `P_L` (the paper tunes total `P_L`, e.g. 256, across all nodes).
-pub fn per_node_count_for_total(topo: &Topology, total_pl: usize) -> usize {
-    (total_pl.div_ceil(topo.nodes)).clamp(1, topo.ppn)
+/// Derive per-node local aggregator counts from a target total `P_L` (the
+/// paper tunes total `P_L`, e.g. 256, across all nodes).
+///
+/// Totals that do not divide evenly are *distributed*: the first
+/// `P_L mod nodes` nodes get one extra aggregator, so the counts sum to
+/// `P_L` whenever `nodes ≤ P_L ≤ P` (the pre-fix `ceil` rounding silently
+/// inflated the total on every node).  Each count is clamped to
+/// `1..=ppn` — a node always has at least one aggregator and never more
+/// than its ranks.
+pub fn per_node_counts_for_total(topo: &Topology, total_pl: usize) -> Vec<usize> {
+    let base = total_pl / topo.nodes;
+    let extra = total_pl % topo.nodes;
+    (0..topo.nodes)
+        .map(|n| (base + usize::from(n < extra)).clamp(1, topo.ppn))
+        .collect()
 }
 
 #[cfg(test)]
@@ -239,13 +323,101 @@ mod tests {
     }
 
     #[test]
-    fn per_node_count_from_total() {
+    fn per_node_counts_from_total() {
         let topo = Topology::new(256, 64);
-        assert_eq!(per_node_count_for_total(&topo, 256), 1);
+        assert_eq!(per_node_counts_for_total(&topo, 256), vec![1; 256]);
         let topo4 = Topology::new(4, 64);
-        assert_eq!(per_node_count_for_total(&topo4, 256), 64);
+        assert_eq!(per_node_counts_for_total(&topo4, 256), vec![64; 4]);
         // Clamped to ppn.
         let topo2 = Topology::new(2, 4);
-        assert_eq!(per_node_count_for_total(&topo2, 1000), 4);
+        assert_eq!(per_node_counts_for_total(&topo2, 1000), vec![4, 4]);
+    }
+
+    #[test]
+    fn per_node_counts_distribute_uneven_totals() {
+        // Regression (§Satellite): totals that don't divide by `nodes`
+        // must be distributed, not ceil-rounded on every node.
+        let topo = Topology::new(3, 8);
+        // Pre-fix: ceil(7/3) = 3 on every node → 9 total.  Fixed: 3+2+2.
+        assert_eq!(per_node_counts_for_total(&topo, 7), vec![3, 2, 2]);
+        assert_eq!(per_node_counts_for_total(&topo, 7).iter().sum::<usize>(), 7);
+        // The paper's P_L=256 on 3 nodes of 128: 86+85+85 = 256 exactly.
+        let big = Topology::new(3, 128);
+        let counts = per_node_counts_for_total(&big, 256);
+        assert_eq!(counts, vec![86, 85, 85]);
+        assert_eq!(counts.iter().sum::<usize>(), 256);
+        // Below one per node: clamped up (the floor the tree needs).
+        assert_eq!(per_node_counts_for_total(&topo, 2), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn level_selection_at_node_level_matches_local_selection() {
+        use crate::cluster::LevelKind;
+        for (nodes, ppn, c) in [(3usize, 8usize, 3usize), (2, 5, 2), (4, 4, 1)] {
+            let topo = Topology::new(nodes, ppn);
+            let members: Vec<usize> = (0..topo.nprocs()).collect();
+            let level = select_level_aggregators(
+                &topo,
+                LevelKind::Node,
+                &members,
+                &vec![c; topo.nodes],
+            );
+            let local = select_local_aggregators(&topo, c);
+            assert_eq!(level.ranks, local.ranks);
+            assert_eq!(level.assignment, local.assignment);
+            assert_eq!(level.count(), local.count());
+            for r in 0..topo.nprocs() {
+                assert_eq!(level.parent_of(r), local.assignment[r]);
+            }
+        }
+    }
+
+    #[test]
+    fn level_selection_over_sparse_members() {
+        use crate::cluster::LevelKind;
+        // Second-level selection: only the first-level aggregators
+        // participate.  2 nodes × 8 ppn, members = 4 per node.
+        let topo = Topology::new(2, 8);
+        let members = vec![0usize, 2, 4, 6, 8, 10, 12, 14];
+        let level =
+            select_level_aggregators(&topo, LevelKind::Node, &members, &[2, 1]);
+        // Node 0: positions {0, 2} of [0,2,4,6] → ranks 0 and 4.
+        // Node 1: position 0 of [8,10,12,14] → rank 8.
+        assert_eq!(level.ranks, vec![0, 4, 8]);
+        assert_eq!(level.assignment[0], 0);
+        assert_eq!(level.assignment[2], 0);
+        assert_eq!(level.assignment[4], 4);
+        assert_eq!(level.assignment[6], 4);
+        assert_eq!(level.assignment[8], 8);
+        assert_eq!(level.assignment[14], 8);
+        // Non-members stay unassigned at this level.
+        assert_eq!(level.assignment[1], usize::MAX);
+        assert_eq!(level.assignment[15], usize::MAX);
+    }
+
+    #[test]
+    fn level_selection_socket_level_round_robin() {
+        use crate::cluster::{LevelKind, RankPlacement};
+        // 1 node × 8 ppn, 2 sockets, round-robin: socket 0 = {0,2,4,6},
+        // socket 1 = {1,3,5,7}; one aggregator each → ranks 0 and 1.
+        let topo = Topology::hierarchical(1, 8, 2, 0, RankPlacement::RoundRobin);
+        let members: Vec<usize> = (0..8).collect();
+        let level = select_level_aggregators(&topo, LevelKind::Socket, &members, &[1, 1]);
+        assert_eq!(level.ranks, vec![0, 1]);
+        for r in 0..8 {
+            assert_eq!(level.assignment[r], r % 2);
+            assert!(topo.same_socket(r, level.assignment[r]));
+        }
+    }
+
+    #[test]
+    fn level_selection_skips_empty_groups() {
+        use crate::cluster::LevelKind;
+        let topo = Topology::new(3, 4);
+        // No members on node 1: it elects no aggregator.
+        let members = vec![0usize, 1, 8, 9, 10];
+        let level = select_level_aggregators(&topo, LevelKind::Node, &members, &[1, 1, 1]);
+        assert_eq!(level.ranks, vec![0, 8]);
+        assert!(level.assignment[4..8].iter().all(|&a| a == usize::MAX));
     }
 }

@@ -1,24 +1,32 @@
 //! The Two-layer Aggregation Method (§IV): intra-node aggregation to local
 //! aggregators, then the two-phase exchange with only local aggregators as
 //! requesters.
+//!
+//! Since the N-level refactor this module is a thin binding of the
+//! depth-1 (node-level) [`AggregationPlan`]: [`tam_write`] delegates to
+//! [`crate::coordinator::tree::tree_write`], and the intra-node stage
+//! functions kept here ([`intra_node_aggregate`],
+//! [`intra_node_read_views`]) are the node-level instantiations of the
+//! generic per-level stages — preserved as the §IV-A API (and its tests)
+//! while the pipeline itself lives in [`crate::coordinator::tree`].
 
-use crate::coordinator::breakdown::Counters;
 use crate::coordinator::collective::ExchangeArena;
-use crate::coordinator::merge::{scatter_into, ReqBatch};
-use crate::coordinator::placement::{per_node_count_for_total, select_local_aggregators};
-use crate::coordinator::reqcalc::metadata_bytes;
-use crate::coordinator::twophase::{write_exchange, CollectiveCtx, ExchangeOutcome};
+use crate::coordinator::merge::ReqBatch;
+use crate::coordinator::tree::{
+    aggregate_level_read_views, aggregate_level_write, tree_write, AggregationPlan,
+};
+use crate::coordinator::twophase::{CollectiveCtx, ExchangeOutcome};
 use crate::error::Result;
 use crate::lustre::LustreFile;
 use crate::mpisim::FlatView;
-use crate::netmodel::phase::{cost_phase, Message};
-use crate::util::par_map;
 
 /// TAM tuning knobs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TamConfig {
     /// Target total number of local aggregators `P_L` (the paper sweeps
-    /// this; 256 is the empirically good value on Theta, §V-A).
+    /// this; 256 is the empirically good value on Theta, §V-A).  Totals
+    /// that do not divide evenly across nodes are distributed — the first
+    /// `P_L mod nodes` nodes get one extra local aggregator.
     pub total_local_aggregators: usize,
 }
 
@@ -48,72 +56,25 @@ pub struct IntraOutcome {
 
 /// Run intra-node aggregation: gather every rank's batch to its local
 /// aggregator, merge-sort and coalesce there, and move payloads into
-/// contiguous buffers (§IV-A).
+/// contiguous buffers (§IV-A).  Node-level instantiation of
+/// [`aggregate_level_write`].
 pub fn intra_node_aggregate(
     ctx: &CollectiveCtx,
     tam: &TamConfig,
     ranks: Vec<(usize, ReqBatch)>,
-    ) -> Result<IntraOutcome> {
-    let topo = ctx.topo;
-    let c = per_node_count_for_total(topo, tam.total_local_aggregators);
-    let locals = select_local_aggregators(topo, c);
+) -> Result<IntraOutcome> {
+    let plan = AggregationPlan::for_tam(ctx.topo, tam);
     let reqs_before: u64 = ranks.iter().map(|(_, b)| b.view.len() as u64).sum();
-
-    // Gather messages: every non-aggregator sends metadata + payload to its
-    // local aggregator (many-to-one within each node, §IV-A).  Grouping is
-    // dense by rank — local aggregators are rank ids (the dense-rank
-    // invariant), so no hash map and no key sort, same as the read side.
-    let mut msgs: Vec<Message> = Vec::new();
-    let mut per_agg: Vec<Vec<ReqBatch>> = Vec::new();
-    per_agg.resize_with(topo.nprocs(), Vec::new);
-    for (rank, batch) in ranks {
-        let agg = locals.assignment[rank];
-        if rank != agg {
-            // 16 bytes of metadata per request + the payload bytes.
-            let bytes = batch.view.total_bytes() + 16 * batch.view.len() as u64;
-            msgs.push(Message::new(rank, agg, bytes));
-        }
-        per_agg[agg].push(batch);
-    }
-    let comm_cost = cost_phase(ctx.net, ctx.topo, &msgs);
-
-    // Local aggregators merge-sort + coalesce concurrently (engine hot
-    // path) and build contiguous payload buffers.  Aggregators with at
-    // least one member batch, ascending by rank.
-    let mut items: Vec<(usize, Vec<ReqBatch>)> = Vec::with_capacity(locals.ranks.len());
-    for &a in &locals.ranks {
-        let batches = std::mem::take(&mut per_agg[a]);
-        if !batches.is_empty() {
-            items.push((a, batches));
-        }
-    }
-    // The engine streams each member's already-sorted view (no flatten +
-    // full re-sort on the native path); engine errors propagate as `Err`
-    // instead of aborting the worker thread.
-    let merged: Vec<Result<(usize, ReqBatch, f64, f64)>> = par_map(items, |(agg, batches)| {
-        let k = batches.len();
-        let n_items: u64 = batches.iter().map(|b| b.view.len() as u64).sum();
-        let views: Vec<&FlatView> = batches.iter().map(|b| &b.view).collect();
-        let view = ctx.engine.merge_sorted(&views)?;
-        let (payload, moved) = scatter_into(&view, &batches);
-        let sort_t = ctx.cpu.merge_time(n_items, k.max(1));
-        let memcpy_t = ctx.cpu.memcpy_time(moved);
-        Ok((agg, ReqBatch { view, payload }, sort_t, memcpy_t))
-    });
-    let merged: Vec<(usize, ReqBatch, f64, f64)> =
-        merged.into_iter().collect::<Result<Vec<_>>>()?;
-
-    let sort = merged.iter().map(|m| m.2).fold(0.0, f64::max);
-    let memcpy = merged.iter().map(|m| m.3).fold(0.0, f64::max);
-    let reqs_after: u64 = merged.iter().map(|m| m.1.view.len() as u64).sum();
+    let mut slots = Vec::new();
+    let stage = aggregate_level_write(ctx, &plan.levels[0], ranks, &mut slots)?;
     Ok(IntraOutcome {
-        local_batches: merged.into_iter().map(|(a, b, _, _)| (a, b)).collect(),
-        comm: comm_cost.time,
-        sort,
-        memcpy,
-        msgs: msgs.len(),
+        local_batches: stage.batches,
+        comm: stage.comm,
+        sort: stage.sort,
+        memcpy: stage.memcpy,
+        msgs: stage.msgs,
         reqs_before,
-        reqs_after,
+        reqs_after: stage.reqs_after,
     })
 }
 
@@ -135,61 +96,29 @@ pub struct IntraReadOutcome {
 /// Read-side intra-node stage: every rank sends its view *metadata* to its
 /// local aggregator (no payload travels on the request side of a read),
 /// which merges the member views through the engine into one sorted,
-/// coalesced view per local aggregator.
-///
-/// Grouping is dense by rank (local aggregators are rank ids —
-/// the dense-rank invariant), and the merge runs through
-/// [`crate::runtime::engine::SortEngine::merge_sorted`] so reads and
-/// writes share one engine entry point; engine errors propagate as `Err`.
+/// coalesced view per local aggregator.  Node-level instantiation of
+/// [`aggregate_level_read_views`].
 pub fn intra_node_read_views(
     ctx: &CollectiveCtx,
     tam: &TamConfig,
     views: &[(usize, FlatView)],
 ) -> Result<IntraReadOutcome> {
-    let topo = ctx.topo;
-    let c = per_node_count_for_total(topo, tam.total_local_aggregators);
-    let locals = select_local_aggregators(topo, c);
-
-    let mut msgs: Vec<Message> = Vec::new();
-    let mut per_agg: Vec<Vec<&FlatView>> = vec![Vec::new(); topo.nprocs()];
-    for (rank, v) in views {
-        let agg = locals.assignment[*rank];
-        if *rank != agg {
-            msgs.push(Message::new(*rank, agg, metadata_bytes(v.len() as u64)));
-        }
-        per_agg[agg].push(v);
-    }
-    let comm = cost_phase(ctx.net, ctx.topo, &msgs).time;
-
-    // Local aggregators with at least one member view, ascending by rank.
-    let mut items: Vec<(usize, Vec<&FlatView>)> = Vec::with_capacity(locals.ranks.len());
-    for &a in &locals.ranks {
-        let vs = std::mem::take(&mut per_agg[a]);
-        if !vs.is_empty() {
-            items.push((a, vs));
-        }
-    }
-    let merged: Vec<Result<(usize, FlatView, f64)>> = par_map(items, |(agg, vs)| {
-        let k = vs.len();
-        let n: u64 = vs.iter().map(|v| v.len() as u64).sum();
-        let view = ctx.engine.merge_sorted(&vs)?;
-        Ok((agg, view, ctx.cpu.merge_time(n, k.max(1))))
-    });
-    let merged: Vec<(usize, FlatView, f64)> = merged.into_iter().collect::<Result<Vec<_>>>()?;
-
-    let sort = merged.iter().map(|m| m.2).fold(0.0, f64::max);
+    let mut plan = AggregationPlan::for_tam(ctx.topo, tam);
+    let mut slots = Vec::new();
+    let stage = aggregate_level_read_views(ctx, &plan.levels[0], views, &mut slots)?;
+    let assignment = std::mem::take(&mut plan.levels[0].assignment);
     Ok(IntraReadOutcome {
-        agg_views: merged.into_iter().map(|(a, v, _)| (a, v)).collect(),
-        assignment: locals.assignment,
-        comm,
-        sort,
-        msgs: msgs.len(),
+        agg_views: stage.agg_views,
+        assignment,
+        comm: stage.comm,
+        sort: stage.sort,
+        msgs: stage.msgs,
     })
 }
 
 /// Full TAM collective write: intra-node aggregation, then the inter-node
 /// two-phase exchange over local aggregators, then the (unchanged) I/O
-/// phase.
+/// phase.  Thin binding of the depth-1 plan through [`tree_write`].
 pub fn tam_write(
     ctx: &CollectiveCtx,
     tam: &TamConfig,
@@ -197,20 +126,8 @@ pub fn tam_write(
     file: &mut LustreFile,
     arena: &mut ExchangeArena,
 ) -> Result<ExchangeOutcome> {
-    let mut intra = intra_node_aggregate(ctx, tam, ranks)?;
-    let local_batches = std::mem::take(&mut intra.local_batches);
-    let mut out = write_exchange(ctx, local_batches, file, arena)?;
-    out.breakdown.intra_comm = intra.comm;
-    out.breakdown.intra_sort = intra.sort;
-    out.breakdown.intra_memcpy = intra.memcpy;
-    merge_counters(&mut out.counters, &intra);
-    Ok(out)
-}
-
-fn merge_counters(c: &mut Counters, intra: &IntraOutcome) {
-    c.reqs_posted = intra.reqs_before;
-    c.reqs_after_intra = intra.reqs_after;
-    c.msgs_intra = intra.msgs;
+    let plan = AggregationPlan::for_tam(ctx.topo, tam);
+    tree_write(ctx, &plan, ranks, file, arena)
 }
 
 #[cfg(test)]
@@ -356,6 +273,27 @@ mod tests {
         assert_eq!(intra.msgs, 0, "no gather when P_L == P");
         assert_eq!(intra.comm, 0.0);
         assert_eq!(intra.local_batches.len(), f.topo.nprocs());
+    }
+
+    #[test]
+    fn uneven_total_distributes_local_aggregators() {
+        // §Satellite regression: P_L = 5 over 3 nodes of 4 must yield
+        // exactly 5 local aggregators (2 + 2 + 1), not ceil-rounded 6.
+        let f = Fixture::new(3, 4);
+        let ctx = f.ctx(4);
+        let tam = TamConfig { total_local_aggregators: 5 };
+        let intra = intra_node_aggregate(&ctx, &tam, block_ranks(&f.topo, 64, 4)).unwrap();
+        assert_eq!(intra.local_batches.len(), 5);
+        let per_node: Vec<usize> = (0..3)
+            .map(|n| {
+                intra
+                    .local_batches
+                    .iter()
+                    .filter(|(a, _)| f.topo.node_of(*a) == n)
+                    .count()
+            })
+            .collect();
+        assert_eq!(per_node, vec![2, 2, 1]);
     }
 
     #[test]

@@ -1,0 +1,726 @@
+//! N-level aggregation trees: one hierarchical pipeline subsuming
+//! two-phase I/O (depth 0) and the paper's TAM (depth 1).
+//!
+//! The paper's core idea — insert one intra-node aggregation layer in
+//! front of two-phase redistribution — is the depth-1 special case of
+//! multi-level aggregation over the machine hierarchy (hybrid MPI+MPI and
+//! PiP-style collectives generalize exactly this).  An
+//! [`AggregationPlan`] is a chain of
+//! [`LevelAggregators`] computed once per collective from the hierarchical
+//! [`Topology`] (socket → node → switch group): at each level, the
+//! previous tier's participants gather their requests to that level's
+//! aggregators, which merge and coalesce them through the same
+//! `SortEngine` CSR merge + [`RoundScratch`] arena machinery the
+//! inter-node exchange uses (arena slots are per-(level, aggregator) —
+//! `ExchangeArena::levels`).  The top tier becomes the requester set of
+//! the direction-generic round exchange
+//! ([`crate::coordinator::collective::run_exchange`]); on reads the
+//! replies scatter back down the same tree in reverse.
+//!
+//! * depth 0 (`AggregationPlan::flat`) — every rank is a requester:
+//!   classic two-phase I/O, bit-for-bit.
+//! * depth 1 at the node level ([`AggregationPlan::for_tam`]) — the
+//!   paper's TAM, bit-for-bit (`tam.rs` is a thin binding of this plan).
+//! * deeper trees (`tree:socket=4,node=2,switch=1`) — socket-level
+//!   pre-aggregation and switch-group fan-in, priced by the per-tier link
+//!   table ([`crate::netmodel::NetParams::msg_cost_tier`]).
+
+use crate::cluster::{LevelKind, Topology};
+use crate::coordinator::breakdown::LevelTime;
+use crate::coordinator::collective::{
+    exchange_read, CollectiveOutcome, ExchangeArena, ReadReply,
+};
+use crate::coordinator::merge::{gather_from_buf, ReqBatch, RoundScratch};
+use crate::coordinator::placement::{
+    per_node_counts_for_total, select_level_aggregators, LevelAggregators,
+};
+use crate::coordinator::reqcalc::metadata_bytes;
+use crate::coordinator::tam::TamConfig;
+use crate::coordinator::twophase::{write_exchange, CollectiveCtx, ExchangeOutcome};
+use crate::error::Result;
+use crate::lustre::LustreFile;
+use crate::mpisim::FlatView;
+use crate::netmodel::phase::{cost_phase, Message};
+use crate::util::par_map;
+
+/// Per-group aggregator counts of an N-level tree — the
+/// `--algorithm tree:socket=4,node=2,switch=1` knob.  A zero count
+/// disables that level; all-zero is the depth-0 (two-phase) tree.  The
+/// group geometry itself (sockets per node, nodes per switch, rank
+/// placement) is a property of the [`Topology`], not of the algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TreeSpec {
+    /// Aggregators per socket group (0 = no socket level).
+    pub per_socket: usize,
+    /// Aggregators per node (0 = no node level).
+    pub per_node: usize,
+    /// Aggregators per switch group (0 = no switch level).
+    pub per_switch: usize,
+}
+
+impl Default for TreeSpec {
+    /// Bare `tree`: a node-level tree with 4 aggregators per node.
+    fn default() -> Self {
+        TreeSpec { per_socket: 0, per_node: 4, per_switch: 0 }
+    }
+}
+
+impl TreeSpec {
+    /// The depth-0 tree (no aggregation levels — two-phase I/O).
+    pub fn flat() -> Self {
+        TreeSpec { per_socket: 0, per_node: 0, per_switch: 0 }
+    }
+
+    /// Number of active aggregation levels.
+    pub fn depth(&self) -> usize {
+        usize::from(self.per_socket > 0)
+            + usize::from(self.per_node > 0)
+            + usize::from(self.per_switch > 0)
+    }
+
+    /// Active `(level, per-group count)` pairs, innermost first.
+    pub fn levels(&self) -> Vec<(LevelKind, usize)> {
+        let mut out = Vec::with_capacity(3);
+        if self.per_socket > 0 {
+            out.push((LevelKind::Socket, self.per_socket));
+        }
+        if self.per_node > 0 {
+            out.push((LevelKind::Node, self.per_node));
+        }
+        if self.per_switch > 0 {
+            out.push((LevelKind::Switch, self.per_switch));
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for TreeSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.depth() == 0 {
+            return write!(f, "flat");
+        }
+        let mut first = true;
+        for (kind, count) in self.levels() {
+            if !first {
+                write!(f, ",")?;
+            }
+            write!(f, "{kind}={count}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for TreeSpec {
+    type Err = crate::Error;
+
+    /// Parse the `tree:` argument list: comma-separated
+    /// `socket=<n>`/`node=<n>`/`switch=<n>` pairs, or the literal `flat`
+    /// for the depth-0 tree.
+    fn from_str(s: &str) -> Result<Self> {
+        if s == "flat" {
+            return Ok(TreeSpec::flat());
+        }
+        if s.is_empty() {
+            return Err(crate::Error::config(
+                "empty tree spec (expected e.g. tree:socket=4,node=2)".to_string(),
+            ));
+        }
+        let mut spec = TreeSpec::flat();
+        for pair in s.split(',') {
+            let (key, value) = pair.split_once('=').ok_or_else(|| {
+                crate::Error::config(format!("bad tree level '{pair}' (expected level=count)"))
+            })?;
+            let count: usize = value.parse().map_err(|_| {
+                crate::Error::config(format!("bad count in tree level '{pair}'"))
+            })?;
+            match key {
+                "socket" => spec.per_socket = count,
+                "node" => spec.per_node = count,
+                "switch" => spec.per_switch = count,
+                other => {
+                    return Err(crate::Error::config(format!(
+                        "unknown tree level '{other}' (expected socket|node|switch)"
+                    )))
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// A fully-resolved N-level aggregation tree: one [`LevelAggregators`]
+/// per level, innermost first.  Level 0's members are all ranks; level
+/// `ℓ+1`'s members are level `ℓ`'s aggregators, so every rank reaches the
+/// top tier through exactly one parent chain.
+#[derive(Clone, Debug)]
+pub struct AggregationPlan {
+    /// Per-level selections, innermost first.
+    pub levels: Vec<LevelAggregators>,
+}
+
+impl AggregationPlan {
+    /// The depth-0 plan: no aggregation levels (two-phase I/O).
+    pub fn flat() -> Self {
+        AggregationPlan { levels: Vec::new() }
+    }
+
+    /// Number of aggregation levels.
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Build the tree for a [`TreeSpec`]: each active level elects its
+    /// per-group count among the previous tier's participants.
+    pub fn from_spec(topo: &Topology, spec: &TreeSpec) -> Self {
+        let mut members: Vec<usize> = (0..topo.nprocs()).collect();
+        let mut levels = Vec::with_capacity(spec.depth());
+        for (kind, per_group) in spec.levels() {
+            let counts = vec![per_group; topo.n_groups(kind)];
+            let level = select_level_aggregators(topo, kind, &members, &counts);
+            members = level.ranks.clone();
+            levels.push(level);
+        }
+        AggregationPlan { levels }
+    }
+
+    /// The paper's TAM as a depth-1 plan: node-level aggregators with the
+    /// total `P_L` distributed across nodes
+    /// ([`per_node_counts_for_total`]).
+    pub fn for_tam(topo: &Topology, tam: &TamConfig) -> Self {
+        let members: Vec<usize> = (0..topo.nprocs()).collect();
+        let counts = per_node_counts_for_total(topo, tam.total_local_aggregators);
+        AggregationPlan {
+            levels: vec![select_level_aggregators(topo, LevelKind::Node, &members, &counts)],
+        }
+    }
+
+    /// The plan for an [`Algorithm`](crate::coordinator::collective::Algorithm):
+    /// depth 0 for two-phase, depth 1 for TAM, the spec's tree otherwise.
+    pub fn for_algorithm(
+        topo: &Topology,
+        algo: &crate::coordinator::collective::Algorithm,
+    ) -> Self {
+        use crate::coordinator::collective::Algorithm;
+        match algo {
+            Algorithm::TwoPhase => AggregationPlan::flat(),
+            Algorithm::Tam(tam) => AggregationPlan::for_tam(topo, tam),
+            Algorithm::Tree(spec) => AggregationPlan::from_spec(topo, spec),
+        }
+    }
+
+    /// `rank`'s parent chain through the tree, innermost level first —
+    /// the aggregator it forwards to at each level (entry `ℓ` is the
+    /// tier-`ℓ+1` representative of `rank`'s subtree).
+    pub fn parent_chain(&self, rank: usize) -> Vec<usize> {
+        let mut chain = Vec::with_capacity(self.depth());
+        let mut rep = rank;
+        for level in &self.levels {
+            rep = level.parent_of(rep);
+            chain.push(rep);
+        }
+        chain
+    }
+}
+
+/// Dense rank → slot-position map over a rank list in slot order
+/// (`usize::MAX` for ranks not present) — the addressing every tier stage
+/// uses to route a member to its aggregator's scratch slot / parent
+/// reply.
+fn slot_index(ranks_in_slot_order: impl Iterator<Item = usize>, nprocs: usize) -> Vec<usize> {
+    let mut slot_of = vec![usize::MAX; nprocs];
+    for (i, r) in ranks_in_slot_order.enumerate() {
+        slot_of[r] = i;
+    }
+    slot_of
+}
+
+/// Outcome of one level's write-direction aggregation stage.
+pub struct LevelWriteOutcome {
+    /// One merged batch per active aggregator `(rank, batch)`, ascending
+    /// by rank — the next tier's participant set.
+    pub batches: Vec<(usize, ReqBatch)>,
+    /// Simulated gather-communication time (tier-priced).
+    pub comm: f64,
+    /// Simulated merge-sort time (max over this level's aggregators).
+    pub sort: f64,
+    /// Simulated contiguous-buffer movement time (max over aggregators).
+    pub memcpy: f64,
+    /// Gather messages (non-aggregator members → aggregators).
+    pub msgs: usize,
+    /// Requests remaining after this level's coalescing.
+    pub reqs_after: u64,
+}
+
+/// Run one write-direction aggregation level: gather every member's batch
+/// to its aggregator, merge-sort + coalesce there through the engine's
+/// CSR path, and move payloads into contiguous buffers (§IV-A generalized
+/// to any hierarchy level).  `slots` are this level's per-aggregator
+/// [`RoundScratch`] arena slots (`ExchangeArena::levels[ℓ]`): staging
+/// slabs, merged views and payload buffers keep their capacity across
+/// collectives.
+pub fn aggregate_level_write(
+    ctx: &CollectiveCtx,
+    level: &LevelAggregators,
+    batches: Vec<(usize, ReqBatch)>,
+    slots: &mut Vec<RoundScratch>,
+) -> Result<LevelWriteOutcome> {
+    let n_agg = level.ranks.len();
+    if slots.len() < n_agg {
+        slots.resize_with(n_agg, RoundScratch::default);
+    }
+    for slot in slots.iter_mut() {
+        slot.reset_exchange(0);
+    }
+    let slot_of = slot_index(level.ranks.iter().copied(), ctx.topo.nprocs());
+
+    // Gather messages: every non-aggregator member sends metadata +
+    // payload to its aggregator (many-to-one within each group), priced
+    // at the link tier the pair shares.  The batch itself is staged into
+    // the aggregator's CSR slab — the simulator's stand-in for the
+    // message landing in the receive buffer.
+    let mut msgs: Vec<Message> = Vec::new();
+    for (rank, batch) in &batches {
+        let agg = level.parent_of(*rank);
+        if *rank != agg {
+            // 16 bytes of metadata per request + the payload bytes.
+            let bytes = batch.view.total_bytes() + 16 * batch.view.len() as u64;
+            msgs.push(Message::new(*rank, agg, bytes));
+        }
+        slots[slot_of[agg]].stage_batch(*rank, batch);
+    }
+    let comm = cost_phase(ctx.net, ctx.topo, &msgs).time;
+    drop(batches);
+
+    // Aggregators merge + scatter concurrently (engine hot path); engine
+    // errors propagate as `Err` instead of aborting a worker thread (on
+    // that path the level's slots are dropped and re-grown next time —
+    // capacity, never correctness, is lost).
+    let merged: Vec<Result<(RoundScratch, u64)>> =
+        par_map(std::mem::take(slots), |mut slot| {
+            let moved = slot.merge_scatter(ctx.engine)?;
+            Ok((slot, moved))
+        });
+    let merged: Vec<(RoundScratch, u64)> = merged.into_iter().collect::<Result<Vec<_>>>()?;
+
+    let mut sort = 0.0f64;
+    let mut memcpy = 0.0f64;
+    let mut reqs_after = 0u64;
+    let mut out_batches: Vec<(usize, ReqBatch)> = Vec::new();
+    let mut returned = Vec::with_capacity(merged.len());
+    for (i, (slot, moved)) in merged.into_iter().enumerate() {
+        // Surplus slots from a larger earlier level stay warm and idle
+        // (`k == 0`); only aggregators that received a member batch emit
+        // a tier batch.
+        if slot.k > 0 {
+            sort = sort.max(ctx.cpu.merge_time(slot.n_items, slot.k));
+            memcpy = memcpy.max(ctx.cpu.memcpy_time(moved));
+            reqs_after += slot.merged.len() as u64;
+            // Deliberate copy-out: the outgoing batch is cloned from the
+            // slot so the slot's buffers stay warm in the arena (a swap
+            // would drain its capacity every collective).  This runs once
+            // per level per collective — off the round loop the
+            // allocation-free contract covers — and costs one memcpy of
+            // the aggregated data, same order as the pre-refactor
+            // scatter-into-fresh-buffer intra stage.
+            out_batches
+                .push((level.ranks[i], ReqBatch::new(slot.merged.clone(), slot.payload.clone())));
+        }
+        returned.push(slot);
+    }
+    *slots = returned;
+    Ok(LevelWriteOutcome {
+        batches: out_batches,
+        comm,
+        sort,
+        memcpy,
+        msgs: msgs.len(),
+        reqs_after,
+    })
+}
+
+/// Outcome of one level's read-direction gather stage (§IV-A in reverse).
+pub struct LevelReadOutcome {
+    /// One merged view per active aggregator `(rank, view)`, ascending by
+    /// rank — the next tier's participant set.
+    pub agg_views: Vec<(usize, FlatView)>,
+    /// Simulated gather-communication time (metadata only, tier-priced).
+    pub comm: f64,
+    /// Simulated merge time (max over this level's aggregators).
+    pub sort: f64,
+    /// Gather messages (non-aggregator members → aggregators).
+    pub msgs: usize,
+}
+
+/// Run one read-direction gather level: every member sends its view
+/// *metadata* to its aggregator (no payload travels on the request side
+/// of a read), which merges the member views through the engine's CSR
+/// path into one sorted, coalesced view per aggregator.
+pub fn aggregate_level_read_views(
+    ctx: &CollectiveCtx,
+    level: &LevelAggregators,
+    views: &[(usize, FlatView)],
+    slots: &mut Vec<RoundScratch>,
+) -> Result<LevelReadOutcome> {
+    let n_agg = level.ranks.len();
+    if slots.len() < n_agg {
+        slots.resize_with(n_agg, RoundScratch::default);
+    }
+    for slot in slots.iter_mut() {
+        slot.reset_exchange(0);
+    }
+    let slot_of = slot_index(level.ranks.iter().copied(), ctx.topo.nprocs());
+    let mut msgs: Vec<Message> = Vec::new();
+    for (rank, v) in views {
+        let agg = level.parent_of(*rank);
+        if *rank != agg {
+            msgs.push(Message::new(*rank, agg, metadata_bytes(v.len() as u64)));
+        }
+        slots[slot_of[agg]].stage(*rank, v.offsets(), v.lengths(), &[], v.total_bytes());
+    }
+    let comm = cost_phase(ctx.net, ctx.topo, &msgs).time;
+
+    let merged: Vec<Result<RoundScratch>> = par_map(std::mem::take(slots), |mut slot| {
+        slot.merge_meta(ctx.engine)?;
+        Ok(slot)
+    });
+    let merged: Vec<RoundScratch> = merged.into_iter().collect::<Result<Vec<_>>>()?;
+
+    let mut sort = 0.0f64;
+    let mut agg_views: Vec<(usize, FlatView)> = Vec::new();
+    let mut returned = Vec::with_capacity(merged.len());
+    for (i, slot) in merged.into_iter().enumerate() {
+        if slot.k > 0 {
+            sort = sort.max(ctx.cpu.merge_time(slot.n_items, slot.k));
+            agg_views.push((level.ranks[i], slot.merged.clone()));
+        }
+        returned.push(slot);
+    }
+    *slots = returned;
+    Ok(LevelReadOutcome { agg_views, comm, sort, msgs: msgs.len() })
+}
+
+/// Collective write through an N-level aggregation tree: fold every
+/// level's gather/merge stage, then run the direction-generic round
+/// exchange with the top tier as the requester set.  Depth 0 is two-phase
+/// I/O and depth 1 with a node-level plan is the paper's TAM
+/// (equivalence pinned by `tests/read_write_roundtrip.rs` and the
+/// carried-over 2P/TAM suites — see DESIGN.md §Aggregation tree for what
+/// each pin covers).
+pub fn tree_write(
+    ctx: &CollectiveCtx,
+    plan: &AggregationPlan,
+    ranks: Vec<(usize, ReqBatch)>,
+    file: &mut LustreFile,
+    arena: &mut ExchangeArena,
+) -> Result<ExchangeOutcome> {
+    let reqs_posted: u64 = ranks.iter().map(|(_, b)| b.view.len() as u64).sum();
+    if arena.levels.len() < plan.depth() {
+        arena.levels.resize_with(plan.depth(), Vec::new);
+    }
+    let mut batches = ranks;
+    let mut level_times: Vec<LevelTime> = Vec::with_capacity(plan.depth());
+    let mut msgs_intra = 0usize;
+    for (li, level) in plan.levels.iter().enumerate() {
+        let stage = aggregate_level_write(ctx, level, batches, &mut arena.levels[li])?;
+        batches = stage.batches;
+        msgs_intra += stage.msgs;
+        level_times.push(LevelTime {
+            label: level.kind.label(),
+            comm: stage.comm,
+            sort: stage.sort,
+            memcpy: stage.memcpy,
+        });
+    }
+    let mut out = write_exchange(ctx, batches, file, arena)?;
+    out.breakdown.intra_comm = level_times.iter().map(|l| l.comm).sum();
+    out.breakdown.intra_sort = level_times.iter().map(|l| l.sort).sum();
+    out.breakdown.intra_memcpy = level_times.iter().map(|l| l.memcpy).sum();
+    out.breakdown.levels = level_times;
+    out.counters.reqs_posted = reqs_posted;
+    out.counters.msgs_intra = msgs_intra;
+    Ok(out)
+}
+
+/// Collective read through an N-level aggregation tree: view metadata
+/// merges *up* the tree level by level, the top tier drives the round
+/// exchange ([`exchange_read`]), and the reply bytes scatter back *down*
+/// the same tree — each member gathers its bytes out of its parent's
+/// reply with the two-pointer walk both directions share.  The top tier's
+/// replies stay in the arena's pooled reply slab
+/// ([`crate::coordinator::collective::ReplySlab`], `ExchangeArena::reply`);
+/// only the per-member buffers handed to the caller are owned.
+pub fn tree_read(
+    ctx: &CollectiveCtx,
+    plan: &AggregationPlan,
+    views: Vec<(usize, FlatView)>,
+    file: &LustreFile,
+    arena: &mut ExchangeArena,
+) -> Result<(Vec<(usize, Vec<u8>)>, CollectiveOutcome)> {
+    let posted: u64 = views.iter().map(|(_, v)| v.len() as u64).sum();
+    if arena.levels.len() < plan.depth() {
+        arena.levels.resize_with(plan.depth(), Vec::new);
+    }
+
+    // ---- Up the tree: merge view metadata level by level.
+    let mut tiers: Vec<Vec<(usize, FlatView)>> = vec![views];
+    let mut level_times: Vec<LevelTime> = Vec::with_capacity(plan.depth());
+    let mut msgs_intra = 0usize;
+    for (li, level) in plan.levels.iter().enumerate() {
+        let stage = aggregate_level_read_views(
+            ctx,
+            level,
+            tiers.last().expect("tier 0 seeded above"),
+            &mut arena.levels[li],
+        )?;
+        msgs_intra += stage.msgs;
+        level_times.push(LevelTime {
+            label: level.kind.label(),
+            comm: stage.comm,
+            sort: stage.sort,
+            memcpy: 0.0,
+        });
+        tiers.push(stage.agg_views);
+    }
+
+    // ---- Inter-node exchange at the top tier.
+    let top = tiers.pop().expect("tier 0 seeded above");
+    let (filled, out) = exchange_read(ctx, top, file, arena)?;
+    let mut bd = out.breakdown;
+    let mut counters = out.counters;
+    counters.reqs_posted = posted;
+
+    // ---- Down the tree: scatter replies level by level.  Members are
+    // independent (each reads only its parent's immutable reply), so the
+    // gathers run concurrently like every other per-member stage.
+    let mut parents: Vec<(usize, FlatView, ReadReply)> = filled;
+    for (li, level) in plan.levels.iter().enumerate().rev() {
+        let members = tiers.pop().expect("one tier per level below the top");
+        let slot_of =
+            slot_index(parents.iter().map(|(agg, _, _)| *agg), ctx.topo.nprocs());
+        let parents_ref = &parents;
+        let arena_ref = &*arena;
+        let gathered: Vec<(usize, FlatView, ReadReply, u64, Option<Message>)> =
+            par_map(members, |(rank, view)| {
+                let agg = level.parent_of(rank);
+                let total = view.total_bytes();
+                let mut payload = vec![0u8; total as usize];
+                if !view.is_empty() {
+                    let j = slot_of[agg];
+                    debug_assert_ne!(j, usize::MAX, "member view without aggregator");
+                    let (_, pview, preply) = &parents_ref[j];
+                    gather_from_buf(pview, preply.bytes(arena_ref), &view, &mut payload);
+                }
+                let msg = if rank != agg {
+                    Some(Message::new(agg, rank, total))
+                } else {
+                    None
+                };
+                (rank, view, ReadReply::Owned(payload), total, msg)
+            });
+        let scatter_msgs: Vec<Message> =
+            gathered.iter().filter_map(|(_, _, _, _, m)| *m).collect();
+        let scattered_bytes: u64 = gathered.iter().map(|(_, _, _, b, _)| *b).sum();
+        level_times[li].comm += cost_phase(ctx.net, ctx.topo, &scatter_msgs).time;
+        level_times[li].memcpy += ctx.cpu.memcpy_time(scattered_bytes);
+        msgs_intra += scatter_msgs.len();
+        parents = gathered.into_iter().map(|(r, v, p, _, _)| (r, v, p)).collect();
+    }
+
+    bd.intra_comm = level_times.iter().map(|l| l.comm).sum();
+    bd.intra_sort = level_times.iter().map(|l| l.sort).sum();
+    bd.intra_memcpy = level_times.iter().map(|l| l.memcpy).sum();
+    bd.levels = level_times;
+    counters.msgs_intra = msgs_intra;
+
+    // ---- Hand the caller owned buffers (the user-facing result); the
+    // slab keeps everything else pooled.
+    let reply_slab = &arena.reply;
+    let result: Vec<(usize, Vec<u8>)> = parents
+        .into_iter()
+        .map(|(rank, _, reply)| {
+            let bytes = match reply {
+                ReadReply::Owned(v) => v,
+                ReadReply::Slab(i) => reply_slab.of(i).to_vec(),
+            };
+            (rank, bytes)
+        })
+        .collect();
+    Ok((result, CollectiveOutcome { breakdown: bd, counters }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::RankPlacement;
+    use crate::coordinator::breakdown::CpuModel;
+    use crate::coordinator::placement::GlobalPlacement;
+    use crate::lustre::{IoModel, LustreConfig};
+    use crate::mpisim::rank::deterministic_payload;
+    use crate::netmodel::NetParams;
+    use crate::runtime::engine::NativeEngine;
+
+    #[test]
+    fn tree_spec_parses_and_displays() {
+        let s: TreeSpec = "socket=4,node=2".parse().unwrap();
+        assert_eq!(s, TreeSpec { per_socket: 4, per_node: 2, per_switch: 0 });
+        assert_eq!(s.depth(), 2);
+        assert_eq!(s.to_string(), "socket=4,node=2");
+        let full: TreeSpec = "socket=4,node=2,switch=1".parse().unwrap();
+        assert_eq!(full.depth(), 3);
+        assert_eq!(
+            full.levels(),
+            vec![(LevelKind::Socket, 4), (LevelKind::Node, 2), (LevelKind::Switch, 1)]
+        );
+        assert_eq!("flat".parse::<TreeSpec>().unwrap(), TreeSpec::flat());
+        assert_eq!(TreeSpec::flat().to_string(), "flat");
+        assert_eq!(TreeSpec::flat().depth(), 0);
+        assert!("".parse::<TreeSpec>().is_err());
+        assert!("rack=2".parse::<TreeSpec>().is_err());
+        assert!("node".parse::<TreeSpec>().is_err());
+        assert!("node=x".parse::<TreeSpec>().is_err());
+    }
+
+    #[test]
+    fn plan_depth1_node_level_matches_tam_selection() {
+        use crate::coordinator::placement::select_local_aggregators;
+        let topo = Topology::new(2, 8);
+        let plan =
+            AggregationPlan::for_tam(&topo, &TamConfig { total_local_aggregators: 4 });
+        assert_eq!(plan.depth(), 1);
+        let local = select_local_aggregators(&topo, 2);
+        assert_eq!(plan.levels[0].ranks, local.ranks);
+        assert_eq!(plan.levels[0].assignment, local.assignment);
+    }
+
+    #[test]
+    fn plan_chains_members_through_levels() {
+        // 2 switch groups × 2 nodes × 8 ppn, 2 sockets per node.
+        let topo = Topology::hierarchical(4, 8, 2, 2, RankPlacement::Block);
+        let spec: TreeSpec = "socket=2,node=1,switch=1".parse().unwrap();
+        let plan = AggregationPlan::from_spec(&topo, &spec);
+        assert_eq!(plan.depth(), 3);
+        // Level 0: 2 aggs per socket × 8 sockets = 16.
+        assert_eq!(plan.levels[0].ranks.len(), 16);
+        // Level 1: 1 per node × 4 nodes.
+        assert_eq!(plan.levels[1].ranks.len(), 4);
+        // Level 2: 1 per switch group × 2 groups.
+        assert_eq!(plan.levels[2].ranks.len(), 2);
+        for rank in 0..topo.nprocs() {
+            let chain = plan.parent_chain(rank);
+            assert_eq!(chain.len(), 3);
+            // Each hop stays inside the level's group and lands on one of
+            // that level's aggregators.
+            let mut rep = rank;
+            for (level, &parent) in plan.levels.iter().zip(&chain) {
+                assert_eq!(
+                    topo.group_of(level.kind, rep),
+                    topo.group_of(level.kind, parent),
+                    "rank {rank}: parent {parent} left the {} group",
+                    level.kind
+                );
+                assert!(level.ranks.binary_search(&parent).is_ok());
+                assert!(parent <= rep, "parent rank must not exceed member");
+                rep = parent;
+            }
+        }
+        // Each level's members are exactly the previous level's ranks.
+        for w in plan.levels.windows(2) {
+            for &r in &w[1].ranks {
+                assert!(w[0].ranks.binary_search(&r).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn depth2_tree_write_and_read_round_trip() {
+        let topo = Topology::hierarchical(2, 8, 2, 0, RankPlacement::Block);
+        let net = NetParams::default();
+        let cpu = CpuModel::default();
+        let io = IoModel::default();
+        let eng = NativeEngine;
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let spec: TreeSpec = "socket=2,node=1".parse().unwrap();
+        let plan = AggregationPlan::from_spec(&topo, &spec);
+        assert_eq!(plan.depth(), 2);
+        let ranks: Vec<(usize, ReqBatch)> = (0..topo.nprocs())
+            .map(|r| {
+                let base = r as u64 * 200;
+                let view =
+                    FlatView::from_pairs(vec![(base, 120), (base + 150, 30)]).unwrap();
+                (r, ReqBatch::new(view, deterministic_payload(21, r, 150)))
+            })
+            .collect();
+        let mut file = LustreFile::new(LustreConfig::new(64, 4));
+        let mut arena = ExchangeArena::default();
+        let out = tree_write(&ctx, &plan, ranks.clone(), &mut file, &mut arena).unwrap();
+        assert_eq!(out.breakdown.levels.len(), 2);
+        assert_eq!(out.breakdown.levels[0].label, "socket");
+        assert_eq!(out.breakdown.levels[1].label, "node");
+        assert!(out.breakdown.intra_comm > 0.0);
+        assert!(out.counters.msgs_intra > 0);
+        // Per-level split sums to the intra totals.
+        let comm_split: f64 = out.breakdown.levels.iter().map(|l| l.comm).sum();
+        assert!((comm_split - out.breakdown.intra_comm).abs() < 1e-15);
+
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let (got, read_out) = tree_read(&ctx, &plan, views, &file, &mut arena).unwrap();
+        for ((r, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "rank {r} depth-2 read-back");
+        }
+        assert_eq!(read_out.breakdown.levels.len(), 2);
+        assert!(read_out.breakdown.intra_memcpy > 0.0);
+        assert_eq!(read_out.counters.reqs_posted, out.counters.reqs_posted);
+    }
+
+    #[test]
+    fn level_write_stage_reduces_participants() {
+        let topo = Topology::hierarchical(1, 8, 2, 0, RankPlacement::Block);
+        let net = NetParams::default();
+        let cpu = CpuModel::default();
+        let io = IoModel::default();
+        let eng = NativeEngine;
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 2,
+        };
+        let spec: TreeSpec = "socket=1".parse().unwrap();
+        let plan = AggregationPlan::from_spec(&topo, &spec);
+        let ranks: Vec<(usize, ReqBatch)> = (0..8)
+            .map(|r| {
+                let view = FlatView::from_pairs(vec![(r as u64 * 64, 64)]).unwrap();
+                (r, ReqBatch::new(view, vec![r as u8; 64]))
+            })
+            .collect();
+        let mut slots = Vec::new();
+        let stage =
+            aggregate_level_write(&ctx, &plan.levels[0], ranks, &mut slots).unwrap();
+        // 2 sockets → 2 aggregators; each merges 4 contiguous blocks into
+        // one segment.
+        assert_eq!(stage.batches.len(), 2);
+        assert_eq!(stage.reqs_after, 2);
+        assert_eq!(stage.msgs, 6); // 3 non-aggregator members per socket
+        assert!(stage.comm > 0.0 && stage.sort > 0.0 && stage.memcpy > 0.0);
+        // The stage's aggregators are the plan's, in ascending order.
+        let aggs: Vec<usize> = stage.batches.iter().map(|(a, _)| *a).collect();
+        assert_eq!(aggs, plan.levels[0].ranks);
+        for (_, b) in &stage.batches {
+            assert_eq!(b.view.len(), 1);
+            assert_eq!(b.view.total_bytes(), 256);
+        }
+    }
+}

@@ -4,18 +4,22 @@
 //! Performance With Intra-node Request Aggregation"* (TPDS 2020 /
 //! DOI 10.1109/TPDS.2020.3000458), built as a data-pipeline framework:
 //!
-//! * [`cluster`] — compute-node topology (ranks ↔ nodes).
+//! * [`cluster`] — compute-machine topology (ranks ↔ nodes, plus the
+//!   socket/NUMA and switch-group hierarchy levels the aggregation tree
+//!   and the per-tier link table are built over).
 //! * [`netmodel`] — α–β network cost model with receiver congestion and the
 //!   paper's Isend/Issend pending-queue effect (§V).
 //! * [`mpisim`] — MPI-like substrate: flattened file views, subarray
 //!   datatype flattening, rank state, phase-structured message exchange.
 //! * [`lustre`] — striped object-store simulator: OSTs, extent locks,
 //!   byte-accurate storage for read-back verification, I/O cost model.
-//! * [`coordinator`] — the paper's contribution: ROMIO-style two-phase
-//!   collective I/O ([`coordinator::twophase`]) and the two-layer
-//!   aggregation method ([`coordinator::tam`]), with aggregator
-//!   selection/placement policies, request calculation, k-way merge and
-//!   request coalescing, multi-round scheduling and breakdown timers.
+//! * [`coordinator`] — the paper's contribution, generalized: N-level
+//!   aggregation trees ([`coordinator::tree`]) of which ROMIO-style
+//!   two-phase I/O ([`coordinator::twophase`], depth 0) and the two-layer
+//!   aggregation method ([`coordinator::tam`], depth 1) are thin
+//!   bindings, with per-level aggregator selection/placement policies,
+//!   request calculation, k-way merge and request coalescing, multi-round
+//!   scheduling and breakdown timers.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
 //!   aggregation pipeline (`artifacts/agg_*.hlo.txt`); the
 //!   [`runtime::engine::SortEngine`] trait abstracts native-Rust vs XLA
@@ -52,7 +56,7 @@ pub use error::{Error, Result};
 
 /// Crate-wide prelude for examples and benches.
 pub mod prelude {
-    pub use crate::cluster::Topology;
+    pub use crate::cluster::{LevelKind, LinkTier, RankPlacement, Topology};
     pub use crate::config::RunConfig;
     pub use crate::coordinator::breakdown::Breakdown;
     pub use crate::coordinator::collective::{
@@ -61,6 +65,7 @@ pub mod prelude {
         ExchangeArena,
     };
     pub use crate::coordinator::tam::TamConfig;
+    pub use crate::coordinator::tree::{AggregationPlan, TreeSpec};
     pub use crate::lustre::LustreConfig;
     pub use crate::netmodel::{NetParams, SendMode};
     pub use crate::runtime::engine::{EngineKind, SortEngine};

@@ -69,13 +69,27 @@ USAGE: tamio <run|sweep|scaling|table1|congest|info> [--key value ...]
 
 Common flags (RunConfig keys):
   --nodes N --ppn Q --workload e3sm-g|e3sm-f|btio|s3d|contig|strided
-  --algorithm two-phase|tam|tam:<P_L>   --engine native|xla
+  --algorithm two-phase|tam|tam:<P_L>|tree|tree:<levels>
+                                        tree:<levels> is a comma list of
+                                        socket=<n>,node=<n>,switch=<n>
+                                        aggregators per group (0/absent =
+                                        level off; 'tree:flat' = depth 0 =
+                                        two-phase, 'tree:node=c' = TAM
+                                        with c aggregators per node)
+  --engine native|xla
   --direction write|read|both           collective direction(s); read runs
                                         pre-populate the file and always
                                         verify the gathered bytes (default
                                         write)
+  --sockets_per_node S                  NUMA domains per node (default 1;
+                                        enables the tree's socket level)
+  --nodes_per_switch N                  nodes per leaf switch (default 0 =
+                                        flat; enables the switch level)
+  --rank_placement block|round-robin    rank->socket / node->switch layout
   --scale S --stripe_size B --stripe_count K --send_mode isend|issend
   --placement spread|cray --seed S --verify --config file.toml
+  net tier table: --net.alpha_socket/--net.beta_socket and
+  --net.alpha_switch/--net.beta_switch price the extra hierarchy tiers
 
 Subcommand flags:
   sweep:   --pl 16,64,256          breakdown panels (Figures 4-7)

@@ -8,7 +8,7 @@ pub mod report;
 
 pub use report::{render_table, write_csv, JsonWriter};
 
-use crate::coordinator::breakdown::{Breakdown, Counters};
+use crate::coordinator::breakdown::{Breakdown, Counters, LevelTime};
 use crate::coordinator::collective::Direction;
 use crate::util::{human_bytes, human_secs};
 
@@ -27,7 +27,10 @@ pub struct LabelledRun {
 }
 
 /// Render a Figures-4–7-style breakdown table: one column per run, one
-/// row per component.  Columns are labelled with their direction.
+/// row per component, plus one `intra[<level>]` row per aggregation-tree
+/// level any run carries (the per-level split of the intra sums; runs
+/// without that level print zero).  Columns are labelled with their
+/// direction.
 pub fn breakdown_table(runs: &[LabelledRun]) -> String {
     let mut headers = vec!["component".to_string()];
     headers.extend(runs.iter().map(|r| format!("{} [{}]", r.label, r.direction)));
@@ -38,6 +41,39 @@ pub fn breakdown_table(runs: &[LabelledRun]) -> String {
         let mut row = vec![name.to_string()];
         for r in runs {
             row.push(human_secs(r.breakdown.rows()[i].1));
+        }
+        rows.push(row);
+    }
+    // Per-level rows are matched by *label*, not level index: runs of
+    // different depths share a table (e.g. tam's [node] next to a tree's
+    // [socket, node]), and positional matching would print one run's
+    // socket cost in another's node row.  Canonical innermost-first
+    // order, then any other labels by first appearance.
+    let has_label = |label: &str| {
+        runs.iter().any(|r| r.breakdown.levels.iter().any(|l| l.label == label))
+    };
+    let mut level_labels: Vec<&'static str> = ["socket", "node", "switch"]
+        .into_iter()
+        .filter(|label| has_label(label))
+        .collect();
+    for r in runs {
+        for l in &r.breakdown.levels {
+            if !level_labels.contains(&l.label) {
+                level_labels.push(l.label);
+            }
+        }
+    }
+    for label in level_labels {
+        let mut row = vec![format!("intra[{label}]")];
+        for r in runs {
+            let t = r
+                .breakdown
+                .levels
+                .iter()
+                .find(|l| l.label == label)
+                .map(LevelTime::total)
+                .unwrap_or(0.0);
+            row.push(human_secs(t));
         }
         rows.push(row);
     }
@@ -123,6 +159,54 @@ mod tests {
         }
         assert!(t.contains("P_L=4"));
         assert!(t.contains("[write]"), "direction label missing:\n{t}");
+    }
+
+    #[test]
+    fn breakdown_table_emits_per_level_rows_matched_by_label() {
+        let mut tree = Breakdown { intra_comm: 0.4, ..Default::default() };
+        tree.levels.push(LevelTime { label: "socket", comm: 0.3, sort: 0.0, memcpy: 0.0 });
+        tree.levels.push(LevelTime { label: "node", comm: 0.1, sort: 0.0, memcpy: 0.0 });
+        // A depth-1 run whose ONLY level is "node" (at level index 0):
+        // index-based matching would print its node cost in the socket
+        // row — the rows must match by label instead.
+        let mut tam = Breakdown { intra_comm: 7.0, ..Default::default() };
+        tam.levels.push(LevelTime { label: "node", comm: 7.0, sort: 0.0, memcpy: 0.0 });
+        let runs = vec![
+            LabelledRun {
+                label: "tam-bar".into(),
+                direction: Direction::Write,
+                breakdown: tam,
+                counters: Counters::default(),
+            },
+            LabelledRun {
+                label: "tree-bar".into(),
+                direction: Direction::Write,
+                breakdown: tree,
+                counters: Counters::default(),
+            },
+            LabelledRun {
+                label: "two-phase".into(),
+                direction: Direction::Write,
+                breakdown: Breakdown::default(),
+                counters: Counters::default(),
+            },
+        ];
+        let t = breakdown_table(&runs);
+        assert!(t.contains("intra[socket]"), "missing socket row:\n{t}");
+        assert!(t.contains("intra[node]"), "missing node row:\n{t}");
+        // Exactly one row per label (no duplicate positional rows), and
+        // the socket row (canonically innermost) precedes the node row.
+        assert_eq!(t.matches("intra[socket]").count(), 1, "{t}");
+        assert_eq!(t.matches("intra[node]").count(), 1, "{t}");
+        assert!(t.find("intra[socket]").unwrap() < t.find("intra[node]").unwrap(), "{t}");
+        // The tam bar's 7s lands in the node row, not the socket row.
+        let socket_row = t.lines().find(|l| l.contains("intra[socket]")).unwrap();
+        assert!(!socket_row.contains("7.00"), "tam cost misattributed:\n{t}");
+        let node_row = t.lines().find(|l| l.contains("intra[node]")).unwrap();
+        assert!(node_row.contains("7.00"), "tam cost missing from node row:\n{t}");
+        // Level-less runs render without per-level rows of their own.
+        let flat_only = breakdown_table(&runs[2..]);
+        assert!(!flat_only.contains("intra["), "{flat_only}");
     }
 
     #[test]

@@ -8,8 +8,11 @@
 //! exactly that effect so paper-scale figures can be regenerated without an
 //! Aries interconnect:
 //!
-//! * each message costs `α(link) + bytes · β(link)` with distinct
-//!   intra-node (shared-memory) and inter-node parameters;
+//! * each message costs `α(link) + bytes · β(link)` with one parameter
+//!   row per [`LinkTier`] — same-socket, same-node, same-switch-group and
+//!   global links — so cost attribution follows the aggregation tree's
+//!   hierarchy; on a flat topology only the node and global rows apply,
+//!   which is the paper's binary intra/inter split;
 //! * a receiver serializes the per-message overhead of everything addressed
 //!   to it within a phase (the congestion term: `in_degree · α_recv` plus
 //!   byte drain at the link bandwidth);
@@ -26,6 +29,7 @@
 
 pub mod phase;
 
+pub use crate::cluster::LinkTier;
 pub use phase::{ExchangeStats, Message, PhaseCost};
 
 /// Asynchronous-send semantics used by the aggregation communication.
@@ -50,16 +54,31 @@ impl std::fmt::Display for SendMode {
 }
 
 /// α–β + congestion parameters for the simulated interconnect.
+///
+/// The four `alpha_*`/`beta_*` pairs form the per-[`LinkTier`] table
+/// (`socket` ≤ `intra` ≤ `switch` ≤ `inter` in latency): a message is
+/// priced by the innermost hierarchy level containing both endpoints
+/// ([`crate::cluster::Topology::tier_of`]).  Flat topologies use only the
+/// `intra` (node) and `inter` (global) rows.
 #[derive(Clone, Copy, Debug)]
 pub struct NetParams {
-    /// Per-message latency between nodes (seconds).
+    /// Per-message latency between switch groups (seconds) — the global
+    /// tier.
     pub alpha_inter: f64,
     /// Per-message latency within a node / shared memory (seconds).
     pub alpha_intra: f64,
-    /// Inter-node inverse bandwidth (seconds per byte).
+    /// Per-message latency within a socket / NUMA domain (seconds).
+    pub alpha_socket: f64,
+    /// Per-message latency between nodes behind one leaf switch (seconds).
+    pub alpha_switch: f64,
+    /// Global-tier inverse bandwidth (seconds per byte).
     pub beta_inter: f64,
     /// Intra-node inverse bandwidth (seconds per byte).
     pub beta_intra: f64,
+    /// Intra-socket inverse bandwidth (seconds per byte).
+    pub beta_socket: f64,
+    /// Same-leaf-switch inverse bandwidth (seconds per byte).
+    pub beta_switch: f64,
     /// Receiver-side per-message processing (matching, unpacking) —
     /// serializes at the receiver; this term carries the congestion effect.
     pub recv_overhead: f64,
@@ -85,8 +104,12 @@ impl Default for NetParams {
         NetParams {
             alpha_inter: 2.0e-6,
             alpha_intra: 4.0e-7,
+            alpha_socket: 2.0e-7,
+            alpha_switch: 1.8e-6,
             beta_inter: 1.0 / 8.0e9,
             beta_intra: 1.0 / 20.0e9,
+            beta_socket: 1.0 / 30.0e9,
+            beta_switch: 1.0 / 9.0e9,
             recv_overhead: 3.0e-7,
             send_overhead: 1.5e-7,
             pending_penalty: 6.0e-10,
@@ -97,13 +120,36 @@ impl Default for NetParams {
 }
 
 impl NetParams {
-    /// Point-to-point cost of one message of `bytes` (no congestion).
-    pub fn msg_cost(&self, intra_node: bool, bytes: u64) -> f64 {
-        if intra_node {
-            self.alpha_intra + bytes as f64 * self.beta_intra
-        } else {
-            self.alpha_inter + bytes as f64 * self.beta_inter
+    /// Per-message latency of a link tier.
+    pub fn tier_alpha(&self, tier: LinkTier) -> f64 {
+        match tier {
+            LinkTier::Socket => self.alpha_socket,
+            LinkTier::Node => self.alpha_intra,
+            LinkTier::Switch => self.alpha_switch,
+            LinkTier::Global => self.alpha_inter,
         }
+    }
+
+    /// Inverse bandwidth of a link tier (seconds per byte).
+    pub fn tier_beta(&self, tier: LinkTier) -> f64 {
+        match tier {
+            LinkTier::Socket => self.beta_socket,
+            LinkTier::Node => self.beta_intra,
+            LinkTier::Switch => self.beta_switch,
+            LinkTier::Global => self.beta_inter,
+        }
+    }
+
+    /// Point-to-point cost of one message of `bytes` on a link tier
+    /// (no congestion).
+    pub fn msg_cost_tier(&self, tier: LinkTier, bytes: u64) -> f64 {
+        self.tier_alpha(tier) + bytes as f64 * self.tier_beta(tier)
+    }
+
+    /// Point-to-point cost under the binary intra/inter split — the
+    /// flat-topology view (`intra` = node tier, `inter` = global tier).
+    pub fn msg_cost(&self, intra_node: bool, bytes: u64) -> f64 {
+        self.msg_cost_tier(if intra_node { LinkTier::Node } else { LinkTier::Global }, bytes)
     }
 
     /// With this mode, do unmatched sends from previous rounds persist?
@@ -128,6 +174,35 @@ mod tests {
         let small = p.msg_cost(false, 1024);
         let big = p.msg_cost(false, 1024 * 1024);
         assert!(big > small * 10.0);
+    }
+
+    #[test]
+    fn tier_table_orders_latency_and_bandwidth() {
+        let p = NetParams::default();
+        // Latency grows outward through the hierarchy.
+        assert!(p.tier_alpha(LinkTier::Socket) < p.tier_alpha(LinkTier::Node));
+        assert!(p.tier_alpha(LinkTier::Node) < p.tier_alpha(LinkTier::Switch));
+        assert!(p.tier_alpha(LinkTier::Switch) < p.tier_alpha(LinkTier::Global));
+        // Bandwidth shrinks outward (inverse bandwidth grows).
+        assert!(p.tier_beta(LinkTier::Socket) < p.tier_beta(LinkTier::Node));
+        assert!(p.tier_beta(LinkTier::Node) < p.tier_beta(LinkTier::Switch));
+        assert!(p.tier_beta(LinkTier::Switch) < p.tier_beta(LinkTier::Global));
+        for bytes in [0u64, 1 << 20] {
+            assert!(
+                p.msg_cost_tier(LinkTier::Socket, bytes) < p.msg_cost_tier(LinkTier::Node, bytes)
+            );
+            assert!(
+                p.msg_cost_tier(LinkTier::Switch, bytes)
+                    < p.msg_cost_tier(LinkTier::Global, bytes)
+            );
+        }
+    }
+
+    #[test]
+    fn binary_split_is_the_node_and_global_rows() {
+        let p = NetParams::default();
+        assert_eq!(p.msg_cost(true, 4096), p.msg_cost_tier(LinkTier::Node, 4096));
+        assert_eq!(p.msg_cost(false, 4096), p.msg_cost_tier(LinkTier::Global, 4096));
     }
 
     #[test]

@@ -172,8 +172,13 @@ impl PhaseShard {
         let nprocs = topo.nprocs();
         for m in msgs {
             debug_assert!(m.src < nprocs && m.dst < nprocs, "rank outside 0..nprocs");
-            let intra = topo.same_node(m.src, m.dst);
-            let wire = params.msg_cost(intra, m.bytes);
+            // Price the message at its link tier — the innermost hierarchy
+            // level containing both endpoints (socket < node < switch <
+            // global); flat topologies see only the node/global rows, the
+            // old binary intra/inter split.
+            let tier = topo.tier_of(m.src, m.dst);
+            let local = tier.is_local();
+            let wire = params.msg_cost_tier(tier, m.bytes);
             // Receiver serializes matching + draining of everything
             // addressed to it: this is where all-to-many congestion
             // shows up.
@@ -182,10 +187,11 @@ impl PhaseShard {
                 params.recv_overhead + wire + pending * params.pending_penalty;
             // Sender serializes injection but overlaps transfer completion.
             self.send_time[m.src] += params.send_overhead
-                + if intra { 0.0 } else { m.bytes as f64 * params.beta_inter };
-            // Inter-node traffic shares the destination node's NIC:
-            // stacking aggregators on a node concentrates this bound.
-            if !intra {
+                + if local { 0.0 } else { m.bytes as f64 * params.tier_beta(tier) };
+            // Off-node traffic shares the destination node's NIC
+            // regardless of tier: stacking aggregators on a node
+            // concentrates this bound.
+            if !local {
                 self.nic_time[topo.node_of(m.dst)] += m.bytes as f64 * params.nic_ingest;
             }
             self.in_degree[m.dst] += 1;
@@ -296,13 +302,14 @@ pub(crate) fn cost_phase_serial(
     let mut in_degree = vec![0usize; nprocs];
     let mut total_bytes = 0u64;
     for m in msgs {
-        let intra = topo.same_node(m.src, m.dst);
-        let wire = params.msg_cost(intra, m.bytes);
+        let tier = topo.tier_of(m.src, m.dst);
+        let local = tier.is_local();
+        let wire = params.msg_cost_tier(tier, m.bytes);
         let pending = pending_per_receiver.get(m.dst).copied().unwrap_or(0) as f64;
         recv_time[m.dst] += params.recv_overhead + wire + pending * params.pending_penalty;
-        send_time[m.src] +=
-            params.send_overhead + if intra { 0.0 } else { m.bytes as f64 * params.beta_inter };
-        if !intra {
+        send_time[m.src] += params.send_overhead
+            + if local { 0.0 } else { m.bytes as f64 * params.tier_beta(tier) };
+        if !local {
             nic_time[topo.node_of(m.dst)] += m.bytes as f64 * params.nic_ingest;
         }
         in_degree[m.dst] += 1;
@@ -608,6 +615,68 @@ mod tests {
         assert_eq!(shard_count(2 * SHARD_TARGET_MSGS - 1), 1);
         assert_eq!(shard_count(2 * SHARD_TARGET_MSGS), 2);
         assert_eq!(shard_count(10_000_000), MAX_SHARDS);
+    }
+
+    #[test]
+    fn hierarchical_topology_prices_messages_by_tier() {
+        use crate::cluster::RankPlacement;
+        let p = NetParams::default();
+        // 4 nodes × 4 ppn, 2 sockets per node, 2 nodes per switch.
+        let h = Topology::hierarchical(4, 4, 2, 2, RankPlacement::Block);
+        let flat = Topology::new(4, 4);
+        let same_socket = vec![Message::new(0, 1, 1 << 16)];
+        let cross_socket = vec![Message::new(0, 2, 1 << 16)];
+        let same_switch = vec![Message::new(0, 4, 1 << 16)];
+        let cross_switch = vec![Message::new(0, 8, 1 << 16)];
+        let t_socket = cost_phase(&p, &h, &same_socket).time;
+        let t_node = cost_phase(&p, &h, &cross_socket).time;
+        let t_switch = cost_phase(&p, &h, &same_switch).time;
+        let t_global = cost_phase(&p, &h, &cross_switch).time;
+        assert!(t_socket < t_node, "{t_socket} vs {t_node}");
+        assert!(t_node < t_switch, "{t_node} vs {t_switch}");
+        assert!(t_switch < t_global, "{t_switch} vs {t_global}");
+        // The flat topology collapses every same-node pair to the node row
+        // and every cross-node pair to the global row.
+        assert_eq!(
+            cost_phase(&p, &flat, &same_socket).time,
+            cost_phase(&p, &flat, &cross_socket).time
+        );
+        assert_eq!(
+            cost_phase(&p, &flat, &same_switch).time,
+            cost_phase(&p, &flat, &cross_switch).time
+        );
+        assert_eq!(cost_phase(&p, &flat, &cross_switch).time, t_global);
+        // Off-node messages hit the NIC whatever their tier; on-node never.
+        assert!(cost_phase(&p, &h, &same_switch).nic_bound > 0.0);
+        assert_eq!(cost_phase(&p, &h, &cross_socket).nic_bound, 0.0);
+    }
+
+    #[test]
+    fn sharded_matches_serial_oracle_on_hierarchical_topology() {
+        use crate::cluster::RankPlacement;
+        use crate::util::SplitMix64;
+        let p = NetParams::default();
+        let t = Topology::hierarchical(8, 16, 4, 2, RankPlacement::RoundRobin);
+        let mut rng = SplitMix64::new(0x7133_D001);
+        for &n in &[500usize, 40_000] {
+            let msgs: Vec<Message> = (0..n)
+                .map(|i| {
+                    Message::new(
+                        rng.gen_range(128) as usize,
+                        (i * 13 + rng.gen_range(7) as usize) % 128,
+                        1 + rng.gen_range(1 << 12),
+                    )
+                })
+                .collect();
+            let want = cost_phase_serial(&p, &t, &msgs, &[]);
+            let got = cost_phase(&p, &t, &msgs);
+            assert_eq!(got.max_in_degree, want.max_in_degree, "n={n}");
+            assert_eq!(got.total_bytes, want.total_bytes, "n={n}");
+            assert_close(got.time, want.time, "time");
+            assert_close(got.recv_bound, want.recv_bound, "recv_bound");
+            assert_close(got.send_bound, want.send_bound, "send_bound");
+            assert_close(got.nic_bound, want.nic_bound, "nic_bound");
+        }
     }
 
     #[test]

@@ -14,10 +14,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use tamio::cluster::Topology;
 use tamio::coordinator::breakdown::CpuModel;
 use tamio::coordinator::collective::{
-    run_collective_read_with, run_collective_write_with, Algorithm, ExchangeArena,
+    run_collective_read_with, run_collective_write_with, Algorithm, ExchangeArena, ReplySlab,
 };
 use tamio::coordinator::filedomain::FileDomains;
-use tamio::coordinator::merge::{ReqBatch, RoundScratch};
+use tamio::coordinator::merge::{gather_slices_from_buf, ReqBatch, RoundScratch};
 use tamio::coordinator::placement::GlobalPlacement;
 use tamio::coordinator::reqcalc::{calc_my_req, MyReqs};
 use tamio::coordinator::twophase::CollectiveCtx;
@@ -131,6 +131,109 @@ fn steady_state_rounds_allocate_nothing() {
     );
 }
 
+/// Single-threaded replica of the read direction's staging + merge +
+/// vectored read + reply assembly, with replies pooled in a [`ReplySlab`]
+/// (the satellite pin: the slab replaces the per-requester reply `Vec`s —
+/// the last per-exchange allocation that scaled with `P`).  Two complete
+/// read "exchanges" run through the same warm state; the second —
+/// *including* its `ReplySlab::reset` and every per-round assembly — must
+/// allocate (near-)zero.
+fn steady_state_read_exchanges_allocate_nothing() {
+    const N_AGG: usize = 4;
+    const STRIPE: u64 = 64;
+    const RANKS: usize = 8;
+    const BLOCK: u64 = 2048; // per rank, contiguous ⇒ uniform rounds
+    let topo = Topology::new(1, RANKS);
+    let net = NetParams::default();
+    let engine = NativeEngine;
+    let lustre = LustreConfig::new(STRIPE, N_AGG);
+    let domains = FileDomains::new(lustre, 0, RANKS as u64 * BLOCK, N_AGG);
+    let n_rounds = domains.n_rounds();
+    assert!(n_rounds >= 8, "need enough rounds to measure, got {n_rounds}");
+
+    // Pre-populate the file image (outside the measured region).
+    let mut file = LustreFile::new(lustre);
+    file.begin_round();
+    let views: Vec<FlatView> = (0..RANKS)
+        .map(|r| FlatView::from_pairs(vec![(r as u64 * BLOCK, BLOCK)]).unwrap())
+        .collect();
+    for (r, view) in views.iter().enumerate() {
+        file.write_view(r, view, &deterministic_payload(5, r, BLOCK)).unwrap();
+    }
+    let file = file; // reads only from here on
+
+    let my_reqs: Vec<MyReqs> = views
+        .iter()
+        .map(|v| calc_my_req(&domains, &ReqBatch::new(v.clone(), Vec::new())))
+        .collect();
+
+    let mut scratch: Vec<RoundScratch> =
+        (0..N_AGG).map(|_| RoundScratch::default()).collect();
+    let mut pending = PendingQueue::new();
+    let mut data_msgs: Vec<Message> = Vec::new();
+    let mut reply = ReplySlab::default();
+
+    let mut run_exchange_replica = || {
+        pending.reset();
+        reply.reset(views.iter().map(|v| v.total_bytes() as usize));
+        for slot in scratch.iter_mut() {
+            slot.reset_exchange(N_AGG);
+        }
+        for round in 0..n_rounds {
+            data_msgs.clear();
+            for slot in scratch.iter_mut() {
+                slot.reset_round();
+            }
+            for (i, mr) in my_reqs.iter().enumerate() {
+                for (agg, s) in mr.slices_in_round(round) {
+                    data_msgs.push(Message::new(agg, i, s.bytes));
+                    scratch[agg].stage(i, s.offsets, s.lengths, s.payload, s.bytes);
+                }
+            }
+            pending.cost_round(&net, &topo, &data_msgs);
+            for slot in scratch.iter_mut() {
+                slot.merge_meta(&engine).unwrap();
+                if !slot.merged.is_empty() {
+                    file.read_view(&slot.merged, &mut slot.payload, &mut slot.stats).unwrap();
+                }
+                for s in 0..slot.k {
+                    let i = slot.owners[s];
+                    let (vo, vl) = slot.stream(s);
+                    let n = slot.stream_bytes(s);
+                    gather_slices_from_buf(
+                        &slot.merged,
+                        &slot.payload,
+                        vo,
+                        vl,
+                        reply.append_slot(i, n),
+                    );
+                }
+            }
+        }
+        assert!(reply.fully_assembled(), "every reply span must fill exactly");
+    };
+
+    // Cold exchange grows every buffer (slabs, merged arenas, the slab).
+    run_exchange_replica();
+    // Warm repeat: the whole exchange — reply slab included — reuses it.
+    let base = allocs();
+    run_exchange_replica();
+    let steady = allocs() - base;
+    assert!(
+        steady <= 8,
+        "warm read exchange allocated {steady} times \
+         (expected ~0: the reply slab or the round arena regressed)"
+    );
+    // The assembled bytes are the written image, per requester span.
+    for (r, _) in views.iter().enumerate() {
+        assert_eq!(
+            reply.of(r),
+            &deterministic_payload(5, r, BLOCK)[..],
+            "rank {r} reply bytes"
+        );
+    }
+}
+
 /// End-to-end: the second collective through a warm arena must allocate
 /// strictly less than the cold first one (both pay the same per-call
 /// costs — rank clones, `calc_my_req` slabs, thread spawns — so the
@@ -198,9 +301,16 @@ fn warm_arena_beats_cold(algo: Algorithm, label: &str) {
 #[test]
 fn arena_keeps_steady_state_rounds_allocation_free() {
     steady_state_rounds_allocate_nothing();
+    steady_state_read_exchanges_allocate_nothing();
     warm_arena_beats_cold(Algorithm::TwoPhase, "two-phase");
     warm_arena_beats_cold(
         Algorithm::Tam(tamio::coordinator::tam::TamConfig { total_local_aggregators: 4 }),
         "tam",
+    );
+    warm_arena_beats_cold(
+        Algorithm::Tree(
+            "socket=2,node=1".parse().expect("valid tree spec"),
+        ),
+        "tree",
     );
 }

@@ -80,6 +80,37 @@ fn run_direction_both_prints_write_and_read_verdicts() {
 }
 
 #[test]
+fn run_tree_algorithm_on_hierarchical_topology_verifies() {
+    let out = tamio()
+        .args([
+            "run", "--nodes", "2", "--ppn", "4", "--workload", "strided",
+            "--sockets_per_node", "2", "--rank_placement", "block",
+            "--algorithm", "tree:socket=1,node=1", "--stripe_size", "4096",
+            "--stripe_count", "4", "--direction", "both", "--verify",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("tree(socket=1,node=1)"), "{text}");
+    assert!(text.contains("verify[write]: 8/8 ranks OK"), "{text}");
+    assert!(text.contains("verify[read]: 8/8 ranks OK"), "{text}");
+    // Per-level intra rows appear in the breakdown table.
+    assert!(text.contains("intra[socket]"), "{text}");
+    assert!(text.contains("intra[node]"), "{text}");
+}
+
+#[test]
+fn bad_tree_spec_fails_with_nonzero_exit() {
+    let out = tamio()
+        .args(["run", "--algorithm", "tree:rack=2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown tree level"));
+}
+
+#[test]
 fn sweep_direction_both_prints_write_and_read_panels() {
     // BTIO at tiny scale (P = 4 is square); the read panel only prints if
     // every bar's gathered bytes verified (experiments::ensure_verified).

@@ -1,13 +1,14 @@
 //! Property tests (propmini harness): random file views, topologies and
 //! geometries → structural invariants of the whole pipeline.
 
-use tamio::cluster::Topology;
+use tamio::cluster::{RankPlacement, Topology};
 use tamio::coordinator::breakdown::CpuModel;
 use tamio::coordinator::collective::{run_collective_write, Algorithm};
 use tamio::coordinator::filedomain::FileDomains;
 use tamio::coordinator::merge::{merge_views, sort_coalesce_pairs, ReqBatch};
 use tamio::coordinator::placement::{select_local_aggregators, GlobalPlacement};
 use tamio::coordinator::tam::TamConfig;
+use tamio::coordinator::tree::{AggregationPlan, TreeSpec};
 use tamio::coordinator::twophase::CollectiveCtx;
 use tamio::lustre::{IoModel, LustreConfig, LustreFile};
 use tamio::mpisim::FlatView;
@@ -127,6 +128,88 @@ fn prop_local_aggregator_selection_invariants() {
             }
             if !la.ranks.contains(&a) {
                 return Err(format!("assignment target {a} not an aggregator"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aggregation_tree_assigns_one_parent_per_level() {
+    forall("tree-parent-invariants", 0x7EE5, 200, |g| {
+        let nodes = g.usize_in(1, 8);
+        let ppn = g.usize_in(1, 16);
+        let spn = g.usize_in(1, ppn.min(4));
+        let nps = g.usize_in(0, nodes + 2);
+        let placement =
+            if g.bool_with(0.5) { RankPlacement::Block } else { RankPlacement::RoundRobin };
+        let topo = Topology::hierarchical(nodes, ppn, spn, nps, placement);
+        let spec = TreeSpec {
+            per_socket: g.usize_in(0, 3),
+            per_node: g.usize_in(0, 3),
+            per_switch: g.usize_in(0, 2),
+        };
+        let plan = AggregationPlan::from_spec(&topo, &spec);
+        if plan.depth() != spec.depth() {
+            return Err(format!("depth {} != spec {}", plan.depth(), spec.depth()));
+        }
+        // Every rank reaches the top tier through exactly one parent per
+        // level; each hop stays inside the level's group, lands on one of
+        // that level's aggregators, and never increases the rank.
+        for rank in 0..topo.nprocs() {
+            let chain = plan.parent_chain(rank);
+            if chain.len() != plan.depth() {
+                return Err(format!("rank {rank}: chain length {}", chain.len()));
+            }
+            let mut rep = rank;
+            for (level, &parent) in plan.levels.iter().zip(&chain) {
+                if level.ranks.binary_search(&parent).is_err() {
+                    return Err(format!(
+                        "rank {rank}: parent {parent} not a {} aggregator",
+                        level.kind
+                    ));
+                }
+                if topo.group_of(level.kind, rep) != topo.group_of(level.kind, parent) {
+                    return Err(format!(
+                        "rank {rank}: parent {parent} outside its {} group",
+                        level.kind
+                    ));
+                }
+                if parent > rep {
+                    return Err(format!("rank {rank}: parent {parent} above member {rep}"));
+                }
+                rep = parent;
+            }
+        }
+        for (li, level) in plan.levels.iter().enumerate() {
+            // Aggregator lists are ascending and duplicate-free.
+            if !level.ranks.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("level {li}: ranks not strictly ascending"));
+            }
+            // Every aggregator serves itself.
+            for &a in &level.ranks {
+                if level.assignment[a] != a {
+                    return Err(format!("level {li}: aggregator {a} not self-assigned"));
+                }
+            }
+            // Members of level ℓ+1 are exactly the aggregators of level ℓ:
+            // assignment is defined for them and nothing else.
+            let members: Vec<usize> = if li == 0 {
+                (0..topo.nprocs()).collect()
+            } else {
+                plan.levels[li - 1].ranks.clone()
+            };
+            let assigned = level.assignment.iter().filter(|&&a| a != usize::MAX).count();
+            if assigned != members.len() {
+                return Err(format!(
+                    "level {li}: {assigned} assigned != {} members",
+                    members.len()
+                ));
+            }
+            for &m in &members {
+                if level.assignment[m] == usize::MAX {
+                    return Err(format!("level {li}: member {m} unassigned"));
+                }
             }
         }
         Ok(())

@@ -231,6 +231,123 @@ fn roundtrip_through_run_once_driver() {
     }
 }
 
+/// §Acceptance: a depth-0 `tree:` plan is bit-identical to `TwoPhase` and
+/// a depth-1 node plan is bit-identical to `Tam` — file contents, verify
+/// pass, message counts, and the full simulated breakdown, in both
+/// directions.
+///
+/// What this pins, precisely: for writes, `TwoPhase` runs
+/// `two_phase_write` (no tree fold) while `Tree(flat)` runs the tree
+/// pipeline — two distinct paths.  For TAM, both sides share the tree
+/// pipeline, so the assertion pins the `tree:node=c` spec → plan mapping
+/// against `for_tam`'s `P_L` distribution.  Equivalence to the
+/// *pre-refactor* implementations is carried by the pre-existing 2P/TAM
+/// suites (reference images, counters, structural identities), whose
+/// expected values were written against the old code and kept unchanged.
+#[test]
+fn tree_depth0_and_depth1_bitwise_match_two_phase_and_tam() {
+    let mut rng = SplitMix64::new(0x7EE_B17);
+    let fx = Fx::new(2, 8);
+    let ctx = fx.ctx(4);
+    let ranks = random_disjoint_ranks(&mut rng, fx.topo.nprocs(), 180, 64, 0x1D);
+    let views: Vec<(usize, FlatView)> =
+        ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+    // (reference algorithm, equivalent tree plan): depth 0 vs two-phase,
+    // depth 1 (2 aggregators per node = P_L 4 over 2 nodes) vs TAM.
+    let pairs = [
+        (Algorithm::TwoPhase, "flat".parse().unwrap()),
+        (
+            Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
+            "node=2".parse().unwrap(),
+        ),
+    ];
+    for (reference, spec) in pairs {
+        let tree = Algorithm::Tree(spec);
+        // ---- write direction.
+        let mut f_ref = LustreFile::new(LustreConfig::new(64, 4));
+        let mut f_tree = LustreFile::new(LustreConfig::new(64, 4));
+        let ref_out =
+            run_collective_write(&ctx, reference, ranks.clone(), &mut f_ref).unwrap();
+        let tree_out =
+            run_collective_write(&ctx, tree, ranks.clone(), &mut f_tree).unwrap();
+        let hi = ranks.iter().filter_map(|(_, b)| b.view.max_end()).max().unwrap();
+        assert_eq!(
+            f_ref.read_at(0, hi),
+            f_tree.read_at(0, hi),
+            "{}: file contents differ",
+            reference.name()
+        );
+        assert_eq!(ref_out.counters.msgs_intra, tree_out.counters.msgs_intra);
+        assert_eq!(ref_out.counters.msgs_inter, tree_out.counters.msgs_inter);
+        assert_eq!(ref_out.counters.rounds, tree_out.counters.rounds);
+        assert_eq!(ref_out.counters.max_in_degree, tree_out.counters.max_in_degree);
+        assert_eq!(ref_out.counters.reqs_posted, tree_out.counters.reqs_posted);
+        assert_eq!(ref_out.counters.reqs_after_intra, tree_out.counters.reqs_after_intra);
+        assert_eq!(ref_out.counters.reqs_at_io, tree_out.counters.reqs_at_io);
+        assert_eq!(ref_out.breakdown.intra_comm, tree_out.breakdown.intra_comm);
+        assert_eq!(ref_out.breakdown.intra_sort, tree_out.breakdown.intra_sort);
+        assert_eq!(ref_out.breakdown.intra_memcpy, tree_out.breakdown.intra_memcpy);
+        assert_eq!(ref_out.breakdown.inter_comm, tree_out.breakdown.inter_comm);
+        assert_eq!(ref_out.breakdown.inter_sort, tree_out.breakdown.inter_sort);
+        assert_eq!(ref_out.breakdown.io_phase, tree_out.breakdown.io_phase);
+        assert_eq!(ref_out.breakdown.total(), tree_out.breakdown.total());
+        // ---- read direction.
+        let (ref_got, ref_read) =
+            run_collective_read(&ctx, reference, views.clone(), &f_ref).unwrap();
+        let (tree_got, tree_read) =
+            run_collective_read(&ctx, tree, views.clone(), &f_tree).unwrap();
+        assert_eq!(ref_got, tree_got, "{}: read payloads differ", reference.name());
+        for ((r, payload), (_, want)) in ref_got.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "rank {r} reference read-back");
+        }
+        assert_eq!(ref_read.counters.msgs_intra, tree_read.counters.msgs_intra);
+        assert_eq!(ref_read.counters.msgs_inter, tree_read.counters.msgs_inter);
+        assert_eq!(ref_read.counters.rounds, tree_read.counters.rounds);
+        assert_eq!(ref_read.breakdown.total(), tree_read.breakdown.total());
+    }
+}
+
+/// §Acceptance: a depth-2 (socket + node) plan on a hierarchical topology
+/// round-trips end-to-end in both directions, through the public
+/// config-driven driver as well as the coordinator API.
+#[test]
+fn tree_depth2_round_trips_on_hierarchical_topology() {
+    use tamio::cluster::RankPlacement;
+    let mut rng = SplitMix64::new(0xDEE9_2);
+    let fx = Fx {
+        topo: Topology::hierarchical(2, 8, 2, 0, RankPlacement::Block),
+        net: NetParams::default(),
+        cpu: CpuModel::default(),
+        io: IoModel::default(),
+        eng: NativeEngine,
+    };
+    let ranks = random_disjoint_ranks(&mut rng, fx.topo.nprocs(), 160, 64, 0xD2);
+    let tree = Algorithm::Tree("socket=2,node=1".parse().unwrap());
+    check_roundtrip(&fx, 4, 4, 64, &ranks, tree, &[tree, Algorithm::TwoPhase]);
+    check_roundtrip(&fx, 4, 4, 64, &ranks, Algorithm::TwoPhase, &[tree]);
+
+    // Driver plumbing: config keys → hierarchical topology → verified
+    // write and read panels.
+    let mut cfg = RunConfig::default();
+    cfg.nodes = 2;
+    cfg.ppn = 8;
+    cfg.sockets_per_node = 2;
+    cfg.workload = WorkloadKind::Strided;
+    cfg.lustre = LustreConfig::new(1 << 12, 4);
+    cfg.verify = true;
+    cfg.direction = DirectionSpec::Both;
+    cfg.algorithm = Algorithm::Tree("socket=2,node=1".parse().unwrap());
+    let results = run_once(&cfg).unwrap();
+    assert_eq!(results.len(), 2);
+    for (run, verify) in &results {
+        let v = verify.as_ref().expect("tree runs verify");
+        assert!(v.passed(), "{} [{}]: {}/{}", run.label, run.direction, v.ok, v.total);
+        assert_eq!(run.breakdown.levels.len(), 2, "[{}]", run.direction);
+        assert_eq!(run.breakdown.levels[0].label, "socket");
+        assert_eq!(run.breakdown.levels[1].label, "node");
+    }
+}
+
 #[test]
 fn roundtrip_with_empty_and_zero_length_ranks() {
     let fx = Fx::new(2, 4);

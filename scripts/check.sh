@@ -43,9 +43,11 @@ fi
 
 # Benches are harness = false and excluded from `cargo test`; compile
 # them unconditionally so bench-only breakage is caught in tier-1 even
-# when BENCH=1 is not set.
+# when BENCH=1 is not set.  The depth-ablation bench is named explicitly
+# so a target-list regression in Cargo.toml cannot silently drop it.
 echo "== cargo bench --no-run (bench compile gate) =="
 cargo bench --no-run
+cargo bench --no-run --bench ablation_depth
 
 if [ "${BENCH:-0}" = "1" ]; then
     echo "== hot-path bench (writes BENCH_hotpath.json) =="
@@ -62,6 +64,14 @@ if [ "${SCALE:-0}" = "1" ]; then
     cargo run --release --bin tamio -- sweep \
         --nodes 256 --ppn 64 --workload e3sm-g --scale 1024 \
         --pl 256 --direction both --verify
+    # Depth-2 aggregation tree at the same point on the hierarchical
+    # topology (4 sockets/node, 16 nodes/switch): write bars verify by
+    # vectored read-back, read bars always verify the gathered bytes.
+    echo "== SCALE=1: depth-2 tree at 16384 ranks (both directions) =="
+    cargo run --release --bin tamio -- run \
+        --nodes 256 --ppn 64 --workload e3sm-g --scale 1024 \
+        --sockets_per_node 4 --nodes_per_switch 16 \
+        --algorithm tree:socket=4,node=2 --direction both --verify
 fi
 
 echo "check.sh: all gates passed"
