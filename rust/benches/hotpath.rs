@@ -18,6 +18,8 @@
 //!   algorithms (the write panel twin of the read cases below; both
 //!   drive the same direction-generic `run_exchange` loop).
 //! * collective_read — `run_collective_read` end-to-end, both algorithms.
+//! * plan_cache — cold plan construction vs warm fingerprint+LRU hit
+//!   (the plan-oracle panels), at 64 ranks and the 16384-rank point.
 //!
 //! Writes `BENCH_hotpath.json` (median wall times + speedups) in the
 //! working directory.
@@ -31,13 +33,16 @@ use tamio::cluster::Topology;
 use tamio::coordinator::breakdown::CpuModel;
 use tamio::coordinator::collective::{
     run_collective_read, run_collective_read_with, run_collective_write,
-    run_collective_write_with, Algorithm, ExchangeArena,
+    run_collective_write_with, Algorithm, Direction, ExchangeArena,
 };
 use tamio::coordinator::filedomain::FileDomains;
 use tamio::coordinator::merge::{
     scatter_into_binary_search, scatter_into_buf, sort_coalesce_pairs, ReqBatch,
 };
 use tamio::coordinator::placement::GlobalPlacement;
+use tamio::coordinator::plancache::{
+    build_collective_plan, encode_plan, fingerprint_collective, PlanCache,
+};
 use tamio::coordinator::reqcalc::calc_my_req;
 use tamio::coordinator::tam::TamConfig;
 use tamio::coordinator::twophase::CollectiveCtx;
@@ -198,7 +203,7 @@ fn bench_reqcalc(report: &mut JsonReport, budget: Duration) {
         let domains = FileDomains::new(LustreConfig::new(4096, 64), lo, hi, 64);
         let batch = ReqBatch::new(view, Vec::new()); // metadata-only (read side)
         let r = bench(&format!("calc_my_req/{n}"), budget, || {
-            black_box(calc_my_req(black_box(&domains), black_box(&batch)));
+            black_box(calc_my_req(black_box(&domains), black_box(&batch)).expect("calc_my_req"));
         });
         println!("{r}   ({:.2} Mreqs/s)", r.per_second(n as u64) / 1e6);
         report.add(&r);
@@ -446,7 +451,7 @@ fn bench_scale_16k(report: &mut JsonReport, budget: Duration) {
     let r = bench(&format!("calc_my_req_16k/{total_reqs}"), budget, || {
         let reqs = par_map(
             meta_batches.iter().collect::<Vec<_>>(),
-            |b| calc_my_req(black_box(&domains), b),
+            |b| calc_my_req(black_box(&domains), b).expect("calc_my_req"),
         );
         black_box(reqs.iter().map(|mr| mr.pieces).sum::<u64>());
     });
@@ -530,6 +535,127 @@ fn bench_scale_16k(report: &mut JsonReport, budget: Duration) {
     }
 }
 
+/// Plan-oracle panels: cold (fingerprint + full plan construction) vs
+/// warm (fingerprint + LRU hit) — the setup cost a cache hit deletes.
+/// One small point (64 ranks, 16k requests) and the 16384-rank scale
+/// point from [`bench_scale_16k`].
+fn bench_plan_cache(report: &mut JsonReport, budget: Duration) {
+    let net = NetParams::default();
+    let cpu = CpuModel::default();
+    let io = IoModel::default();
+    let eng = NativeEngine;
+    let small = Topology::new(4, 16);
+    let big = Topology::new(256, 64);
+    let cases: Vec<(&str, &Topology, usize, LustreConfig, Vec<(usize, FlatView)>)> = vec![
+        (
+            "64r",
+            &small,
+            8,
+            LustreConfig::new(1 << 14, 8),
+            make_streams(small.nprocs(), 16_000, 0x9A11)
+                .into_iter()
+                .enumerate()
+                .collect(),
+        ),
+        (
+            "16k",
+            &big,
+            64,
+            LustreConfig::new(4096, 64),
+            (0..big.nprocs())
+                .map(|r| {
+                    let base = r as u64 * 512;
+                    let view = FlatView::from_pairs(
+                        (0..8u64).map(|i| (base + i * 64, 64)).collect(),
+                    )
+                    .unwrap();
+                    (r, view)
+                })
+                .collect(),
+        ),
+    ];
+    for (tag, topo, n_agg, file_cfg, views) in cases {
+        let ctx = CollectiveCtx {
+            topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: n_agg,
+        };
+        let algo = Algorithm::Tam(TamConfig { total_local_aggregators: 256.min(topo.nprocs()) });
+        section(&format!(
+            "plan_cache: P={} ({tag}), cold build vs warm hit",
+            topo.nprocs()
+        ));
+        let fp = fingerprint_collective(
+            &ctx,
+            &algo,
+            Direction::Write,
+            &file_cfg,
+            views.iter().map(|(r, v)| (*r, v)),
+        );
+
+        // Correctness pin before timing: a warm lookup must return a plan
+        // byte-identical to an independent cold build.
+        let cold_plan = build_collective_plan(&ctx, &algo, Direction::Write, &views, &file_cfg, fp)
+            .expect("cold build");
+        let mut cache = PlanCache::in_memory(4);
+        let warm_plan = cache
+            .get_or_build(fp, || {
+                build_collective_plan(&ctx, &algo, Direction::Write, &views, &file_cfg, fp)
+            })
+            .expect("prime cache");
+        assert_eq!(
+            encode_plan(&cold_plan),
+            encode_plan(warm_plan),
+            "warm plan != cold plan at {tag}"
+        );
+
+        let cold = bench(&format!("plan_cold_build/{tag}"), budget, || {
+            let fp = fingerprint_collective(
+                black_box(&ctx),
+                &algo,
+                Direction::Write,
+                &file_cfg,
+                views.iter().map(|(r, v)| (*r, v)),
+            );
+            black_box(
+                build_collective_plan(
+                    &ctx,
+                    &algo,
+                    Direction::Write,
+                    black_box(&views),
+                    &file_cfg,
+                    fp,
+                )
+                .expect("build"),
+            );
+        });
+        println!("{cold}");
+        let warm = bench(&format!("plan_warm_hit/{tag}"), budget, || {
+            let fp = fingerprint_collective(
+                black_box(&ctx),
+                &algo,
+                Direction::Write,
+                &file_cfg,
+                views.iter().map(|(r, v)| (*r, v)),
+            );
+            let plan = cache
+                .get_or_build(fp, || unreachable!("warm lookup must hit"))
+                .expect("hit");
+            black_box(plan.exchange.n_rounds);
+        });
+        println!("{warm}");
+        let speedup = cold.median.as_secs_f64() / warm.median.as_secs_f64().max(1e-12);
+        println!("plan-cache hit speedup at {tag}: {speedup:.1}x");
+        report.add(&cold);
+        report.add(&warm);
+        report.add_value(&format!("plan_cache_speedup/{tag}"), speedup);
+    }
+}
+
 fn main() {
     let budget = Duration::from_millis(300);
     let mut report = JsonReport::new();
@@ -541,6 +667,7 @@ fn main() {
     bench_collective_write(&mut report, budget);
     bench_collective_read(&mut report, budget);
     bench_scale_16k(&mut report, budget);
+    bench_plan_cache(&mut report, budget);
     report.write("BENCH_hotpath.json").expect("write BENCH_hotpath.json");
     println!("\nwrote BENCH_hotpath.json");
 }

@@ -53,6 +53,11 @@ pub struct RunConfig {
     pub seed: u64,
     /// Verify written bytes by reading back after the collective.
     pub verify: bool,
+    /// Directory for persisted collective plans (`--plan-cache`); `None`
+    /// keeps the plan cache memory-only.
+    pub plan_cache: Option<String>,
+    /// Warm plans the in-memory LRU holds (`--plan-cache-size`).
+    pub plan_cache_size: usize,
 }
 
 impl Default for RunConfig {
@@ -75,6 +80,8 @@ impl Default for RunConfig {
             io: IoModel::default(),
             seed: 42,
             verify: false,
+            plan_cache: None,
+            plan_cache_size: 8,
         }
     }
 }
@@ -181,6 +188,18 @@ impl RunConfig {
             "cpu.per_byte_memcpy" => self.cpu.per_byte_memcpy = parse_f64(value)?,
             "seed" => self.seed = parse_u64(value)?,
             "verify" => self.verify = value == "true" || value == "1",
+            "plan-cache" | "plan_cache" => self.plan_cache = Some(value.to_string()),
+            "plan-cache-size" | "plan_cache_size" => {
+                let n = parse_u64(value)? as usize;
+                if n == 0 {
+                    return Err(Error::config(
+                        "plan-cache-size must be at least 1 (omit --plan-cache to \
+                         disable persistence; the in-memory cache is always on)"
+                            .to_string(),
+                    ));
+                }
+                self.plan_cache_size = n;
+            }
             other => {
                 return Err(Error::config(format!("unknown config key '{other}'")));
             }
@@ -271,6 +290,23 @@ mod tests {
         c.ppn = 4;
         c.sockets_per_node = 8;
         let _ = c.topology();
+    }
+
+    #[test]
+    fn plan_cache_keys_apply_and_reject_zero_size() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.plan_cache, None);
+        assert_eq!(c.plan_cache_size, 8);
+        let kv = KvMap::from_pairs(vec![
+            ("plan-cache".into(), "/tmp/tamio-plans".into()),
+            ("plan-cache-size".into(), "4".into()),
+        ]);
+        c.apply(&kv).unwrap();
+        assert_eq!(c.plan_cache.as_deref(), Some("/tmp/tamio-plans"));
+        assert_eq!(c.plan_cache_size, 4);
+        let bad = KvMap::from_pairs(vec![("plan-cache-size".into(), "0".into())]);
+        let err = c.apply(&bad).unwrap_err().to_string();
+        assert!(err.contains("at least 1"), "{err}");
     }
 
     #[test]

@@ -17,12 +17,16 @@
 //!   (socket → node → switch group), the generic pipeline both of the
 //!   above are special cases of.
 //! * [`collective`] — the public entry points dispatching on algorithm.
+//! * [`plancache`] — the plan oracle: fingerprint, LRU-cache, and
+//!   persist [`plancache::CollectivePlan`]s so repeated collectives
+//!   skip setup entirely (construct-once/execute-many).
 
 pub mod breakdown;
 pub mod collective;
 pub mod filedomain;
 pub mod merge;
 pub mod placement;
+pub mod plancache;
 pub mod reqcalc;
 pub mod tam;
 pub mod tree;

@@ -1,0 +1,1047 @@
+//! Plan oracle: fingerprint, cache, and persist collective aggregation
+//! plans so steady-state setup cost amortizes to zero.
+//!
+//! Checkpoint loops repeat the *same* (flatview, topology, striping,
+//! tree) collective thousands of times, yet every `run_collective_*`
+//! call used to re-run file-domain partitioning, aggregator selection
+//! and `calc_my_req`'s two-pass CSR build from scratch.  This module is
+//! the construct-once/execute-many split ROMIO pioneered for
+//! noncontiguous access handling (Thakur et al.), made first-class:
+//!
+//! * [`fingerprint_collective`] — a stable 128-bit structural hash over
+//!   everything that shapes a plan: requester views (offsets/lengths),
+//!   [`Topology`] shape + rank placement, striping, algorithm
+//!   (tree spec / `P_L`), global-aggregator policy and count, and
+//!   direction.  Cost-model parameters (`NetParams`, `CpuModel`,
+//!   `IoModel`) and the sort engine are deliberately *excluded*: they
+//!   only affect simulated times, which [`execute_exchange`] computes
+//!   from `ctx` at execution time — never plan structure — so one plan
+//!   serves every calibration.
+//! * [`CollectivePlan`] — the immutable artifact: the resolved
+//!   [`AggregationPlan`] level chain plus the top-tier [`ExchangePlan`]
+//!   (file domains, global aggregator ranks, round index, per-requester
+//!   classified CSR slabs).  No payload lives in a plan.
+//! * [`PlanCache`] — an LRU of warm plans living beside the
+//!   [`ExchangeArena`]: a hit performs zero plan-construction work (one
+//!   fingerprint + a linear probe of at most `capacity` entries).  With
+//!   a directory attached (`--plan-cache <dir>`), misses
+//!   load-or-build-and-store through a versioned on-disk format;
+//!   corrupt, truncated or stale files are rejected gracefully
+//!   (counted, logged, rebuilt) — never trusted into a panic.
+//!
+//! [`run_collective_write_cached`] / [`run_collective_read_cached`] are
+//! the drop-in cached twins of the `run_collective_*_with` entry
+//! points; DESIGN.md §Plan cache documents the fingerprint fields,
+//! invalidation rules and the on-disk format.
+
+use std::path::{Path, PathBuf};
+
+use crate::cluster::{LevelKind, RankPlacement, Topology};
+use crate::coordinator::collective::{
+    build_exchange_plan, Algorithm, CollectiveOutcome, Direction, ExchangeArena, ExchangePlan,
+    PlannedRequester,
+};
+use crate::coordinator::filedomain::FileDomains;
+use crate::coordinator::merge::{ReqBatch, RoundScratch};
+use crate::coordinator::placement::{GlobalPlacement, LevelAggregators};
+use crate::coordinator::reqcalc::MyReqs;
+use crate::coordinator::tree::{
+    aggregate_level_read_views, tree_read_with, tree_write_with, AggregationPlan,
+};
+use crate::coordinator::twophase::CollectiveCtx;
+use crate::error::{Error, Result};
+use crate::lustre::{LustreConfig, LustreFile};
+use crate::mpisim::FlatView;
+
+// ---------------------------------------------------------------------------
+// Fingerprint
+// ---------------------------------------------------------------------------
+
+/// A 128-bit structural fingerprint — the plan-cache key.  Displayed as
+/// 32 hex digits (also the on-disk file-name stem).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fp128 {
+    /// Low 64 bits.
+    pub lo: u64,
+    /// High 64 bits.
+    pub hi: u64,
+}
+
+impl std::fmt::Display for Fp128 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+/// `splitmix64` finalizer: a full-avalanche 64-bit mix.
+fn splitmix_mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Two-lane streaming hasher over `u64` words: an FNV-1a lane and a
+/// splitmix-mixed accumulator lane, cross-folded at the end.  Both lanes
+/// are order-sensitive and the finisher folds the word count, so
+/// permuted or truncated streams diverge.  Hand-rolled (no external
+/// hashing crates) and stable across runs and platforms — unlike
+/// `std::hash`, whose `SipHash` keys are process-random.
+#[derive(Clone, Copy, Debug)]
+pub struct FpHasher {
+    a: u64,
+    b: u64,
+    len: u64,
+}
+
+impl FpHasher {
+    /// Start a stream under a domain tag (namespaces unrelated uses).
+    pub fn new(tag: &str) -> Self {
+        let mut h = FpHasher { a: 0xcbf2_9ce4_8422_2325, b: 0x9E37_79B9_7F4A_7C15, len: 0 };
+        for byte in tag.bytes() {
+            h.write_u64(byte as u64);
+        }
+        h
+    }
+
+    /// Fold one word into both lanes.
+    pub fn write_u64(&mut self, w: u64) {
+        self.a = (self.a ^ w).wrapping_mul(0x0000_0100_0000_01B3);
+        self.b = self.b.wrapping_add(splitmix_mix(w ^ self.b));
+        self.len = self.len.wrapping_add(1);
+    }
+
+    /// Fold a word slice.
+    pub fn write_u64s(&mut self, ws: &[u64]) {
+        for &w in ws {
+            self.write_u64(w);
+        }
+    }
+
+    /// Finish the stream into a 128-bit fingerprint.
+    pub fn finish(self) -> Fp128 {
+        let lo = splitmix_mix(self.a ^ self.b.rotate_left(32) ^ self.len);
+        let hi = splitmix_mix(self.b ^ self.a.rotate_left(17) ^ !self.len);
+        Fp128 { lo, hi }
+    }
+}
+
+fn rank_placement_disc(p: RankPlacement) -> u64 {
+    match p {
+        RankPlacement::Block => 0,
+        RankPlacement::RoundRobin => 1,
+    }
+}
+
+fn global_placement_disc(p: GlobalPlacement) -> u64 {
+    match p {
+        GlobalPlacement::Spread => 0,
+        GlobalPlacement::CrayRoundRobin => 1,
+    }
+}
+
+/// Fingerprint one collective: every structural input that shapes the
+/// plan, and nothing that doesn't (see the module docs for the
+/// exclusion rationale).  Takes the requester views as an iterator so
+/// steady-state callers hash straight out of their batch list without
+/// collecting — the warm path allocates nothing.
+pub fn fingerprint_collective<'a>(
+    ctx: &CollectiveCtx,
+    algo: &Algorithm,
+    direction: Direction,
+    file_cfg: &LustreConfig,
+    views: impl Iterator<Item = (usize, &'a FlatView)>,
+) -> Fp128 {
+    let mut h = FpHasher::new("tamio-collective-plan-v1");
+    // Topology shape + rank placement.
+    h.write_u64(ctx.topo.nodes as u64);
+    h.write_u64(ctx.topo.ppn as u64);
+    h.write_u64(ctx.topo.sockets_per_node as u64);
+    h.write_u64(ctx.topo.nodes_per_switch as u64);
+    h.write_u64(rank_placement_disc(ctx.topo.placement));
+    // Global-aggregator policy and count; striping.
+    h.write_u64(global_placement_disc(ctx.placement));
+    h.write_u64(ctx.n_global_agg as u64);
+    h.write_u64(file_cfg.stripe_size);
+    h.write_u64(file_cfg.stripe_count as u64);
+    // Algorithm (discriminant + every structural parameter).
+    match algo {
+        Algorithm::TwoPhase => h.write_u64(0),
+        Algorithm::Tam(t) => {
+            h.write_u64(1);
+            h.write_u64(t.total_local_aggregators as u64);
+        }
+        Algorithm::Tree(spec) => {
+            h.write_u64(2);
+            h.write_u64(spec.per_socket as u64);
+            h.write_u64(spec.per_node as u64);
+            h.write_u64(spec.per_switch as u64);
+        }
+    }
+    h.write_u64(match direction {
+        Direction::Write => 0,
+        Direction::Read => 1,
+    });
+    // Requester views: rank, entry count, then the flattened
+    // offset/length words (order-sensitive — views are positional).
+    for (rank, view) in views {
+        h.write_u64(rank as u64);
+        h.write_u64(view.len() as u64);
+        h.write_u64s(view.offsets());
+        h.write_u64s(view.lengths());
+    }
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// The plan artifact
+// ---------------------------------------------------------------------------
+
+/// The immutable, executable artifact of one collective's setup: the
+/// resolved aggregation-tree level chain and the top-tier exchange plan.
+/// Carries no payload and borrows nothing — safe to cache, serialize,
+/// and execute any number of times against fresh per-call payloads.
+#[derive(Debug)]
+pub struct CollectivePlan {
+    /// The structural fingerprint this plan was built under.
+    pub fingerprint: Fp128,
+    /// Rank count of the topology the plan was built for (bounds every
+    /// rank index inside; revalidated on load and on execution).
+    pub nprocs: usize,
+    /// The resolved aggregation-tree level chain.
+    pub agg: AggregationPlan,
+    /// The top-tier inter-node exchange plan.
+    pub exchange: ExchangePlan,
+}
+
+/// Build a [`CollectivePlan`] from the original requester views — the
+/// full setup work a cache hit skips.
+///
+/// The member views are folded up the tree with *metadata-only* merges
+/// ([`aggregate_level_read_views`]): `merge_meta` and `merge_scatter`
+/// share one merge kernel, so the top tier produced here is exactly the
+/// tier the write path's payload aggregation produces — for either
+/// direction, the exchange plan below it classifies the same views the
+/// executor will present.  On reads, self-overlapping top-tier views
+/// are replaced by their disjoint union, mirroring the executor's
+/// preparation step.
+pub fn build_collective_plan(
+    ctx: &CollectiveCtx,
+    algo: &Algorithm,
+    direction: Direction,
+    views: &[(usize, FlatView)],
+    file_cfg: &LustreConfig,
+    fingerprint: Fp128,
+) -> Result<CollectivePlan> {
+    let agg = AggregationPlan::for_algorithm(ctx.topo, algo);
+    let mut tier: Vec<(usize, FlatView)> = views.to_vec();
+    // Throwaway scratch: plan construction is the cold path by
+    // definition; the executor's arena slots stay untouched.
+    let mut slots: Vec<RoundScratch> = Vec::new();
+    for level in &agg.levels {
+        let stage = aggregate_level_read_views(ctx, level, &tier, &mut slots)?;
+        tier = stage.agg_views;
+    }
+    if direction == Direction::Read {
+        for (_, v) in tier.iter_mut() {
+            if v.has_overlap() {
+                *v = v.disjoint_union();
+            }
+        }
+    }
+    let refs: Vec<(usize, &FlatView)> = tier.iter().map(|(r, v)| (*r, v)).collect();
+    let exchange = build_exchange_plan(ctx, &refs, file_cfg)?;
+    Ok(CollectivePlan { fingerprint, nprocs: ctx.topo.nprocs(), agg, exchange })
+}
+
+// ---------------------------------------------------------------------------
+// The cache
+// ---------------------------------------------------------------------------
+
+/// Hit/miss/build accounting of one [`PlanCache`].  `build_nanos` is
+/// *wall-clock* construction time — the only place the cache win shows
+/// up besides elapsed time, since all simulated costs (including
+/// `Breakdown::plan`) are identical for hit and miss by design.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Warm lookups served without any construction work.
+    pub hits: u64,
+    /// Lookups that had to load or build.
+    pub misses: u64,
+    /// Misses satisfied by a valid persisted plan.
+    pub disk_loads: u64,
+    /// Freshly built plans persisted to the cache directory.
+    pub disk_stores: u64,
+    /// Persisted files rejected (corrupt, truncated, wrong version or
+    /// fingerprint) — each one fell back to a rebuild.
+    pub rejects: u64,
+    /// Wall-clock nanoseconds spent constructing plans on misses.
+    pub build_nanos: u64,
+}
+
+/// LRU cache of warm [`CollectivePlan`]s, optionally backed by a
+/// directory of versioned plan files.  Lives beside the
+/// [`ExchangeArena`] in long-running drivers; capacities are small
+/// (default 8) because one entry per distinct collective pattern is
+/// plenty — checkpoint loops have one.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    /// `(key, last-use tick, plan)` — linear probe; capacities this
+    /// small make a map structure slower, not faster.
+    entries: Vec<(Fp128, u64, Box<CollectivePlan>)>,
+    capacity: usize,
+    tick: u64,
+    dir: Option<PathBuf>,
+    /// Running hit/miss/build accounting.
+    pub stats: PlanCacheStats,
+}
+
+impl PlanCache {
+    /// A memory-only cache holding at most `capacity` warm plans.
+    pub fn in_memory(capacity: usize) -> Self {
+        PlanCache { capacity: capacity.max(1), ..PlanCache::default() }
+    }
+
+    /// A cache persisting plans under `dir` (created if missing).
+    pub fn with_dir(capacity: usize, dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).map_err(|e| {
+            Error::config(format!(
+                "cannot create plan-cache directory '{}': {e}",
+                dir.display()
+            ))
+        })?;
+        let mut cache = PlanCache::in_memory(capacity);
+        cache.dir = Some(dir);
+        Ok(cache)
+    }
+
+    /// Number of warm plans currently held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no plan is warm.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Whether a plan for `fp` is warm (no LRU effect).
+    pub fn contains(&self, fp: Fp128) -> bool {
+        self.entries.iter().any(|(k, _, _)| *k == fp)
+    }
+
+    /// The cache's fundamental operation: return the warm plan for
+    /// `fp`, else load it from the cache directory, else construct it
+    /// with `build` (persisting the result).  The hot path — a hit —
+    /// performs one linear probe and a tick bump: zero construction,
+    /// zero allocation.
+    pub fn get_or_build(
+        &mut self,
+        fp: Fp128,
+        build: impl FnOnce() -> Result<CollectivePlan>,
+    ) -> Result<&CollectivePlan> {
+        self.tick += 1;
+        if let Some(i) = self.entries.iter().position(|(k, _, _)| *k == fp) {
+            self.entries[i].1 = self.tick;
+            self.stats.hits += 1;
+            return Ok(&self.entries[i].2);
+        }
+        self.stats.misses += 1;
+        let plan = match self.load_from_disk(fp) {
+            Some(plan) => plan,
+            None => {
+                let t0 = std::time::Instant::now();
+                let plan = build()?;
+                self.stats.build_nanos =
+                    self.stats.build_nanos.saturating_add(t0.elapsed().as_nanos() as u64);
+                if plan.fingerprint != fp {
+                    return Err(Error::Protocol(format!(
+                        "plan builder returned fingerprint {} for key {fp}",
+                        plan.fingerprint
+                    )));
+                }
+                self.store_to_disk(&plan);
+                plan
+            }
+        };
+        if self.entries.len() >= self.capacity {
+            // Evict the least-recently-used entry.
+            if let Some(lru) = (0..self.entries.len()).min_by_key(|&i| self.entries[i].1) {
+                self.entries.swap_remove(lru);
+            }
+        }
+        self.entries.push((fp, self.tick, Box::new(plan)));
+        let last = self.entries.len() - 1;
+        Ok(&self.entries[last].2)
+    }
+
+    fn load_from_disk(&mut self, fp: Fp128) -> Option<CollectivePlan> {
+        let dir = self.dir.as_deref()?;
+        let path = plan_path(dir, fp);
+        // A missing file is the normal cold-miss case, not a reject.
+        let bytes = std::fs::read(&path).ok()?;
+        match decode_plan(&bytes, fp) {
+            Ok(plan) => {
+                self.stats.disk_loads += 1;
+                Some(plan)
+            }
+            Err(e) => {
+                self.stats.rejects += 1;
+                eprintln!("plan-cache: rejecting '{}': {e} (rebuilding)", path.display());
+                None
+            }
+        }
+    }
+
+    /// Best-effort persistence: a full file appears atomically (write
+    /// to a sibling tmp file, then rename), and an unwritable directory
+    /// degrades to memory-only caching instead of failing the run.
+    fn store_to_disk(&mut self, plan: &CollectivePlan) {
+        let Some(dir) = self.dir.as_deref() else { return };
+        let path = plan_path(dir, plan.fingerprint);
+        let bytes = encode_plan(plan);
+        let tmp = path.with_extension("plan.tmp");
+        let wrote = std::fs::write(&tmp, &bytes)
+            .and_then(|()| std::fs::rename(&tmp, &path));
+        match wrote {
+            Ok(()) => self.stats.disk_stores += 1,
+            Err(e) => eprintln!(
+                "plan-cache: could not persist '{}': {e} (continuing in memory)",
+                path.display()
+            ),
+        }
+    }
+}
+
+/// The persisted-plan path for a fingerprint.
+fn plan_path(dir: &Path, fp: Fp128) -> PathBuf {
+    dir.join(format!("tamio-plan-{fp}.plan"))
+}
+
+// ---------------------------------------------------------------------------
+// On-disk format (versioned)
+// ---------------------------------------------------------------------------
+//
+//   magic    8 B   b"TAMPLAN\0"
+//   version  4 B   u32 LE (currently 1)
+//   fp       16 B  lo, hi as u64 LE
+//   body_len 8 B   u64 LE
+//   body     …     the plan structure, all integers u64/u32/u8 LE
+//   checksum 8 B   FNV-1a over the body bytes
+//
+// Bumping PLAN_FORMAT_VERSION invalidates every persisted plan at once;
+// fingerprint mismatch invalidates one file.  Either way the loader
+// rejects gracefully and the caller rebuilds.
+
+/// Magic prefix of persisted plan files.
+pub const PLAN_MAGIC: [u8; 8] = *b"TAMPLAN\0";
+/// Current on-disk format version.
+pub const PLAN_FORMAT_VERSION: u32 = 1;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64_slice(out: &mut Vec<u8>, s: &[u64]) {
+    put_u64(out, s.len() as u64);
+    for &v in s {
+        put_u64(out, v);
+    }
+}
+
+fn put_usize_slice(out: &mut Vec<u8>, s: &[usize]) {
+    put_u64(out, s.len() as u64);
+    for &v in s {
+        put_u64(out, v as u64);
+    }
+}
+
+fn level_kind_code(kind: LevelKind) -> u8 {
+    match kind {
+        LevelKind::Socket => 0,
+        LevelKind::Node => 1,
+        LevelKind::Switch => 2,
+    }
+}
+
+fn level_kind_from(code: u8) -> Result<LevelKind> {
+    match code {
+        0 => Ok(LevelKind::Socket),
+        1 => Ok(LevelKind::Node),
+        2 => Ok(LevelKind::Switch),
+        other => Err(Error::Protocol(format!("persisted plan: bad level kind {other}"))),
+    }
+}
+
+/// Serialize a plan to the versioned on-disk format.  The payload slab
+/// of every `MyReqs` is structurally empty by construction
+/// (`calc_my_req_structure`) and is not serialized.
+pub fn encode_plan(plan: &CollectivePlan) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, plan.nprocs as u64);
+    put_u32(&mut body, plan.agg.levels.len() as u32);
+    for level in &plan.agg.levels {
+        body.push(level_kind_code(level.kind));
+        put_usize_slice(&mut body, &level.ranks);
+        put_usize_slice(&mut body, &level.assignment);
+    }
+    let x = &plan.exchange;
+    put_u64(&mut body, x.domains.lustre.stripe_size);
+    put_u64(&mut body, x.domains.lustre.stripe_count as u64);
+    put_u64(&mut body, x.domains.first_stripe);
+    put_u64(&mut body, x.domains.end_stripe);
+    put_u64(&mut body, x.domains.n_agg as u64);
+    put_usize_slice(&mut body, &x.agg_ranks);
+    put_u64(&mut body, x.n_rounds);
+    put_u64(&mut body, x.reqs.len() as u64);
+    for pr in &x.reqs {
+        put_u64(&mut body, pr.rank as u64);
+        put_u64(&mut body, pr.view_len as u64);
+        put_u64(&mut body, pr.view_bytes);
+        let r = &pr.reqs;
+        put_u64(&mut body, r.pieces);
+        put_u64(&mut body, r.n_agg as u64);
+        put_u64_slice(&mut body, &r.offsets);
+        put_u64_slice(&mut body, &r.lengths);
+        put_u64_slice(&mut body, &r.payload_src);
+        put_u64_slice(&mut body, &r.dest_round);
+        put_usize_slice(&mut body, &r.dest_agg);
+        put_usize_slice(&mut body, &r.dest_req_start);
+        put_u64_slice(&mut body, &r.dest_byte_start);
+        put_usize_slice(&mut body, &r.round_starts);
+    }
+
+    let mut out = Vec::with_capacity(8 + 4 + 16 + 8 + body.len() + 8);
+    out.extend_from_slice(&PLAN_MAGIC);
+    put_u32(&mut out, PLAN_FORMAT_VERSION);
+    put_u64(&mut out, plan.fingerprint.lo);
+    put_u64(&mut out, plan.fingerprint.hi);
+    put_u64(&mut out, body.len() as u64);
+    let cks = fnv1a(&body);
+    out.extend_from_slice(&body);
+    put_u64(&mut out, cks);
+    out
+}
+
+/// Bounds-checked read cursor over untrusted plan bytes: every length
+/// prefix is validated against the remaining input before any
+/// allocation or slice, so truncated or hostile files fail with
+/// [`Error::Protocol`] instead of panicking or ballooning memory.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.bytes.len()).ok_or_else(
+            || Error::Protocol("persisted plan: truncated body".into()),
+        )?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn len_prefix(&mut self) -> Result<usize> {
+        let n = self.u64()? as usize;
+        // The words must actually be present before we allocate for them.
+        if n.checked_mul(8).filter(|&b| self.pos + b <= self.bytes.len()).is_none() {
+            return Err(Error::Protocol(
+                "persisted plan: slice length exceeds file size".into(),
+            ));
+        }
+        Ok(n)
+    }
+
+    fn u64_slice(&mut self) -> Result<Vec<u64>> {
+        let n = self.len_prefix()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    fn usize_slice(&mut self) -> Result<Vec<usize>> {
+        let n = self.len_prefix()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()? as usize);
+        }
+        Ok(out)
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.bytes.len()
+    }
+}
+
+/// Parse + validate a persisted plan.  Validation is layered: header
+/// (magic, version, fingerprint, length, checksum), then structural
+/// invariants (every rank bounded by the recorded `nprocs`, aggregator
+/// lists consistent with the domain partition, every `MyReqs` CSR
+/// passing [`MyReqs::validate`]) — a file that decodes is safe to
+/// execute, never a panic source.
+pub fn decode_plan(bytes: &[u8], expect: Fp128) -> Result<CollectivePlan> {
+    let header = 8 + 4 + 16 + 8;
+    if bytes.len() < header + 8 {
+        return Err(Error::Protocol("persisted plan: file too short".into()));
+    }
+    if bytes[..8] != PLAN_MAGIC {
+        return Err(Error::Protocol("persisted plan: bad magic".into()));
+    }
+    let mut head = Cursor { bytes, pos: 8 };
+    let version = head.u32()?;
+    if version != PLAN_FORMAT_VERSION {
+        return Err(Error::Protocol(format!(
+            "persisted plan: format version {version} (this build reads {PLAN_FORMAT_VERSION})"
+        )));
+    }
+    let fp = Fp128 { lo: head.u64()?, hi: head.u64()? };
+    if fp != expect {
+        return Err(Error::Protocol(format!(
+            "persisted plan: fingerprint {fp} does not match expected {expect}"
+        )));
+    }
+    let body_len = head.u64()? as usize;
+    if bytes.len() != header + body_len + 8 {
+        return Err(Error::Protocol("persisted plan: body length mismatch".into()));
+    }
+    let body = &bytes[header..header + body_len];
+    let stored_cks =
+        u64::from_le_bytes(bytes[header + body_len..].try_into().map_err(|_| {
+            Error::Protocol("persisted plan: truncated checksum".into())
+        })?);
+    if fnv1a(body) != stored_cks {
+        return Err(Error::Protocol("persisted plan: checksum mismatch".into()));
+    }
+
+    let mut cur = Cursor { bytes: body, pos: 0 };
+    let nprocs = cur.u64()? as usize;
+    let n_levels = cur.u32()? as usize;
+    if n_levels > 3 {
+        return Err(Error::Protocol(format!(
+            "persisted plan: {n_levels} tree levels (at most 3 exist)"
+        )));
+    }
+    let mut levels = Vec::with_capacity(n_levels);
+    for _ in 0..n_levels {
+        let kind = level_kind_from(cur.u8()?)?;
+        let ranks = cur.usize_slice()?;
+        let assignment = cur.usize_slice()?;
+        if assignment.len() != nprocs {
+            return Err(Error::Protocol(format!(
+                "persisted plan: {} level assigns {} ranks, topology has {nprocs}",
+                kind,
+                assignment.len()
+            )));
+        }
+        if ranks.windows(2).any(|w| w[0] >= w[1]) || ranks.iter().any(|&r| r >= nprocs) {
+            return Err(Error::Protocol(format!(
+                "persisted plan: {kind} level aggregator ranks not ascending in-range"
+            )));
+        }
+        // Non-member slots hold usize::MAX; member slots must point at
+        // one of this level's aggregators.
+        if assignment
+            .iter()
+            .any(|&a| a != usize::MAX && ranks.binary_search(&a).is_err())
+        {
+            return Err(Error::Protocol(format!(
+                "persisted plan: {kind} level assignment targets a non-aggregator"
+            )));
+        }
+        levels.push(LevelAggregators { kind, ranks, assignment });
+    }
+
+    let stripe_size = cur.u64()?;
+    let stripe_count = cur.u64()? as usize;
+    if stripe_size == 0 || stripe_count == 0 {
+        return Err(Error::Protocol("persisted plan: zero striping".into()));
+    }
+    let first_stripe = cur.u64()?;
+    let end_stripe = cur.u64()?;
+    let n_agg = cur.u64()? as usize;
+    if n_agg == 0 {
+        return Err(Error::Protocol("persisted plan: zero aggregators".into()));
+    }
+    if end_stripe < first_stripe {
+        return Err(Error::Protocol("persisted plan: inverted stripe range".into()));
+    }
+    let domains = FileDomains {
+        lustre: LustreConfig::new(stripe_size, stripe_count),
+        first_stripe,
+        end_stripe,
+        n_agg,
+    };
+    let agg_ranks = cur.usize_slice()?;
+    if agg_ranks.len() != n_agg || agg_ranks.iter().any(|&r| r >= nprocs) {
+        return Err(Error::Protocol(format!(
+            "persisted plan: {} aggregator ranks for {n_agg} domains over {nprocs} ranks",
+            agg_ranks.len()
+        )));
+    }
+    let n_rounds = cur.u64()?;
+    if n_rounds != domains.n_rounds() {
+        return Err(Error::Protocol(format!(
+            "persisted plan: {n_rounds} rounds, domain partition implies {}",
+            domains.n_rounds()
+        )));
+    }
+    let n_reqs = cur.u64()? as usize;
+    // One requester record is ≥ 13 u64-sized fields; a hostile count
+    // cannot claim more records than bytes remain.
+    if n_reqs > body_len / 13 {
+        return Err(Error::Protocol("persisted plan: requester count exceeds file".into()));
+    }
+    let mut reqs = Vec::with_capacity(n_reqs);
+    for _ in 0..n_reqs {
+        let rank = cur.u64()? as usize;
+        if rank >= nprocs {
+            return Err(Error::Protocol(format!(
+                "persisted plan: requester rank {rank} outside topology ({nprocs} ranks)"
+            )));
+        }
+        let view_len = cur.u64()? as usize;
+        let view_bytes = cur.u64()?;
+        let pieces = cur.u64()?;
+        let req_n_agg = cur.u64()? as usize;
+        if req_n_agg != n_agg {
+            return Err(Error::Protocol(format!(
+                "persisted plan: requester classified against {req_n_agg} domains, plan has {n_agg}"
+            )));
+        }
+        let mr = MyReqs {
+            offsets: cur.u64_slice()?,
+            lengths: cur.u64_slice()?,
+            payload: Vec::new(),
+            payload_src: cur.u64_slice()?,
+            dest_round: cur.u64_slice()?,
+            dest_agg: cur.usize_slice()?,
+            dest_req_start: cur.usize_slice()?,
+            dest_byte_start: cur.u64_slice()?,
+            round_starts: cur.usize_slice()?,
+            n_agg: req_n_agg,
+            pieces,
+        };
+        mr.validate(view_bytes)?;
+        reqs.push(PlannedRequester { rank, view_len, view_bytes, reqs: mr });
+    }
+    if !cur.done() {
+        return Err(Error::Protocol("persisted plan: trailing bytes after body".into()));
+    }
+    Ok(CollectivePlan {
+        fingerprint: fp,
+        nprocs,
+        agg: AggregationPlan { levels },
+        exchange: ExchangePlan { domains, agg_ranks, n_rounds, reqs },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Cached entry points
+// ---------------------------------------------------------------------------
+
+fn check_topology(plan: &CollectivePlan, topo: &Topology) -> Result<()> {
+    if plan.nprocs != topo.nprocs() {
+        return Err(Error::Protocol(format!(
+            "cached plan spans {} ranks, topology has {}",
+            plan.nprocs,
+            topo.nprocs()
+        )));
+    }
+    Ok(())
+}
+
+/// Cached twin of
+/// [`run_collective_write_with`](crate::coordinator::collective::run_collective_write_with):
+/// fingerprint the call, reuse (or build once) its [`CollectivePlan`],
+/// and execute the tree over the borrowed plan.  The result is
+/// bit-identical to the uncached entry point — all simulated times come
+/// from `ctx` at execution time — so only wall-clock and
+/// [`PlanCacheStats`] reveal whether the plan was warm.
+pub fn run_collective_write_cached(
+    ctx: &CollectiveCtx,
+    algo: Algorithm,
+    ranks: Vec<(usize, ReqBatch)>,
+    file: &mut LustreFile,
+    arena: &mut ExchangeArena,
+    cache: &mut PlanCache,
+) -> Result<CollectiveOutcome> {
+    let file_cfg = *file.config();
+    let fp = fingerprint_collective(
+        ctx,
+        &algo,
+        Direction::Write,
+        &file_cfg,
+        ranks.iter().map(|(r, b)| (*r, &b.view)),
+    );
+    let plan = cache.get_or_build(fp, || {
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        build_collective_plan(ctx, &algo, Direction::Write, &views, &file_cfg, fp)
+    })?;
+    check_topology(plan, ctx.topo)?;
+    let out = tree_write_with(ctx, &plan.agg, Some(&plan.exchange), ranks, file, arena)?;
+    Ok(CollectiveOutcome { breakdown: out.breakdown, counters: out.counters })
+}
+
+/// Cached twin of
+/// [`run_collective_read_with`](crate::coordinator::collective::run_collective_read_with)
+/// (see [`run_collective_write_cached`] for the contract).
+pub fn run_collective_read_cached(
+    ctx: &CollectiveCtx,
+    algo: Algorithm,
+    views: Vec<(usize, FlatView)>,
+    file: &LustreFile,
+    arena: &mut ExchangeArena,
+    cache: &mut PlanCache,
+) -> Result<(Vec<(usize, Vec<u8>)>, CollectiveOutcome)> {
+    let file_cfg = *file.config();
+    let fp = fingerprint_collective(
+        ctx,
+        &algo,
+        Direction::Read,
+        &file_cfg,
+        views.iter().map(|(r, v)| (*r, v)),
+    );
+    let plan = cache.get_or_build(fp, || {
+        build_collective_plan(ctx, &algo, Direction::Read, &views, &file_cfg, fp)
+    })?;
+    check_topology(plan, ctx.topo)?;
+    tree_read_with(ctx, &plan.agg, Some(&plan.exchange), views, file, arena)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::coordinator::breakdown::CpuModel;
+    use crate::lustre::IoModel;
+    use crate::netmodel::NetParams;
+    use crate::runtime::engine::NativeEngine;
+
+    fn fixture() -> (Topology, NetParams, CpuModel, IoModel, NativeEngine) {
+        (
+            Topology::new(2, 4),
+            NetParams::default(),
+            CpuModel::default(),
+            IoModel::default(),
+            NativeEngine,
+        )
+    }
+
+    fn views(topo: &Topology) -> Vec<(usize, FlatView)> {
+        (0..topo.nprocs())
+            .map(|r| {
+                let base = r as u64 * 100;
+                (r, FlatView::from_pairs(vec![(base, 30), (base + 50, 20)]).unwrap())
+            })
+            .collect()
+    }
+
+    fn fp_of(
+        ctx: &CollectiveCtx,
+        algo: &Algorithm,
+        direction: Direction,
+        cfg: &LustreConfig,
+        vs: &[(usize, FlatView)],
+    ) -> Fp128 {
+        fingerprint_collective(ctx, algo, direction, cfg, vs.iter().map(|(r, v)| (*r, v)))
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let cfg = LustreConfig::new(4096, 4);
+        let vs = views(&topo);
+        let a = fp_of(&ctx, &Algorithm::TwoPhase, Direction::Write, &cfg, &vs);
+        let b = fp_of(&ctx, &Algorithm::TwoPhase, Direction::Write, &cfg, &vs);
+        assert_eq!(a, b, "same inputs must fingerprint identically");
+
+        // Direction, algorithm, striping, views and topology all key in.
+        assert_ne!(a, fp_of(&ctx, &Algorithm::TwoPhase, Direction::Read, &cfg, &vs));
+        assert_ne!(
+            a,
+            fp_of(&ctx, &"tam:2".parse().unwrap(), Direction::Write, &cfg, &vs)
+        );
+        assert_ne!(
+            a,
+            fp_of(&ctx, &Algorithm::TwoPhase, Direction::Write, &LustreConfig::new(8192, 4), &vs)
+        );
+        let mut vs2 = vs.clone();
+        vs2[0].1 = FlatView::from_pairs(vec![(0, 31), (50, 20)]).unwrap();
+        assert_ne!(a, fp_of(&ctx, &Algorithm::TwoPhase, Direction::Write, &cfg, &vs2));
+        let topo2 = Topology::new(4, 2);
+        let ctx2 = CollectiveCtx { topo: &topo2, ..ctx };
+        assert_ne!(a, fp_of(&ctx2, &Algorithm::TwoPhase, Direction::Write, &cfg, &vs));
+        // Cost models are deliberately not part of the key.
+        let net2 = NetParams { alpha_inter: net.alpha_inter * 2.0, ..net };
+        let ctx3 = CollectiveCtx { net: &net2, ..ctx };
+        assert_eq!(a, fp_of(&ctx3, &Algorithm::TwoPhase, Direction::Write, &cfg, &vs));
+    }
+
+    #[test]
+    fn plan_round_trips_through_disk_format() {
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let cfg = LustreConfig::new(64, 4);
+        let vs = views(&topo);
+        let algo: Algorithm = "tam:2".parse().unwrap();
+        let fp = fp_of(&ctx, &algo, Direction::Write, &cfg, &vs);
+        let plan =
+            build_collective_plan(&ctx, &algo, Direction::Write, &vs, &cfg, fp).unwrap();
+        let bytes = encode_plan(&plan);
+        let back = decode_plan(&bytes, fp).unwrap();
+        assert_eq!(back.fingerprint, fp);
+        assert_eq!(back.nprocs, plan.nprocs);
+        assert_eq!(back.agg.levels.len(), plan.agg.levels.len());
+        for (a, b) in back.agg.levels.iter().zip(&plan.agg.levels) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.ranks, b.ranks);
+            assert_eq!(a.assignment, b.assignment);
+        }
+        assert_eq!(back.exchange.n_rounds, plan.exchange.n_rounds);
+        assert_eq!(back.exchange.agg_ranks, plan.exchange.agg_ranks);
+        assert_eq!(back.exchange.domains.n_agg, plan.exchange.domains.n_agg);
+        assert_eq!(back.exchange.reqs.len(), plan.exchange.reqs.len());
+        for (a, b) in back.exchange.reqs.iter().zip(&plan.exchange.reqs) {
+            assert_eq!(a.rank, b.rank);
+            assert_eq!(a.view_len, b.view_len);
+            assert_eq!(a.view_bytes, b.view_bytes);
+            assert_eq!(a.reqs.pieces, b.reqs.pieces);
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_corruption_gracefully() {
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let cfg = LustreConfig::new(64, 4);
+        let vs = views(&topo);
+        let fp = fp_of(&ctx, &Algorithm::TwoPhase, Direction::Write, &cfg, &vs);
+        let plan =
+            build_collective_plan(&ctx, &Algorithm::TwoPhase, Direction::Write, &vs, &cfg, fp)
+                .unwrap();
+        let good = encode_plan(&plan);
+        assert!(decode_plan(&good, fp).is_ok());
+
+        // Truncation at every prefix length must error, never panic.
+        for cut in [0, 7, 8, 12, 20, good.len() / 2, good.len() - 1] {
+            assert!(decode_plan(&good[..cut], fp).is_err(), "cut at {cut}");
+        }
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode_plan(&bad, fp).is_err());
+        // Future format version.
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&(PLAN_FORMAT_VERSION + 1).to_le_bytes());
+        assert!(decode_plan(&bad, fp).is_err());
+        // Fingerprint mismatch (stale key).
+        let other = Fp128 { lo: fp.lo ^ 1, hi: fp.hi };
+        assert!(decode_plan(&good, other).is_err());
+        // Body bit-flip trips the checksum.
+        let mut bad = good.clone();
+        let mid = 36 + (good.len() - 44) / 2;
+        bad[mid] ^= 0x40;
+        assert!(decode_plan(&bad, fp).is_err());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let cfg = LustreConfig::new(64, 4);
+        let vs = views(&topo);
+        let mut cache = PlanCache::in_memory(2);
+        let algos: Vec<Algorithm> =
+            vec![Algorithm::TwoPhase, "tam:2".parse().unwrap(), "tree:node=1".parse().unwrap()];
+        let fps: Vec<Fp128> = algos
+            .iter()
+            .map(|a| fp_of(&ctx, a, Direction::Write, &cfg, &vs))
+            .collect();
+        for (a, &fp) in algos.iter().zip(&fps).take(2) {
+            cache
+                .get_or_build(fp, || {
+                    build_collective_plan(&ctx, a, Direction::Write, &vs, &cfg, fp)
+                })
+                .unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+        // Touch the first so the second becomes LRU.
+        cache.get_or_build(fps[0], || unreachable!("warm entry must hit")).unwrap();
+        assert_eq!(cache.stats.hits, 1);
+        cache
+            .get_or_build(fps[2], || {
+                build_collective_plan(&ctx, &algos[2], Direction::Write, &vs, &cfg, fps[2])
+            })
+            .unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(cache.contains(fps[0]), "recently-used entry survived");
+        assert!(!cache.contains(fps[1]), "LRU entry evicted");
+        assert!(cache.contains(fps[2]));
+        assert_eq!(cache.stats.misses, 3);
+        assert!(cache.stats.build_nanos > 0);
+    }
+}

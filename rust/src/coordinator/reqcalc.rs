@@ -33,6 +33,7 @@
 //! even then.  The `#[cfg(test)]` `HashMap` implementation remains the
 //! golden oracle.
 
+use crate::error::{Error, Result};
 use crate::mpisim::FlatView;
 
 use super::filedomain::FileDomains;
@@ -83,28 +84,35 @@ impl<'a> ReqSlice<'a> {
 #[derive(Debug, Default)]
 pub struct MyReqs {
     /// Piece offset slab, grouped by destination in table order.
-    offsets: Vec<u64>,
+    /// Fields are `pub(crate)` so the plan cache can serialize /
+    /// reconstruct the slabs without an intermediate copy.
+    pub(crate) offsets: Vec<u64>,
     /// Piece length slab, parallel to `offsets`.
-    lengths: Vec<u64>,
+    pub(crate) lengths: Vec<u64>,
     /// Payload slab in slab order (empty for metadata-only batches).
-    payload: Vec<u8>,
+    pub(crate) payload: Vec<u8>,
+    /// Source byte position of each piece in the requester's original
+    /// payload buffer, parallel to `offsets` — lets a cached structural
+    /// plan restage a fresh payload into slab order
+    /// ([`Self::stage_payload`]) without reclassifying the view.
+    pub(crate) payload_src: Vec<u64>,
     /// Destination round keys, ascending `(round, agg)`.
-    dest_round: Vec<u64>,
+    pub(crate) dest_round: Vec<u64>,
     /// Destination aggregator keys, parallel to `dest_round`.
-    dest_agg: Vec<usize>,
+    pub(crate) dest_agg: Vec<usize>,
     /// Piece-span CSR: destination `d` owns slab rows
     /// `dest_req_start[d]..dest_req_start[d + 1]` (`n_dests + 1` entries).
-    dest_req_start: Vec<usize>,
+    pub(crate) dest_req_start: Vec<usize>,
     /// Byte-span CSR: destination `d` owns payload bytes
     /// `dest_byte_start[d]..dest_byte_start[d + 1]` (`n_dests + 1`
     /// entries; also the `O(1)` per-destination byte totals).
-    dest_byte_start: Vec<u64>,
+    pub(crate) dest_byte_start: Vec<u64>,
     /// Round CSR: the destinations of round `r` are table rows
     /// `round_starts[r]..round_starts[r + 1]`.  `max_round + 2` entries
     /// (empty when no pieces).
-    round_starts: Vec<usize>,
+    pub(crate) round_starts: Vec<usize>,
     /// Aggregator count of the classifying domain set.
-    n_agg: usize,
+    pub(crate) n_agg: usize,
     /// Number of flattened request pieces classified (cost accounting).
     pub pieces: u64,
 }
@@ -140,16 +148,19 @@ impl MyReqs {
 
     /// Slab spans of destination-table row `d`.
     fn slice_of(&self, d: usize) -> ReqSlice<'_> {
+        self.slice_of_with(d, &self.payload)
+    }
+
+    /// Slab spans of destination-table row `d`, with the payload slab
+    /// supplied externally (a caller-staged buffer for cached structural
+    /// plans, or `&self.payload` for the owned slab).
+    fn slice_of_with<'a>(&'a self, d: usize, payload: &'a [u8]) -> ReqSlice<'a> {
         let (r0, r1) = (self.dest_req_start[d], self.dest_req_start[d + 1]);
         let (b0, b1) = (self.dest_byte_start[d], self.dest_byte_start[d + 1]);
         ReqSlice {
             offsets: &self.offsets[r0..r1],
             lengths: &self.lengths[r0..r1],
-            payload: if self.payload.is_empty() {
-                &[]
-            } else {
-                &self.payload[b0 as usize..b1 as usize]
-            },
+            payload: if payload.is_empty() { &[] } else { &payload[b0 as usize..b1 as usize] },
             bytes: b1 - b0,
         }
     }
@@ -196,8 +207,114 @@ impl MyReqs {
     /// same `MyReqs` serves any number of passes (the exchange loop makes
     /// exactly one per round).
     pub fn slices_in_round(&self, round: u64) -> RoundDrain<'_> {
+        self.slices_in_round_with(round, &self.payload)
+    }
+
+    /// [`Self::slices_in_round`] with an externally staged payload slab:
+    /// the executor of a cached structural plan stages the caller's fresh
+    /// payload into slab order once per exchange ([`Self::stage_payload`])
+    /// and drains rounds against it.  Pass an empty slice for
+    /// metadata-only reads.
+    pub fn slices_in_round_with<'a>(&'a self, round: u64, payload: &'a [u8]) -> RoundDrain<'a> {
         let (lo, hi) = self.round_range(round);
-        RoundDrain { reqs: self, next: lo, end: hi }
+        RoundDrain { reqs: self, payload, next: lo, end: hi }
+    }
+
+    /// Copy a requester's fresh payload buffer into destination-slab
+    /// order, reusing `out`'s capacity.  `src` is indexed through the
+    /// recorded per-piece source positions, so a structural plan built
+    /// without payload re-stages any later payload in `O(bytes)` without
+    /// reclassifying the view.  An empty `src` (read side) clears `out`.
+    pub fn stage_payload(&self, src: &[u8], out: &mut Vec<u8>) {
+        out.clear();
+        if src.is_empty() {
+            return;
+        }
+        out.reserve(self.dest_byte_start.last().copied().unwrap_or(0) as usize);
+        for i in 0..self.offsets.len() {
+            let s = self.payload_src[i] as usize;
+            let l = self.lengths[i] as usize;
+            out.extend_from_slice(&src[s..s + l]);
+        }
+    }
+
+    /// Structural integrity check for plans deserialized from disk: CSR
+    /// monotonicity and bounds, strictly ascending `(round, agg)` keys,
+    /// aggregator indexes inside `n_agg`, round CSR consistency, and
+    /// payload-source spans inside `source_bytes` (the requester's view
+    /// total, so [`Self::stage_payload`] cannot index out of bounds).
+    pub fn validate(&self, source_bytes: u64) -> Result<()> {
+        let corrupt = |what: &str| Error::Protocol(format!("corrupt request plan: {what}"));
+        let n = self.offsets.len();
+        if self.lengths.len() != n || self.payload_src.len() != n || self.pieces != n as u64 {
+            return Err(corrupt("piece slab lengths disagree"));
+        }
+        let nd = self.dest_agg.len();
+        if self.dest_round.len() != nd {
+            return Err(corrupt("span table lengths disagree"));
+        }
+        // A constructed plan always carries `n_dests + 1` CSR entries;
+        // `MyReqs::default()` (all-empty) is also structurally sound.
+        let default_empty = nd == 0
+            && n == 0
+            && self.dest_req_start.is_empty()
+            && self.dest_byte_start.is_empty();
+        if !default_empty {
+            if self.dest_req_start.len() != nd + 1 || self.dest_byte_start.len() != nd + 1 {
+                return Err(corrupt("span CSR must have n_dests + 1 entries"));
+            }
+            if self.dest_req_start[0] != 0
+                || self.dest_byte_start[0] != 0
+                || self.dest_req_start[nd] != n
+            {
+                return Err(corrupt("span CSR endpoints"));
+            }
+        }
+        if nd == 0 && n != 0 {
+            return Err(corrupt("pieces without destinations"));
+        }
+        for d in 0..nd {
+            if self.dest_req_start[d] > self.dest_req_start[d + 1]
+                || self.dest_byte_start[d] > self.dest_byte_start[d + 1]
+            {
+                return Err(corrupt("span CSR not monotone"));
+            }
+            if self.dest_agg[d] >= self.n_agg {
+                return Err(corrupt("aggregator index out of range"));
+            }
+            if d + 1 < nd
+                && (self.dest_round[d], self.dest_agg[d])
+                    >= (self.dest_round[d + 1], self.dest_agg[d + 1])
+            {
+                return Err(corrupt("span table keys not strictly ascending"));
+            }
+        }
+        if !self.round_starts.is_empty() {
+            if nd == 0 {
+                return Err(corrupt("round CSR without destinations"));
+            }
+            if *self.round_starts.last().unwrap() != nd {
+                return Err(corrupt("round CSR endpoint"));
+            }
+            if self.round_starts.windows(2).any(|w| w[0] > w[1]) {
+                return Err(corrupt("round CSR not monotone"));
+            }
+        } else if nd > 0 {
+            return Err(corrupt("destinations without round CSR"));
+        }
+        if !self.payload.is_empty()
+            && self.payload.len() as u64 != self.dest_byte_start.last().copied().unwrap_or(0)
+        {
+            return Err(corrupt("payload slab length"));
+        }
+        for i in 0..n {
+            let end = self.payload_src[i].checked_add(self.lengths[i]);
+            match end {
+                Some(e) if e <= source_bytes => {}
+                _ => return Err(corrupt("payload source span outside the view")),
+            }
+        }
+        Ok(())
     }
 }
 
@@ -207,6 +324,9 @@ impl MyReqs {
 /// `ReqBatch`es.
 pub struct RoundDrain<'a> {
     reqs: &'a MyReqs,
+    /// Payload slab the slices borrow from (the owned slab, or a
+    /// caller-staged buffer when executing a cached structural plan).
+    payload: &'a [u8],
     next: usize,
     end: usize,
 }
@@ -220,7 +340,7 @@ impl<'a> Iterator for RoundDrain<'a> {
         }
         let d = self.next;
         self.next += 1;
-        Some((self.reqs.dest_agg[d], self.reqs.slice_of(d)))
+        Some((self.reqs.dest_agg[d], self.reqs.slice_of_with(d, self.payload)))
     }
 }
 
@@ -256,10 +376,26 @@ fn for_each_piece(view: &FlatView, stripe_size: u64, mut f: impl FnMut(u64, u64,
 /// domains/rounds) and slices the payload accordingly.  Within each
 /// destination the pieces keep source order (ascending offsets), so
 /// aggregators can heap-merge the slab spans directly.
-pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> MyReqs {
+pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> Result<MyReqs> {
+    calc_my_req_inner(domains, &batch.view, &batch.payload)
+}
+
+/// Structure-only classification: identical span tables and piece slabs,
+/// but no payload slab.  This is the form plan construction caches — an
+/// executor re-stages each call's fresh payload into slab order through
+/// [`MyReqs::stage_payload`] instead of reclassifying the view.
+pub fn calc_my_req_structure(domains: &FileDomains, view: &FlatView) -> Result<MyReqs> {
+    calc_my_req_inner(domains, view, &[])
+}
+
+fn calc_my_req_inner(
+    domains: &FileDomains,
+    view: &FlatView,
+    src_payload: &[u8],
+) -> Result<MyReqs> {
     let n_agg = domains.n_agg;
     let stripe_size = domains.lustre.stripe_size;
-    let has_payload = !batch.payload.is_empty();
+    let has_payload = !src_payload.is_empty();
 
     // ---- Pass 1: build the destination span table (counts + bytes).
     let mut dest_round: Vec<u64> = Vec::new();
@@ -268,7 +404,11 @@ pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> MyReqs {
     let mut dest_bytes: Vec<u64> = Vec::new();
     let mut round_starts: Vec<usize> = Vec::new();
     let mut pieces = 0u64;
-    for_each_piece(&batch.view, stripe_size, |off, len, _| {
+    let mut bad_revisit = false;
+    for_each_piece(view, stripe_size, |off, len, _| {
+        if bad_revisit {
+            return;
+        }
         let key = (domains.round_of(off), domains.aggregator_of(off));
         let n = dest_agg.len();
         let d = match n.checked_sub(1).map(|l| (dest_round[l], dest_agg[l])) {
@@ -283,9 +423,17 @@ pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> MyReqs {
                 let r = key.0 as usize;
                 let lo = round_starts[r];
                 let hi = if r + 1 < round_starts.len() { round_starts[r + 1] } else { n };
-                lo + dest_agg[lo..hi]
-                    .binary_search(&key.1)
-                    .expect("overlapping request revisits a known destination")
+                match dest_agg[lo..hi].binary_search(&key.1) {
+                    Ok(i) => lo + i,
+                    Err(_) => {
+                        // Unreachable for any view with nondecreasing
+                        // offsets; surfaced as an error (not a panic) so a
+                        // corrupt persisted plan or adversarial view fails
+                        // the collective gracefully.
+                        bad_revisit = true;
+                        n - 1
+                    }
+                }
             }
             _ => {
                 // New destination — created in ascending (round, agg)
@@ -305,6 +453,11 @@ pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> MyReqs {
         dest_bytes[d] += len;
         pieces += 1;
     });
+    if bad_revisit {
+        return Err(Error::Protocol(
+            "overlapping request revisits an unknown destination (corrupt view)".into(),
+        ));
+    }
     let n_dests = dest_agg.len();
     if !round_starts.is_empty() {
         round_starts.push(n_dests);
@@ -326,6 +479,7 @@ pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> MyReqs {
     // ---- Pass 2: fill the slabs through per-destination cursors.
     let mut offsets = vec![0u64; pieces as usize];
     let mut lengths = vec![0u64; pieces as usize];
+    let mut payload_src = vec![0u64; pieces as usize];
     let mut payload = if has_payload { vec![0u8; bacc as usize] } else { Vec::new() };
     // `dest_count`/`dest_bytes` are done counting — reuse them as the
     // fill cursors (piece slot / payload byte position per destination).
@@ -336,7 +490,7 @@ pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> MyReqs {
         bfill[d] = dest_byte_start[d];
     }
     let mut cur = 0usize; // last destination written (monotone fast path)
-    for_each_piece(&batch.view, stripe_size, |off, len, src| {
+    for_each_piece(view, stripe_size, |off, len, src| {
         let key = (domains.round_of(off), domains.aggregator_of(off));
         let d = if cur < n_dests && (dest_round[cur], dest_agg[cur]) == key {
             cur
@@ -365,19 +519,21 @@ pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> MyReqs {
         fill[d] = slot + 1;
         offsets[slot] = off;
         lengths[slot] = len;
+        payload_src[slot] = src;
         if has_payload {
             let b = bfill[d] as usize;
             bfill[d] += len;
             payload[b..b + len as usize]
-                .copy_from_slice(&batch.payload[src as usize..(src + len) as usize]);
+                .copy_from_slice(&src_payload[src as usize..(src + len) as usize]);
         }
     });
     debug_assert!((0..n_dests).all(|d| fill[d] == dest_req_start[d + 1]));
 
-    MyReqs {
+    Ok(MyReqs {
         offsets,
         lengths,
         payload,
+        payload_src,
         dest_round,
         dest_agg,
         dest_req_start,
@@ -385,7 +541,7 @@ pub fn calc_my_req(domains: &FileDomains, batch: &ReqBatch) -> MyReqs {
         round_starts,
         n_agg,
         pieces,
-    }
+    })
 }
 
 /// Bytes on the wire for the `calc_others_req` metadata describing `n`
@@ -455,7 +611,7 @@ mod tests {
 
     /// Full dense-vs-oracle comparison of one classification.
     fn assert_matches_oracle(d: &FileDomains, b: &ReqBatch, what: &str) {
-        let dense = calc_my_req(d, b);
+        let dense = calc_my_req(d, b).unwrap();
         let (oracle, oracle_pieces) = calc_my_req_hashmap(d, b);
         assert_eq!(dense.pieces, oracle_pieces, "{what}: pieces");
         assert_eq!(dense.n_dests(), oracle.len(), "{what}: dest count");
@@ -497,7 +653,7 @@ mod tests {
     #[test]
     fn single_request_single_dest() {
         let d = domains(4);
-        let r = calc_my_req(&d, &batch(&[(10, 20)]));
+        let r = calc_my_req(&d, &batch(&[(10, 20)])).unwrap();
         assert_eq!(r.pieces, 1);
         assert_eq!(r.n_dests(), 1);
         let b = r.get(0, 0).unwrap();
@@ -509,7 +665,7 @@ mod tests {
     #[test]
     fn request_split_at_stripe_boundary() {
         let d = domains(4);
-        let r = calc_my_req(&d, &batch(&[(90, 20)]));
+        let r = calc_my_req(&d, &batch(&[(90, 20)])).unwrap();
         assert_eq!(r.pieces, 2);
         let a = r.get(0, 0).unwrap();
         let b = r.get(0, 1).unwrap();
@@ -524,7 +680,7 @@ mod tests {
     fn rounds_assigned_beyond_first_cycle() {
         let d = domains(4);
         // Offset 450 → stripe 4 → round 1, aggregator 0.
-        let r = calc_my_req(&d, &batch(&[(450, 10)]));
+        let r = calc_my_req(&d, &batch(&[(450, 10)])).unwrap();
         assert!(r.get(1, 0).is_some());
         assert_eq!(r.max_round(), Some(1));
         assert_eq!(r.dests_in_round(0), &[] as &[usize]);
@@ -534,7 +690,7 @@ mod tests {
     #[test]
     fn per_dest_spans_stay_sorted() {
         let d = domains(2);
-        let r = calc_my_req(&d, &batch(&[(0, 10), (200, 10), (410, 10), (600, 10)]));
+        let r = calc_my_req(&d, &batch(&[(0, 10), (200, 10), (410, 10), (600, 10)])).unwrap();
         for (_, s) in r.iter() {
             assert!(s.offsets.windows(2).all(|w| w[0] <= w[1]));
             assert_eq!(s.bytes, s.lengths.iter().sum::<u64>());
@@ -544,7 +700,7 @@ mod tests {
     #[test]
     fn empty_batch_empty_result() {
         let d = domains(4);
-        let r = calc_my_req(&d, &ReqBatch::default());
+        let r = calc_my_req(&d, &ReqBatch::default()).unwrap();
         assert_eq!(r.n_dests(), 0);
         assert_eq!(r.pieces, 0);
         assert_eq!(r.max_round(), None);
@@ -556,7 +712,7 @@ mod tests {
     #[test]
     fn dests_in_round_sorted() {
         let d = domains(4);
-        let r = calc_my_req(&d, &batch(&[(50, 10), (250, 10), (350, 10)]));
+        let r = calc_my_req(&d, &batch(&[(50, 10), (250, 10), (350, 10)])).unwrap();
         assert_eq!(r.dests_in_round(0), &[0, 2, 3]);
     }
 
@@ -565,7 +721,7 @@ mod tests {
         let d = domains(3);
         let b = batch(&[(95, 120), (700, 33)]);
         let total_in = b.view.total_bytes();
-        let r = calc_my_req(&d, &b);
+        let r = calc_my_req(&d, &b).unwrap();
         let total_out: u64 = r.iter().map(|(_, s)| s.bytes).sum();
         assert_eq!(total_in, total_out);
         let payload_out: usize = r.iter().map(|(_, s)| s.payload.len()).sum();
@@ -575,7 +731,7 @@ mod tests {
     #[test]
     fn reqs_per_agg_totals_match_spans() {
         let d = domains(2);
-        let r = calc_my_req(&d, &batch(&[(0, 10), (150, 10), (390, 20), (800, 10)]));
+        let r = calc_my_req(&d, &batch(&[(0, 10), (150, 10), (390, 20), (800, 10)])).unwrap();
         let mut acc = vec![0u64; 2];
         r.reqs_per_agg_into(&mut acc);
         assert_eq!(acc.iter().sum::<u64>(), r.pieces);
@@ -590,7 +746,7 @@ mod tests {
     fn round_slices_concatenate_to_source_payload() {
         let d = domains(2);
         let src = batch(&[(0, 10), (150, 10), (390, 20), (800, 10)]);
-        let r = calc_my_req(&d, &src);
+        let r = calc_my_req(&d, &src).unwrap();
         let mut drained: Vec<(u64, usize)> = Vec::new();
         let mut payload_cat: Vec<u8> = Vec::new();
         for round in 0..=r.max_round().unwrap() {
@@ -732,7 +888,7 @@ mod tests {
                 if r < 8 || r == n_ranks - 1 || r % 97 == 0 {
                     assert_matches_oracle(&d, &b, &format!("P={n_ranks} strided rank {r}"));
                 }
-                let mr = calc_my_req(&d, &b);
+                let mr = calc_my_req(&d, &b).unwrap();
                 total_pieces += mr.pieces;
                 total_bytes += mr.iter().map(|(_, s)| s.bytes).sum::<u64>();
             }
@@ -768,7 +924,7 @@ mod tests {
         let d = FileDomains::new(LustreConfig::new(100, 4), 0, 300, 2);
         let b = batch(&[(0, 300), (50, 10)]);
         assert_matches_oracle(&d, &b, "overlap");
-        let r = calc_my_req(&d, &b);
+        let r = calc_my_req(&d, &b).unwrap();
         assert_eq!(r.get(0, 0).unwrap().iter().collect::<Vec<_>>(), vec![(0, 100), (50, 10)]);
     }
 
@@ -777,7 +933,7 @@ mod tests {
         // Two single-byte requests around the 100-byte stripe boundary and
         // one two-byte request straddling it.
         let d = domains(4);
-        let r = calc_my_req(&d, &batch(&[(99, 1), (100, 1), (199, 2)]));
+        let r = calc_my_req(&d, &batch(&[(99, 1), (100, 1), (199, 2)])).unwrap();
         assert_eq!(r.pieces, 4);
         assert_eq!(r.get(0, 0).unwrap().iter().collect::<Vec<_>>(), vec![(99, 1)]);
         assert_eq!(
@@ -785,5 +941,77 @@ mod tests {
             vec![(100, 1), (199, 1)]
         );
         assert_eq!(r.get(0, 2).unwrap().iter().collect::<Vec<_>>(), vec![(200, 1)]);
+    }
+
+    /// §Plan cache: a structural plan plus [`MyReqs::stage_payload`]
+    /// reproduces the payload slab the direct (payload-carrying)
+    /// classification builds, byte for byte, across randomized views —
+    /// the invariant that lets a cached plan skip reclassification.
+    #[test]
+    fn structure_plus_stage_payload_matches_direct() {
+        let mut rng = SplitMix64::new(0x57A6E);
+        for case in 0..100 {
+            let stripe = [16u64, 100, 256][rng.gen_range(3) as usize];
+            let b = random_batch(&mut rng, stripe, true);
+            let lo = b.view.min_offset().unwrap_or(0);
+            let hi = b.view.max_end().unwrap_or(0);
+            let d = FileDomains::new(LustreConfig::new(stripe, 4), lo, hi, 3);
+            if d.n_stripes() == 0 {
+                continue;
+            }
+            let direct = calc_my_req(&d, &b).unwrap();
+            let structure = calc_my_req_structure(&d, &b.view).unwrap();
+            assert!(structure.payload.is_empty(), "case {case}");
+            assert_eq!(structure.offsets, direct.offsets, "case {case}");
+            assert_eq!(structure.lengths, direct.lengths, "case {case}");
+            let mut staged = Vec::new();
+            structure.stage_payload(&b.payload, &mut staged);
+            assert_eq!(staged, direct.payload, "case {case}: staged slab");
+            // Round drains over the staged slab hand out the same slices
+            // the owned slab does.
+            if let Some(max) = direct.max_round() {
+                for round in 0..=max {
+                    let from_staged: Vec<Vec<u8>> = structure
+                        .slices_in_round_with(round, &staged)
+                        .map(|(_, s)| s.payload.to_vec())
+                        .collect();
+                    let from_owned: Vec<Vec<u8>> = direct
+                        .slices_in_round(round)
+                        .map(|(_, s)| s.payload.to_vec())
+                        .collect();
+                    assert_eq!(from_staged, from_owned, "case {case} round {round}");
+                }
+            }
+            // A freshly built plan always validates against its view size.
+            structure.validate(b.view.total_bytes()).unwrap();
+            direct.validate(b.view.total_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_rejects_corrupt_plans() {
+        let d = domains(4);
+        let good = calc_my_req(&d, &batch(&[(90, 20), (300, 5)])).unwrap();
+        let total = 25u64;
+        good.validate(total).unwrap();
+        MyReqs::default().validate(0).unwrap();
+
+        let mut bad = calc_my_req(&d, &batch(&[(90, 20), (300, 5)])).unwrap();
+        bad.dest_agg[0] = 99; // aggregator out of range
+        assert!(bad.validate(total).is_err());
+
+        let mut bad = calc_my_req(&d, &batch(&[(90, 20), (300, 5)])).unwrap();
+        bad.payload_src[0] = u64::MAX; // source span overflows the view
+        assert!(bad.validate(total).is_err());
+
+        let mut bad = calc_my_req(&d, &batch(&[(90, 20), (300, 5)])).unwrap();
+        bad.dest_req_start.pop(); // truncated CSR
+        assert!(bad.validate(total).is_err());
+
+        let mut bad = calc_my_req(&d, &batch(&[(90, 20), (300, 5)])).unwrap();
+        if let Some(l) = bad.round_starts.last_mut() {
+            *l += 1; // dangling round CSR
+        }
+        assert!(bad.validate(total).is_err());
     }
 }

@@ -28,7 +28,8 @@
 use crate::cluster::{LevelKind, Topology};
 use crate::coordinator::breakdown::LevelTime;
 use crate::coordinator::collective::{
-    exchange_read, CollectiveOutcome, ExchangeArena, ReadReply,
+    exchange_read_with_plan, execute_exchange, CollectiveOutcome, ExchangeArena, ExchangeIo,
+    ExchangePlan, ReadReply,
 };
 use crate::coordinator::merge::{gather_from_buf, ReqBatch, RoundScratch};
 use crate::coordinator::placement::{
@@ -37,7 +38,7 @@ use crate::coordinator::placement::{
 use crate::coordinator::reqcalc::metadata_bytes;
 use crate::coordinator::tam::TamConfig;
 use crate::coordinator::twophase::{write_exchange, CollectiveCtx, ExchangeOutcome};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::lustre::LustreFile;
 use crate::mpisim::FlatView;
 use crate::netmodel::phase::{cost_phase, Message};
@@ -127,6 +128,7 @@ impl std::str::FromStr for TreeSpec {
             ));
         }
         let mut spec = TreeSpec::flat();
+        let mut seen = [false; 3];
         for pair in s.split(',') {
             let (key, value) = pair.split_once('=').ok_or_else(|| {
                 crate::Error::config(format!("bad tree level '{pair}' (expected level=count)"))
@@ -134,15 +136,30 @@ impl std::str::FromStr for TreeSpec {
             let count: usize = value.parse().map_err(|_| {
                 crate::Error::config(format!("bad count in tree level '{pair}'"))
             })?;
-            match key {
-                "socket" => spec.per_socket = count,
-                "node" => spec.per_node = count,
-                "switch" => spec.per_switch = count,
+            if count == 0 {
+                return Err(crate::Error::config(format!(
+                    "zero aggregator count in tree level '{pair}' \
+                     (omit the level to disable it)"
+                )));
+            }
+            let slot = match key {
+                "socket" => 0,
+                "node" => 1,
+                "switch" => 2,
                 other => {
                     return Err(crate::Error::config(format!(
                         "unknown tree level '{other}' (expected socket|node|switch)"
                     )))
                 }
+            };
+            if seen[slot] {
+                return Err(crate::Error::config(format!("duplicate tree level '{key}'")));
+            }
+            seen[slot] = true;
+            match key {
+                "socket" => spec.per_socket = count,
+                "node" => spec.per_node = count,
+                _ => spec.per_switch = count,
             }
         }
         Ok(spec)
@@ -414,6 +431,23 @@ pub fn tree_write(
     file: &mut LustreFile,
     arena: &mut ExchangeArena,
 ) -> Result<ExchangeOutcome> {
+    tree_write_with(ctx, plan, None, ranks, file, arena)
+}
+
+/// [`tree_write`] over an optional cached [`ExchangePlan`] for the final
+/// inter-node exchange: with `Some`, the top tier executes the borrowed
+/// plan directly (zero plan construction —
+/// [`crate::coordinator::plancache`]); with `None`, a fresh plan is built
+/// inline.  The intra-node tiers always execute (payload must physically
+/// move up the tree); only the structural classification work is cached.
+pub fn tree_write_with(
+    ctx: &CollectiveCtx,
+    plan: &AggregationPlan,
+    xplan: Option<&ExchangePlan>,
+    ranks: Vec<(usize, ReqBatch)>,
+    file: &mut LustreFile,
+    arena: &mut ExchangeArena,
+) -> Result<ExchangeOutcome> {
     let reqs_posted: u64 = ranks.iter().map(|(_, b)| b.view.len() as u64).sum();
     if arena.levels.len() < plan.depth() {
         arena.levels.resize_with(plan.depth(), Vec::new);
@@ -432,7 +466,10 @@ pub fn tree_write(
             memcpy: stage.memcpy,
         });
     }
-    let mut out = write_exchange(ctx, batches, file, arena)?;
+    let mut out = match xplan {
+        Some(xp) => execute_exchange(ctx, xp, batches, ExchangeIo::Write(file), arena)?.1,
+        None => write_exchange(ctx, batches, file, arena)?,
+    };
     out.breakdown.intra_comm = level_times.iter().map(|l| l.comm).sum();
     out.breakdown.intra_sort = level_times.iter().map(|l| l.sort).sum();
     out.breakdown.intra_memcpy = level_times.iter().map(|l| l.memcpy).sum();
@@ -444,7 +481,7 @@ pub fn tree_write(
 
 /// Collective read through an N-level aggregation tree: view metadata
 /// merges *up* the tree level by level, the top tier drives the round
-/// exchange ([`exchange_read`]), and the reply bytes scatter back *down*
+/// exchange ([`exchange_read_with_plan`]), and the reply bytes scatter back *down*
 /// the same tree — each member gathers its bytes out of its parent's
 /// reply with the two-pointer walk both directions share.  The top tier's
 /// replies stay in the arena's pooled reply slab
@@ -453,6 +490,22 @@ pub fn tree_write(
 pub fn tree_read(
     ctx: &CollectiveCtx,
     plan: &AggregationPlan,
+    views: Vec<(usize, FlatView)>,
+    file: &LustreFile,
+    arena: &mut ExchangeArena,
+) -> Result<(Vec<(usize, Vec<u8>)>, CollectiveOutcome)> {
+    tree_read_with(ctx, plan, None, views, file, arena)
+}
+
+/// [`tree_read`] over an optional cached [`ExchangePlan`] for the
+/// top-tier exchange: with `Some`, the plan (built over the same
+/// metadata-merged, overlap-prepared top tier —
+/// [`crate::coordinator::plancache::build_collective_plan`]) executes
+/// directly; with `None`, a fresh plan is built inline.
+pub fn tree_read_with(
+    ctx: &CollectiveCtx,
+    plan: &AggregationPlan,
+    xplan: Option<&ExchangePlan>,
     views: Vec<(usize, FlatView)>,
     file: &LustreFile,
     arena: &mut ExchangeArena,
@@ -467,12 +520,10 @@ pub fn tree_read(
     let mut level_times: Vec<LevelTime> = Vec::with_capacity(plan.depth());
     let mut msgs_intra = 0usize;
     for (li, level) in plan.levels.iter().enumerate() {
-        let stage = aggregate_level_read_views(
-            ctx,
-            level,
-            tiers.last().expect("tier 0 seeded above"),
-            &mut arena.levels[li],
-        )?;
+        let tier = tiers.last().ok_or_else(|| {
+            Error::Protocol("corrupt aggregation tree: missing tier 0 view set".into())
+        })?;
+        let stage = aggregate_level_read_views(ctx, level, tier, &mut arena.levels[li])?;
         msgs_intra += stage.msgs;
         level_times.push(LevelTime {
             label: level.kind.label(),
@@ -484,8 +535,10 @@ pub fn tree_read(
     }
 
     // ---- Inter-node exchange at the top tier.
-    let top = tiers.pop().expect("tier 0 seeded above");
-    let (filled, out) = exchange_read(ctx, top, file, arena)?;
+    let top = tiers.pop().ok_or_else(|| {
+        Error::Protocol("corrupt aggregation tree: missing top-tier view set".into())
+    })?;
+    let (filled, out) = exchange_read_with_plan(ctx, xplan, top, file, arena)?;
     let mut bd = out.breakdown;
     let mut counters = out.counters;
     counters.reqs_posted = posted;
@@ -495,7 +548,11 @@ pub fn tree_read(
     // gathers run concurrently like every other per-member stage.
     let mut parents: Vec<(usize, FlatView, ReadReply)> = filled;
     for (li, level) in plan.levels.iter().enumerate().rev() {
-        let members = tiers.pop().expect("one tier per level below the top");
+        let members = tiers.pop().ok_or_else(|| {
+            Error::Protocol(format!(
+                "corrupt aggregation tree: no member tier below level {li}"
+            ))
+        })?;
         let slot_of =
             slot_index(parents.iter().map(|(agg, _, _)| *agg), ctx.topo.nprocs());
         let parents_ref = &parents;
@@ -579,6 +636,10 @@ mod tests {
         assert!("rack=2".parse::<TreeSpec>().is_err());
         assert!("node".parse::<TreeSpec>().is_err());
         assert!("node=x".parse::<TreeSpec>().is_err());
+        let zero = "node=0".parse::<TreeSpec>().unwrap_err().to_string();
+        assert!(zero.contains("zero aggregator count"), "{zero}");
+        let dup = "socket=1,socket=2".parse::<TreeSpec>().unwrap_err().to_string();
+        assert!(dup.contains("duplicate tree level 'socket'"), "{dup}");
     }
 
     #[test]

@@ -14,6 +14,9 @@ use crate::coordinator::collective::{
     run_collective_read_with, run_collective_write_with, Algorithm, CollectiveOutcome,
     Direction, DirectionSpec, ExchangeArena,
 };
+use crate::coordinator::plancache::{
+    run_collective_read_cached, run_collective_write_cached, PlanCache, PlanCacheStats,
+};
 use crate::coordinator::tam::TamConfig;
 use crate::coordinator::twophase::CollectiveCtx;
 use crate::error::{Error, Result};
@@ -54,19 +57,41 @@ pub fn run_once(cfg: &RunConfig) -> Result<Vec<(LabelledRun, Option<VerifyReport
     run_once_with_engine(cfg, engine.as_ref())
 }
 
+/// The run's plan cache per its config: directory-backed when
+/// `--plan-cache` is set (plans persist across invocations), memory-only
+/// otherwise.
+pub fn plan_cache_for(cfg: &RunConfig) -> Result<PlanCache> {
+    match &cfg.plan_cache {
+        Some(dir) => PlanCache::with_dir(cfg.plan_cache_size, dir.as_str()),
+        None => Ok(PlanCache::in_memory(cfg.plan_cache_size)),
+    }
+}
+
 /// [`run_once`] with a caller-provided engine (avoids reloading XLA
-/// artifacts inside sweeps).  One [`ExchangeArena`] serves every
-/// direction of the run.
+/// artifacts inside sweeps).  One [`ExchangeArena`] and one [`PlanCache`]
+/// serve every direction of the run.
 pub fn run_once_with_engine(
     cfg: &RunConfig,
     engine: &dyn SortEngine,
 ) -> Result<Vec<(LabelledRun, Option<VerifyReport>)>> {
+    Ok(run_once_with_stats(cfg, engine)?.0)
+}
+
+/// [`run_once_with_engine`] also returning the run's plan-cache
+/// statistics — what the CLI's `run` subcommand prints.
+pub fn run_once_with_stats(
+    cfg: &RunConfig,
+    engine: &dyn SortEngine,
+) -> Result<(Vec<(LabelledRun, Option<VerifyReport>)>, PlanCacheStats)> {
     let mut arena = ExchangeArena::default();
-    cfg.direction
+    let mut cache = plan_cache_for(cfg)?;
+    let runs = cfg
+        .direction
         .runs()
         .iter()
-        .map(|&dir| run_direction_with_arena(cfg, engine, dir, &mut arena))
-        .collect()
+        .map(|&dir| run_direction_cached(cfg, engine, dir, &mut arena, &mut cache))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((runs, cache.stats.clone()))
 }
 
 /// [`run_direction_with_arena`] with a one-shot arena (kept for callers
@@ -92,6 +117,31 @@ pub fn run_direction_with_arena(
     direction: Direction,
     arena: &mut ExchangeArena,
 ) -> Result<(LabelledRun, Option<VerifyReport>)> {
+    run_direction_impl(cfg, engine, direction, arena, None)
+}
+
+/// [`run_direction_with_arena`] through a [`PlanCache`]: repeated calls
+/// with the same structural inputs (checkpoint loops, sweep bars, both
+/// directions of one pattern) reuse the collective plan instead of
+/// rebuilding it.  Results are bit-identical to the uncached path — the
+/// cache win is wall-clock only, visible in [`PlanCache::stats`].
+pub fn run_direction_cached(
+    cfg: &RunConfig,
+    engine: &dyn SortEngine,
+    direction: Direction,
+    arena: &mut ExchangeArena,
+    cache: &mut PlanCache,
+) -> Result<(LabelledRun, Option<VerifyReport>)> {
+    run_direction_impl(cfg, engine, direction, arena, Some(cache))
+}
+
+fn run_direction_impl(
+    cfg: &RunConfig,
+    engine: &dyn SortEngine,
+    direction: Direction,
+    arena: &mut ExchangeArena,
+    cache: Option<&mut PlanCache>,
+) -> Result<(LabelledRun, Option<VerifyReport>)> {
     let topo = cfg.topology();
     let workload = cfg.workload.build(cfg.scale);
     let ranks = workload.generate(&topo, cfg.seed)?;
@@ -109,8 +159,17 @@ pub fn run_direction_with_arena(
         Direction::Write => {
             let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
             let mut file = LustreFile::new(cfg.lustre);
-            let outcome =
-                run_collective_write_with(&ctx, cfg.algorithm, ranks, &mut file, arena)?;
+            let outcome = match cache {
+                Some(cache) => run_collective_write_cached(
+                    &ctx,
+                    cfg.algorithm,
+                    ranks,
+                    &mut file,
+                    arena,
+                    cache,
+                )?,
+                None => run_collective_write_with(&ctx, cfg.algorithm, ranks, &mut file, arena)?,
+            };
             let verify = if cfg.verify {
                 // Vectored read-back through the same storage entry point
                 // the read direction drives (no per-request read_at loop).
@@ -150,8 +209,12 @@ pub fn run_direction_with_arena(
                 }
             }
             let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
-            let (got, outcome) =
-                run_collective_read_with(&ctx, cfg.algorithm, views, &file, arena)?;
+            let (got, outcome) = match cache {
+                Some(cache) => {
+                    run_collective_read_cached(&ctx, cfg.algorithm, views, &file, arena, cache)?
+                }
+                None => run_collective_read_with(&ctx, cfg.algorithm, views, &file, arena)?,
+            };
             let mut ok = 0;
             for ((_, payload), (_, want)) in got.iter().zip(ranks.iter()) {
                 if payload == &want.payload {
@@ -210,16 +273,18 @@ pub fn auto_scale(kind: WorkloadKind, p: usize, budget_reqs: u64) -> u64 {
 /// [`crate::metrics::breakdown_panels`] for per-direction tables.
 pub fn breakdown_sweep(base: &RunConfig, pl_values: &[usize]) -> Result<Vec<LabelledRun>> {
     let engine = build_engine_for(base)?;
-    // One arena for every bar of the sweep — the round buffers stay warm
-    // across collectives (the tentpole's cross-invocation reuse).
+    // One arena + one plan cache for every bar of the sweep — the round
+    // buffers stay warm across collectives and each bar's plan is built
+    // at most once per direction (the plan-oracle's cross-bar reuse).
     let mut arena = ExchangeArena::default();
+    let mut cache = plan_cache_for(base)?;
     let mut runs = Vec::new();
     for &dir in base.direction.runs() {
         for &pl in pl_values {
             let mut cfg = base.clone();
             cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: pl });
             let (mut run, verify) =
-                run_direction_with_arena(&cfg, engine.as_ref(), dir, &mut arena)?;
+                run_direction_cached(&cfg, engine.as_ref(), dir, &mut arena, &mut cache)?;
             ensure_verified(&run, &verify)?;
             run.label = format!("P_L={pl}");
             runs.push(run);
@@ -227,7 +292,7 @@ pub fn breakdown_sweep(base: &RunConfig, pl_values: &[usize]) -> Result<Vec<Labe
         let mut cfg = base.clone();
         cfg.algorithm = Algorithm::TwoPhase;
         let (mut run, verify) =
-            run_direction_with_arena(&cfg, engine.as_ref(), dir, &mut arena)?;
+            run_direction_cached(&cfg, engine.as_ref(), dir, &mut arena, &mut cache)?;
         ensure_verified(&run, &verify)?;
         run.label = "two-phase".into();
         runs.push(run);
@@ -246,6 +311,7 @@ pub fn fig3_series(
 ) -> Result<Vec<ScalingSeries>> {
     let engine = build_engine_for(base)?;
     let mut arena = ExchangeArena::default();
+    let mut cache = plan_cache_for(base)?;
     let mut out = Vec::new();
     for &dir in base.direction.runs() {
         let mut tam_points = Vec::new();
@@ -260,11 +326,11 @@ pub fn fig3_series(
             cfg.scale = auto_scale(kind, p, budget_reqs);
             cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 256 });
             let (tam, tam_verify) =
-                run_direction_with_arena(&cfg, engine.as_ref(), dir, &mut arena)?;
+                run_direction_cached(&cfg, engine.as_ref(), dir, &mut arena, &mut cache)?;
             ensure_verified(&tam, &tam_verify)?;
             cfg.algorithm = Algorithm::TwoPhase;
             let (two, two_verify) =
-                run_direction_with_arena(&cfg, engine.as_ref(), dir, &mut arena)?;
+                run_direction_cached(&cfg, engine.as_ref(), dir, &mut arena, &mut cache)?;
             ensure_verified(&two, &two_verify)?;
             tam_points.push((p, tam.breakdown.bandwidth(tam.counters.bytes)));
             two_points.push((p, two.breakdown.bandwidth(two.counters.bytes)));
@@ -286,6 +352,7 @@ pub fn fig3_series(
 pub fn fig2_congestion(base: &RunConfig) -> Result<Vec<(String, usize, f64, usize)>> {
     let engine = build_engine_for(base)?;
     let mut arena = ExchangeArena::default();
+    let mut cache = plan_cache_for(base)?;
     let mut rows = Vec::new();
     for algo in [
         Algorithm::TwoPhase,
@@ -293,8 +360,13 @@ pub fn fig2_congestion(base: &RunConfig) -> Result<Vec<(String, usize, f64, usiz
     ] {
         let mut cfg = base.clone();
         cfg.algorithm = algo;
-        let (run, _) =
-            run_direction_with_arena(&cfg, engine.as_ref(), Direction::Write, &mut arena)?;
+        let (run, _) = run_direction_cached(
+            &cfg,
+            engine.as_ref(),
+            Direction::Write,
+            &mut arena,
+            &mut cache,
+        )?;
         let c = &run.counters;
         let mean = if c.msgs_inter == 0 {
             0.0

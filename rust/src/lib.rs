@@ -64,6 +64,10 @@ pub mod prelude {
         run_collective_write_with, Algorithm, CollectiveOutcome, Direction, DirectionSpec,
         ExchangeArena,
     };
+    pub use crate::coordinator::plancache::{
+        fingerprint_collective, run_collective_read_cached, run_collective_write_cached,
+        CollectivePlan, Fp128, PlanCache, PlanCacheStats,
+    };
     pub use crate::coordinator::tam::TamConfig;
     pub use crate::coordinator::tree::{AggregationPlan, TreeSpec};
     pub use crate::lustre::LustreConfig;

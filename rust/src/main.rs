@@ -17,7 +17,9 @@
 use tamio::config::{KvMap, RunConfig};
 use tamio::error::Result;
 use tamio::experiments;
-use tamio::metrics::{breakdown_panels, breakdown_table, render_table, scaling_table};
+use tamio::metrics::{
+    breakdown_panels, breakdown_table, plan_cache_summary, render_table, scaling_table,
+};
 use tamio::util::{human_bytes, human_secs};
 use tamio::workloads::WorkloadKind;
 
@@ -72,7 +74,7 @@ Common flags (RunConfig keys):
   --algorithm two-phase|tam|tam:<P_L>|tree|tree:<levels>
                                         tree:<levels> is a comma list of
                                         socket=<n>,node=<n>,switch=<n>
-                                        aggregators per group (0/absent =
+                                        aggregators per group (absent =
                                         level off; 'tree:flat' = depth 0 =
                                         two-phase, 'tree:node=c' = TAM
                                         with c aggregators per node)
@@ -88,6 +90,11 @@ Common flags (RunConfig keys):
   --rank_placement block|round-robin    rank->socket / node->switch layout
   --scale S --stripe_size B --stripe_count K --send_mode isend|issend
   --placement spread|cray --seed S --verify --config file.toml
+  --plan-cache DIR                      persist aggregation plans to DIR;
+                                        repeat invocations with the same
+                                        shape skip plan construction
+  --plan-cache-size N                   warm plans kept in memory (LRU,
+                                        default 8)
   net tier table: --net.alpha_socket/--net.beta_socket and
   --net.alpha_switch/--net.beta_switch price the extra hierarchy tiers
 
@@ -112,7 +119,8 @@ fn cmd_run(cfg: &RunConfig) -> Result<()> {
         human_bytes(cfg.lustre.stripe_size),
     );
     let t0 = std::time::Instant::now();
-    let results = experiments::run_once(cfg)?;
+    let engine = experiments::build_engine_for(cfg)?;
+    let (results, cache_stats) = experiments::run_once_with_stats(cfg, engine.as_ref())?;
     let wall = t0.elapsed();
     let mut failed: Option<String> = None;
     for (run, verify) in &results {
@@ -146,6 +154,7 @@ fn cmd_run(cfg: &RunConfig) -> Result<()> {
             }
         }
     }
+    println!("{}", plan_cache_summary(&cache_stats));
     println!("wall={wall:?} (all directions)");
     if let Some(msg) = failed {
         return Err(tamio::Error::Verify(msg));

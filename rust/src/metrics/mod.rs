@@ -10,6 +10,7 @@ pub use report::{render_table, write_csv, JsonWriter};
 
 use crate::coordinator::breakdown::{Breakdown, Counters, LevelTime};
 use crate::coordinator::collective::Direction;
+use crate::coordinator::plancache::PlanCacheStats;
 use crate::util::{human_bytes, human_secs};
 
 /// One labelled run (e.g. one bar of a Figure 4–7 panel).
@@ -113,6 +114,25 @@ pub fn breakdown_panels(runs: &[LabelledRun]) -> String {
     out
 }
 
+/// One-line plan-oracle summary for run reports: hit/miss counts, disk
+/// traffic, rejected (corrupt/stale) files, and the wall-clock spent
+/// building plans on misses.  Build time is real `Instant` time — the
+/// only wall-clock the cache exposes; all simulated times stay in
+/// [`Breakdown`].
+pub fn plan_cache_summary(stats: &PlanCacheStats) -> String {
+    format!(
+        "plan-cache: {} hit{}, {} miss{} ({:.3} ms building), disk {} loaded / {} stored, {} rejected",
+        stats.hits,
+        if stats.hits == 1 { "" } else { "s" },
+        stats.misses,
+        if stats.misses == 1 { "" } else { "es" },
+        stats.build_nanos as f64 / 1e6,
+        stats.disk_loads,
+        stats.disk_stores,
+        stats.rejects,
+    )
+}
+
 /// A strong-scaling series (Figure 3): `(P, bandwidth_bytes_per_s)`.
 #[derive(Clone, Debug)]
 pub struct ScalingSeries {
@@ -154,11 +174,29 @@ mod tests {
             counters: Counters { bytes: 1 << 20, ..Default::default() },
         };
         let t = breakdown_table(&[run]);
-        for name in ["intra_comm", "io_phase", "end_to_end", "bandwidth"] {
+        for name in ["intra_comm", "io_phase", "plan", "end_to_end", "bandwidth"] {
             assert!(t.contains(name), "missing {name} in:\n{t}");
         }
         assert!(t.contains("P_L=4"));
         assert!(t.contains("[write]"), "direction label missing:\n{t}");
+    }
+
+    #[test]
+    fn plan_cache_summary_reports_all_counters() {
+        let stats = PlanCacheStats {
+            hits: 3,
+            misses: 1,
+            disk_loads: 1,
+            disk_stores: 1,
+            rejects: 2,
+            build_nanos: 1_500_000,
+        };
+        let s = plan_cache_summary(&stats);
+        assert!(s.contains("3 hits"), "{s}");
+        assert!(s.contains("1 miss ("), "{s}");
+        assert!(s.contains("1.500 ms"), "{s}");
+        assert!(s.contains("1 loaded / 1 stored"), "{s}");
+        assert!(s.contains("2 rejected"), "{s}");
     }
 
     #[test]

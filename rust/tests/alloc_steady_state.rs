@@ -14,11 +14,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use tamio::cluster::Topology;
 use tamio::coordinator::breakdown::CpuModel;
 use tamio::coordinator::collective::{
-    run_collective_read_with, run_collective_write_with, Algorithm, ExchangeArena, ReplySlab,
+    run_collective_read_with, run_collective_write_with, Algorithm, Direction, ExchangeArena,
+    ReplySlab,
 };
 use tamio::coordinator::filedomain::FileDomains;
 use tamio::coordinator::merge::{gather_slices_from_buf, ReqBatch, RoundScratch};
 use tamio::coordinator::placement::GlobalPlacement;
+use tamio::coordinator::plancache::{build_collective_plan, fingerprint_collective, PlanCache};
 use tamio::coordinator::reqcalc::{calc_my_req, MyReqs};
 use tamio::coordinator::twophase::CollectiveCtx;
 use tamio::lustre::{IoModel, LustreConfig, LustreFile};
@@ -86,7 +88,7 @@ fn steady_state_rounds_allocate_nothing() {
         .map(|r| {
             let view = FlatView::from_pairs(vec![(r as u64 * BLOCK, BLOCK)]).unwrap();
             let payload = deterministic_payload(7, r, BLOCK);
-            calc_my_req(&domains, &ReqBatch::new(view, payload))
+            calc_my_req(&domains, &ReqBatch::new(view, payload)).unwrap()
         })
         .collect();
 
@@ -164,7 +166,7 @@ fn steady_state_read_exchanges_allocate_nothing() {
 
     let my_reqs: Vec<MyReqs> = views
         .iter()
-        .map(|v| calc_my_req(&domains, &ReqBatch::new(v.clone(), Vec::new())))
+        .map(|v| calc_my_req(&domains, &ReqBatch::new(v.clone(), Vec::new())).unwrap())
         .collect();
 
     let mut scratch: Vec<RoundScratch> =
@@ -232,6 +234,72 @@ fn steady_state_read_exchanges_allocate_nothing() {
             "rank {r} reply bytes"
         );
     }
+}
+
+/// The plan oracle's warm path (plan-cache satellite pin): computing the
+/// structural fingerprint over borrowed views and looking up a warm plan
+/// must itself be (near-)allocation-free — a hit deletes plan
+/// construction, and the lookup must not reintroduce per-call heap
+/// traffic of its own.
+fn warm_plan_lookup_allocates_nothing() {
+    let topo = Topology::new(2, 8);
+    let net = NetParams::default();
+    let cpu = CpuModel::default();
+    let io = IoModel::default();
+    let eng = NativeEngine;
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 4,
+    };
+    let file_cfg = LustreConfig::new(256, 4);
+    let algo =
+        Algorithm::Tam(tamio::coordinator::tam::TamConfig { total_local_aggregators: 4 });
+    let views: Vec<(usize, FlatView)> = (0..topo.nprocs())
+        .map(|r| {
+            let base = r as u64 * 2048;
+            let view = FlatView::from_pairs(
+                (0..8).map(|i| (base + i * 256, 200)).collect(),
+            )
+            .unwrap();
+            (r, view)
+        })
+        .collect();
+    let fp = fingerprint_collective(
+        &ctx,
+        &algo,
+        Direction::Write,
+        &file_cfg,
+        views.iter().map(|(r, v)| (*r, v)),
+    );
+    let mut cache = PlanCache::in_memory(2);
+    cache
+        .get_or_build(fp, || {
+            build_collective_plan(&ctx, &algo, Direction::Write, &views, &file_cfg, fp)
+        })
+        .unwrap();
+
+    let base = allocs();
+    let fp2 = fingerprint_collective(
+        &ctx,
+        &algo,
+        Direction::Write,
+        &file_cfg,
+        views.iter().map(|(r, v)| (*r, v)),
+    );
+    let plan = cache.get_or_build(fp2, || unreachable!("warm lookup must hit")).unwrap();
+    assert_eq!(plan.fingerprint, fp, "fingerprint must be deterministic");
+    let lookup = allocs() - base;
+    assert!(
+        lookup <= 8,
+        "warm plan lookup allocated {lookup} times \
+         (expected ~0: streaming fingerprint + LRU probe)"
+    );
+    assert_eq!(cache.stats.hits, 1, "second lookup must be a hit");
 }
 
 /// End-to-end: the second collective through a warm arena must allocate
@@ -302,6 +370,7 @@ fn warm_arena_beats_cold(algo: Algorithm, label: &str) {
 fn arena_keeps_steady_state_rounds_allocation_free() {
     steady_state_rounds_allocate_nothing();
     steady_state_read_exchanges_allocate_nothing();
+    warm_plan_lookup_allocates_nothing();
     warm_arena_beats_cold(Algorithm::TwoPhase, "two-phase");
     warm_arena_beats_cold(
         Algorithm::Tam(tamio::coordinator::tam::TamConfig { total_local_aggregators: 4 }),

@@ -111,6 +111,91 @@ fn bad_tree_spec_fails_with_nonzero_exit() {
 }
 
 #[test]
+fn zero_count_tree_level_fails_with_actionable_message() {
+    let out = tamio()
+        .args(["run", "--algorithm", "tree:node=0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("zero aggregator count"), "{err}");
+    assert!(err.contains("omit the level"), "{err}");
+}
+
+#[test]
+fn duplicate_tree_level_fails_with_actionable_message() {
+    let out = tamio()
+        .args(["run", "--algorithm", "tree:socket=1,socket=2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("duplicate tree level 'socket'"), "{err}");
+}
+
+#[test]
+fn unusable_plan_cache_path_fails_with_actionable_message() {
+    // A path whose parent is a regular file can never become a directory.
+    let dir = std::env::temp_dir().join("tamio_cli_plan_cache_bad");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let blocker = dir.join("occupied");
+    std::fs::write(&blocker, b"file").unwrap();
+    let bad = blocker.join("plans");
+    let out = tamio()
+        .args([
+            "run", "--nodes", "2", "--ppn", "4", "--workload", "strided",
+            "--plan-cache", bad.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("plan-cache"), "{err}");
+    assert!(err.contains("occupied"), "error must name the path: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn zero_plan_cache_size_fails_with_actionable_message() {
+    let out = tamio()
+        .args(["run", "--plan-cache-size", "0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("plan-cache-size must be at least 1"), "{err}");
+}
+
+#[test]
+fn plan_cache_persists_across_invocations() {
+    let dir = std::env::temp_dir().join("tamio_cli_plan_cache_dir");
+    let _ = std::fs::remove_dir_all(&dir);
+    let args = [
+        "run", "--nodes", "2", "--ppn", "4", "--workload", "strided",
+        "--algorithm", "tam:2", "--stripe_size", "4096", "--stripe_count", "4",
+        "--verify",
+    ];
+    let run = |dir: &std::path::Path| {
+        let out = tamio()
+            .args(args)
+            .args(["--plan-cache", dir.to_str().unwrap()])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+    let first = run(&dir);
+    assert!(first.contains("plan-cache:"), "stats line missing:\n{first}");
+    assert!(first.contains("1 stored"), "first run must persist:\n{first}");
+    assert!(first.contains("verify[write]: 8/8 ranks OK"), "{first}");
+    let second = run(&dir);
+    assert!(second.contains("1 loaded"), "second run must load from disk:\n{second}");
+    assert!(second.contains("verify[write]: 8/8 ranks OK"), "{second}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn sweep_direction_both_prints_write_and_read_panels() {
     // BTIO at tiny scale (P = 4 is square); the read panel only prints if
     // every bar's gathered bytes verified (experiments::ensure_verified).

@@ -1,0 +1,352 @@
+//! Plan-oracle integration tests (§Plan cache tentpole): a warm cache
+//! hit must execute bit-identically to a cold build (file bytes,
+//! simulated breakdown, and counters), plans must round-trip through the
+//! versioned on-disk format, and corrupt or stale files must be rejected
+//! gracefully (rebuild, never crash).
+
+use tamio::cluster::Topology;
+use tamio::coordinator::breakdown::CpuModel;
+use tamio::coordinator::collective::{
+    run_collective_read_with, run_collective_write_with, Algorithm, ExchangeArena,
+};
+use tamio::coordinator::merge::ReqBatch;
+use tamio::coordinator::placement::GlobalPlacement;
+use tamio::coordinator::plancache::{
+    run_collective_read_cached, run_collective_write_cached, PlanCache, PLAN_FORMAT_VERSION,
+};
+use tamio::coordinator::twophase::CollectiveCtx;
+use tamio::lustre::{IoModel, LustreConfig, LustreFile};
+use tamio::mpisim::rank::deterministic_payload;
+use tamio::mpisim::FlatView;
+use tamio::netmodel::NetParams;
+use tamio::runtime::engine::NativeEngine;
+
+const STRIPE: u64 = 256;
+const N_OST: usize = 4;
+
+/// A fresh scratch directory under the system temp dir (unique per
+/// test so parallel test binaries don't collide).
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("tamio_plan_cache_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+struct Fixture {
+    topo: Topology,
+    net: NetParams,
+    cpu: CpuModel,
+    io: IoModel,
+    eng: NativeEngine,
+}
+
+impl Fixture {
+    fn new() -> Self {
+        Fixture {
+            topo: Topology::new(2, 8),
+            net: NetParams::default(),
+            cpu: CpuModel::default(),
+            io: IoModel::default(),
+            eng: NativeEngine,
+        }
+    }
+
+    fn ctx(&self) -> CollectiveCtx<'_> {
+        CollectiveCtx {
+            topo: &self.topo,
+            net: &self.net,
+            cpu: &self.cpu,
+            io: &self.io,
+            engine: &self.eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: N_OST,
+        }
+    }
+
+    /// Per-rank batches: 8 strided pieces per rank, deterministic bytes.
+    fn ranks(&self) -> Vec<(usize, ReqBatch)> {
+        (0..self.topo.nprocs())
+            .map(|r| {
+                let base = r as u64 * 2048;
+                let view = FlatView::from_pairs(
+                    (0..8).map(|i| (base + i * 256, 200)).collect(),
+                )
+                .unwrap();
+                (r, ReqBatch::new(view, deterministic_payload(31, r, 1600)))
+            })
+            .collect()
+    }
+}
+
+/// Read every rank's view back out of the file image.
+fn image_of(file: &LustreFile, ranks: &[(usize, ReqBatch)]) -> Vec<Vec<u8>> {
+    ranks
+        .iter()
+        .map(|(_, b)| {
+            let mut got = Vec::new();
+            for (off, len) in b.view.iter() {
+                got.extend_from_slice(&file.read_at(off, len));
+            }
+            got
+        })
+        .collect()
+}
+
+/// A warm cache hit must be observably identical to the cold build: the
+/// same file bytes, the same simulated [`Breakdown`] (including the
+/// `plan` component — plan *time* is simulated at execute time, so a hit
+/// only removes wall-clock work), and the same counters — and identical
+/// to the uncached ad-hoc path too.  All three algorithm families.
+#[test]
+fn warm_hit_is_bit_identical_to_cold_build() {
+    let fx = Fixture::new();
+    let ctx = fx.ctx();
+    let ranks = fx.ranks();
+    for (label, algo) in [
+        ("two-phase", Algorithm::TwoPhase),
+        (
+            "tam",
+            Algorithm::Tam(tamio::coordinator::tam::TamConfig { total_local_aggregators: 4 }),
+        ),
+        ("tree", Algorithm::Tree("socket=2,node=1".parse().unwrap())),
+    ] {
+        let mut cache = PlanCache::in_memory(4);
+        let mut arena = ExchangeArena::default();
+
+        // Uncached reference.
+        let mut file_ref = LustreFile::new(LustreConfig::new(STRIPE, N_OST));
+        let out_ref =
+            run_collective_write_with(&ctx, algo, ranks.clone(), &mut file_ref, &mut arena)
+                .unwrap();
+
+        // Cold build through the cache (miss), then warm repeat (hit).
+        let mut file_cold = LustreFile::new(LustreConfig::new(STRIPE, N_OST));
+        let out_cold = run_collective_write_cached(
+            &ctx,
+            algo,
+            ranks.clone(),
+            &mut file_cold,
+            &mut arena,
+            &mut cache,
+        )
+        .unwrap();
+        let mut file_warm = LustreFile::new(LustreConfig::new(STRIPE, N_OST));
+        let out_warm = run_collective_write_cached(
+            &ctx,
+            algo,
+            ranks.clone(),
+            &mut file_warm,
+            &mut arena,
+            &mut cache,
+        )
+        .unwrap();
+        assert_eq!(cache.stats.misses, 1, "{label}: first cached run must miss");
+        assert_eq!(cache.stats.hits, 1, "{label}: second cached run must hit");
+
+        assert_eq!(
+            image_of(&file_cold, &ranks),
+            image_of(&file_warm, &ranks),
+            "{label}: warm-hit file bytes differ from cold-build"
+        );
+        assert_eq!(
+            image_of(&file_ref, &ranks),
+            image_of(&file_cold, &ranks),
+            "{label}: cached file bytes differ from uncached"
+        );
+        assert_eq!(
+            out_cold.breakdown, out_warm.breakdown,
+            "{label}: warm-hit breakdown differs from cold-build"
+        );
+        assert_eq!(
+            out_ref.breakdown, out_cold.breakdown,
+            "{label}: cached breakdown differs from uncached"
+        );
+        assert!(out_cold.breakdown.plan > 0.0, "{label}: plan time must be simulated");
+        assert_eq!(
+            format!("{:?}", out_cold.counters),
+            format!("{:?}", out_warm.counters),
+            "{label}: warm-hit counters differ from cold-build"
+        );
+
+        // Read direction through the same cache: its plan is a separate
+        // entry (direction is fingerprinted), and the warm repeat must
+        // return the same bytes and times.
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let (got_ref, rout_ref) =
+            run_collective_read_with(&ctx, algo, views.clone(), &file_ref, &mut arena).unwrap();
+        let (got_cold, rout_cold) =
+            run_collective_read_cached(&ctx, algo, views.clone(), &file_ref, &mut arena, &mut cache)
+                .unwrap();
+        let (got_warm, rout_warm) =
+            run_collective_read_cached(&ctx, algo, views.clone(), &file_ref, &mut arena, &mut cache)
+                .unwrap();
+        assert_eq!(cache.stats.misses, 2, "{label}: read plan is a distinct entry");
+        assert_eq!(cache.stats.hits, 2, "{label}: warm read must hit");
+        assert_eq!(got_cold, got_warm, "{label}: warm-hit read bytes differ");
+        assert_eq!(got_ref, got_cold, "{label}: cached read bytes differ from uncached");
+        for ((r, payload), (_, want)) in got_warm.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "{label}: rank {r} read-back");
+        }
+        assert_eq!(rout_cold.breakdown, rout_warm.breakdown, "{label}: read breakdown");
+        assert_eq!(rout_ref.breakdown, rout_cold.breakdown, "{label}: read vs uncached");
+    }
+}
+
+/// Plans persist: a second process (modelled by a fresh [`PlanCache`]
+/// over the same directory) loads the stored plan instead of building —
+/// `disk_loads` counts it, the builder never runs (`build_nanos` stays
+/// zero), and execution is identical.
+#[test]
+fn plans_round_trip_through_the_cache_directory() {
+    let fx = Fixture::new();
+    let ctx = fx.ctx();
+    let ranks = fx.ranks();
+    let algo =
+        Algorithm::Tam(tamio::coordinator::tam::TamConfig { total_local_aggregators: 4 });
+    let dir = scratch_dir("roundtrip");
+    let mut arena = ExchangeArena::default();
+
+    let mut cache = PlanCache::with_dir(4, &dir).unwrap();
+    let mut file_a = LustreFile::new(LustreConfig::new(STRIPE, N_OST));
+    let out_a = run_collective_write_cached(
+        &ctx,
+        algo,
+        ranks.clone(),
+        &mut file_a,
+        &mut arena,
+        &mut cache,
+    )
+    .unwrap();
+    assert_eq!(cache.stats.misses, 1);
+    assert_eq!(cache.stats.disk_stores, 1, "miss must persist the plan");
+    assert!(cache.stats.build_nanos > 0, "cold build must be timed");
+    let stored: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "plan"))
+        .collect();
+    assert_eq!(stored.len(), 1, "exactly one plan file stored");
+
+    // "Next invocation": fresh cache, same directory.
+    let mut cache2 = PlanCache::with_dir(4, &dir).unwrap();
+    let mut file_b = LustreFile::new(LustreConfig::new(STRIPE, N_OST));
+    let out_b = run_collective_write_cached(
+        &ctx,
+        algo,
+        ranks.clone(),
+        &mut file_b,
+        &mut arena,
+        &mut cache2,
+    )
+    .unwrap();
+    assert_eq!(cache2.stats.misses, 1, "memory cache is cold");
+    assert_eq!(cache2.stats.disk_loads, 1, "plan must come from disk");
+    assert_eq!(cache2.stats.build_nanos, 0, "builder must not run on a disk load");
+    assert_eq!(cache2.stats.rejects, 0);
+    assert_eq!(
+        image_of(&file_a, &ranks),
+        image_of(&file_b, &ranks),
+        "disk-loaded plan must execute identically"
+    );
+    assert_eq!(out_a.breakdown, out_b.breakdown);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupt, truncated, or version-bumped plan files are rejected (counted
+/// in `rejects`) and the plan is silently rebuilt — a bad cache file can
+/// never affect results or crash the run.
+#[test]
+fn corrupt_or_stale_plan_files_are_rejected_and_rebuilt() {
+    let fx = Fixture::new();
+    let ctx = fx.ctx();
+    let ranks = fx.ranks();
+    let algo = Algorithm::TwoPhase;
+    let dir = scratch_dir("corrupt");
+    let mut arena = ExchangeArena::default();
+
+    let mut cache = PlanCache::with_dir(4, &dir).unwrap();
+    let mut file = LustreFile::new(LustreConfig::new(STRIPE, N_OST));
+    let out_good = run_collective_write_cached(
+        &ctx,
+        algo,
+        ranks.clone(),
+        &mut file,
+        &mut arena,
+        &mut cache,
+    )
+    .unwrap();
+    let plan_file = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "plan"))
+        .expect("stored plan file");
+    let pristine = std::fs::read(&plan_file).unwrap();
+
+    let corruptions: Vec<(&str, Vec<u8>)> = vec![
+        ("bit-flip in body", {
+            let mut b = pristine.clone();
+            let mid = 36 + (b.len() - 44) / 2;
+            b[mid] ^= 0x01;
+            b
+        }),
+        ("truncated", pristine[..pristine.len() / 2].to_vec()),
+        ("future format version", {
+            let mut b = pristine.clone();
+            b[8..12].copy_from_slice(&(PLAN_FORMAT_VERSION + 1).to_le_bytes());
+            b
+        }),
+        ("empty file", Vec::new()),
+    ];
+    for (what, bytes) in corruptions {
+        std::fs::write(&plan_file, &bytes).unwrap();
+        let mut cache = PlanCache::with_dir(4, &dir).unwrap();
+        let mut file = LustreFile::new(LustreConfig::new(STRIPE, N_OST));
+        let out = run_collective_write_cached(
+            &ctx,
+            algo,
+            ranks.clone(),
+            &mut file,
+            &mut arena,
+            &mut cache,
+        )
+        .unwrap();
+        assert_eq!(cache.stats.rejects, 1, "{what}: must be rejected");
+        assert_eq!(cache.stats.disk_loads, 0, "{what}: must not count as a load");
+        assert!(cache.stats.build_nanos > 0, "{what}: must rebuild");
+        assert_eq!(out.breakdown, out_good.breakdown, "{what}: rebuild must match");
+        // The rebuild re-persists a valid file for the next run.
+        let mut cache2 = PlanCache::with_dir(4, &dir).unwrap();
+        let mut file2 = LustreFile::new(LustreConfig::new(STRIPE, N_OST));
+        run_collective_write_cached(
+            &ctx,
+            algo,
+            ranks.clone(),
+            &mut file2,
+            &mut arena,
+            &mut cache2,
+        )
+        .unwrap();
+        assert_eq!(cache2.stats.disk_loads, 1, "{what}: re-persisted plan must load");
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An unusable `--plan-cache` directory fails up front with an
+/// actionable error (the CLI surfaces it), not at first store.
+#[test]
+fn unusable_cache_directory_is_an_actionable_error() {
+    let dir = scratch_dir("badpath");
+    let blocker = dir.join("not-a-dir");
+    std::fs::write(&blocker, b"occupied").unwrap();
+    let err = PlanCache::with_dir(4, blocker.join("plans")).unwrap_err().to_string();
+    assert!(
+        err.contains("plan-cache") && err.contains("not-a-dir"),
+        "error must name the flag and the path: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
