@@ -1,0 +1,66 @@
+//! Auto-tuner validation panel: for each of the four paper workloads at
+//! two topology points (a flat 4-node machine and a hierarchical
+//! 16-node, 4-sockets-per-node, 4-nodes-per-switch machine — both with
+//! square P so BTIO's `P = q²` constraint holds), run the top-4
+//! predicted candidates for real and check that the metadata-only cost
+//! predictor's winner lands in the measured top-2.
+//!
+//! `cargo bench --bench ablation_autotune`
+//! Env: TAMIO_BENCH_BUDGET=N requests (default 60k);
+//!      TAMIO_BENCH_DIRECTION=write|read|both (default both).
+
+use tamio::config::RunConfig;
+use tamio::coordinator::collective::Algorithm;
+use tamio::experiments::{auto_scale, bench_direction_from_env, validate_tuner};
+use tamio::metrics::tuner_validation_table;
+use tamio::workloads::WorkloadKind;
+
+fn main() {
+    let budget: u64 = std::env::var("TAMIO_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60_000);
+    let direction = bench_direction_from_env();
+
+    // (nodes, ppn, sockets_per_node, nodes_per_switch); every P is a
+    // perfect square because BTIO refuses non-square process counts.
+    let points = [(4usize, 16usize, 1usize, 0usize), (16, 16, 4, 4)];
+
+    let mut panels = 0usize;
+    for kind in WorkloadKind::paper_set() {
+        for (nodes, ppn, spn, nps) in points {
+            let p = nodes * ppn;
+            let mut cfg = RunConfig::default();
+            cfg.nodes = nodes;
+            cfg.ppn = ppn;
+            cfg.sockets_per_node = spn;
+            cfg.nodes_per_switch = nps;
+            cfg.workload = kind;
+            cfg.scale = auto_scale(kind, p, budget);
+            cfg.algorithm = Algorithm::Auto;
+            cfg.direction = direction;
+            // Reads always verify; writes verify by vectored read-back.
+            // validate_tuner() asserts every candidate run passed, so a
+            // panel that prints is a panel whose bytes round-tripped.
+            cfg.verify = true;
+            println!(
+                "Auto-tune validation: {kind} @ {nodes} nodes x {ppn} ppn (P={p}), \
+                 {spn} sockets/node, {nps} nodes/switch, scale 1/{}, direction {direction}",
+                cfg.scale
+            );
+            let reports = validate_tuner(&cfg, 4).expect("tuner validation");
+            print!("{}", tuner_validation_table(&reports));
+            for rep in &reports {
+                assert!(
+                    rep.winner_in_top2,
+                    "{kind} P={p} [{}]: predicted winner not in measured top-2",
+                    rep.direction
+                );
+            }
+            panels += reports.len();
+        }
+    }
+    println!(
+        "ablation_autotune: predicted winner in measured top-2 across {panels} panels ok"
+    );
+}

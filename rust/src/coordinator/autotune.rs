@@ -1,0 +1,595 @@
+//! `--algorithm auto`: cost-model-driven plan auto-tuner (ROADMAP item 4).
+//!
+//! PR 5's N-level trees made the paper's §IV-A aggregator-selection rule
+//! one point in a combinatorial space — depth × per-level aggregator
+//! counts × rank placement — and the per-tier α–β link table already
+//! prices any candidate.  This module turns that pricing model into a
+//! searcher:
+//!
+//! * [`candidate_specs`] — a bounded, deterministic [`TreeSpec`] grid:
+//!   depth 0 (flat ≡ two-phase) always, the node level from a
+//!   divisor/power-of-two ladder over `ppn`, and the socket/switch
+//!   levels only where the topology actually has them
+//!   (`sockets_per_node > 1`, `n_switches() > 1`).
+//! * [`predict_spec_cost`] — a *metadata-only* predictor: build the
+//!   candidate's full collective plan (level fold via
+//!   [`aggregate_level_read_views`] + [`build_exchange_plan`]) and walk
+//!   the exchange rounds pricing metadata-sized and payload-*shaped*
+//!   messages through [`cost_phase`] / [`PendingQueue`] — no payload is
+//!   staged and no I/O executes.  The same α–β/CPU/IO models the
+//!   executor charges at run time price the prediction, so predicted
+//!   and measured totals share units and, more importantly, ordering.
+//! * [`tune_collective`] — score both [`RankPlacement`]s × the grid and
+//!   return the strictly-min-predicted-cost candidate (first in
+//!   enumeration order on ties → fully deterministic).
+//! * [`fingerprint_autotune`] — the memo key: the collective's
+//!   structural fingerprint *minus* the tuned axes (algorithm and rank
+//!   placement), under its own domain tag.  [`PlanCache`] keeps a small
+//!   side table of winners keyed by it (see
+//!   [`PlanCache::tuner_choice`]), so repeated auto runs skip the
+//!   search; the winner's executable plan then warms through the normal
+//!   plan-fingerprint path.
+//!
+//! The honest half lives in `experiments::validate_tuner` /
+//! `benches/ablation_autotune.rs`: the top-k predicted candidates run
+//! for real and the report carries per-candidate relative error plus a
+//! Spearman rank correlation — a tuner whose predictions are never
+//! validated is a toy.  DESIGN.md §Auto-tuner documents the grid, the
+//! predictor and the validation methodology.
+//!
+//! [`PlanCache`]: crate::coordinator::plancache::PlanCache
+//! [`PlanCache::tuner_choice`]: crate::coordinator::plancache::PlanCache::tuner_choice
+
+use crate::cluster::{RankPlacement, Topology};
+use crate::coordinator::collective::{build_exchange_plan, Direction};
+use crate::coordinator::merge::RoundScratch;
+use crate::coordinator::placement::GlobalPlacement;
+use crate::coordinator::plancache::{Fp128, FpHasher};
+use crate::coordinator::reqcalc::metadata_bytes;
+use crate::coordinator::tree::{aggregate_level_read_views, AggregationPlan, TreeSpec};
+use crate::coordinator::twophase::CollectiveCtx;
+use crate::error::Result;
+use crate::lustre::{LustreConfig, OstStats};
+use crate::mpisim::FlatView;
+use crate::netmodel::phase::{cost_phase, Message, PendingQueue};
+
+// ---------------------------------------------------------------------------
+// Candidate grid
+// ---------------------------------------------------------------------------
+
+/// Per-level aggregator-count ladder: powers of two up to `limit` plus
+/// `limit`'s divisors, deduplicated, then downsampled to at most four
+/// rungs keeping both endpoints.  Deterministic in `limit` alone, so
+/// the candidate grid (and therefore the tuner's choice) never depends
+/// on enumeration order or host state.
+pub fn count_ladder(limit: usize) -> Vec<usize> {
+    let limit = limit.max(1);
+    let mut rungs: Vec<usize> = Vec::new();
+    let mut p = 1usize;
+    loop {
+        rungs.push(p);
+        match p.checked_mul(2) {
+            Some(n) if n <= limit => p = n,
+            _ => break,
+        }
+    }
+    if limit <= 4096 {
+        for d in 1..=limit {
+            if limit % d == 0 {
+                rungs.push(d);
+            }
+        }
+    } else {
+        // Degenerate configs only; the power ladder already covers it.
+        rungs.push(limit);
+    }
+    rungs.sort_unstable();
+    rungs.dedup();
+    if rungs.len() > 4 {
+        let n = rungs.len();
+        let mut out: Vec<usize> =
+            [0, n / 3, (2 * n) / 3, n - 1].iter().map(|&i| rungs[i]).collect();
+        out.dedup();
+        return out;
+    }
+    rungs
+}
+
+fn push_unique(out: &mut Vec<TreeSpec>, s: TreeSpec) {
+    if !out.contains(&s) {
+        out.push(s);
+    }
+}
+
+/// The bounded candidate grid for one topology (placement-independent;
+/// both [`RankPlacement`]s score the same grid).  Depth 0 is always the
+/// first entry; a hierarchy level appears only when the topology has
+/// more than one group of it, so flat machines never pay for phantom
+/// levels.  Order is deterministic — the tuner's tie-break is
+/// first-in-grid.
+pub fn candidate_specs(topo: &Topology) -> Vec<TreeSpec> {
+    let mut out: Vec<TreeSpec> = vec![TreeSpec::flat()];
+    let node_rungs = count_ladder(topo.ppn);
+    for &pn in &node_rungs {
+        push_unique(&mut out, TreeSpec { per_socket: 0, per_node: pn, per_switch: 0 });
+    }
+    let socket_rungs = if topo.sockets_per_node > 1 {
+        count_ladder(topo.ppn.div_ceil(topo.sockets_per_node))
+    } else {
+        Vec::new()
+    };
+    for &ps in &socket_rungs {
+        for pn in [1usize, 2] {
+            push_unique(&mut out, TreeSpec { per_socket: ps, per_node: pn, per_switch: 0 });
+        }
+    }
+    if topo.n_switches() > 1 {
+        for &pn in &node_rungs {
+            push_unique(&mut out, TreeSpec { per_socket: 0, per_node: pn, per_switch: 1 });
+        }
+        for &ps in &socket_rungs {
+            push_unique(&mut out, TreeSpec { per_socket: ps, per_node: 1, per_switch: 1 });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// The metadata-only predictor
+// ---------------------------------------------------------------------------
+
+/// Predicted per-phase costs of one candidate — the same components the
+/// executor's `Breakdown` charges, computed from plan structure alone.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PredictedCost {
+    /// Intra-level request-metadata exchange (all tree levels summed).
+    pub intra_comm: f64,
+    /// Intra-level merge/sort of forwarded request lists.
+    pub intra_sort: f64,
+    /// Intra-level payload staging (write) / reply scatter (read),
+    /// approximated as the busiest aggregator's memcpy per level.
+    pub intra_memcpy: f64,
+    /// `calc_my_req` — slowest requester's request classification.
+    pub calc_my_req: f64,
+    /// Plan-construction time charged by the CPU model.
+    pub plan: f64,
+    /// Request-metadata redistribution to the global aggregators.
+    pub meta_comm: f64,
+    /// Payload-shaped round exchange (the congestion-bearing phase).
+    pub round_comm: f64,
+    /// Per-round k-way merge at the global aggregators (max per round).
+    pub inter_sort: f64,
+    /// Per-round datatype build at the global aggregators.
+    pub inter_datatype: f64,
+    /// I/O phase, assuming the uniform OST spread striping enforces.
+    pub io_phase: f64,
+}
+
+impl PredictedCost {
+    /// End-to-end predicted time — the tuner's objective.
+    pub fn total(&self) -> f64 {
+        self.intra_comm
+            + self.intra_sort
+            + self.intra_memcpy
+            + self.calc_my_req
+            + self.plan
+            + self.meta_comm
+            + self.round_comm
+            + self.inter_sort
+            + self.inter_datatype
+            + self.io_phase
+    }
+}
+
+/// Price one candidate spec on `ctx.topo` without staging payload or
+/// touching storage: fold the member views up the candidate's tree
+/// (metadata-only merges), build the top-tier exchange plan, then walk
+/// its rounds pricing message lists through the α–β phase model exactly
+/// where the executor would — `Message` sizes come from the plan's CSR
+/// slabs (`ReqSlice::bytes`), not from any staged buffer.
+pub fn predict_spec_cost(
+    ctx: &CollectiveCtx,
+    spec: TreeSpec,
+    direction: Direction,
+    views: &[(usize, FlatView)],
+    file_cfg: &LustreConfig,
+) -> Result<PredictedCost> {
+    let agg = AggregationPlan::from_spec(ctx.topo, &spec);
+    let mut cost = PredictedCost::default();
+
+    // Intra levels: the same metadata fold plan construction performs,
+    // accumulating each level's comm + sort, plus a staging-memcpy
+    // estimate from the bytes each aggregator would receive.
+    let mut tier: Vec<(usize, FlatView)> = views.to_vec();
+    let mut slots: Vec<RoundScratch> = Vec::new();
+    for level in &agg.levels {
+        let mut staged = vec![0u64; level.ranks.len()];
+        for (rank, v) in &tier {
+            let a = level.assignment[*rank];
+            if a != usize::MAX {
+                if let Ok(i) = level.ranks.binary_search(&a) {
+                    staged[i] += v.total_bytes();
+                }
+            }
+        }
+        cost.intra_memcpy += staged
+            .iter()
+            .map(|&b| ctx.cpu.memcpy_time(b))
+            .fold(0.0, f64::max);
+        let stage = aggregate_level_read_views(ctx, level, &tier, &mut slots)?;
+        cost.intra_comm += stage.comm;
+        cost.intra_sort += stage.sort;
+        tier = stage.agg_views;
+    }
+    if direction == Direction::Read {
+        for (_, v) in tier.iter_mut() {
+            if v.has_overlap() {
+                *v = v.disjoint_union();
+            }
+        }
+    }
+    let refs: Vec<(usize, &FlatView)> = tier.iter().map(|(r, v)| (*r, v)).collect();
+    let x = build_exchange_plan(ctx, &refs, file_cfg)?;
+    let n_agg = x.domains.n_agg;
+
+    let mut total_pieces = 0u64;
+    for pr in &x.reqs {
+        cost.calc_my_req = cost.calc_my_req.max(ctx.cpu.calc_req_time(pr.reqs.pieces));
+        total_pieces += pr.reqs.pieces;
+    }
+    cost.plan = ctx.cpu.plan_time(x.reqs.len() as u64, total_pieces, n_agg as u64, x.n_rounds);
+
+    // Metadata redistribution: each requester posts its (offset, length)
+    // records to every aggregator it targets.
+    let mut meta_reqs = vec![0u64; n_agg];
+    let mut msgs: Vec<Message> = Vec::new();
+    for pr in &x.reqs {
+        meta_reqs.iter_mut().for_each(|c| *c = 0);
+        pr.reqs.reqs_per_agg_into(&mut meta_reqs);
+        for (a, &n) in meta_reqs.iter().enumerate() {
+            if n > 0 && x.agg_ranks[a] != pr.rank {
+                msgs.push(Message::new(pr.rank, x.agg_ranks[a], metadata_bytes(n)));
+            }
+        }
+    }
+    cost.meta_comm = cost_phase(ctx.net, ctx.topo, &msgs).time;
+
+    // Round loop: payload-shaped messages (sizes from the CSR slabs, no
+    // payload slab attached) through the pending-queue model, plus the
+    // per-round merge/datatype maxima at the aggregators.
+    let mut queue = PendingQueue::default();
+    let mut agg_items = vec![0u64; n_agg];
+    let mut agg_slices = vec![0usize; n_agg];
+    for round in 0..x.n_rounds {
+        msgs.clear();
+        agg_items.iter_mut().for_each(|c| *c = 0);
+        agg_slices.iter_mut().for_each(|c| *c = 0);
+        for pr in &x.reqs {
+            for (a, s) in pr.reqs.slices_in_round_with(round, &[]) {
+                if s.len() == 0 {
+                    continue;
+                }
+                agg_items[a] += s.len() as u64;
+                agg_slices[a] += 1;
+                if x.agg_ranks[a] != pr.rank {
+                    msgs.push(match direction {
+                        Direction::Write => Message::new(pr.rank, x.agg_ranks[a], s.bytes),
+                        Direction::Read => Message::new(x.agg_ranks[a], pr.rank, s.bytes),
+                    });
+                }
+            }
+        }
+        cost.round_comm += queue.cost_round(ctx.net, ctx.topo, &msgs).time;
+        let mut sort_max = 0.0f64;
+        let mut dt_max = 0.0f64;
+        for a in 0..n_agg {
+            if agg_slices[a] > 0 {
+                sort_max = sort_max.max(ctx.cpu.merge_time(agg_items[a], agg_slices[a]));
+                dt_max = dt_max.max(ctx.cpu.datatype_time(agg_items[a], agg_slices[a]));
+            }
+        }
+        cost.inter_sort += sort_max;
+        cost.inter_datatype += dt_max;
+    }
+
+    // I/O phase: striping spreads the same bytes over the same OSTs for
+    // every candidate, so a uniform estimate suffices — it keeps totals
+    // honest without affecting the ranking.
+    let total_bytes: u64 = x.reqs.iter().map(|pr| pr.view_bytes).sum();
+    let osts = file_cfg.stripe_count.max(1);
+    let extents = (total_pieces / osts as u64).max(u64::from(total_bytes > 0));
+    let per_ost = OstStats {
+        bytes: total_bytes / osts as u64,
+        extents,
+        lock_acquisitions: extents,
+        lock_conflicts: 0,
+    };
+    cost.io_phase = ctx.io.phase_time(&vec![per_ost; osts]);
+    Ok(cost)
+}
+
+// ---------------------------------------------------------------------------
+// The search
+// ---------------------------------------------------------------------------
+
+/// One scored candidate: a spec, the rank placement it was priced
+/// under, and its predicted per-phase costs.
+#[derive(Clone, Copy, Debug)]
+pub struct ScoredCandidate {
+    /// The candidate tree spec.
+    pub spec: TreeSpec,
+    /// Rank placement the candidate's topology used.
+    pub placement: RankPlacement,
+    /// Predicted per-phase costs.
+    pub cost: PredictedCost,
+}
+
+/// The tuner's verdict: the min-predicted-cost candidate.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoChoice {
+    /// Winning tree spec (execute as `Algorithm::Tree(spec)`).
+    pub spec: TreeSpec,
+    /// Winning rank placement (rebuild the topology with it).
+    pub placement: RankPlacement,
+    /// The winner's predicted costs.
+    pub cost: PredictedCost,
+}
+
+/// Score every candidate of both rank placements in deterministic grid
+/// order.  `ctx.topo` supplies the machine *shape*; each placement gets
+/// its own [`Topology`] because placement changes which ranks share a
+/// socket/node — exactly the axis being tuned.
+pub fn score_candidates(
+    ctx: &CollectiveCtx,
+    direction: Direction,
+    views: &[(usize, FlatView)],
+    file_cfg: &LustreConfig,
+) -> Result<Vec<ScoredCandidate>> {
+    let mut out = Vec::new();
+    for placement in [RankPlacement::Block, RankPlacement::RoundRobin] {
+        let topo = Topology::hierarchical(
+            ctx.topo.nodes,
+            ctx.topo.ppn,
+            ctx.topo.sockets_per_node,
+            ctx.topo.nodes_per_switch,
+            placement,
+        );
+        let pctx = CollectiveCtx { topo: &topo, ..*ctx };
+        for spec in candidate_specs(&topo) {
+            let cost = predict_spec_cost(&pctx, spec, direction, views, file_cfg)?;
+            out.push(ScoredCandidate { spec, placement, cost });
+        }
+    }
+    Ok(out)
+}
+
+/// Pick the min-predicted-cost candidate.  Strictly-less comparison in
+/// enumeration order makes ties resolve to the earliest (and simplest)
+/// candidate — the choice is a pure function of (views, topology shape,
+/// striping, direction, cost models).
+pub fn tune_collective(
+    ctx: &CollectiveCtx,
+    direction: Direction,
+    views: &[(usize, FlatView)],
+    file_cfg: &LustreConfig,
+) -> Result<AutoChoice> {
+    let scored = score_candidates(ctx, direction, views, file_cfg)?;
+    let mut best = scored[0];
+    for c in &scored[1..] {
+        if c.cost.total() < best.cost.total() {
+            best = *c;
+        }
+    }
+    Ok(AutoChoice { spec: best.spec, placement: best.placement, cost: best.cost })
+}
+
+// ---------------------------------------------------------------------------
+// Memo fingerprint
+// ---------------------------------------------------------------------------
+
+/// The tuner's memo key: the collective's structural fingerprint
+/// *minus the tuned axes*.  Hashes topology shape (but not rank
+/// placement), global-aggregator policy/count, striping, direction and
+/// the requester views — never the algorithm, which is the output.
+/// Its own domain tag keeps it disjoint from plan fingerprints sharing
+/// a [`PlanCache`] directory namespace.
+pub fn fingerprint_autotune<'a>(
+    ctx: &CollectiveCtx,
+    direction: Direction,
+    file_cfg: &LustreConfig,
+    views: impl Iterator<Item = (usize, &'a FlatView)>,
+) -> Fp128 {
+    let mut h = FpHasher::new("tamio-autotune-v1");
+    h.write_u64(ctx.topo.nodes as u64);
+    h.write_u64(ctx.topo.ppn as u64);
+    h.write_u64(ctx.topo.sockets_per_node as u64);
+    h.write_u64(ctx.topo.nodes_per_switch as u64);
+    h.write_u64(match ctx.placement {
+        GlobalPlacement::Spread => 0,
+        GlobalPlacement::CrayRoundRobin => 1,
+    });
+    h.write_u64(ctx.n_global_agg as u64);
+    h.write_u64(file_cfg.stripe_size);
+    h.write_u64(file_cfg.stripe_count as u64);
+    h.write_u64(match direction {
+        Direction::Write => 0,
+        Direction::Read => 1,
+    });
+    for (rank, view) in views {
+        h.write_u64(rank as u64);
+        h.write_u64(view.len() as u64);
+        h.write_u64s(view.offsets());
+        h.write_u64s(view.lengths());
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::breakdown::CpuModel;
+    use crate::lustre::IoModel;
+    use crate::netmodel::NetParams;
+    use crate::runtime::engine::NativeEngine;
+
+    fn views(nprocs: usize) -> Vec<(usize, FlatView)> {
+        (0..nprocs)
+            .map(|r| {
+                let base = r as u64 * 4096;
+                (
+                    r,
+                    FlatView::from_pairs((0..4).map(|i| (base + i * 512, 300)).collect())
+                        .unwrap(),
+                )
+            })
+            .collect()
+    }
+
+    struct Fx {
+        net: NetParams,
+        cpu: CpuModel,
+        io: IoModel,
+        eng: NativeEngine,
+    }
+
+    impl Fx {
+        fn new() -> Self {
+            Fx {
+                net: NetParams::default(),
+                cpu: CpuModel::default(),
+                io: IoModel::default(),
+                eng: NativeEngine,
+            }
+        }
+
+        fn ctx<'a>(&'a self, topo: &'a Topology) -> CollectiveCtx<'a> {
+            CollectiveCtx {
+                topo,
+                net: &self.net,
+                cpu: &self.cpu,
+                io: &self.io,
+                engine: &self.eng,
+                placement: GlobalPlacement::Spread,
+                n_global_agg: 4,
+            }
+        }
+    }
+
+    #[test]
+    fn ladder_is_bounded_sorted_and_keeps_endpoints() {
+        assert_eq!(count_ladder(1), vec![1]);
+        for limit in [2usize, 3, 4, 8, 12, 16, 24, 64, 100] {
+            let l = count_ladder(limit);
+            assert!(l.len() <= 4, "limit {limit}: {l:?}");
+            assert!(!l.is_empty());
+            assert_eq!(l[0], 1, "limit {limit}: {l:?}");
+            assert_eq!(*l.last().unwrap(), limit, "limit {limit}: {l:?}");
+            assert!(l.windows(2).all(|w| w[0] < w[1]), "limit {limit}: {l:?}");
+        }
+    }
+
+    #[test]
+    fn grid_matches_topology_shape() {
+        // Flat machine: no socket or switch level ever appears.
+        let flat = Topology::new(4, 8);
+        let specs = candidate_specs(&flat);
+        assert_eq!(specs[0], TreeSpec::flat(), "depth 0 leads the grid");
+        assert!(specs.iter().all(|s| s.per_socket == 0 && s.per_switch == 0), "{specs:?}");
+        assert!(specs.iter().any(|s| s.per_node > 0));
+
+        // Hierarchical machine: both extra levels join the grid.
+        let hier = Topology::hierarchical(4, 8, 2, 2, RankPlacement::Block);
+        let specs = candidate_specs(&hier);
+        assert!(specs.iter().any(|s| s.per_socket > 0), "{specs:?}");
+        assert!(specs.iter().any(|s| s.per_switch > 0), "{specs:?}");
+        assert!(specs.iter().any(|s| s.per_socket > 0 && s.per_switch > 0), "depth 3");
+        assert!(specs.len() <= 32, "grid must stay bounded: {}", specs.len());
+
+        // No duplicates, depth bounded by the machine's levels.
+        for (i, a) in specs.iter().enumerate() {
+            assert!(a.depth() <= 3);
+            assert!(!specs[i + 1..].contains(a), "duplicate candidate {a}");
+        }
+    }
+
+    #[test]
+    fn predictor_prices_every_candidate_finitely() {
+        let fx = Fx::new();
+        let topo = Topology::hierarchical(2, 4, 2, 1, RankPlacement::Block);
+        let ctx = fx.ctx(&topo);
+        let vs = views(topo.nprocs());
+        let cfg = LustreConfig::new(1024, 4);
+        for dir in [Direction::Write, Direction::Read] {
+            for spec in candidate_specs(&topo) {
+                let c = predict_spec_cost(&ctx, spec, dir, &vs, &cfg).unwrap();
+                assert!(c.total().is_finite(), "{spec} [{dir:?}]");
+                assert!(c.total() > 0.0, "{spec} [{dir:?}]: {c:?}");
+                assert!(c.round_comm > 0.0, "{spec} [{dir:?}]: rounds must cost");
+                assert!(c.io_phase > 0.0, "{spec} [{dir:?}]");
+            }
+        }
+    }
+
+    #[test]
+    fn tuner_is_deterministic_and_picks_the_scored_minimum() {
+        let fx = Fx::new();
+        let topo = Topology::hierarchical(2, 4, 2, 1, RankPlacement::Block);
+        let ctx = fx.ctx(&topo);
+        let vs = views(topo.nprocs());
+        let cfg = LustreConfig::new(1024, 4);
+        let a = tune_collective(&ctx, Direction::Write, &vs, &cfg).unwrap();
+        let b = tune_collective(&ctx, Direction::Write, &vs, &cfg).unwrap();
+        assert_eq!(a.spec, b.spec);
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.cost.total(), b.cost.total());
+
+        let scored = score_candidates(&ctx, Direction::Write, &vs, &cfg).unwrap();
+        let min = scored
+            .iter()
+            .map(|c| c.cost.total())
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(a.cost.total(), min, "tuner must return the scored minimum");
+        // The winner is the FIRST candidate attaining the minimum.
+        let first = scored.iter().find(|c| c.cost.total() == min).unwrap();
+        assert_eq!(a.spec, first.spec);
+        assert_eq!(a.placement, first.placement);
+    }
+
+    #[test]
+    fn memo_fingerprint_excludes_the_tuned_axes_only() {
+        let fx = Fx::new();
+        let cfg = LustreConfig::new(1024, 4);
+        let block = Topology::hierarchical(2, 4, 2, 1, RankPlacement::Block);
+        let rr = Topology::hierarchical(2, 4, 2, 1, RankPlacement::RoundRobin);
+        let vs = views(block.nprocs());
+        let fp = |topo: &Topology, dir, vs: &[(usize, FlatView)], cfg: &LustreConfig| {
+            let t = fx.ctx(topo);
+            fingerprint_autotune(&t, dir, cfg, vs.iter().map(|(r, v)| (*r, v)))
+        };
+        // Rank placement is a tuned axis — it must NOT key the memo.
+        assert_eq!(
+            fp(&block, Direction::Write, &vs, &cfg),
+            fp(&rr, Direction::Write, &vs, &cfg)
+        );
+        // Everything structural still does.
+        assert_ne!(
+            fp(&block, Direction::Write, &vs, &cfg),
+            fp(&block, Direction::Read, &vs, &cfg)
+        );
+        assert_ne!(
+            fp(&block, Direction::Write, &vs, &cfg),
+            fp(&block, Direction::Write, &vs, &LustreConfig::new(2048, 4))
+        );
+        let mut vs2 = vs.clone();
+        vs2[0].1 = FlatView::from_pairs(vec![(0, 64)]).unwrap();
+        assert_ne!(
+            fp(&block, Direction::Write, &vs, &cfg),
+            fp(&block, Direction::Write, &vs2, &cfg)
+        );
+        let other = Topology::hierarchical(4, 2, 1, 0, RankPlacement::Block);
+        assert_ne!(
+            fp(&block, Direction::Write, &vs, &cfg),
+            fp(&other, Direction::Write, &vs, &cfg)
+        );
+    }
+}

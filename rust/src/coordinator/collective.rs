@@ -269,6 +269,13 @@ pub enum Algorithm {
     /// An N-level aggregation tree over the machine hierarchy
     /// (`tree:socket=4,node=2,switch=1`).
     Tree(TreeSpec),
+    /// Cost-model-driven auto-tuning: search the [`TreeSpec`] × rank
+    /// placement space with the metadata-only predictor
+    /// ([`crate::coordinator::autotune`]) and run the min-predicted-cost
+    /// candidate.  Drivers resolve this to `Tree(spec)` *before*
+    /// dispatch (`experiments::run_direction_*`); the raw entry points
+    /// reject it rather than guess a tree.
+    Auto,
 }
 
 impl Algorithm {
@@ -278,6 +285,7 @@ impl Algorithm {
             Algorithm::TwoPhase => "two-phase".into(),
             Algorithm::Tam(t) => format!("tam(P_L={})", t.total_local_aggregators),
             Algorithm::Tree(spec) => format!("tree({spec})"),
+            Algorithm::Auto => "auto".into(),
         }
     }
 }
@@ -304,8 +312,11 @@ impl std::str::FromStr for Algorithm {
         if let Some(spec) = s.strip_prefix("tree:") {
             return Ok(Algorithm::Tree(spec.parse()?));
         }
+        if s == "auto" {
+            return Ok(Algorithm::Auto);
+        }
         Err(crate::Error::config(format!(
-            "unknown algorithm '{s}' (expected two-phase|tam|tam:<P_L>|tree:<levels>)"
+            "unknown algorithm '{s}' (expected two-phase|tam|tam:<P_L>|tree:<levels>|auto)"
         )))
     }
 }
@@ -346,6 +357,12 @@ pub fn run_collective_write_with(
             let plan = AggregationPlan::from_spec(ctx.topo, &spec);
             tree_write(ctx, &plan, ranks, file, arena)?
         }
+        Algorithm::Auto => {
+            return Err(crate::Error::config(
+                "--algorithm auto must be resolved by the driver (experiments::run_direction_*) \
+                 before dispatch; call tune_collective and pass the chosen Tree spec",
+            ))
+        }
     };
     Ok(CollectiveOutcome { breakdown: out.breakdown, counters: out.counters })
 }
@@ -377,6 +394,12 @@ pub fn run_collective_read_with(
     file: &LustreFile,
     arena: &mut ExchangeArena,
 ) -> Result<(Vec<(usize, Vec<u8>)>, CollectiveOutcome)> {
+    if algo == Algorithm::Auto {
+        return Err(crate::Error::config(
+            "--algorithm auto must be resolved by the driver (experiments::run_direction_*) \
+             before dispatch; call tune_collective and pass the chosen Tree spec",
+        ));
+    }
     let plan = AggregationPlan::for_algorithm(ctx.topo, &algo);
     tree_read(ctx, &plan, views, file, arena)
 }
@@ -871,7 +894,40 @@ mod tests {
             Algorithm::Tam(t) => assert_eq!(t.total_local_aggregators, 64),
             _ => panic!(),
         }
+        assert_eq!("auto".parse::<Algorithm>().unwrap(), Algorithm::Auto);
+        assert_eq!(Algorithm::Auto.name(), "auto");
         assert!("bogus".parse::<Algorithm>().is_err());
+        let err = "bogus".parse::<Algorithm>().unwrap_err().to_string();
+        assert!(err.contains("auto"), "error must list auto: {err}");
+    }
+
+    #[test]
+    fn auto_is_rejected_by_the_raw_entry_points() {
+        // `auto` is a driver-level directive: the raw collective entry
+        // points must refuse it with an actionable error instead of
+        // silently running some default tree.
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let ranks = make_ranks(&topo);
+        let mut file = LustreFile::new(LustreConfig::new(64, 4));
+        let err = run_collective_write(&ctx, Algorithm::Auto, ranks.clone(), &mut file)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("auto") && err.contains("driver"), "{err}");
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let err = run_collective_read(&ctx, Algorithm::Auto, views, &file)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("auto") && err.contains("driver"), "{err}");
     }
 
     #[test]

@@ -20,7 +20,12 @@
 //! * [`plancache`] — the plan oracle: fingerprint, LRU-cache, and
 //!   persist [`plancache::CollectivePlan`]s so repeated collectives
 //!   skip setup entirely (construct-once/execute-many).
+//! * [`autotune`] — `--algorithm auto`: enumerate a bounded
+//!   [`tree::TreeSpec`] × placement candidate grid, price each with a
+//!   metadata-only predictor over the same α–β/CPU/IO models the
+//!   executor charges, and pick the minimum.
 
+pub mod autotune;
 pub mod breakdown;
 pub mod collective;
 pub mod filedomain;

@@ -46,7 +46,7 @@ use crate::coordinator::merge::{ReqBatch, RoundScratch};
 use crate::coordinator::placement::{GlobalPlacement, LevelAggregators};
 use crate::coordinator::reqcalc::MyReqs;
 use crate::coordinator::tree::{
-    aggregate_level_read_views, tree_read_with, tree_write_with, AggregationPlan,
+    aggregate_level_read_views, tree_read_with, tree_write_with, AggregationPlan, TreeSpec,
 };
 use crate::coordinator::twophase::CollectiveCtx;
 use crate::error::{Error, Result};
@@ -177,6 +177,10 @@ pub fn fingerprint_collective<'a>(
             h.write_u64(spec.per_node as u64);
             h.write_u64(spec.per_switch as u64);
         }
+        // Auto never reaches plan construction (drivers resolve it to a
+        // concrete `Tree` first), but it still needs a distinct
+        // discriminant so a hypothetical key can't alias a real one.
+        Algorithm::Auto => h.write_u64(3),
     }
     h.write_u64(match direction {
         Direction::Write => 0,
@@ -233,6 +237,12 @@ pub fn build_collective_plan(
     file_cfg: &LustreConfig,
     fingerprint: Fp128,
 ) -> Result<CollectivePlan> {
+    if matches!(algo, Algorithm::Auto) {
+        return Err(Error::config(
+            "--algorithm auto must be resolved by the driver (experiments::run_direction_*) \
+             before plan construction; call tune_collective and pass the chosen Tree spec",
+        ));
+    }
     let agg = AggregationPlan::for_algorithm(ctx.topo, algo);
     let mut tier: Vec<(usize, FlatView)> = views.to_vec();
     // Throwaway scratch: plan construction is the cold path by
@@ -258,17 +268,22 @@ pub fn build_collective_plan(
 // The cache
 // ---------------------------------------------------------------------------
 
-/// Hit/miss/build accounting of one [`PlanCache`].  `build_nanos` is
-/// *wall-clock* construction time — the only place the cache win shows
-/// up besides elapsed time, since all simulated costs (including
-/// `Breakdown::plan`) are identical for hit and miss by design.
+/// Hit/load/build accounting of one [`PlanCache`].  The three lookup
+/// counters partition: every `get_or_build` call increments exactly one
+/// of `hits` (warm in memory), `disk_loads` (valid persisted plan) or
+/// `builds` (fresh construction), so `hits + disk_loads + builds` is
+/// the total lookup count.  `build_nanos` is *wall-clock* construction
+/// time — the only place the cache win shows up besides elapsed time,
+/// since all simulated costs (including `Breakdown::plan`) are
+/// identical for hit and miss by design.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct PlanCacheStats {
     /// Warm lookups served without any construction work.
     pub hits: u64,
-    /// Lookups that had to load or build.
-    pub misses: u64,
-    /// Misses satisfied by a valid persisted plan.
+    /// Lookups that constructed a fresh plan (neither memory nor disk
+    /// had it).
+    pub builds: u64,
+    /// Lookups satisfied by a valid persisted plan.
     pub disk_loads: u64,
     /// Freshly built plans persisted to the cache directory.
     pub disk_stores: u64,
@@ -292,7 +307,16 @@ pub struct PlanCache {
     capacity: usize,
     tick: u64,
     dir: Option<PathBuf>,
-    /// Running hit/miss/build accounting.
+    /// Auto-tuner memo: `(workload/topology fingerprint, winning spec,
+    /// winning rank placement)`.  Keyed by [`fingerprint_autotune`]
+    /// (which excludes the tuned axes), so a repeated `--algorithm
+    /// auto` run skips the candidate sweep entirely; the winner's
+    /// executable plan then warms through the normal plan path above.
+    /// Memory-only — specs are two words, not worth a disk format.
+    ///
+    /// [`fingerprint_autotune`]: crate::coordinator::autotune::fingerprint_autotune
+    tuner_choices: Vec<(Fp128, TreeSpec, RankPlacement)>,
+    /// Running hit/load/build accounting.
     pub stats: PlanCacheStats,
 }
 
@@ -331,6 +355,35 @@ impl PlanCache {
         self.entries.iter().any(|(k, _, _)| *k == fp)
     }
 
+    /// The memoized auto-tuner winner for a workload/topology
+    /// fingerprint, if one was remembered this session.
+    pub fn tuner_choice(&self, fp: Fp128) -> Option<(TreeSpec, RankPlacement)> {
+        self.tuner_choices
+            .iter()
+            .find(|(k, _, _)| *k == fp)
+            .map(|(_, spec, placement)| (*spec, *placement))
+    }
+
+    /// Remember the auto-tuner's winning `(spec, placement)` for `fp`,
+    /// replacing any earlier choice.  Bounded FIFO (64 entries) — the
+    /// memo is a convenience, not a correctness surface.
+    pub fn remember_tuner_choice(
+        &mut self,
+        fp: Fp128,
+        spec: TreeSpec,
+        placement: RankPlacement,
+    ) {
+        if let Some(entry) = self.tuner_choices.iter_mut().find(|(k, _, _)| *k == fp) {
+            entry.1 = spec;
+            entry.2 = placement;
+            return;
+        }
+        if self.tuner_choices.len() >= 64 {
+            self.tuner_choices.remove(0);
+        }
+        self.tuner_choices.push((fp, spec, placement));
+    }
+
     /// The cache's fundamental operation: return the warm plan for
     /// `fp`, else load it from the cache directory, else construct it
     /// with `build` (persisting the result).  The hot path — a hit —
@@ -347,10 +400,10 @@ impl PlanCache {
             self.stats.hits += 1;
             return Ok(&self.entries[i].2);
         }
-        self.stats.misses += 1;
         let plan = match self.load_from_disk(fp) {
             Some(plan) => plan,
             None => {
+                self.stats.builds += 1;
                 let t0 = std::time::Instant::now();
                 let plan = build()?;
                 self.stats.build_nanos =
@@ -570,14 +623,20 @@ impl<'a> Cursor<'a> {
     }
 
     fn len_prefix(&mut self) -> Result<usize> {
-        let n = self.u64()? as usize;
-        // The words must actually be present before we allocate for them.
-        if n.checked_mul(8).filter(|&b| self.pos + b <= self.bytes.len()).is_none() {
+        let n = usize::try_from(self.u64()?).ok();
+        // The words must actually be present before we allocate for
+        // them; every step is checked so a hostile u64::MAX prefix
+        // errors instead of wrapping past the bounds test.
+        let fits = n
+            .and_then(|n| n.checked_mul(8))
+            .and_then(|b| self.pos.checked_add(b))
+            .is_some_and(|end| end <= self.bytes.len());
+        if !fits {
             return Err(Error::Protocol(
                 "persisted plan: slice length exceeds file size".into(),
             ));
         }
-        Ok(n)
+        Ok(n.unwrap())
     }
 
     fn u64_slice(&mut self) -> Result<Vec<u64>> {
@@ -630,10 +689,16 @@ pub fn decode_plan(bytes: &[u8], expect: Fp128) -> Result<CollectivePlan> {
             "persisted plan: fingerprint {fp} does not match expected {expect}"
         )));
     }
-    let body_len = head.u64()? as usize;
-    if bytes.len() != header + body_len + 8 {
+    let body_len = usize::try_from(head.u64()?).ok();
+    // Checked sum: a hostile body_len near u64::MAX must not wrap into
+    // a passing equality.
+    let expected_total = body_len
+        .and_then(|b| header.checked_add(b))
+        .and_then(|t| t.checked_add(8));
+    if expected_total != Some(bytes.len()) {
         return Err(Error::Protocol("persisted plan: body length mismatch".into()));
     }
+    let body_len = body_len.unwrap();
     let body = &bytes[header..header + body_len];
     let stored_cks =
         u64::from_le_bytes(bytes[header + body_len..].try_into().map_err(|_| {
@@ -1041,7 +1106,7 @@ mod tests {
         assert!(cache.contains(fps[0]), "recently-used entry survived");
         assert!(!cache.contains(fps[1]), "LRU entry evicted");
         assert!(cache.contains(fps[2]));
-        assert_eq!(cache.stats.misses, 3);
+        assert_eq!(cache.stats.builds, 3);
         assert!(cache.stats.build_nanos > 0);
     }
 }

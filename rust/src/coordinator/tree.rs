@@ -214,6 +214,13 @@ impl AggregationPlan {
 
     /// The plan for an [`Algorithm`](crate::coordinator::collective::Algorithm):
     /// depth 0 for two-phase, depth 1 for TAM, the spec's tree otherwise.
+    ///
+    /// # Panics
+    ///
+    /// `Algorithm::Auto` has no plan of its own — drivers resolve it to
+    /// `Tree(spec)` via the auto-tuner before any plan is built, and
+    /// the fallible entry points reject it with an error first.
+    /// Reaching this match arm with `Auto` is therefore a caller bug.
     pub fn for_algorithm(
         topo: &Topology,
         algo: &crate::coordinator::collective::Algorithm,
@@ -223,6 +230,9 @@ impl AggregationPlan {
             Algorithm::TwoPhase => AggregationPlan::flat(),
             Algorithm::Tam(tam) => AggregationPlan::for_tam(topo, tam),
             Algorithm::Tree(spec) => AggregationPlan::from_spec(topo, spec),
+            Algorithm::Auto => {
+                panic!("Algorithm::Auto must be resolved to a Tree spec before planning")
+            }
         }
     }
 

@@ -10,6 +10,7 @@
 
 use crate::cluster::Topology;
 use crate::config::RunConfig;
+use crate::coordinator::autotune::{fingerprint_autotune, score_candidates, tune_collective};
 use crate::coordinator::collective::{
     run_collective_read_with, run_collective_write_with, Algorithm, CollectiveOutcome,
     Direction, DirectionSpec, ExchangeArena,
@@ -21,7 +22,7 @@ use crate::coordinator::tam::TamConfig;
 use crate::coordinator::twophase::CollectiveCtx;
 use crate::error::{Error, Result};
 use crate::lustre::{LustreFile, OstStats};
-use crate::metrics::{LabelledRun, ScalingSeries};
+use crate::metrics::{LabelledRun, ScalingSeries, TunerValidation, TunerValidationRow};
 use crate::mpisim::rank::deterministic_payload;
 use crate::netmodel::phase::in_degree_by_rank;
 use crate::runtime::engine::{build_engine, SortEngine};
@@ -140,11 +141,58 @@ fn run_direction_impl(
     engine: &dyn SortEngine,
     direction: Direction,
     arena: &mut ExchangeArena,
-    cache: Option<&mut PlanCache>,
+    mut cache: Option<&mut PlanCache>,
 ) -> Result<(LabelledRun, Option<VerifyReport>)> {
-    let topo = cfg.topology();
+    let mut topo = cfg.topology();
     let workload = cfg.workload.build(cfg.scale);
     let ranks = workload.generate(&topo, cfg.seed)?;
+
+    // `--algorithm auto`: resolve to a concrete tree + rank placement
+    // before dispatch.  The tuner memo in the plan cache short-circuits
+    // the candidate sweep on repeated structurally-identical runs; the
+    // winner's executable plan then warms through the normal plan path.
+    let mut algo = cfg.algorithm;
+    let mut label = algo.name();
+    if matches!(algo, Algorithm::Auto) {
+        let (spec, placement) = {
+            let tune_ctx = CollectiveCtx {
+                topo: &topo,
+                net: &cfg.net,
+                cpu: &cfg.cpu,
+                io: &cfg.io,
+                engine,
+                placement: cfg.placement,
+                n_global_agg: cfg.lustre.stripe_count,
+            };
+            let fp = fingerprint_autotune(
+                &tune_ctx,
+                direction,
+                &cfg.lustre,
+                ranks.iter().map(|(r, b)| (*r, &b.view)),
+            );
+            match cache.as_deref().and_then(|c| c.tuner_choice(fp)) {
+                Some(choice) => choice,
+                None => {
+                    let views: Vec<_> =
+                        ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+                    let choice = tune_collective(&tune_ctx, direction, &views, &cfg.lustre)?;
+                    if let Some(c) = cache.as_deref_mut() {
+                        c.remember_tuner_choice(fp, choice.spec, choice.placement);
+                    }
+                    (choice.spec, choice.placement)
+                }
+            }
+        };
+        algo = Algorithm::Tree(spec);
+        label = format!("auto[{}]", algo.name());
+        topo = Topology::hierarchical(
+            cfg.nodes,
+            cfg.ppn,
+            cfg.sockets_per_node,
+            cfg.nodes_per_switch,
+            placement,
+        );
+    }
 
     let ctx = CollectiveCtx {
         topo: &topo,
@@ -160,15 +208,10 @@ fn run_direction_impl(
             let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
             let mut file = LustreFile::new(cfg.lustre);
             let outcome = match cache {
-                Some(cache) => run_collective_write_cached(
-                    &ctx,
-                    cfg.algorithm,
-                    ranks,
-                    &mut file,
-                    arena,
-                    cache,
-                )?,
-                None => run_collective_write_with(&ctx, cfg.algorithm, ranks, &mut file, arena)?,
+                Some(cache) => {
+                    run_collective_write_cached(&ctx, algo, ranks, &mut file, arena, cache)?
+                }
+                None => run_collective_write_with(&ctx, algo, ranks, &mut file, arena)?,
             };
             let verify = if cfg.verify {
                 // Vectored read-back through the same storage entry point
@@ -189,7 +232,7 @@ fn run_direction_impl(
             };
             Ok((
                 LabelledRun {
-                    label: cfg.algorithm.name(),
+                    label,
                     direction,
                     breakdown: outcome.breakdown,
                     counters: outcome.counters,
@@ -211,9 +254,9 @@ fn run_direction_impl(
             let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
             let (got, outcome) = match cache {
                 Some(cache) => {
-                    run_collective_read_cached(&ctx, cfg.algorithm, views, &file, arena, cache)?
+                    run_collective_read_cached(&ctx, algo, views, &file, arena, cache)?
                 }
-                None => run_collective_read_with(&ctx, cfg.algorithm, views, &file, arena)?,
+                None => run_collective_read_with(&ctx, algo, views, &file, arena)?,
             };
             let mut ok = 0;
             for ((_, payload), (_, want)) in got.iter().zip(ranks.iter()) {
@@ -224,7 +267,7 @@ fn run_direction_impl(
             let verify = Some(VerifyReport { ok, total: got.len() });
             Ok((
                 LabelledRun {
-                    label: cfg.algorithm.name(),
+                    label,
                     direction,
                     breakdown: outcome.breakdown,
                     counters: outcome.counters,
@@ -465,6 +508,94 @@ pub fn run_breakdown_grid(
     Ok(())
 }
 
+/// Spearman rank correlation between the predicted ordering (rows are
+/// already in predicted order, so predicted ranks are `0..n`) and the
+/// measured ordering.  `1.0` means the predictor ranked every candidate
+/// exactly as measurement did; fewer than two rows correlate trivially.
+fn spearman_from_predicted_order(measured: &[f64]) -> f64 {
+    let n = measured.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut by_measure: Vec<usize> = (0..n).collect();
+    by_measure.sort_by(|&a, &b| measured[a].partial_cmp(&measured[b]).unwrap());
+    let mut measured_rank = vec![0usize; n];
+    for (pos, &i) in by_measure.iter().enumerate() {
+        measured_rank[i] = pos;
+    }
+    let d2: f64 = measured_rank
+        .iter()
+        .enumerate()
+        .map(|(predicted_rank, &m)| {
+            let d = predicted_rank as f64 - m as f64;
+            d * d
+        })
+        .sum();
+    1.0 - 6.0 * d2 / (n as f64 * (n * n - 1) as f64)
+}
+
+/// `--validate-tuner`: the tuner's honesty check.  Score the full
+/// candidate grid, then run the top-`k` *predicted* candidates for real
+/// (verified) and report, per direction: each candidate's predicted vs
+/// measured end-to-end time and relative error, the Spearman rank
+/// correlation between the two orderings, and whether the predicted
+/// winner landed in the measured top-2.
+pub fn validate_tuner(cfg: &RunConfig, k: usize) -> Result<Vec<TunerValidation>> {
+    let engine = build_engine_for(cfg)?;
+    let mut arena = ExchangeArena::default();
+    let mut cache = plan_cache_for(cfg)?;
+    let mut out = Vec::new();
+    for &dir in cfg.direction.runs() {
+        let topo = cfg.topology();
+        let workload = cfg.workload.build(cfg.scale);
+        let ranks = workload.generate(&topo, cfg.seed)?;
+        let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &cfg.net,
+            cpu: &cfg.cpu,
+            io: &cfg.io,
+            engine: engine.as_ref(),
+            placement: cfg.placement,
+            n_global_agg: cfg.lustre.stripe_count,
+        };
+        let mut scored = score_candidates(&ctx, dir, &views, &cfg.lustre)?;
+        // Stable sort keeps the tuner's first-in-grid tie-break, so
+        // row 0 is exactly what `--algorithm auto` would execute.
+        scored.sort_by(|a, b| a.cost.total().partial_cmp(&b.cost.total()).unwrap());
+        scored.truncate(k.max(2));
+        let mut rows = Vec::new();
+        for c in &scored {
+            let mut run_cfg = cfg.clone();
+            run_cfg.algorithm = Algorithm::Tree(c.spec);
+            run_cfg.rank_placement = c.placement;
+            let (run, verify) =
+                run_direction_cached(&run_cfg, engine.as_ref(), dir, &mut arena, &mut cache)?;
+            ensure_verified(&run, &verify)?;
+            let predicted = c.cost.total();
+            let measured = run.breakdown.total();
+            rows.push(TunerValidationRow {
+                spec: c.spec,
+                placement: c.placement,
+                predicted,
+                measured,
+                rel_error: (predicted - measured).abs() / measured.max(f64::MIN_POSITIVE),
+            });
+        }
+        let measured: Vec<f64> = rows.iter().map(|r| r.measured).collect();
+        let spearman = spearman_from_predicted_order(&measured);
+        let winner_measured_rank =
+            measured.iter().filter(|&&m| m < measured[0]).count();
+        out.push(TunerValidation {
+            direction: dir,
+            rows,
+            spearman,
+            winner_in_top2: winner_measured_rank <= 1,
+        });
+    }
+    Ok(out)
+}
+
 /// Message-matrix summary used by the Fig-2 bench: in-degree histogram of
 /// an explicit message list (re-exported convenience).
 pub fn in_degree_summary(msgs: &[crate::netmodel::Message]) -> (usize, f64) {
@@ -588,6 +719,66 @@ mod tests {
         let s = auto_scale(WorkloadKind::E3smF, 16384, 1_000_000);
         assert!(s >= 1000, "F case must scale down heavily, got {s}");
         assert_eq!(auto_scale(WorkloadKind::Contig, 64, 1_000_000), 1);
+    }
+
+    #[test]
+    fn run_once_auto_resolves_and_verifies() {
+        let mut cfg = small_cfg();
+        cfg.algorithm = Algorithm::Auto;
+        cfg.direction = DirectionSpec::Both;
+        let out = run_once(&cfg).unwrap();
+        assert_eq!(out.len(), 2);
+        for (run, verify) in &out {
+            assert!(
+                run.label.starts_with("auto["),
+                "auto runs must carry the resolved spec in the label, got '{}'",
+                run.label
+            );
+            assert!(verify.as_ref().unwrap().passed(), "{} [{}]", run.label, run.direction);
+            assert!(run.breakdown.total() > 0.0);
+        }
+    }
+
+    #[test]
+    fn run_once_auto_is_deterministic() {
+        let mut cfg = small_cfg();
+        cfg.algorithm = Algorithm::Auto;
+        let a = run_once(&cfg).unwrap().remove(0).0;
+        let b = run_once(&cfg).unwrap().remove(0).0;
+        assert_eq!(a.label, b.label, "the tuner's choice must be a pure function");
+        assert_eq!(a.breakdown.total(), b.breakdown.total());
+    }
+
+    #[test]
+    fn validate_tuner_reports_per_direction_rows() {
+        let mut cfg = small_cfg();
+        cfg.algorithm = Algorithm::Auto;
+        cfg.direction = DirectionSpec::Both;
+        let reports = validate_tuner(&cfg, 3).unwrap();
+        assert_eq!(reports.len(), 2);
+        for rep in &reports {
+            assert!(rep.rows.len() >= 2, "need at least two candidates to rank");
+            assert!(rep.rows.len() <= 3);
+            // Rows arrive in predicted order.
+            assert!(
+                rep.rows.windows(2).all(|w| w[0].predicted <= w[1].predicted),
+                "[{}] rows must be sorted by predicted cost",
+                rep.direction
+            );
+            for row in &rep.rows {
+                assert!(row.predicted.is_finite() && row.predicted > 0.0);
+                assert!(row.measured.is_finite() && row.measured > 0.0);
+                assert!(row.rel_error.is_finite() && row.rel_error >= 0.0);
+            }
+            assert!((-1.0..=1.0).contains(&rep.spearman), "{}", rep.spearman);
+        }
+    }
+
+    #[test]
+    fn spearman_helper_matches_hand_cases() {
+        assert_eq!(spearman_from_predicted_order(&[1.0, 2.0, 3.0]), 1.0);
+        assert_eq!(spearman_from_predicted_order(&[3.0, 2.0, 1.0]), -1.0);
+        assert_eq!(spearman_from_predicted_order(&[5.0]), 1.0);
     }
 
     #[test]

@@ -58,6 +58,9 @@ pub use error::{Error, Result};
 pub mod prelude {
     pub use crate::cluster::{LevelKind, LinkTier, RankPlacement, Topology};
     pub use crate::config::RunConfig;
+    pub use crate::coordinator::autotune::{
+        candidate_specs, fingerprint_autotune, tune_collective, AutoChoice, PredictedCost,
+    };
     pub use crate::coordinator::breakdown::Breakdown;
     pub use crate::coordinator::collective::{
         run_collective_read, run_collective_read_with, run_collective_write,

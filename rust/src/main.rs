@@ -15,10 +15,12 @@
 //! `--config` TOML-subset file is applied first, CLI flags override.
 
 use tamio::config::{KvMap, RunConfig};
+use tamio::coordinator::collective::Algorithm;
 use tamio::error::Result;
 use tamio::experiments;
 use tamio::metrics::{
     breakdown_panels, breakdown_table, plan_cache_summary, render_table, scaling_table,
+    tuner_validation_table,
 };
 use tamio::util::{human_bytes, human_secs};
 use tamio::workloads::WorkloadKind;
@@ -39,10 +41,17 @@ fn dispatch(args: &[String]) -> Result<()> {
     let config_file = kv.take("config");
     let pl_list = kv.take("pl");
     let procs_list = kv.take("procs");
-    let budget: u64 = kv
-        .take("budget-reqs")
-        .map(|s| s.parse().unwrap_or(200_000))
-        .unwrap_or(200_000);
+    let validate_tuner = kv.take("validate-tuner").is_some();
+    // A typo'd budget must fail loudly: silently substituting the
+    // default would size every workload off the wrong request count.
+    let budget: u64 = match kv.take("budget-reqs") {
+        Some(s) => s.parse().map_err(|_| {
+            tamio::Error::config(format!(
+                "--budget-reqs: '{s}' is not a positive integer (e.g. --budget-reqs 200000)"
+            ))
+        })?,
+        None => 200_000,
+    };
 
     let mut cfg = RunConfig::default();
     if let Some(path) = config_file {
@@ -52,7 +61,7 @@ fn dispatch(args: &[String]) -> Result<()> {
 
     match cmd {
         "run" => cmd_run(&cfg),
-        "sweep" => cmd_sweep(&cfg, pl_list.as_deref()),
+        "sweep" => cmd_sweep(&cfg, pl_list.as_deref(), validate_tuner),
         "scaling" => cmd_scaling(&cfg, procs_list.as_deref(), budget),
         "table1" => cmd_table1(&cfg, budget),
         "congest" => cmd_congest(&cfg),
@@ -71,13 +80,17 @@ USAGE: tamio <run|sweep|scaling|table1|congest|info> [--key value ...]
 
 Common flags (RunConfig keys):
   --nodes N --ppn Q --workload e3sm-g|e3sm-f|btio|s3d|contig|strided
-  --algorithm two-phase|tam|tam:<P_L>|tree|tree:<levels>
+  --algorithm two-phase|tam|tam:<P_L>|tree|tree:<levels>|auto
                                         tree:<levels> is a comma list of
                                         socket=<n>,node=<n>,switch=<n>
                                         aggregators per group (absent =
                                         level off; 'tree:flat' = depth 0 =
                                         two-phase, 'tree:node=c' = TAM
-                                        with c aggregators per node)
+                                        with c aggregators per node);
+                                        'auto' prices a bounded candidate
+                                        grid (depth 0-3 x placements) with
+                                        the metadata-only cost predictor
+                                        and runs the cheapest
   --engine native|xla
   --direction write|read|both           collective direction(s); read runs
                                         pre-populate the file and always
@@ -100,6 +113,10 @@ Common flags (RunConfig keys):
 
 Subcommand flags:
   sweep:   --pl 16,64,256          breakdown panels (Figures 4-7)
+           --validate-tuner        with --algorithm auto: run the top-4
+                                   predicted candidates for real, report
+                                   predicted-vs-measured relative error
+                                   and Spearman rank correlation
   scaling: --procs 256,1024,4096   Figure 3 series; --budget-reqs N
   table1:  --budget-reqs N
 ";
@@ -162,23 +179,50 @@ fn cmd_run(cfg: &RunConfig) -> Result<()> {
     Ok(())
 }
 
-fn parse_list(s: Option<&str>, default: &[usize]) -> Vec<usize> {
-    s.map(|s| {
-        s.split(',')
-            .filter_map(|x| x.trim().parse().ok())
-            .collect::<Vec<usize>>()
-    })
-    .filter(|v| !v.is_empty())
-    .unwrap_or_else(|| default.to_vec())
+/// Parse a `--<flag> a,b,c` integer list, or fall back to `default` when
+/// the flag is absent.  Every entry must parse: silently dropping a
+/// typo'd entry (the old `filter_map(.ok())`) would sweep or scale over
+/// a different grid than the one the user asked for.
+fn parse_list(flag: &str, s: Option<&str>, default: &[usize]) -> Result<Vec<usize>> {
+    let Some(s) = s else { return Ok(default.to_vec()) };
+    let out = s
+        .split(',')
+        .map(|x| {
+            let x = x.trim();
+            x.parse::<usize>().map_err(|_| {
+                tamio::Error::config(format!(
+                    "--{flag}: '{x}' is not a positive integer (in list '{s}')"
+                ))
+            })
+        })
+        .collect::<Result<Vec<usize>>>()?;
+    if out.is_empty() {
+        return Err(tamio::Error::config(format!("--{flag}: empty list")));
+    }
+    Ok(out)
 }
 
-fn cmd_sweep(cfg: &RunConfig, pl: Option<&str>) -> Result<()> {
+fn cmd_sweep(cfg: &RunConfig, pl: Option<&str>, validate_tuner: bool) -> Result<()> {
     let p = cfg.topology().nprocs();
+    if validate_tuner {
+        if cfg.algorithm != Algorithm::Auto {
+            return Err(tamio::Error::config(
+                "--validate-tuner requires --algorithm auto (it checks the tuner's predictions)",
+            ));
+        }
+        println!(
+            "tuner validation: {} P={} direction={} (top-4 predicted candidates run for real)",
+            cfg.workload, p, cfg.direction
+        );
+        let reports = experiments::validate_tuner(cfg, 4)?;
+        print!("{}", tuner_validation_table(&reports));
+        return Ok(());
+    }
     let defaults: Vec<usize> = [16, 64, 256, 1024]
         .into_iter()
         .filter(|&x| x <= p)
         .collect();
-    let pls = parse_list(pl, &defaults);
+    let pls = parse_list("pl", pl, &defaults)?;
     println!(
         "breakdown sweep: {} P={} pl={:?} direction={} (last bar = two-phase)",
         cfg.workload, p, pls, cfg.direction
@@ -189,7 +233,7 @@ fn cmd_sweep(cfg: &RunConfig, pl: Option<&str>) -> Result<()> {
 }
 
 fn cmd_scaling(cfg: &RunConfig, procs: Option<&str>, budget: u64) -> Result<()> {
-    let procs = parse_list(procs, &[256, 1024, 4096]);
+    let procs = parse_list("procs", procs, &[256, 1024, 4096])?;
     println!(
         "strong scaling: {} procs={:?} ppn={} direction={} budget={budget} reqs",
         cfg.workload, procs, cfg.ppn, cfg.direction

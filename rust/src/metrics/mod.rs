@@ -8,9 +8,11 @@ pub mod report;
 
 pub use report::{render_table, write_csv, JsonWriter};
 
+use crate::cluster::RankPlacement;
 use crate::coordinator::breakdown::{Breakdown, Counters, LevelTime};
 use crate::coordinator::collective::Direction;
 use crate::coordinator::plancache::PlanCacheStats;
+use crate::coordinator::tree::TreeSpec;
 use crate::util::{human_bytes, human_secs};
 
 /// One labelled run (e.g. one bar of a Figure 4–7 panel).
@@ -114,23 +116,94 @@ pub fn breakdown_panels(runs: &[LabelledRun]) -> String {
     out
 }
 
-/// One-line plan-oracle summary for run reports: hit/miss counts, disk
-/// traffic, rejected (corrupt/stale) files, and the wall-clock spent
-/// building plans on misses.  Build time is real `Instant` time — the
-/// only wall-clock the cache exposes; all simulated times stay in
-/// [`Breakdown`].
+/// One-line plan-oracle summary for run reports.  The three lookup
+/// outcomes partition (warm hit / disk load / fresh build), so the
+/// printed counts sum to total lookups; `rejected` counts corrupt or
+/// stale files that fell back to a build.  Build time is real `Instant`
+/// time — the only wall-clock the cache exposes; all simulated times
+/// stay in [`Breakdown`].
 pub fn plan_cache_summary(stats: &PlanCacheStats) -> String {
     format!(
-        "plan-cache: {} hit{}, {} miss{} ({:.3} ms building), disk {} loaded / {} stored, {} rejected",
+        "plan-cache: {} warm hit{}, {} build{} ({:.3} ms building), disk {} loaded / {} stored, {} rejected",
         stats.hits,
         if stats.hits == 1 { "" } else { "s" },
-        stats.misses,
-        if stats.misses == 1 { "" } else { "es" },
+        stats.builds,
+        if stats.builds == 1 { "" } else { "s" },
         stats.build_nanos as f64 / 1e6,
         stats.disk_loads,
         stats.disk_stores,
         stats.rejects,
     )
+}
+
+/// One row of a tuner-validation report: a candidate the predictor
+/// ranked in its top-k, run for real.
+#[derive(Clone, Copy, Debug)]
+pub struct TunerValidationRow {
+    /// The candidate tree spec.
+    pub spec: TreeSpec,
+    /// Rank placement the candidate was priced and run under.
+    pub placement: RankPlacement,
+    /// Predicted end-to-end time (seconds).
+    pub predicted: f64,
+    /// Measured (simulated) end-to-end time (seconds).
+    pub measured: f64,
+    /// `|predicted - measured| / measured`.
+    pub rel_error: f64,
+}
+
+/// One direction's tuner-validation report: the top-k predicted
+/// candidates in predicted order, plus the ordering agreement summary.
+#[derive(Clone, Debug)]
+pub struct TunerValidation {
+    /// Direction the candidates ran in.
+    pub direction: Direction,
+    /// Candidates in predicted order (row 0 = the tuner's choice).
+    pub rows: Vec<TunerValidationRow>,
+    /// Spearman rank correlation between predicted and measured order.
+    pub spearman: f64,
+    /// Whether the predicted winner measured within the top 2.
+    pub winner_in_top2: bool,
+}
+
+/// Render `--validate-tuner` reports: one table per direction with
+/// predicted/measured/relative-error columns, followed by the rank
+/// correlation and the winner-in-measured-top-2 verdict.
+pub fn tuner_validation_table(reports: &[TunerValidation]) -> String {
+    let mut out = String::new();
+    for rep in reports {
+        out.push_str(&format!("-- tuner validation [{}] --\n", rep.direction));
+        let headers = [
+            "candidate".to_string(),
+            "placement".to_string(),
+            "predicted".to_string(),
+            "measured".to_string(),
+            "rel-err".to_string(),
+        ];
+        let rows: Vec<Vec<String>> = rep
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("tree:{}", r.spec),
+                    match r.placement {
+                        RankPlacement::Block => "block".to_string(),
+                        RankPlacement::RoundRobin => "round-robin".to_string(),
+                    },
+                    human_secs(r.predicted),
+                    human_secs(r.measured),
+                    format!("{:.1}%", r.rel_error * 100.0),
+                ]
+            })
+            .collect();
+        out.push_str(&render_table(&headers, &rows));
+        out.push_str(&format!(
+            "rank-correlation (spearman) = {:.3}; predicted winner in measured top-2: {}\n",
+            rep.spearman,
+            if rep.winner_in_top2 { "yes" } else { "NO" },
+        ));
+    }
+    out
 }
 
 /// A strong-scaling series (Figure 3): `(P, bandwidth_bytes_per_s)`.
@@ -185,18 +258,60 @@ mod tests {
     fn plan_cache_summary_reports_all_counters() {
         let stats = PlanCacheStats {
             hits: 3,
-            misses: 1,
+            builds: 2,
             disk_loads: 1,
             disk_stores: 1,
             rejects: 2,
             build_nanos: 1_500_000,
         };
         let s = plan_cache_summary(&stats);
-        assert!(s.contains("3 hits"), "{s}");
-        assert!(s.contains("1 miss ("), "{s}");
+        assert!(s.contains("3 warm hits"), "{s}");
+        assert!(s.contains("2 builds ("), "{s}");
         assert!(s.contains("1.500 ms"), "{s}");
         assert!(s.contains("1 loaded / 1 stored"), "{s}");
         assert!(s.contains("2 rejected"), "{s}");
+        // Singular forms stay grammatical.
+        let one = plan_cache_summary(&PlanCacheStats {
+            hits: 1,
+            builds: 1,
+            ..Default::default()
+        });
+        assert!(one.contains("1 warm hit,"), "{one}");
+        assert!(one.contains("1 build ("), "{one}");
+    }
+
+    #[test]
+    fn tuner_validation_table_renders_rows_and_verdict() {
+        let rep = TunerValidation {
+            direction: Direction::Write,
+            rows: vec![
+                TunerValidationRow {
+                    spec: TreeSpec { per_socket: 0, per_node: 2, per_switch: 0 },
+                    placement: RankPlacement::Block,
+                    predicted: 0.010,
+                    measured: 0.012,
+                    rel_error: 2.0 / 12.0,
+                },
+                TunerValidationRow {
+                    spec: TreeSpec::flat(),
+                    placement: RankPlacement::RoundRobin,
+                    predicted: 0.020,
+                    measured: 0.011,
+                    rel_error: 9.0 / 11.0,
+                },
+            ],
+            spearman: -1.0,
+            winner_in_top2: true,
+        };
+        let t = tuner_validation_table(&[rep]);
+        assert!(t.contains("-- tuner validation [write] --"), "{t}");
+        assert!(t.contains("tree:node=2"), "{t}");
+        assert!(t.contains("tree:flat"), "{t}");
+        assert!(t.contains("block"), "{t}");
+        assert!(t.contains("round-robin"), "{t}");
+        assert!(t.contains("16.7%"), "{t}");
+        assert!(t.contains("rank-correlation (spearman) = -1.000"), "{t}");
+        assert!(t.contains("top-2: yes"), "{t}");
     }
 
     #[test]

@@ -101,6 +101,79 @@ fn run_tree_algorithm_on_hierarchical_topology_verifies() {
 }
 
 #[test]
+fn run_algorithm_auto_resolves_and_verifies() {
+    let out = tamio()
+        .args([
+            "run", "--nodes", "2", "--ppn", "4", "--workload", "strided",
+            "--sockets_per_node", "2", "--algorithm", "auto", "--stripe_size", "4096",
+            "--stripe_count", "4", "--direction", "both", "--verify",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // The panel labels carry the resolved spec, e.g. "auto[tree(node=2)]".
+    assert!(text.contains("auto["), "resolved label missing:\n{text}");
+    assert!(text.contains("verify[write]: 8/8 ranks OK"), "{text}");
+    assert!(text.contains("verify[read]: 8/8 ranks OK"), "{text}");
+}
+
+#[test]
+fn sweep_validate_tuner_reports_rank_correlation() {
+    let out = tamio()
+        .args([
+            "sweep", "--nodes", "2", "--ppn", "4", "--workload", "strided",
+            "--algorithm", "auto", "--stripe_size", "4096", "--stripe_count", "4",
+            "--validate-tuner",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("-- tuner validation [write] --"), "{text}");
+    assert!(text.contains("rank-correlation (spearman)"), "{text}");
+    assert!(text.contains("predicted winner in measured top-2"), "{text}");
+}
+
+#[test]
+fn validate_tuner_without_auto_fails_with_actionable_message() {
+    let out = tamio()
+        .args(["sweep", "--algorithm", "tam:2", "--validate-tuner"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--validate-tuner requires --algorithm auto"), "{err}");
+}
+
+#[test]
+fn garbage_budget_reqs_fails_instead_of_substituting_the_default() {
+    let out = tamio()
+        .args(["table1", "--nodes", "2", "--ppn", "8", "--budget-reqs", "banana"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "a typo'd budget must not silently default");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--budget-reqs"), "error must name the flag: {err}");
+    assert!(err.contains("banana"), "error must quote the bad value: {err}");
+}
+
+#[test]
+fn garbage_list_entry_fails_instead_of_being_dropped() {
+    let out = tamio()
+        .args([
+            "sweep", "--nodes", "2", "--ppn", "4", "--workload", "strided",
+            "--pl", "2,x",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "a typo'd list entry must not be dropped");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--pl"), "error must name the flag: {err}");
+    assert!(err.contains("'x'"), "error must quote the bad entry: {err}");
+}
+
+#[test]
 fn bad_tree_spec_fails_with_nonzero_exit() {
     let out = tamio()
         .args(["run", "--algorithm", "tree:rack=2"])

@@ -7,7 +7,7 @@
 use tamio::cluster::Topology;
 use tamio::coordinator::breakdown::CpuModel;
 use tamio::coordinator::collective::{
-    run_collective_read_with, run_collective_write_with, Algorithm, ExchangeArena,
+    run_collective_read_with, run_collective_write_with, Algorithm, Direction, ExchangeArena,
 };
 use tamio::coordinator::merge::ReqBatch;
 use tamio::coordinator::placement::GlobalPlacement;
@@ -141,7 +141,7 @@ fn warm_hit_is_bit_identical_to_cold_build() {
             &mut cache,
         )
         .unwrap();
-        assert_eq!(cache.stats.misses, 1, "{label}: first cached run must miss");
+        assert_eq!(cache.stats.builds, 1, "{label}: first cached run must build");
         assert_eq!(cache.stats.hits, 1, "{label}: second cached run must hit");
 
         assert_eq!(
@@ -182,7 +182,7 @@ fn warm_hit_is_bit_identical_to_cold_build() {
         let (got_warm, rout_warm) =
             run_collective_read_cached(&ctx, algo, views.clone(), &file_ref, &mut arena, &mut cache)
                 .unwrap();
-        assert_eq!(cache.stats.misses, 2, "{label}: read plan is a distinct entry");
+        assert_eq!(cache.stats.builds, 2, "{label}: read plan is a distinct entry");
         assert_eq!(cache.stats.hits, 2, "{label}: warm read must hit");
         assert_eq!(got_cold, got_warm, "{label}: warm-hit read bytes differ");
         assert_eq!(got_ref, got_cold, "{label}: cached read bytes differ from uncached");
@@ -219,8 +219,8 @@ fn plans_round_trip_through_the_cache_directory() {
         &mut cache,
     )
     .unwrap();
-    assert_eq!(cache.stats.misses, 1);
-    assert_eq!(cache.stats.disk_stores, 1, "miss must persist the plan");
+    assert_eq!(cache.stats.builds, 1);
+    assert_eq!(cache.stats.disk_stores, 1, "fresh build must persist the plan");
     assert!(cache.stats.build_nanos > 0, "cold build must be timed");
     let stored: Vec<_> = std::fs::read_dir(&dir)
         .unwrap()
@@ -241,7 +241,9 @@ fn plans_round_trip_through_the_cache_directory() {
         &mut cache2,
     )
     .unwrap();
-    assert_eq!(cache2.stats.misses, 1, "memory cache is cold");
+    // The counters partition: a disk load is neither a hit nor a build.
+    assert_eq!(cache2.stats.hits, 0, "memory cache is cold");
+    assert_eq!(cache2.stats.builds, 0, "a disk load must not count as a build");
     assert_eq!(cache2.stats.disk_loads, 1, "plan must come from disk");
     assert_eq!(cache2.stats.build_nanos, 0, "builder must not run on a disk load");
     assert_eq!(cache2.stats.rejects, 0);
@@ -334,6 +336,68 @@ fn corrupt_or_stale_plan_files_are_rejected_and_rebuilt() {
     }
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The decoder's own FNV-1a, so a forged body can carry a *valid*
+/// checksum — the hostile length prefix must be caught by bounds
+/// arithmetic, not by checksum luck.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Adversarial u64 length fields: prefixes near `u64::MAX` must be
+/// rejected by checked arithmetic — never wrap past a bounds test into
+/// a panic or a multi-exabyte allocation.
+#[test]
+fn hostile_u64_length_fields_are_rejected_not_wrapped() {
+    use tamio::coordinator::plancache::{
+        build_collective_plan, decode_plan, encode_plan, fingerprint_collective,
+    };
+    let fx = Fixture::new();
+    let ctx = fx.ctx();
+    let ranks = fx.ranks();
+    let views: Vec<(usize, FlatView)> =
+        ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+    let cfg = LustreConfig::new(STRIPE, N_OST);
+    let fp = fingerprint_collective(
+        &ctx,
+        &Algorithm::TwoPhase,
+        Direction::Write,
+        &cfg,
+        views.iter().map(|(r, v)| (*r, v)),
+    );
+    let plan =
+        build_collective_plan(&ctx, &Algorithm::TwoPhase, Direction::Write, &views, &cfg, fp)
+            .unwrap();
+    let good = encode_plan(&plan);
+    assert!(decode_plan(&good, fp).is_ok(), "pristine plan must decode");
+
+    // Header body_len: `header + body_len + 8` must not wrap into a
+    // passing equality against `bytes.len()`.
+    for hostile in [u64::MAX, u64::MAX - 7, u64::MAX - 43, (good.len() as u64).wrapping_neg()] {
+        let mut bad = good.clone();
+        bad[28..36].copy_from_slice(&hostile.to_le_bytes());
+        assert!(decode_plan(&bad, fp).is_err(), "body_len {hostile:#x} must be rejected");
+    }
+
+    // Body slice prefix with a RECOMPUTED (valid) checksum: the
+    // cursor's `pos + 8 * n` bound must not wrap either.  For a depth-0
+    // plan the agg_ranks length prefix sits at body offset 52 (nprocs,
+    // level count, and five striping/domain words precede it).
+    let header = 36;
+    let body_len = good.len() - header - 8;
+    for hostile in [u64::MAX, u64::MAX / 8 + 1, (u64::MAX - 51) / 8] {
+        let mut bad = good.clone();
+        bad[header + 52..header + 60].copy_from_slice(&hostile.to_le_bytes());
+        let cks = fnv1a(&bad[header..header + body_len]);
+        let end = bad.len();
+        bad[end - 8..].copy_from_slice(&cks.to_le_bytes());
+        assert!(decode_plan(&bad, fp).is_err(), "slice len {hostile:#x} must be rejected");
+    }
 }
 
 /// An unusable `--plan-cache` directory fails up front with an

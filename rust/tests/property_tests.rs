@@ -6,7 +6,10 @@ use tamio::coordinator::breakdown::CpuModel;
 use tamio::coordinator::collective::{run_collective_write, Algorithm};
 use tamio::coordinator::filedomain::FileDomains;
 use tamio::coordinator::merge::{merge_views, sort_coalesce_pairs, ReqBatch};
-use tamio::coordinator::placement::{select_local_aggregators, GlobalPlacement};
+use tamio::coordinator::autotune::candidate_specs;
+use tamio::coordinator::placement::{
+    select_global_aggregators, select_local_aggregators, GlobalPlacement,
+};
 use tamio::coordinator::tam::TamConfig;
 use tamio::coordinator::tree::{AggregationPlan, TreeSpec};
 use tamio::coordinator::twophase::CollectiveCtx;
@@ -128,6 +131,96 @@ fn prop_local_aggregator_selection_invariants() {
             }
             if !la.ranks.contains(&a) {
                 return Err(format!("assignment target {a} not an aggregator"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_global_aggregator_selection_invariants() {
+    forall("global-agg-selection", 0x6A6A, 300, |g| {
+        let nodes = g.usize_in(1, 10);
+        let ppn = g.usize_in(1, 24);
+        let n_agg = g.usize_in(1, 64);
+        let topo = Topology::new(nodes, ppn);
+        let p = topo.nprocs();
+        for policy in [GlobalPlacement::Spread, GlobalPlacement::CrayRoundRobin] {
+            let agg = select_global_aggregators(&topo, n_agg, policy);
+            let expect = n_agg.min(p);
+            if agg.len() != expect {
+                return Err(format!(
+                    "{policy:?}: {} aggregators, expected {expect} (nodes={nodes} ppn={ppn})",
+                    agg.len()
+                ));
+            }
+            if agg.iter().any(|&r| r >= p) {
+                return Err(format!("{policy:?}: out-of-range rank in {agg:?} (P={p})"));
+            }
+            let mut uniq = agg.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            if uniq.len() != agg.len() {
+                return Err(format!("{policy:?}: duplicate ranks in {agg:?}"));
+            }
+            // Spread emits ascending ranks; CrayRoundRobin deliberately
+            // interleaves nodes (0, ppn, 1, ppn+1, … — pinned by the
+            // paper-example unit test), so only Spread asserts order.
+            if policy == GlobalPlacement::Spread && !agg.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("Spread: ranks not ascending: {agg:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The auto-tuner's full candidate grid must produce well-formed trees
+/// on every machine shape it can be asked about: the same one-parent-
+/// per-rank chain invariants as the random-spec test, but over exactly
+/// the specs `--algorithm auto` will price and may execute.
+#[test]
+fn prop_tuner_grid_chains_keep_one_parent_per_rank() {
+    forall("tuner-grid-parents", 0x7D07, 60, |g| {
+        let nodes = g.usize_in(1, 6);
+        let ppn = g.usize_in(1, 12);
+        let spn = g.usize_in(1, ppn.min(4));
+        let nps = g.usize_in(0, nodes);
+        let placement =
+            if g.bool_with(0.5) { RankPlacement::Block } else { RankPlacement::RoundRobin };
+        let topo = Topology::hierarchical(nodes, ppn, spn, nps, placement);
+        for spec in candidate_specs(&topo) {
+            let plan = AggregationPlan::from_spec(&topo, &spec);
+            if plan.depth() != spec.depth() {
+                return Err(format!(
+                    "{spec}: depth {} != spec depth {}",
+                    plan.depth(),
+                    spec.depth()
+                ));
+            }
+            for rank in 0..topo.nprocs() {
+                let chain = plan.parent_chain(rank);
+                if chain.len() != plan.depth() {
+                    return Err(format!("{spec}: rank {rank} chain length {}", chain.len()));
+                }
+                let mut rep = rank;
+                for (level, &parent) in plan.levels.iter().zip(&chain) {
+                    if level.ranks.binary_search(&parent).is_err() {
+                        return Err(format!(
+                            "{spec}: rank {rank} parent {parent} not a {} aggregator",
+                            level.kind
+                        ));
+                    }
+                    if topo.group_of(level.kind, rep) != topo.group_of(level.kind, parent) {
+                        return Err(format!(
+                            "{spec}: rank {rank} parent {parent} outside its {} group",
+                            level.kind
+                        ));
+                    }
+                    if parent > rep {
+                        return Err(format!("{spec}: parent {parent} above member {rep}"));
+                    }
+                    rep = parent;
+                }
             }
         }
         Ok(())

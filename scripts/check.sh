@@ -7,7 +7,10 @@
 #                               # point (verification-gated sweep, ~minutes)
 #
 # fmt/clippy are skipped with a warning when the components are not
-# installed (the offline image ships a bare toolchain).
+# installed (the offline image ships a bare toolchain).  Set
+# REQUIRE_LINT=1 (CI does) to turn those skips into hard failures so a
+# runner that silently lost its components cannot green-light unlinted
+# code.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -30,6 +33,9 @@ fi
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check
+elif [ "${REQUIRE_LINT:-0}" = "1" ]; then
+    echo "check.sh: FAIL — REQUIRE_LINT=1 but rustfmt is not installed" >&2
+    exit 1
 else
     echo "warn: rustfmt not installed; skipping cargo fmt --check" >&2
 fi
@@ -37,17 +43,22 @@ fi
 if cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy -D warnings =="
     cargo clippy --all-targets -- -D warnings
+elif [ "${REQUIRE_LINT:-0}" = "1" ]; then
+    echo "check.sh: FAIL — REQUIRE_LINT=1 but clippy is not installed" >&2
+    exit 1
 else
     echo "warn: clippy not installed; skipping" >&2
 fi
 
 # Benches are harness = false and excluded from `cargo test`; compile
 # them unconditionally so bench-only breakage is caught in tier-1 even
-# when BENCH=1 is not set.  The depth-ablation bench is named explicitly
-# so a target-list regression in Cargo.toml cannot silently drop it.
+# when BENCH=1 is not set.  The depth-ablation and auto-tune benches are
+# named explicitly so a target-list regression in Cargo.toml cannot
+# silently drop them.
 echo "== cargo bench --no-run (bench compile gate) =="
 cargo bench --no-run
 cargo bench --no-run --bench ablation_depth
+cargo bench --no-run --bench ablation_autotune
 
 if [ "${BENCH:-0}" = "1" ]; then
     echo "== hot-path bench (writes BENCH_hotpath.json) =="
