@@ -1,16 +1,39 @@
 //! P1 — hot-path microbenchmark: the aggregator merge+coalesce step as
 //! (a) native sort_unstable+scan, (b) k-way heap merge over pre-sorted
-//! streams, (c) the AOT XLA pipeline (when artifacts exist).  Wall-clock
+//! streams, (c) the AOT XLA pipeline (when artifacts exist); plus the
+//! §Perf kernel panels (chunked vs per-entry merge advance, run-batched
+//! vs per-request scatter/gather at 1k/16k/128k entries) and a
+//! thread-scaling panel for the worker pool (1/2/4/all threads at the
+//! paper's 16384-rank × 256-node point, tree depths 0–2).  Wall-clock
 //! (not simulated) — this is the §Perf measurement harness.
+//!
+//! Every kernel panel asserts chunked == reference before timing, so a
+//! bench run doubles as an equivalence check at bench scale.  The panel
+//! results are spliced into `BENCH_hotpath.json` under an
+//! `"engine_micro"` key (replaced on re-run, so the `hotpath` bench's
+//! own entries survive).
 //!
 //! `cargo bench --bench engine_micro`
 
 use std::time::Duration;
 
-use tamio::benchkit::{bench, black_box, section};
-use tamio::coordinator::merge::{merge_views, sort_coalesce_pairs};
+use tamio::benchkit::{bench, black_box, section, JsonReport};
+use tamio::cluster::{RankPlacement, Topology};
+use tamio::coordinator::breakdown::CpuModel;
+use tamio::coordinator::collective::{run_collective_write_with, Algorithm, ExchangeArena};
+use tamio::coordinator::merge::{
+    gather_slices_from_buf, gather_slices_from_buf_reference, merge_csr_into,
+    merge_csr_into_reference, merge_views, scatter_csr_into_buf, scatter_csr_into_buf_reference,
+    sort_coalesce_pairs, MergeScratch, ReqBatch,
+};
+use tamio::coordinator::placement::GlobalPlacement;
+use tamio::coordinator::twophase::CollectiveCtx;
+use tamio::lustre::{IoModel, LustreConfig, LustreFile};
+use tamio::mpisim::rank::deterministic_payload;
 use tamio::mpisim::FlatView;
-use tamio::runtime::engine::{SortEngine, XlaEngine};
+use tamio::netmodel::NetParams;
+use tamio::runtime::engine::{NativeEngine, SortEngine, XlaEngine};
+use tamio::util::runtime::{default_threads, with_runtime, Runtime};
 use tamio::util::SplitMix64;
 
 /// k sorted, mutually disjoint streams with cross-stream coalescible
@@ -37,8 +60,298 @@ fn make_streams(k: usize, per: usize, seed: u64) -> Vec<FlatView> {
         .collect()
 }
 
+/// Flatten per-stream views into the CSR slab layout the round loop
+/// stages in (`RoundScratch`): stream `s` is rows `starts[s]..starts[s+1]`.
+fn csr_of(streams: &[FlatView]) -> (Vec<u64>, Vec<u64>, Vec<usize>) {
+    let mut offsets = Vec::new();
+    let mut lengths = Vec::new();
+    let mut starts = vec![0usize];
+    for v in streams {
+        offsets.extend_from_slice(v.offsets());
+        lengths.extend_from_slice(v.lengths());
+        starts.push(offsets.len());
+    }
+    (offsets, lengths, starts)
+}
+
+/// Chunked vs per-entry merge advance, and run-batched vs per-request
+/// scatter/gather, at 1k/16k/128k staged entries (§Perf kernel panels).
+fn bench_kernels(report: &mut JsonReport, budget: Duration) {
+    for (k, per) in [(8usize, 128usize), (16, 1024), (32, 4096)] {
+        let n = k * per;
+        section(&format!(
+            "kernel panel: {n} entries from {k} streams (simd feature {})",
+            if cfg!(feature = "simd") { "ON" } else { "off" }
+        ));
+        let streams = make_streams(k, per, 0xC0FFEE ^ n as u64);
+        let (offsets, lengths, starts) = csr_of(&streams);
+        let mut scratch = MergeScratch::default();
+
+        // ---- merge advance: chunked gallop vs per-entry heap pops.
+        let mut merged = FlatView::empty();
+        merge_csr_into(&offsets, &lengths, &starts, &mut scratch, &mut merged);
+        let mut merged_ref = FlatView::empty();
+        merge_csr_into_reference(&offsets, &lengths, &starts, &mut scratch, &mut merged_ref);
+        assert_eq!(merged, merged_ref, "chunked merge diverged from reference at n={n}");
+
+        let mut out = FlatView::empty();
+        let r_chunk = bench(&format!("kernel_merge_chunked/{n}"), budget, || {
+            merge_csr_into(
+                black_box(&offsets),
+                black_box(&lengths),
+                black_box(&starts),
+                &mut scratch,
+                &mut out,
+            );
+            black_box(out.len());
+        });
+        println!("{r_chunk}   ({:.1} Mentries/s)", r_chunk.per_second(n as u64) / 1e6);
+        report.add(&r_chunk);
+        let r_ref = bench(&format!("kernel_merge_reference/{n}"), budget, || {
+            merge_csr_into_reference(
+                black_box(&offsets),
+                black_box(&lengths),
+                black_box(&starts),
+                &mut scratch,
+                &mut out,
+            );
+            black_box(out.len());
+        });
+        println!("{r_ref}   ({:.1} Mentries/s)", r_ref.per_second(n as u64) / 1e6);
+        report.add(&r_ref);
+        let speedup = r_ref.median.as_secs_f64() / r_chunk.median.as_secs_f64();
+        println!("merge chunked speedup: {speedup:.2}x");
+        report.add_value(&format!("kernel_merge_speedup/{n}"), speedup);
+
+        // ---- scatter: run-batched memcpys vs one memcpy per request.
+        let pay_starts: Vec<usize> = starts
+            .iter()
+            .map(|&row| lengths[..row].iter().sum::<u64>() as usize)
+            .collect();
+        let total_bytes = *pay_starts.last().unwrap();
+        let payload = deterministic_payload(0xBE9C, 0, total_bytes as u64);
+
+        let mut buf = Vec::new();
+        let moved =
+            scatter_csr_into_buf(&merged, &offsets, &lengths, &starts, &pay_starts, &payload, &mut buf);
+        let mut buf_ref = Vec::new();
+        let moved_ref = scatter_csr_into_buf_reference(
+            &merged, &offsets, &lengths, &starts, &pay_starts, &payload, &mut buf_ref,
+        );
+        assert_eq!(moved, moved_ref, "scatter moved-bytes diverged at n={n}");
+        assert_eq!(buf, buf_ref, "batched scatter diverged from reference at n={n}");
+
+        let r_batch = bench(&format!("kernel_scatter_batched/{n}"), budget, || {
+            black_box(scatter_csr_into_buf(
+                black_box(&merged),
+                black_box(&offsets),
+                black_box(&lengths),
+                black_box(&starts),
+                black_box(&pay_starts),
+                black_box(&payload),
+                &mut buf,
+            ));
+        });
+        println!("{r_batch}   ({:.1} Mentries/s)", r_batch.per_second(n as u64) / 1e6);
+        report.add(&r_batch);
+        let r_per = bench(&format!("kernel_scatter_reference/{n}"), budget, || {
+            black_box(scatter_csr_into_buf_reference(
+                black_box(&merged),
+                black_box(&offsets),
+                black_box(&lengths),
+                black_box(&starts),
+                black_box(&pay_starts),
+                black_box(&payload),
+                &mut buf,
+            ));
+        });
+        println!("{r_per}   ({:.1} Mentries/s)", r_per.per_second(n as u64) / 1e6);
+        report.add(&r_per);
+        let speedup = r_per.median.as_secs_f64() / r_batch.median.as_secs_f64();
+        println!("scatter batched speedup: {speedup:.2}x");
+        report.add_value(&format!("kernel_scatter_speedup/{n}"), speedup);
+
+        // ---- gather (read-direction reply assembly): the scattered
+        // buffer gathered back per stream must reproduce the payload.
+        let mut got = vec![0u8; total_bytes];
+        for s in 0..k {
+            let (lo, hi) = (starts[s], starts[s + 1]);
+            gather_slices_from_buf(
+                &merged,
+                &buf,
+                &offsets[lo..hi],
+                &lengths[lo..hi],
+                &mut got[pay_starts[s]..pay_starts[s + 1]],
+            );
+        }
+        assert_eq!(got, payload, "batched gather round-trip diverged at n={n}");
+        let mut got_ref = vec![0u8; total_bytes];
+        for s in 0..k {
+            let (lo, hi) = (starts[s], starts[s + 1]);
+            gather_slices_from_buf_reference(
+                &merged,
+                &buf,
+                &offsets[lo..hi],
+                &lengths[lo..hi],
+                &mut got_ref[pay_starts[s]..pay_starts[s + 1]],
+            );
+        }
+        assert_eq!(got_ref, payload, "reference gather round-trip diverged at n={n}");
+
+        let r_gather = bench(&format!("kernel_gather_batched/{n}"), budget, || {
+            for s in 0..k {
+                let (lo, hi) = (starts[s], starts[s + 1]);
+                gather_slices_from_buf(
+                    black_box(&merged),
+                    black_box(&buf),
+                    &offsets[lo..hi],
+                    &lengths[lo..hi],
+                    &mut got[pay_starts[s]..pay_starts[s + 1]],
+                );
+            }
+            black_box(&got);
+        });
+        println!("{r_gather}   ({:.1} Mentries/s)", r_gather.per_second(n as u64) / 1e6);
+        report.add(&r_gather);
+        let r_gref = bench(&format!("kernel_gather_reference/{n}"), budget, || {
+            for s in 0..k {
+                let (lo, hi) = (starts[s], starts[s + 1]);
+                gather_slices_from_buf_reference(
+                    black_box(&merged),
+                    black_box(&buf),
+                    &offsets[lo..hi],
+                    &lengths[lo..hi],
+                    &mut got[pay_starts[s]..pay_starts[s + 1]],
+                );
+            }
+            black_box(&got);
+        });
+        println!("{r_gref}   ({:.1} Mentries/s)", r_gref.per_second(n as u64) / 1e6);
+        report.add(&r_gref);
+        let speedup = r_gref.median.as_secs_f64() / r_gather.median.as_secs_f64();
+        println!("gather batched speedup: {speedup:.2}x");
+        report.add_value(&format!("kernel_gather_speedup/{n}"), speedup);
+    }
+}
+
+/// Worker-pool thread scaling at the paper's headline scale point:
+/// 16384 ranks on 256 nodes, one 512-byte block per rank in 8 pieces
+/// (the per-rank-machinery regime `hotpath.rs` uses), collective write
+/// end-to-end with a warm arena, at pool widths 1/2/4/all for tree
+/// depths 0 (two-phase), 1 (node aggregators), and 2 (socket + node).
+fn bench_thread_scaling(report: &mut JsonReport, budget: Duration) {
+    const NODES: usize = 256;
+    const PPN: usize = 64;
+    const N_AGG: usize = 64;
+    const BLOCK: u64 = 512;
+    const PIECES: u64 = 8;
+    let all = default_threads();
+    let mut widths = vec![1usize, 2, 4, all];
+    widths.sort_unstable();
+    widths.dedup();
+
+    let flat = Topology::new(NODES, PPN);
+    let hier = Topology::hierarchical(NODES, PPN, 2, 0, RankPlacement::Block);
+    let depths: [(&str, Algorithm, &Topology); 3] = [
+        ("depth0_two_phase", Algorithm::TwoPhase, &flat),
+        ("depth1_node", Algorithm::Tree("node=2".parse().unwrap()), &flat),
+        ("depth2_socket_node", Algorithm::Tree("socket=2,node=1".parse().unwrap()), &hier),
+    ];
+
+    let net = NetParams::default();
+    let cpu = CpuModel::default();
+    let io = IoModel::default();
+    let eng = NativeEngine;
+    for (label, algo, topo) in depths {
+        let p = topo.nprocs();
+        let total_reqs = (p as u64) * PIECES;
+        section(&format!(
+            "thread scaling: {label}, P={p} ({NODES} nodes x {PPN} ppn), widths {widths:?}"
+        ));
+        let ctx = CollectiveCtx {
+            topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: N_AGG,
+        };
+        let ranks: Vec<(usize, ReqBatch)> = (0..p)
+            .map(|r| {
+                let base = r as u64 * BLOCK;
+                let q = BLOCK / PIECES;
+                let view = FlatView::from_pairs((0..PIECES).map(|i| (base + i * q, q)).collect())
+                    .unwrap();
+                (r, ReqBatch::new(view, deterministic_payload(43, r, BLOCK)))
+            })
+            .collect();
+
+        let mut serial_median = None;
+        for &w in &widths {
+            let rt = Runtime::new(w);
+            let r = with_runtime(&rt, || {
+                let mut arena = ExchangeArena::default();
+                let mut file = LustreFile::new(LustreConfig::new(4096, N_AGG));
+                // Warm-up: overwrite regime, warm arena, warm pool lanes.
+                run_collective_write_with(&ctx, algo, ranks.clone(), &mut file, &mut arena)
+                    .expect("warm-up");
+                bench(&format!("thread_scaling/{label}/w{w}"), budget, || {
+                    black_box(
+                        run_collective_write_with(
+                            black_box(&ctx),
+                            black_box(algo),
+                            black_box(ranks.clone()),
+                            black_box(&mut file),
+                            black_box(&mut arena),
+                        )
+                        .expect("write"),
+                    );
+                })
+            });
+            println!("{r}   ({:.2} Mreqs/s)", r.per_second(total_reqs) / 1e6);
+            report.add(&r);
+            let med = r.median.as_secs_f64();
+            match serial_median {
+                None => serial_median = Some(med),
+                Some(t1) => {
+                    let speedup = t1 / med;
+                    println!("  speedup over width 1: {speedup:.2}x");
+                    report.add_value(&format!("thread_scaling_speedup/{label}/w{w}"), speedup);
+                }
+            }
+        }
+    }
+}
+
+/// Splice this bench's entries into `BENCH_hotpath.json` under an
+/// `"engine_micro"` key: the `hotpath` bench owns (and rewrites) the
+/// `"benches"` array, so appending there would be clobbered; a separate
+/// key that this bench replaces wholesale keeps both re-runnable in any
+/// order without duplicating entries.
+fn emit_json(report: &JsonReport) {
+    const PATH: &str = "BENCH_hotpath.json";
+    const KEY: &str = ", \"engine_micro\": [";
+    let mine = report.to_json();
+    let body = mine
+        .strip_prefix("{\"benches\": [")
+        .and_then(|s| s.strip_suffix("]}"))
+        .expect("JsonReport shape");
+    let head = match std::fs::read_to_string(PATH) {
+        Ok(s) if s.starts_with('{') && s.ends_with('}') => match s.find(KEY) {
+            Some(cut) => s[..cut].to_string(),
+            None => s[..s.len() - 1].to_string(),
+        },
+        _ => String::from("{\"benches\": []"),
+    };
+    let merged = format!("{head}{KEY}{body}]}}");
+    std::fs::write(PATH, merged).expect("write BENCH_hotpath.json");
+    println!("\nspliced engine_micro panels into {PATH}");
+}
+
 fn main() {
     let budget = Duration::from_millis(400);
+    let mut report = JsonReport::new();
     for (k, per) in [(16usize, 1_000usize), (64, 4_000), (256, 4_000)] {
         let n = k * per;
         section(&format!("merge+coalesce of {n} pairs from {k} streams"));
@@ -58,6 +371,10 @@ fn main() {
         println!("{r}   ({:.1} Mpairs/s)", r.per_second(n as u64) / 1e6);
     }
 
+    report.add_value("simd_feature_enabled", if cfg!(feature = "simd") { 1.0 } else { 0.0 });
+    bench_kernels(&mut report, budget);
+    bench_thread_scaling(&mut report, budget);
+
     match XlaEngine::load_default() {
         Ok(xla) => {
             for n in [256usize, 4096, 16384] {
@@ -76,4 +393,6 @@ fn main() {
         }
         Err(e) => println!("\nxla engine skipped: {e}"),
     }
+
+    emit_json(&report);
 }

@@ -58,6 +58,10 @@ pub struct RunConfig {
     pub plan_cache: Option<String>,
     /// Warm plans the in-memory LRU holds (`--plan-cache-size`).
     pub plan_cache_size: usize,
+    /// Worker-pool width (`--threads`); `None` defers to `TAMIO_THREADS`
+    /// and then `available_parallelism()` (resolved in
+    /// [`crate::util::runtime::default_threads`]).
+    pub threads: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -82,6 +86,7 @@ impl Default for RunConfig {
             verify: false,
             plan_cache: None,
             plan_cache_size: 8,
+            threads: None,
         }
     }
 }
@@ -200,6 +205,17 @@ impl RunConfig {
                 }
                 self.plan_cache_size = n;
             }
+            "threads" => {
+                let n = parse_u64(value)? as usize;
+                if n == 0 {
+                    return Err(Error::config(
+                        "threads must be at least 1 (omit --threads to use \
+                         TAMIO_THREADS or all available cores)"
+                            .to_string(),
+                    ));
+                }
+                self.threads = Some(n);
+            }
             other => {
                 return Err(Error::config(format!("unknown config key '{other}'")));
             }
@@ -307,6 +323,20 @@ mod tests {
         let bad = KvMap::from_pairs(vec![("plan-cache-size".into(), "0".into())]);
         let err = c.apply(&bad).unwrap_err().to_string();
         assert!(err.contains("at least 1"), "{err}");
+    }
+
+    #[test]
+    fn threads_key_applies_and_rejects_zero() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.threads, None);
+        let kv = KvMap::from_pairs(vec![("threads".into(), "4".into())]);
+        c.apply(&kv).unwrap();
+        assert_eq!(c.threads, Some(4));
+        let bad = KvMap::from_pairs(vec![("threads".into(), "0".into())]);
+        let err = c.apply(&bad).unwrap_err().to_string();
+        assert!(err.contains("at least 1"), "{err}");
+        let garbage = KvMap::from_pairs(vec![("threads".into(), "many".into())]);
+        assert!(c.apply(&garbage).is_err(), "non-numeric threads must hard-error");
     }
 
     #[test]

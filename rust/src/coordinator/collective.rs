@@ -34,6 +34,7 @@ use crate::lustre::{LustreConfig, LustreFile, OstStats};
 use crate::mpisim::FlatView;
 use crate::netmodel::phase::{cost_phase, Message, PendingQueue};
 use crate::util::par_map;
+use crate::util::runtime;
 
 /// Persistent buffers of the exchange round loop, owned by the caller so
 /// their capacity survives across rounds *and* across `run_*` invocations
@@ -665,6 +666,7 @@ pub fn execute_exchange(
         slot.reset_exchange(n_osts);
     }
     let mut scratch = std::mem::take(&mut arena.scratch);
+    let rt = runtime::current();
     for round in 0..n_rounds {
         // Stage this round's requests per aggregator: slab slices out of
         // the requester's MyReqs are memcpy'd into the aggregator's
@@ -692,27 +694,37 @@ pub fn execute_exchange(
 
         // Aggregator-side merge (+ payload scatter on writes, vectored
         // file read on reads), concurrent across aggregators → max for
-        // time, real bytes either way.  The engine streams the
-        // already-sorted peer views into the reused merged arena, and an
-        // engine or storage failure propagates as `Err` instead of
-        // aborting a worker thread.
-        let merged: Vec<Result<RoundScratch>> = match &io {
-            ExchangeIo::Write(_) => par_map(std::mem::take(&mut scratch), |mut slot| {
-                slot.merge_scatter(ctx.engine)?;
-                Ok(slot)
-            }),
+        // time, real bytes either way.  One fine-grained `(round,
+        // aggregator)` task per slot on the persistent pool: slots are
+        // mutated IN PLACE (no per-round drain/rebuild, so the arena
+        // capacity stays put), workers steal tasks but each task owns
+        // exactly its pre-assigned slot (determinism), and an engine or
+        // storage failure — or a panic — surfaces with the failing
+        // task's round + aggregator identity.
+        match &io {
+            ExchangeIo::Write(_) => rt.try_for_each_mut(
+                &mut scratch,
+                &|agg| format!("write exchange round {round}, aggregator {agg}"),
+                |_, slot| {
+                    slot.merge_scatter(ctx.engine)?;
+                    Ok(())
+                },
+            )?,
             ExchangeIo::Read(f) => {
                 let file = *f;
-                par_map(std::mem::take(&mut scratch), |mut slot| {
-                    slot.merge_meta(ctx.engine)?;
-                    if !slot.merged.is_empty() {
-                        file.read_view(&slot.merged, &mut slot.payload, &mut slot.stats)?;
-                    }
-                    Ok(slot)
-                })
+                rt.try_for_each_mut(
+                    &mut scratch,
+                    &|agg| format!("read exchange round {round}, aggregator {agg}"),
+                    |_, slot| {
+                        slot.merge_meta(ctx.engine)?;
+                        if !slot.merged.is_empty() {
+                            file.read_view(&slot.merged, &mut slot.payload, &mut slot.stats)?;
+                        }
+                        Ok(())
+                    },
+                )?;
             }
-        };
-        scratch = merged.into_iter().collect::<Result<Vec<_>>>()?;
+        }
 
         let mut sort_t: f64 = 0.0;
         let mut dt_t: f64 = 0.0;

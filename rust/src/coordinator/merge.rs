@@ -61,6 +61,171 @@ fn absorb(last: &mut Option<(u64, u64)>, out: &mut FlatView, off: u64, len: u64)
     }
 }
 
+// ---------------------------------------------------------------------------
+// Chunked, branchless kernel primitives.
+//
+// The merge/scatter inner loops spend their time on two questions asked
+// once per *entry*: "may this stream keep galloping past the heap top?"
+// and "does the coalesced run break here?".  Both are answered over
+// fixed-width chunks of `CHUNK` u64 lanes instead — a branchless
+// compare-and-count per chunk with a scalar tail — which the compiler
+// autovectorizes on the default build and which maps 1:1 onto
+// `std::simd` mask ops under `--features simd`.  The `*_scalar` forms
+// are ALWAYS compiled (and oracle-tested against the SIMD forms when the
+// feature is on), so the scalar fallback cannot rot.
+// ---------------------------------------------------------------------------
+
+/// Lane width of the chunked kernels (u64x8 under `simd`).
+const CHUNK: usize = 8;
+
+/// Count lanes of `xs[..CHUNK]` strictly below `bound` — branchless
+/// sum-of-compares.  For nondecreasing `xs` (the file-view guarantee)
+/// this is the in-chunk lower bound of `bound`.
+#[inline]
+fn count_lt_chunk_scalar(xs: &[u64], bound: u64) -> usize {
+    let mut c = 0usize;
+    for t in 0..CHUNK {
+        c += (xs[t] < bound) as usize;
+    }
+    c
+}
+
+/// Bitmask of coalescing breaks over `CHUNK` adjacencies: bit `t` set
+/// iff `offsets[t] + lengths[t] != offsets[t + 1]` (needs `CHUNK + 1`
+/// offsets).  Branchless compare-accumulate.
+#[inline]
+fn break_mask_chunk_scalar(offsets: &[u64], lengths: &[u64]) -> u64 {
+    let mut m = 0u64;
+    for t in 0..CHUNK {
+        m |= ((offsets[t] + lengths[t] != offsets[t + 1]) as u64) << t;
+    }
+    m
+}
+
+#[cfg(feature = "simd")]
+#[inline]
+fn count_lt_chunk_simd(xs: &[u64], bound: u64) -> usize {
+    use std::simd::prelude::*;
+    let v = u64x8::from_slice(&xs[..CHUNK]);
+    v.simd_lt(u64x8::splat(bound)).to_bitmask().count_ones() as usize
+}
+
+#[cfg(feature = "simd")]
+#[inline]
+fn break_mask_chunk_simd(offsets: &[u64], lengths: &[u64]) -> u64 {
+    use std::simd::prelude::*;
+    let off = u64x8::from_slice(&offsets[..CHUNK]);
+    let len = u64x8::from_slice(&lengths[..CHUNK]);
+    let next = u64x8::from_slice(&offsets[1..CHUNK + 1]);
+    (off + len).simd_ne(next).to_bitmask()
+}
+
+#[inline]
+fn count_lt_chunk(xs: &[u64], bound: u64) -> usize {
+    #[cfg(feature = "simd")]
+    {
+        count_lt_chunk_simd(xs, bound)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        count_lt_chunk_scalar(xs, bound)
+    }
+}
+
+#[inline]
+fn break_mask_chunk(offsets: &[u64], lengths: &[u64]) -> u64 {
+    #[cfg(feature = "simd")]
+    {
+        break_mask_chunk_simd(offsets, lengths)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        break_mask_chunk_scalar(offsets, lengths)
+    }
+}
+
+/// How many entries of `offsets/lengths[lo..hi]` (stream `s`, slab row
+/// = index) the gallop may consume against a FIXED heap top: the length
+/// of the maximal prefix with `(offsets[j], lengths[j], s, j) <= top`.
+///
+/// Offsets are nondecreasing within a stream, so every entry with
+/// `offsets[j] < top.0` is consumed unconditionally — counted in
+/// branchless chunks — and only the `offsets[j] == top.0` boundary zone
+/// needs the full scalar tuple compare (which stops exactly where the
+/// per-entry reference loop stops).
+#[inline]
+fn gallop_len(
+    offsets: &[u64],
+    lengths: &[u64],
+    lo: usize,
+    hi: usize,
+    s: usize,
+    top: (u64, u64, usize, usize),
+) -> usize {
+    let bound = top.0;
+    let mut j = lo;
+    while j + CHUNK <= hi {
+        let c = count_lt_chunk(&offsets[j..], bound);
+        j += c;
+        if c < CHUNK {
+            break;
+        }
+    }
+    if j + CHUNK > hi {
+        while j < hi && offsets[j] < bound {
+            j += 1;
+        }
+    }
+    // Boundary zone: equal offsets decided by the full tuple order.
+    while j < hi && offsets[j] == bound && (offsets[j], lengths[j], s, j) <= top {
+        j += 1;
+    }
+    j - lo
+}
+
+/// Index of the first coalescing break at or after `a` (the run
+/// `a..=break` is contiguous); `n - 1` when the rest is one run.
+/// Chunked scan over `CHUNK` adjacencies at a time.
+#[inline]
+fn next_break(offsets: &[u64], lengths: &[u64], a: usize) -> usize {
+    let n = offsets.len();
+    debug_assert!(a < n);
+    let mut j = a;
+    while j + CHUNK < n {
+        let m = break_mask_chunk(&offsets[j..], &lengths[j..]);
+        if m != 0 {
+            return j + m.trailing_zeros() as usize;
+        }
+        j += CHUNK;
+    }
+    while j + 1 < n {
+        if offsets[j] + lengths[j] != offsets[j + 1] {
+            return j;
+        }
+        j += 1;
+    }
+    n - 1
+}
+
+/// Absorb the already-claimed run `offsets/lengths[..n]` into the
+/// coalesce state: chunked break detection splits it into contiguous
+/// sub-runs, and each sub-run enters [`absorb`] as ONE aggregated pair
+/// (`end - start` bytes) instead of entry by entry.  Bit-identical to
+/// the per-entry loop: within a contiguous sub-run the per-entry fold
+/// only ever extends, so folding the precomputed total is the same
+/// arithmetic.
+#[inline]
+fn absorb_run(offsets: &[u64], lengths: &[u64], last: &mut Option<(u64, u64)>, out: &mut FlatView) {
+    let n = offsets.len();
+    let mut a = 0usize;
+    while a < n {
+        let b = next_break(offsets, lengths, a);
+        let seg_len = offsets[b] + lengths[b] - offsets[a];
+        absorb(last, out, offsets[a], seg_len);
+        a = b + 1;
+    }
+}
+
 /// K-way heap merge of sorted views into one sorted, coalesced view.
 ///
 /// Allocating convenience wrapper over [`merge_views_into`].
@@ -85,6 +250,39 @@ pub fn merge_views(views: &[&FlatView]) -> FlatView {
 /// collapses most heap traffic while popping in the exact same order as
 /// the plain heap algorithm.
 pub fn merge_views_into(views: &[&FlatView], out: &mut FlatView) {
+    out.clear();
+    let mut heap: BinaryHeap<Reverse<(u64, u64, usize, usize)>> = views
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_empty())
+        .map(|(s, v)| Reverse((v.offsets()[0], v.lengths()[0], s, 0usize)))
+        .collect();
+    let mut last: Option<(u64, u64)> = None;
+    while let Some(Reverse((_, _, s, i))) = heap.pop() {
+        let v = views[s];
+        let (offsets, lengths) = (v.offsets(), v.lengths());
+        let hi = v.len();
+        // The heap is untouched while one stream gallops, so the top is
+        // a FIXED bound: claim the whole run in one chunked scan, then
+        // absorb it with chunked break detection.
+        let take = match heap.peek() {
+            None => hi - i,
+            Some(&Reverse(top)) => 1 + gallop_len(offsets, lengths, i + 1, hi, s, top),
+        };
+        absorb_run(&offsets[i..i + take], &lengths[i..i + take], &mut last, out);
+        if i + take < hi {
+            heap.push(Reverse((offsets[i + take], lengths[i + take], s, i + take)));
+        }
+    }
+    if let Some((lo, ll)) = last {
+        out.push(lo, ll);
+    }
+}
+
+/// Per-entry reference implementation of [`merge_views_into`] (the
+/// pre-chunking hot path).  Kept compiled as the equivalence oracle for
+/// the chunked/SIMD kernels and as the bench baseline.
+pub fn merge_views_into_reference(views: &[&FlatView], out: &mut FlatView) {
     out.clear();
     let mut heap: BinaryHeap<Reverse<(u64, u64, usize, usize)>> = views
         .iter()
@@ -153,6 +351,46 @@ pub fn merge_csr_into(
         }
     }
     // Heapify in place (no allocation); the Vec is recovered at the end.
+    let mut heap = BinaryHeap::from(std::mem::take(&mut scratch.heap));
+    let mut last: Option<(u64, u64)> = None;
+    while let Some(Reverse((_, _, s, i))) = heap.pop() {
+        let hi = starts[s + 1];
+        // Fixed heap top while this stream gallops: chunked claim of the
+        // whole run, then chunked-coalesce absorb (see merge_views_into).
+        let take = match heap.peek() {
+            None => hi - i,
+            Some(&Reverse(top)) => 1 + gallop_len(offsets, lengths, i + 1, hi, s, top),
+        };
+        absorb_run(&offsets[i..i + take], &lengths[i..i + take], &mut last, out);
+        if i + take < hi {
+            heap.push(Reverse((offsets[i + take], lengths[i + take], s, i + take)));
+        }
+    }
+    if let Some((lo, ll)) = last {
+        out.push(lo, ll);
+    }
+    scratch.heap = heap.into_vec();
+    scratch.heap.clear();
+}
+
+/// Per-entry reference implementation of [`merge_csr_into`] — the
+/// equivalence oracle and bench baseline for the chunked CSR merge.
+pub fn merge_csr_into_reference(
+    offsets: &[u64],
+    lengths: &[u64],
+    starts: &[usize],
+    scratch: &mut MergeScratch,
+    out: &mut FlatView,
+) {
+    out.clear();
+    let k = starts.len().saturating_sub(1);
+    scratch.heap.clear();
+    for s in 0..k {
+        let lo = starts[s];
+        if lo < starts[s + 1] {
+            scratch.heap.push(Reverse((offsets[lo], lengths[lo], s, lo)));
+        }
+    }
     let mut heap = BinaryHeap::from(std::mem::take(&mut scratch.heap));
     let mut last: Option<(u64, u64)> = None;
     while let Some(Reverse((off, len, s, i))) = heap.pop() {
@@ -287,6 +525,73 @@ pub fn scatter_csr_into_buf(
         let mut seg = 0usize;
         // Payload position of segment `seg` within the merged buffer.
         let mut seg_start = 0u64;
+        let (lo, hi) = (starts[s], starts[s + 1]);
+        let mut i = lo;
+        while i < hi {
+            let (off, len) = (in_offsets[i], in_lengths[i]);
+            while seg + 1 < seg_offsets.len() && seg_offsets[seg + 1] <= off {
+                seg_start += seg_lengths[seg];
+                seg += 1;
+            }
+            // Batch the file-contiguous run that stays inside the
+            // current merged segment: the source is contiguous in
+            // `in_payload` by construction (payload travels in view
+            // order) and the destination is contiguous because no `seg`
+            // advance happens, so the whole run is ONE memcpy.
+            let next_seg_off =
+                if seg + 1 < seg_offsets.len() { seg_offsets[seg + 1] } else { u64::MAX };
+            let mut end = off + len;
+            let mut run = len;
+            let mut j = i + 1;
+            while j < hi && in_offsets[j] == end && in_offsets[j] < next_seg_off {
+                run += in_lengths[j];
+                end += in_lengths[j];
+                j += 1;
+            }
+            let within = off - seg_offsets[seg];
+            debug_assert!(within + run <= seg_lengths[seg]);
+            let dst = (seg_start + within) as usize;
+            payload_out[dst..dst + run as usize]
+                .copy_from_slice(&in_payload[cursor..cursor + run as usize]);
+            cursor += run as usize;
+            moved += run;
+            i = j;
+        }
+        debug_assert_eq!(cursor, pay_starts[s + 1], "stream payload span fully consumed");
+    }
+    moved
+}
+
+/// Per-request reference implementation of [`scatter_csr_into_buf`]
+/// (one `copy_from_slice` per staged request) — the equivalence oracle
+/// and bench baseline for the run-batched scatter.
+#[allow(clippy::too_many_arguments)]
+pub fn scatter_csr_into_buf_reference(
+    merged: &FlatView,
+    in_offsets: &[u64],
+    in_lengths: &[u64],
+    starts: &[usize],
+    pay_starts: &[usize],
+    in_payload: &[u8],
+    payload_out: &mut Vec<u8>,
+) -> u64 {
+    let total = merged.total_bytes() as usize;
+    payload_out.clear();
+    payload_out.resize(total, 0);
+    if in_payload.is_empty() {
+        return 0;
+    }
+    let seg_offsets = merged.offsets();
+    let seg_lengths = merged.lengths();
+    let mut moved = 0u64;
+    let k = starts.len().saturating_sub(1);
+    for s in 0..k {
+        let mut cursor = pay_starts[s];
+        if cursor == pay_starts[s + 1] {
+            continue;
+        }
+        let mut seg = 0usize;
+        let mut seg_start = 0u64;
         for i in starts[s]..starts[s + 1] {
             let (off, len) = (in_offsets[i], in_lengths[i]);
             while seg + 1 < seg_offsets.len() && seg_offsets[seg + 1] <= off {
@@ -334,9 +639,68 @@ pub fn gather_slices_from_buf(
     debug_assert_eq!(offsets.len(), lengths.len());
     let seg_offsets = merged.offsets();
     let seg_lengths = merged.lengths();
+    let n = offsets.len();
     let mut cursor = 0usize;
     let mut seg = 0usize;
     // Payload position of segment `seg` within the merged buffer.
+    let mut seg_start = 0u64;
+    let mut moved = 0u64;
+    let mut i = 0usize;
+    while i < n {
+        let (off, len) = (offsets[i], lengths[i]);
+        // Zero-length requests occupy no bytes on either side — and,
+        // matching the per-request reference, never advance `seg`.
+        if len == 0 {
+            i += 1;
+            continue;
+        }
+        while seg + 1 < seg_offsets.len() && seg_offsets[seg + 1] <= off {
+            seg_start += seg_lengths[seg];
+            seg += 1;
+        }
+        // Batch the file-contiguous run staying inside this merged
+        // segment into ONE memcpy: destination (`out`, view order) is
+        // contiguous by construction, source is contiguous because no
+        // `seg` advance happens.  Zero-length requests at the running
+        // end join the run (they contribute no bytes either way).
+        let next_seg_off =
+            if seg + 1 < seg_offsets.len() { seg_offsets[seg + 1] } else { u64::MAX };
+        let mut end = off + len;
+        let mut run = len;
+        let mut j = i + 1;
+        while j < n && offsets[j] == end && offsets[j] < next_seg_off {
+            run += lengths[j];
+            end += lengths[j];
+            j += 1;
+        }
+        let within = off - seg_offsets[seg];
+        debug_assert!(within + run <= seg_lengths[seg], "request not covered by merged view");
+        let src = (seg_start + within) as usize;
+        out[cursor..cursor + run as usize]
+            .copy_from_slice(&payload[src..src + run as usize]);
+        cursor += run as usize;
+        moved += run;
+        i = j;
+    }
+    moved
+}
+
+/// Per-request reference implementation of [`gather_slices_from_buf`]
+/// (one `copy_from_slice` per view request) — the equivalence oracle
+/// and bench baseline for the run-batched gather.
+pub fn gather_slices_from_buf_reference(
+    merged: &FlatView,
+    payload: &[u8],
+    offsets: &[u64],
+    lengths: &[u64],
+    out: &mut [u8],
+) -> u64 {
+    debug_assert_eq!(payload.len() as u64, merged.total_bytes());
+    debug_assert_eq!(offsets.len(), lengths.len());
+    let seg_offsets = merged.offsets();
+    let seg_lengths = merged.lengths();
+    let mut cursor = 0usize;
+    let mut seg = 0usize;
     let mut seg_start = 0u64;
     let mut moved = 0u64;
     for (&off, &len) in offsets.iter().zip(lengths) {
@@ -1026,6 +1390,215 @@ mod tests {
                 .flat_map(|c| sort_coalesce_pairs(c.to_vec()))
                 .collect();
             assert_eq!(combine_coalesced_partials(partials), want);
+        }
+    }
+
+    /// Randomized CSR staging shared by the chunked-kernel oracles:
+    /// returns staged scratch + the batches it was staged from.
+    /// `runs` picks run-structured streams (long contiguous stretches —
+    /// the chunked gallop/run-detection fast path) over scattered ones;
+    /// both regimes mix in zero-length requests and payload-less
+    /// (metadata-only) streams.
+    fn random_staging(rng: &mut crate::util::SplitMix64, runs: bool) -> (RoundScratch, Vec<ReqBatch>) {
+        let k = 1 + rng.gen_range(7) as usize;
+        let mut batches = Vec::new();
+        for tag in 0..k {
+            let n = rng.gen_range(120) as usize;
+            let mut pairs = Vec::new();
+            let mut cursor = rng.gen_range(64);
+            for _ in 0..n {
+                let len = rng.gen_range(9); // includes zero-length
+                // Run-structured: mostly contiguous, occasional jumps —
+                // the regime the chunked advance is built for.
+                let jump = if runs { rng.gen_bool(0.08) } else { rng.gen_bool(0.5) };
+                if jump {
+                    cursor += 1 + rng.gen_range(40);
+                }
+                pairs.push((cursor, len));
+                cursor += len;
+            }
+            let view = fv(&pairs);
+            let payload: Vec<u8> = if rng.gen_bool(0.2) {
+                Vec::new()
+            } else {
+                (0..view.total_bytes()).map(|i| (i as u8).wrapping_mul(31) ^ tag as u8).collect()
+            };
+            batches.push(ReqBatch::new(view, payload));
+        }
+        let mut s = RoundScratch::default();
+        s.reset_round();
+        for (i, b) in batches.iter().enumerate() {
+            s.stage_batch(i, b);
+        }
+        (s, batches)
+    }
+
+    #[test]
+    fn chunked_merge_matches_reference_kernels() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0xCAFE_0001);
+        let mut scratch = MergeScratch::default();
+        let mut ref_scratch = MergeScratch::default();
+        let mut got = FlatView::empty();
+        let mut want = FlatView::empty();
+        for case in 0..80 {
+            let runs = case % 2 == 0;
+            let (s, batches) = random_staging(&mut rng, runs);
+            // CSR form: chunked vs per-entry reference.
+            merge_csr_into(&s.in_offsets, &s.in_lengths, &s.starts, &mut scratch, &mut got);
+            merge_csr_into_reference(
+                &s.in_offsets,
+                &s.in_lengths,
+                &s.starts,
+                &mut ref_scratch,
+                &mut want,
+            );
+            assert_eq!(got, want, "case {case}: CSR merge diverged from reference");
+            // Slice-per-stream form: chunked vs per-entry reference.
+            let views: Vec<&FlatView> = batches.iter().map(|b| &b.view).collect();
+            merge_views_into(&views, &mut got);
+            merge_views_into_reference(&views, &mut want);
+            assert_eq!(got, want, "case {case}: view merge diverged from reference");
+        }
+    }
+
+    #[test]
+    fn batched_scatter_gather_match_reference_kernels() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0xCAFE_0002);
+        let mut scratch = MergeScratch::default();
+        let mut merged = FlatView::empty();
+        for case in 0..80 {
+            let runs = case % 2 == 0;
+            let (s, batches) = random_staging(&mut rng, runs);
+            merge_csr_into(&s.in_offsets, &s.in_lengths, &s.starts, &mut scratch, &mut merged);
+            let mut got_buf = Vec::new();
+            let mut want_buf = Vec::new();
+            let got_moved = scatter_csr_into_buf(
+                &merged,
+                &s.in_offsets,
+                &s.in_lengths,
+                &s.starts,
+                &s.pay_starts,
+                &s.in_payload,
+                &mut got_buf,
+            );
+            let want_moved = scatter_csr_into_buf_reference(
+                &merged,
+                &s.in_offsets,
+                &s.in_lengths,
+                &s.starts,
+                &s.pay_starts,
+                &s.in_payload,
+                &mut want_buf,
+            );
+            assert_eq!(got_buf, want_buf, "case {case}: scatter diverged from reference");
+            assert_eq!(got_moved, want_moved, "case {case}");
+            for (i, b) in batches.iter().enumerate() {
+                let nbytes = b.view.total_bytes() as usize;
+                let mut got_out = vec![0u8; nbytes];
+                let mut want_out = vec![0u8; nbytes];
+                let (vo, vl) = s.stream(i);
+                let gm = gather_slices_from_buf(&merged, &got_buf, vo, vl, &mut got_out);
+                let wm = gather_slices_from_buf_reference(&merged, &want_buf, vo, vl, &mut want_out);
+                assert_eq!(got_out, want_out, "case {case} stream {i}: gather diverged");
+                assert_eq!(gm, wm, "case {case} stream {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_primitives_match_naive() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0xCAFE_0003);
+        for _ in 0..200 {
+            // Sorted offsets with plateaus; lengths with zeros.
+            let mut offsets = Vec::with_capacity(CHUNK + 1);
+            let mut lengths = Vec::with_capacity(CHUNK + 1);
+            let mut cur = rng.gen_range(16);
+            for _ in 0..CHUNK + 1 {
+                offsets.push(cur);
+                let len = rng.gen_range(4);
+                lengths.push(len);
+                // ~half the adjacencies contiguous, rest break.
+                cur += len + if rng.gen_bool(0.5) { 0 } else { 1 + rng.gen_range(8) };
+            }
+            let bound = offsets[rng.gen_range(CHUNK as u64 + 1) as usize] + rng.gen_range(2);
+            let naive_count =
+                offsets[..CHUNK].iter().filter(|&&x| x < bound).count();
+            assert_eq!(count_lt_chunk_scalar(&offsets, bound), naive_count);
+            assert_eq!(count_lt_chunk(&offsets, bound), naive_count);
+            let mut naive_mask = 0u64;
+            for t in 0..CHUNK {
+                naive_mask |= ((offsets[t] + lengths[t] != offsets[t + 1]) as u64) << t;
+            }
+            assert_eq!(break_mask_chunk_scalar(&offsets, &lengths), naive_mask);
+            assert_eq!(break_mask_chunk(&offsets, &lengths), naive_mask);
+        }
+    }
+
+    /// The scalar-fallback guarantee: when the `simd` feature is on,
+    /// both lane implementations are compiled and must agree bit-for-bit
+    /// on every input (the default build compiles only the scalar form,
+    /// where agreement is definitional).
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_chunks_match_scalar_chunks() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0xCAFE_0004);
+        for _ in 0..500 {
+            let mut offsets = Vec::with_capacity(CHUNK + 1);
+            let mut lengths = Vec::with_capacity(CHUNK + 1);
+            let mut cur = rng.gen_range(1 << 40);
+            for _ in 0..CHUNK + 1 {
+                offsets.push(cur);
+                let len = rng.gen_range(1 << 20);
+                lengths.push(len);
+                cur += len + if rng.gen_bool(0.5) { 0 } else { rng.gen_range(1 << 20) };
+            }
+            let bound = offsets[4].wrapping_add(rng.gen_range(3)).wrapping_sub(1);
+            assert_eq!(
+                count_lt_chunk_simd(&offsets, bound),
+                count_lt_chunk_scalar(&offsets, bound)
+            );
+            assert_eq!(
+                break_mask_chunk_simd(&offsets, &lengths),
+                break_mask_chunk_scalar(&offsets, &lengths)
+            );
+        }
+    }
+
+    #[test]
+    fn gallop_len_stops_where_reference_stops() {
+        // Boundary zone: entries sharing the top's offset are decided by
+        // the full (off, len, stream, row) tuple, exactly like the
+        // per-entry loop.
+        let offsets = [10, 20, 30, 30, 30, 40, 50, 60, 70, 80, 90, 95];
+        let lengths = [5, 5, 0, 4, 9, 5, 5, 5, 5, 5, 5, 1];
+        let n = offsets.len();
+        // Top stream is 1; galloping streams 0 and 3 sit on either side
+        // of it in the tie-break order (two entries of one stream never
+        // coexist in the heap, so s == 1 cannot occur).
+        for s in [0usize, 3] {
+            for ti in [0usize, 7] {
+                for top_off in [5u64, 25, 30, 31, 100, 200] {
+                    for top_len in [0u64, 4, 6] {
+                        let top = (top_off, top_len, 1usize, ti);
+                        let got = gallop_len(&offsets, &lengths, 0, n, s, top);
+                        // Per-entry reference: maximal prefix <= top.
+                        let mut want = 0usize;
+                        while want < n
+                            && (offsets[want], lengths[want], s, want) <= top
+                        {
+                            want += 1;
+                        }
+                        assert_eq!(
+                            got, want,
+                            "top {top:?} stream {s}: chunked gallop diverged"
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -43,6 +43,7 @@ use crate::lustre::LustreFile;
 use crate::mpisim::FlatView;
 use crate::netmodel::phase::{cost_phase, Message};
 use crate::util::par_map;
+use crate::util::runtime;
 
 /// Per-group aggregator counts of an N-level tree — the
 /// `--algorithm tree:socket=4,node=2,switch=1` knob.  A zero count
@@ -319,29 +320,35 @@ pub fn aggregate_level_write(
     let comm = cost_phase(ctx.net, ctx.topo, &msgs).time;
     drop(batches);
 
-    // Aggregators merge + scatter concurrently (engine hot path); engine
-    // errors propagate as `Err` instead of aborting a worker thread (on
-    // that path the level's slots are dropped and re-grown next time —
-    // capacity, never correctness, is lost).
-    let merged: Vec<Result<(RoundScratch, u64)>> =
-        par_map(std::mem::take(slots), |mut slot| {
-            let moved = slot.merge_scatter(ctx.engine)?;
-            Ok((slot, moved))
-        });
-    let merged: Vec<(RoundScratch, u64)> = merged.into_iter().collect::<Result<Vec<_>>>()?;
+    // Aggregators merge + scatter concurrently (engine hot path) — one
+    // fine-grained task per slot on the persistent pool, mutated in
+    // place so the level's arena capacity never moves; engine errors
+    // and panics surface with the level kind + aggregator identity.
+    let mut moved_bytes = vec![0u64; slots.len()];
+    {
+        let mut work: Vec<(&mut RoundScratch, &mut u64)> =
+            slots.iter_mut().zip(moved_bytes.iter_mut()).collect();
+        runtime::current().try_for_each_mut(
+            &mut work,
+            &|i| format!("write gather at {:?} level, aggregator slot {i}", level.kind),
+            |_, (slot, moved)| {
+                **moved = slot.merge_scatter(ctx.engine)?;
+                Ok(())
+            },
+        )?;
+    }
 
     let mut sort = 0.0f64;
     let mut memcpy = 0.0f64;
     let mut reqs_after = 0u64;
     let mut out_batches: Vec<(usize, ReqBatch)> = Vec::new();
-    let mut returned = Vec::with_capacity(merged.len());
-    for (i, (slot, moved)) in merged.into_iter().enumerate() {
+    for (i, slot) in slots.iter().enumerate() {
         // Surplus slots from a larger earlier level stay warm and idle
         // (`k == 0`); only aggregators that received a member batch emit
         // a tier batch.
         if slot.k > 0 {
             sort = sort.max(ctx.cpu.merge_time(slot.n_items, slot.k));
-            memcpy = memcpy.max(ctx.cpu.memcpy_time(moved));
+            memcpy = memcpy.max(ctx.cpu.memcpy_time(moved_bytes[i]));
             reqs_after += slot.merged.len() as u64;
             // Deliberate copy-out: the outgoing batch is cloned from the
             // slot so the slot's buffers stay warm in the arena (a swap
@@ -353,9 +360,7 @@ pub fn aggregate_level_write(
             out_batches
                 .push((level.ranks[i], ReqBatch::new(slot.merged.clone(), slot.payload.clone())));
         }
-        returned.push(slot);
     }
-    *slots = returned;
     Ok(LevelWriteOutcome {
         batches: out_batches,
         comm,
@@ -407,23 +412,25 @@ pub fn aggregate_level_read_views(
     }
     let comm = cost_phase(ctx.net, ctx.topo, &msgs).time;
 
-    let merged: Vec<Result<RoundScratch>> = par_map(std::mem::take(slots), |mut slot| {
-        slot.merge_meta(ctx.engine)?;
-        Ok(slot)
-    });
-    let merged: Vec<RoundScratch> = merged.into_iter().collect::<Result<Vec<_>>>()?;
+    // One task per slot on the persistent pool, mutated in place (see
+    // aggregate_level_write); failures carry the level + slot identity.
+    runtime::current().try_for_each_mut(
+        slots.as_mut_slice(),
+        &|i| format!("read gather at {:?} level, aggregator slot {i}", level.kind),
+        |_, slot| {
+            slot.merge_meta(ctx.engine)?;
+            Ok(())
+        },
+    )?;
 
     let mut sort = 0.0f64;
     let mut agg_views: Vec<(usize, FlatView)> = Vec::new();
-    let mut returned = Vec::with_capacity(merged.len());
-    for (i, slot) in merged.into_iter().enumerate() {
+    for (i, slot) in slots.iter().enumerate() {
         if slot.k > 0 {
             sort = sort.max(ctx.cpu.merge_time(slot.n_items, slot.k));
             agg_views.push((level.ranks[i], slot.merged.clone()));
         }
-        returned.push(slot);
     }
-    *slots = returned;
     Ok(LevelReadOutcome { agg_views, comm, sort, msgs: msgs.len() })
 }
 

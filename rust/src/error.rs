@@ -63,6 +63,24 @@ impl Error {
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
     }
+
+    /// Prepend context (e.g. a failing task's identity) to the message
+    /// while PRESERVING the variant — callers and tests match on the
+    /// variant, so context must never rewrap a `Storage` error as
+    /// something else.
+    pub fn with_context(self, ctx: impl std::fmt::Display) -> Self {
+        match self {
+            Error::Config(m) => Error::Config(format!("{ctx}: {m}")),
+            Error::Workload(m) => Error::Workload(format!("{ctx}: {m}")),
+            Error::Protocol(m) => Error::Protocol(format!("{ctx}: {m}")),
+            Error::Storage(m) => Error::Storage(format!("{ctx}: {m}")),
+            Error::Runtime(m) => Error::Runtime(format!("{ctx}: {m}")),
+            Error::Verify(m) => Error::Verify(format!("{ctx}: {m}")),
+            Error::Io(e) => {
+                Error::Io(std::io::Error::new(e.kind(), format!("{ctx}: {e}")))
+            }
+        }
+    }
 }
 
 #[cfg(feature = "xla")]
@@ -80,6 +98,17 @@ mod tests {
     fn display_prefixes_by_kind() {
         assert_eq!(Error::config("bad").to_string(), "config error: bad");
         assert_eq!(Error::Storage("OST 3".into()).to_string(), "storage error: OST 3");
+    }
+
+    #[test]
+    fn with_context_preserves_variant() {
+        let e = Error::Storage("OST 3 down".into()).with_context("round 2, aggregator 7");
+        assert!(matches!(e, Error::Storage(_)));
+        assert_eq!(e.to_string(), "storage error: round 2, aggregator 7: OST 3 down");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        let io = io.with_context("ctx");
+        assert!(matches!(io, Error::Io(_)));
+        assert_eq!(io.to_string(), "ctx: gone");
     }
 
     #[test]

@@ -37,6 +37,12 @@
 //! is self-contained afterwards — see `DESIGN.md` for the three-layer
 //! architecture and the experiment index.
 
+// `--features simd` swaps the chunked merge/scatter primitives onto
+// `std::simd` (nightly-only; the scalar fallback is always compiled and
+// oracle-tested — DESIGN.md §SIMD kernels).  The gate lives here so the
+// feature is a no-op on stable *builds of the default feature set*.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod benchkit;
 pub mod cluster;
 pub mod config;

@@ -59,6 +59,13 @@ fn dispatch(args: &[String]) -> Result<()> {
     }
     cfg.apply(&kv)?;
 
+    // Pin the worker-pool width before any collective touches the pool
+    // (the width is fixed at first use; a late conflicting request is a
+    // hard error rather than a silently ignored flag).
+    if let Some(n) = cfg.threads {
+        tamio::util::runtime::configure_global_threads(n)?;
+    }
+
     match cmd {
         "run" => cmd_run(&cfg),
         "sweep" => cmd_sweep(&cfg, pl_list.as_deref(), validate_tuner),
@@ -108,6 +115,11 @@ Common flags (RunConfig keys):
                                         shape skip plan construction
   --plan-cache-size N                   warm plans kept in memory (LRU,
                                         default 8)
+  --threads N                           worker-pool width for the merge/
+                                        scatter hot path (default: the
+                                        TAMIO_THREADS env var, else all
+                                        available cores; results are
+                                        bit-identical for any width)
   net tier table: --net.alpha_socket/--net.beta_socket and
   --net.alpha_switch/--net.beta_switch price the extra hierarchy tiers
 
@@ -277,7 +289,14 @@ fn cmd_congest(cfg: &RunConfig) -> Result<()> {
 
 fn cmd_info() -> Result<()> {
     println!("tamio {} — TAM collective-I/O reproduction", env!("CARGO_PKG_VERSION"));
-    println!("threads available: {}", tamio::util::parallel::default_threads());
+    println!(
+        "worker pool: {} threads (override: --threads / TAMIO_THREADS)",
+        tamio::util::runtime::default_threads()
+    );
+    println!(
+        "simd kernels: {}",
+        if cfg!(feature = "simd") { "std::simd (u64x8 lanes)" } else { "scalar fallback" }
+    );
     match tamio::runtime::PjrtRuntime::load_default() {
         Ok(rt) => {
             println!("artifacts: {} (platform {})", rt.artifacts_dir().display(), rt.platform());

@@ -3,6 +3,7 @@
 
 pub mod parallel;
 pub mod rng;
+pub mod runtime;
 
 pub use parallel::par_map;
 pub use rng::SplitMix64;

@@ -1,23 +1,22 @@
-//! Scoped-thread parallel map (rayon is not available in the image).
+//! Order-preserving parallel helpers over the persistent pool.
 //!
-//! Deterministic: results are returned in input order regardless of
-//! scheduling; work is chunked contiguously over `min(items, cores)`
-//! threads.
+//! Thin wrappers around [`crate::util::runtime`]: `par_map` and
+//! `par_chunks_mut` keep their original signatures but now submit
+//! fine-grained one-item tasks to the shared work-stealing pool instead
+//! of spawning OS threads per call (and, for `par_chunks_mut`, per
+//! chunk — formerly unbounded).  Results land in pre-assigned slots, so
+//! output order is input order for any pool width.
 
-use std::num::NonZeroUsize;
+use crate::util::runtime;
 
-/// Number of worker threads to use by default.
-pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(NonZeroUsize::get)
-        .unwrap_or(1)
-}
+pub use crate::util::runtime::default_threads;
 
 /// Parallel map preserving input order.
 ///
-/// `f` must be `Sync` (called from multiple scoped threads); items are
-/// processed by contiguous chunks so cache behaviour matches the serial
-/// loop.  Falls back to a serial map for small inputs.
+/// Runs on the current pool ([`runtime::current`]); each item is one
+/// stealable task, so uneven per-item cost no longer idles workers the
+/// way the old contiguous-chunk split did.  Panics inside `f` are
+/// re-raised with the failing item's index.
 pub fn par_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
 where
     T: Send,
@@ -25,41 +24,23 @@ where
     F: Fn(T) -> U + Sync,
 {
     let n = items.len();
-    let threads = default_threads().min(n.max(1));
-    if threads <= 1 || n < 2 {
-        return items.into_iter().map(f).collect();
+    if n == 0 {
+        return Vec::new();
     }
-    let chunk = n.div_ceil(threads);
-    let mut out: Vec<Option<U>> = Vec::with_capacity(n);
-    out.resize_with(n, || None);
-    let mut item_chunks: Vec<Vec<T>> = Vec::new();
-    {
-        let mut it = items.into_iter();
-        loop {
-            let c: Vec<T> = it.by_ref().take(chunk).collect();
-            if c.is_empty() {
-                break;
-            }
-            item_chunks.push(c);
-        }
-    }
-    let fref = &f;
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for (ci, c) in item_chunks.into_iter().enumerate() {
-            handles.push((ci, s.spawn(move || c.into_iter().map(fref).collect::<Vec<U>>())));
-        }
-        for (ci, h) in handles {
-            let res = h.join().expect("par_map worker panicked");
-            for (j, v) in res.into_iter().enumerate() {
-                out[ci * chunk + j] = Some(v);
-            }
-        }
+    let mut slots: Vec<(Option<T>, Option<U>)> =
+        items.into_iter().map(|t| (Some(t), None)).collect();
+    runtime::current().for_each_mut(&mut slots, &|i| format!("par_map item {i}"), |_, slot| {
+        let item = slot.0.take().expect("par_map slot taken twice");
+        slot.1 = Some(f(item));
     });
-    out.into_iter().map(|v| v.expect("par_map slot unfilled")).collect()
+    slots.into_iter().map(|(_, u)| u.expect("par_map slot unfilled")).collect()
 }
 
 /// Parallel for-each over mutable chunks of a slice.
+///
+/// Concurrency is capped at the pool width: chunks are tasks on the
+/// shared pool, not one OS thread per chunk (a small `chunk` over a
+/// large slice used to spawn thousands of threads).
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
 where
     T: Send,
@@ -68,17 +49,18 @@ where
     if data.is_empty() || chunk == 0 {
         return;
     }
-    let fref = &f;
-    std::thread::scope(|s| {
-        for (i, c) in data.chunks_mut(chunk).enumerate() {
-            s.spawn(move || fref(i, c));
-        }
-    });
+    let mut chunks: Vec<&mut [T]> = data.chunks_mut(chunk).collect();
+    runtime::current().for_each_mut(
+        &mut chunks,
+        &|i| format!("par_chunks_mut chunk {i}"),
+        |i, c| f(i, c),
+    );
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::runtime::{with_runtime, Runtime};
 
     #[test]
     fn par_map_preserves_order() {
@@ -101,6 +83,17 @@ mod tests {
     }
 
     #[test]
+    fn par_map_order_is_pool_width_invariant() {
+        let items: Vec<u64> = (0..500).collect();
+        let expect: Vec<u64> = items.iter().map(|x| x * x + 1).collect();
+        for width in [1, 2, 5] {
+            let rt = Runtime::new(width);
+            let got = with_runtime(&rt, || par_map(items.clone(), |x| x * x + 1));
+            assert_eq!(got, expect, "width {width}");
+        }
+    }
+
+    #[test]
     fn par_chunks_mut_writes_all() {
         let mut data = vec![0u32; 97];
         par_chunks_mut(&mut data, 10, |_, c| {
@@ -109,5 +102,17 @@ mod tests {
             }
         });
         assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn par_chunks_mut_many_tiny_chunks_bounded() {
+        // 4096 chunks of 1 element: the old implementation spawned 4096
+        // OS threads here; the pool runs them on its fixed lanes.
+        let rt = Runtime::new(4);
+        let mut data = vec![0u8; 4096];
+        with_runtime(&rt, || {
+            par_chunks_mut(&mut data, 1, |i, c| c[0] = (i % 251) as u8);
+        });
+        assert!(data.iter().enumerate().all(|(i, &v)| v == (i % 251) as u8));
     }
 }

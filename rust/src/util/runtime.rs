@@ -1,0 +1,620 @@
+//! Persistent work-stealing task runtime.
+//!
+//! The repo's original `par_map` spawned fresh OS threads per call and
+//! chunked work per-aggregator, which leaves cores idle on deep trees
+//! where a level has fewer aggregators than cores.  This module replaces
+//! that with ONE lazily-initialized global pool of
+//! `available_parallelism()` workers (overridable via `TAMIO_THREADS` or
+//! `--threads`) fed fine-grained index tasks through per-worker deques:
+//! the submitting thread round-robins task indices over all lanes, each
+//! worker pops its own lane LIFO and steals FIFO from other lanes when
+//! its lane runs dry (chase-lev style, lock-based since the image has no
+//! crossbeam).
+//!
+//! Determinism: stealing only reorders *execution*; every task writes to
+//! the slot pre-assigned by its index (`for_each_mut` hands task `i`
+//! item `i`), so results are bit-identical for any thread count,
+//! including 1.  The serial path is the same closure called in index
+//! order.
+//!
+//! Warm-path allocation: lanes are `VecDeque<usize>` that are cleared
+//! (capacity retained) each batch, the batch descriptor is a thin
+//! pointer pair on the submitter's stack, and panic/error labels are
+//! lazy closures only invoked on failure — a warm batch performs no
+//! heap allocation, preserving the `alloc_steady_state` invariant.
+//!
+//! Panics inside tasks are caught per-task; the lowest-index failure is
+//! re-raised on the submitting thread with the task's identity (from the
+//! lazy label) prepended, so a panic at (level, aggregator, round) says
+//! so instead of `expect("par_map worker panicked")`.
+
+use std::any::Any;
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::num::NonZeroUsize;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::error::{Error, Result};
+
+/// A batch's task function, type-erased to a thin pointer plus a
+/// monomorphized trampoline so it can sit in the shared pool state
+/// without fat-pointer lifetime gymnastics.  Validity: the submitter
+/// keeps the closure alive on its stack until every worker has left the
+/// batch (`active == 0`), and clears the descriptor before returning.
+#[derive(Clone, Copy)]
+struct TaskRef {
+    ptr: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: TaskRef is only dereferenced while the submitting thread is
+// blocked in `run_batch`, which guarantees the pointee outlives use.
+unsafe impl Send for TaskRef {}
+
+unsafe fn call_closure<F: Fn(usize) + Sync>(ptr: *const (), idx: usize) {
+    // SAFETY: `ptr` was created from an `&F` in `run_batch` and is live
+    // for the duration of the batch (see TaskRef).
+    unsafe { (*(ptr as *const F))(idx) }
+}
+
+/// Pool state shared by workers and submitters.  Workers hold only an
+/// `Arc<PoolCore>` (never an `Arc<PoolOwner>`), so dropping the last
+/// `Runtime` clone triggers shutdown with no Arc cycle.
+struct PoolCore {
+    /// Total lanes, including lane 0 (the submitting thread helps).
+    width: usize,
+    /// Per-lane task queues: owner pops back, thieves pop front.
+    lanes: Vec<Mutex<VecDeque<usize>>>,
+    shared: Mutex<Shared>,
+    /// Workers sleep here between batches.
+    work_cv: Condvar,
+    /// The submitter sleeps here while workers drain the batch.
+    idle_cv: Condvar,
+    /// Tasks not yet finished in the current batch.
+    remaining: AtomicUsize,
+    /// Lowest-index panic payload from the current batch, if any.
+    panic_slot: Mutex<Option<(usize, Box<dyn Any + Send>)>>,
+    /// Serializes batches so one pool services all call sites.
+    submit: Mutex<()>,
+}
+
+struct Shared {
+    /// Bumped per batch; a worker joins a batch at most once.
+    epoch: u64,
+    batch: Option<TaskRef>,
+    /// Workers currently executing tasks of the current batch.
+    active: usize,
+    shutdown: bool,
+}
+
+impl PoolCore {
+    /// Pop one task: own lane from the back (LIFO keeps the hot tail
+    /// cache-resident), then sweep other lanes from the front (FIFO
+    /// steals take the coldest work).  `None` means every lane looked
+    /// empty in one sweep — in-flight tasks may still be running on
+    /// other lanes, but there is nothing left to claim.
+    fn pop_task(&self, lane: usize) -> Option<usize> {
+        if let Some(i) = self.lanes[lane].lock().unwrap().pop_back() {
+            return Some(i);
+        }
+        for k in 1..self.width {
+            let victim = (lane + k) % self.width;
+            if let Some(i) = self.lanes[victim].lock().unwrap().pop_front() {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Claim and run tasks until no lane has work left.
+    fn run_tasks(&self, lane: usize, task: TaskRef) {
+        while let Some(idx) = self.pop_task(lane) {
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                // SAFETY: see TaskRef — the closure outlives the batch.
+                unsafe { (task.call)(task.ptr, idx) }
+            }));
+            if let Err(payload) = res {
+                let mut slot = self.panic_slot.lock().unwrap();
+                match &*slot {
+                    Some((prev, _)) if *prev <= idx => {}
+                    _ => *slot = Some((idx, payload)),
+                }
+            }
+            if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                // Last task done: wake the submitter.  Taking the shared
+                // lock orders this notify against the submitter's
+                // predicate check so the wakeup cannot be lost.
+                let _sh = self.shared.lock().unwrap();
+                self.idle_cv.notify_all();
+            }
+        }
+    }
+}
+
+fn worker_loop(core: Arc<PoolCore>, lane: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let task;
+        {
+            let mut sh = core.shared.lock().unwrap();
+            loop {
+                if sh.shutdown {
+                    return;
+                }
+                match sh.batch {
+                    Some(t) if sh.epoch != seen_epoch => {
+                        seen_epoch = sh.epoch;
+                        sh.active += 1;
+                        task = t;
+                        break;
+                    }
+                    _ => sh = core.work_cv.wait(sh).unwrap(),
+                }
+            }
+        }
+        // Mark this thread so nested submissions from inside a task run
+        // inline instead of deadlocking on the submit lock.
+        let was_busy = RUNTIME_BUSY.with(|b| b.replace(true));
+        core.run_tasks(lane, task);
+        RUNTIME_BUSY.with(|b| b.set(was_busy));
+        let mut sh = core.shared.lock().unwrap();
+        sh.active -= 1;
+        if sh.active == 0 {
+            core.idle_cv.notify_all();
+        }
+    }
+}
+
+/// Owns the worker threads; dropping the last `Runtime` clone (each
+/// holds an `Arc<PoolOwner>`) shuts the pool down and joins them.
+struct PoolOwner {
+    core: Arc<PoolCore>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for PoolOwner {
+    fn drop(&mut self) {
+        {
+            let mut sh = self.core.shared.lock().unwrap();
+            sh.shutdown = true;
+        }
+        self.core.work_cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Handle to a worker pool.  Cloning is cheap (two `Arc`s); all clones
+/// share the same workers.  `Runtime::new(1)` spawns no threads and runs
+/// every batch serially on the caller.
+#[derive(Clone)]
+pub struct Runtime {
+    core: Arc<PoolCore>,
+    _owner: Arc<PoolOwner>,
+}
+
+impl Runtime {
+    /// Build a pool with `threads` total lanes (clamped to at least 1).
+    /// Lane 0 belongs to whichever thread submits a batch, so only
+    /// `threads - 1` OS threads are spawned.
+    pub fn new(threads: usize) -> Runtime {
+        let width = threads.max(1);
+        let core = Arc::new(PoolCore {
+            width,
+            lanes: (0..width).map(|_| Mutex::new(VecDeque::new())).collect(),
+            shared: Mutex::new(Shared { epoch: 0, batch: None, active: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+            remaining: AtomicUsize::new(0),
+            panic_slot: Mutex::new(None),
+            submit: Mutex::new(()),
+        });
+        let mut handles = Vec::with_capacity(width.saturating_sub(1));
+        for lane in 1..width {
+            let c = Arc::clone(&core);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("tamio-worker-{lane}"))
+                    .spawn(move || worker_loop(c, lane))
+                    .expect("spawn pool worker"),
+            );
+        }
+        let owner = Arc::new(PoolOwner { core: Arc::clone(&core), handles: Mutex::new(handles) });
+        Runtime { core, _owner: owner }
+    }
+
+    /// Total lanes (submitting thread included).
+    pub fn width(&self) -> usize {
+        self.core.width
+    }
+
+    /// Run `f(0) .. f(n-1)`, each exactly once, with completion of all
+    /// tasks guaranteed on return.  Execution order is unspecified under
+    /// multiple lanes; callers must make task `i` write only to slot
+    /// `i`-owned state (that is what keeps results deterministic).
+    ///
+    /// If any task panics, the lowest-index panic is re-raised here with
+    /// `label(i)` prepended.  `label` is only invoked on that failure
+    /// path, so it may allocate freely.
+    pub fn for_each_index<F>(&self, n: usize, label: &dyn Fn(usize) -> String, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let nested = RUNTIME_BUSY.with(|b| b.get());
+        if self.core.width <= 1 || n == 1 || nested {
+            for i in 0..n {
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                    raise_task_panic(label, i, payload);
+                }
+            }
+            return;
+        }
+        self.run_batch(n, label, &f);
+    }
+
+    fn run_batch<F>(&self, n: usize, label: &dyn Fn(usize) -> String, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let core = &*self.core;
+        // Serialize batches: one batch owns the lanes at a time.
+        let _submit = core.submit.lock().unwrap();
+        // Mark busy AFTER acquiring submit, so concurrent submitters
+        // queue up rather than degrade to serial; nested calls from our
+        // own tasks (which would self-deadlock) run inline instead.
+        let was_busy = RUNTIME_BUSY.with(|b| b.replace(true));
+        // Round-robin indices over lanes; lane capacity is retained
+        // across batches so warm submissions do not allocate.
+        for (lane, q) in core.lanes.iter().enumerate() {
+            let mut q = q.lock().unwrap();
+            q.clear();
+            let mut i = lane;
+            while i < n {
+                q.push_back(i);
+                i += core.width;
+            }
+        }
+        *core.panic_slot.lock().unwrap() = None;
+        core.remaining.store(n, Ordering::Release);
+        let task = TaskRef { ptr: f as *const F as *const (), call: call_closure::<F> };
+        {
+            let mut sh = core.shared.lock().unwrap();
+            sh.epoch = sh.epoch.wrapping_add(1);
+            sh.batch = Some(task);
+            core.work_cv.notify_all();
+        }
+        // The submitter helps from lane 0.
+        core.run_tasks(0, task);
+        // Wait until every task has finished AND every worker has left
+        // the batch: `active == 0` is what makes it safe to drop `f`
+        // (no worker still holds the TaskRef), and clearing the batch
+        // under the same lock hold means a late-waking worker can never
+        // observe a stale descriptor.
+        {
+            let mut sh = core.shared.lock().unwrap();
+            while core.remaining.load(Ordering::Acquire) != 0 || sh.active != 0 {
+                sh = core.idle_cv.wait(sh).unwrap();
+            }
+            sh.batch = None;
+        }
+        RUNTIME_BUSY.with(|b| b.set(was_busy));
+        let failed = core.panic_slot.lock().unwrap().take();
+        if let Some((idx, payload)) = failed {
+            raise_task_panic(label, idx, payload);
+        }
+    }
+
+    /// Parallel in-place for-each: task `i` gets `&mut items[i]`.
+    /// Items stay where they are — no draining into per-thread Vecs —
+    /// so arena-resident slots keep their warm capacity.
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], label: &dyn Fn(usize) -> String, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let base = SendPtr(items.as_mut_ptr());
+        let n = items.len();
+        self.for_each_index(n, label, move |i| {
+            debug_assert!(i < n);
+            // SAFETY: for_each_index hands out each index exactly once,
+            // so every `&mut items[i]` is disjoint; `items` outlives the
+            // batch because for_each_index does not return until all
+            // tasks complete.
+            let item = unsafe { &mut *base.0.add(i) };
+            f(i, item);
+        });
+    }
+
+    /// Fallible variant of [`for_each_mut`]: if any task errors, the
+    /// lowest-index error is returned (deterministic regardless of
+    /// which lane saw its error first).  Tasks that error leave their
+    /// item in whatever state `f` left it.
+    pub fn try_for_each_mut<T, F>(
+        &self,
+        items: &mut [T],
+        label: &dyn Fn(usize) -> String,
+        f: F,
+    ) -> Result<()>
+    where
+        T: Send,
+        F: Fn(usize, &mut T) -> Result<()> + Sync,
+    {
+        let first_err: Mutex<Option<(usize, Error)>> = Mutex::new(None);
+        self.for_each_mut(items, label, |i, item| {
+            if let Err(e) = f(i, item) {
+                let mut slot = first_err.lock().unwrap();
+                match &*slot {
+                    Some((prev, _)) if *prev <= i => {}
+                    _ => *slot = Some((i, e)),
+                }
+            }
+        });
+        match first_err.into_inner().unwrap() {
+            Some((i, e)) => Err(e.with_context(label(i))),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Raw-pointer wrapper so disjoint `&mut` projections can cross the
+/// closure's `Sync` bound.  Soundness argument lives at the use sites.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+fn raise_task_panic(label: &dyn Fn(usize) -> String, idx: usize, payload: Box<dyn Any + Send>) -> ! {
+    let what = label(idx);
+    if let Some(msg) = payload.downcast_ref::<&str>() {
+        panic!("{what}: {msg}");
+    }
+    if let Some(msg) = payload.downcast_ref::<String>() {
+        panic!("{what}: {msg}");
+    }
+    eprintln!("task panicked with non-string payload: {what}");
+    resume_unwind(payload)
+}
+
+thread_local! {
+    /// Set while this thread is executing pool tasks (worker or helping
+    /// submitter).  Nested submissions run inline-serial: re-entering
+    /// the pool would deadlock on the submit lock, and the outer batch
+    /// already owns all lanes anyway.
+    static RUNTIME_BUSY: Cell<bool> = const { Cell::new(false) };
+
+    /// Test hook: `with_runtime` pushes an override consulted by
+    /// `current()` before the global pool, so one process can exercise
+    /// several pool widths (the global pool's width is fixed at first
+    /// use).
+    static RUNTIME_OVERRIDE: RefCell<Vec<Runtime>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Requested global pool width (0 = unset), set by `--threads` before
+/// first pool use.
+static REQUESTED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+static GLOBAL: OnceLock<Runtime> = OnceLock::new();
+
+/// Number of lanes the global pool will use (or uses, once built):
+/// `--threads` > `TAMIO_THREADS` > `available_parallelism()`.
+pub fn default_threads() -> usize {
+    let req = REQUESTED_THREADS.load(Ordering::Acquire);
+    if req > 0 {
+        return req;
+    }
+    if let Ok(s) = std::env::var("TAMIO_THREADS") {
+        match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => return n,
+            _ => eprintln!("warn: ignoring invalid TAMIO_THREADS={s:?} (want integer >= 1)"),
+        }
+    }
+    std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+}
+
+/// Record the `--threads` CLI/KV/TOML choice.  Must happen before the
+/// global pool is first used; afterwards the width is fixed and a
+/// conflicting request is a hard error (silently running with the wrong
+/// width would be the kind of silent failure PR 7 removed).
+pub fn configure_global_threads(threads: usize) -> Result<()> {
+    if threads == 0 {
+        return Err(Error::config("--threads must be >= 1"));
+    }
+    if let Some(rt) = GLOBAL.get() {
+        if rt.width() != threads {
+            return Err(Error::config(format!(
+                "--threads {threads} requested but the worker pool is already running with {} threads",
+                rt.width()
+            )));
+        }
+        return Ok(());
+    }
+    REQUESTED_THREADS.store(threads, Ordering::Release);
+    // Settle the race where the pool initialized between the `get`
+    // above and the store: the built width wins; mismatch is an error.
+    if let Some(rt) = GLOBAL.get() {
+        if rt.width() != threads {
+            return Err(Error::config(format!(
+                "--threads {threads} requested but the worker pool is already running with {} threads",
+                rt.width()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The pool serving this thread: the innermost `with_runtime` override
+/// if one is active, else the lazily-built global pool.
+pub fn current() -> Runtime {
+    let over = RUNTIME_OVERRIDE.with(|o| o.borrow().last().cloned());
+    match over {
+        Some(rt) => rt,
+        None => GLOBAL.get_or_init(|| Runtime::new(default_threads())).clone(),
+    }
+}
+
+/// Run `f` with `rt` as this thread's pool (nestable; restored on exit,
+/// including by panic).  Test hook for the determinism matrix: the
+/// global pool's width is process-wide, but overrides let one test body
+/// compare widths 1/2/default directly.
+pub fn with_runtime<R>(rt: &Runtime, f: impl FnOnce() -> R) -> R {
+    struct PopGuard;
+    impl Drop for PopGuard {
+        fn drop(&mut self) {
+            RUNTIME_OVERRIDE.with(|o| {
+                o.borrow_mut().pop();
+            });
+        }
+    }
+    RUNTIME_OVERRIDE.with(|o| o.borrow_mut().push(rt.clone()));
+    let _guard = PopGuard;
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn for_each_index_runs_every_task_once() {
+        for width in [1, 2, 3, 8] {
+            let rt = Runtime::new(width);
+            let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+            rt.for_each_index(hits.len(), &|i| format!("task {i}"), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "width {width}: every index exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn for_each_mut_slots_match_indices() {
+        let rt = Runtime::new(4);
+        let mut data = vec![0usize; 1000];
+        rt.for_each_mut(&mut data, &|i| format!("slot {i}"), |i, v| *v = i * 3);
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i * 3));
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        let rt = Runtime::new(3);
+        let mut data = vec![0u64; 50];
+        for round in 1..=20u64 {
+            rt.for_each_mut(&mut data, &|i| format!("round {round} item {i}"), |_, v| *v += 1);
+        }
+        assert!(data.iter().all(|&v| v == 20));
+    }
+
+    #[test]
+    fn nested_submission_runs_inline() {
+        let rt = Runtime::new(4);
+        let total = AtomicU64::new(0);
+        rt.for_each_index(8, &|i| format!("outer {i}"), |_| {
+            // Re-entering the pool from a task must not deadlock.
+            let inner = current();
+            inner.for_each_index(16, &|j| format!("inner {j}"), |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 16);
+    }
+
+    #[test]
+    fn panic_carries_task_identity() {
+        let rt = Runtime::new(2);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            rt.for_each_index(64, &|i| format!("level 1, aggregator {i}, round 2"), |i| {
+                if i == 37 {
+                    panic!("boom");
+                }
+            });
+        }))
+        .expect_err("must propagate the task panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(
+            msg.contains("aggregator 37") && msg.contains("boom"),
+            "panic message must carry task identity + payload, got: {msg}"
+        );
+    }
+
+    #[test]
+    fn panic_reports_lowest_index() {
+        let rt = Runtime::new(4);
+        for _ in 0..10 {
+            let err = catch_unwind(AssertUnwindSafe(|| {
+                rt.for_each_index(128, &|i| format!("task {i}"), |i| {
+                    if i % 3 == 1 {
+                        panic!("fail {i}");
+                    }
+                });
+            }))
+            .expect_err("must propagate");
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default();
+            assert!(
+                msg.contains("task 1:") && msg.contains("fail 1"),
+                "lowest failing index (1) must win deterministically, got: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn try_for_each_mut_returns_lowest_index_error() {
+        let rt = Runtime::new(4);
+        let mut data = vec![0u32; 100];
+        let res = rt.try_for_each_mut(&mut data, &|i| format!("item {i}"), |i, _| {
+            if i >= 5 && i % 5 == 0 {
+                Err(Error::Protocol(format!("bad {i}")))
+            } else {
+                Ok(())
+            }
+        });
+        let msg = res.expect_err("must surface the error").to_string();
+        assert!(msg.contains("item 5") && msg.contains("bad 5"), "lowest error wins: {msg}");
+    }
+
+    #[test]
+    fn with_runtime_overrides_and_restores() {
+        let one = Runtime::new(1);
+        let two = Runtime::new(2);
+        with_runtime(&one, || {
+            assert_eq!(current().width(), 1);
+            with_runtime(&two, || assert_eq!(current().width(), 2));
+            assert_eq!(current().width(), 1);
+        });
+    }
+
+    #[test]
+    fn width_one_spawns_no_workers_and_still_works() {
+        let rt = Runtime::new(1);
+        let mut data = vec![0u8; 17];
+        rt.for_each_mut(&mut data, &|i| format!("x {i}"), |_, v| *v = 1);
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn dropping_runtime_joins_workers() {
+        // Regression guard for shutdown: building and dropping pools in
+        // a loop must neither hang nor leak threads that panic later.
+        for _ in 0..8 {
+            let rt = Runtime::new(3);
+            let mut data = vec![0u32; 64];
+            rt.for_each_mut(&mut data, &|i| format!("d {i}"), |i, v| *v = i as u32);
+            drop(rt);
+        }
+    }
+}

@@ -29,6 +29,7 @@ use tamio::mpisim::FlatView;
 use tamio::netmodel::phase::{Message, PendingQueue};
 use tamio::netmodel::NetParams;
 use tamio::runtime::engine::NativeEngine;
+use tamio::util::runtime::Runtime;
 
 /// Allocation-counting wrapper over the system allocator.
 struct CountingAlloc;
@@ -130,6 +131,84 @@ fn steady_state_rounds_allocate_nothing() {
         steady <= 8,
         "steady-state rounds allocated {steady} times over {measured_rounds} rounds \
          (expected ~0: the arena regressed)"
+    );
+}
+
+/// The same staging + merge/scatter core, but with the per-round
+/// merge_scatter fan-out running on a live worker pool (the §Perf
+/// tentpole's production shape, see `run_exchange`): after the pool and
+/// the arena are warm, pooled rounds must stay (near-)allocation-free.
+/// The batch descriptor lives on the submitter's stack, lane queues keep
+/// their capacity, and failure labels are rendered lazily — so a warm
+/// batch submission itself costs zero heap traffic.
+fn warm_pool_rounds_allocate_nothing() {
+    const N_AGG: usize = 4;
+    const STRIPE: u64 = 64;
+    const RANKS: usize = 8;
+    const BLOCK: u64 = 4096;
+    let topo = Topology::new(1, RANKS);
+    let net = NetParams::default();
+    let engine = NativeEngine;
+    let domains = FileDomains::new(
+        LustreConfig::new(STRIPE, N_AGG),
+        0,
+        RANKS as u64 * BLOCK,
+        N_AGG,
+    );
+    let n_rounds = domains.n_rounds();
+    assert!(n_rounds >= 16, "need enough rounds to measure, got {n_rounds}");
+
+    let my_reqs: Vec<MyReqs> = (0..RANKS)
+        .map(|r| {
+            let view = FlatView::from_pairs(vec![(r as u64 * BLOCK, BLOCK)]).unwrap();
+            let payload = deterministic_payload(11, r, BLOCK);
+            calc_my_req(&domains, &ReqBatch::new(view, payload)).unwrap()
+        })
+        .collect();
+
+    // Pool construction (thread spawn, lane queues) happens before the
+    // measured region; warm-up rounds then size the lane capacities.
+    let rt = Runtime::new(2);
+    let mut scratch: Vec<RoundScratch> = (0..N_AGG).map(|_| RoundScratch::default()).collect();
+    for slot in &mut scratch {
+        slot.reset_exchange(0);
+    }
+    let mut pending = PendingQueue::new();
+    let mut data_msgs: Vec<Message> = Vec::new();
+
+    const WARMUP: u64 = 2;
+    let mut base = 0u64;
+    for round in 0..n_rounds {
+        if round == WARMUP {
+            base = allocs();
+        }
+        data_msgs.clear();
+        for slot in &mut scratch {
+            slot.reset_round();
+        }
+        for (i, mr) in my_reqs.iter().enumerate() {
+            for (agg, s) in mr.slices_in_round(round) {
+                data_msgs.push(Message::new(i, agg, s.bytes));
+                scratch[agg].stage(i, s.offsets, s.lengths, s.payload, s.bytes);
+            }
+        }
+        pending.cost_round(&net, &topo, &data_msgs);
+        rt.try_for_each_mut(
+            &mut scratch,
+            &|agg| format!("warm-pool round {round}, aggregator {agg}"),
+            |_, slot| {
+                slot.merge_scatter(&engine)?;
+                Ok(())
+            },
+        )
+        .unwrap();
+    }
+    let steady = allocs() - base;
+    let measured_rounds = n_rounds - WARMUP;
+    assert!(
+        steady <= 8,
+        "warm pooled rounds allocated {steady} times over {measured_rounds} rounds \
+         (expected ~0: batch submission or the arena regressed)"
     );
 }
 
@@ -369,6 +448,7 @@ fn warm_arena_beats_cold(algo: Algorithm, label: &str) {
 #[test]
 fn arena_keeps_steady_state_rounds_allocation_free() {
     steady_state_rounds_allocate_nothing();
+    warm_pool_rounds_allocate_nothing();
     steady_state_read_exchanges_allocate_nothing();
     warm_plan_lookup_allocates_nothing();
     warm_arena_beats_cold(Algorithm::TwoPhase, "two-phase");

@@ -1,0 +1,243 @@
+//! Determinism matrix for the worker-pool runtime (§Perf tentpole): the
+//! collective's results must be **bit-identical** for every pool width.
+//! Workers steal `(level, aggregator, round)` tasks in whatever order the
+//! scheduler produces, but each task writes a pre-assigned slot, so the
+//! observable outputs — file images, read-back payloads, counters, and
+//! the simulated breakdown — may not depend on the width.
+//!
+//! Widths 1/2/3 are pinned per-test via `with_runtime` overrides; the
+//! `None` column uses the process-global pool (whatever `TAMIO_THREADS` /
+//! `available_parallelism()` resolves to).  The remaining two matrix axes
+//! run in CI rather than in-process: `scripts/check.sh` re-runs this
+//! whole suite under `TAMIO_THREADS=1` (global-pool serial leg) and,
+//! when the toolchain supports `portable_simd`, under `--features simd`
+//! (the SIMD kernels must reproduce the scalar results exactly — the
+//! same assertions below then pin the lane-parallel path).
+
+use tamio::cluster::{RankPlacement, Topology};
+use tamio::config::RunConfig;
+use tamio::coordinator::breakdown::CpuModel;
+use tamio::coordinator::collective::{
+    run_collective_read, run_collective_write, Algorithm, DirectionSpec,
+};
+use tamio::coordinator::merge::ReqBatch;
+use tamio::coordinator::placement::GlobalPlacement;
+use tamio::coordinator::tam::TamConfig;
+use tamio::coordinator::twophase::CollectiveCtx;
+use tamio::experiments::run_once;
+use tamio::lustre::{IoModel, LustreConfig, LustreFile};
+use tamio::mpisim::rank::deterministic_payload;
+use tamio::mpisim::FlatView;
+use tamio::netmodel::NetParams;
+use tamio::runtime::engine::NativeEngine;
+use tamio::util::runtime::{with_runtime, Runtime};
+use tamio::util::SplitMix64;
+use tamio::workloads::WorkloadKind;
+
+struct Fx {
+    topo: Topology,
+    net: NetParams,
+    cpu: CpuModel,
+    io: IoModel,
+    eng: NativeEngine,
+}
+
+impl Fx {
+    fn flat(nodes: usize, ppn: usize) -> Self {
+        Fx {
+            topo: Topology::new(nodes, ppn),
+            net: NetParams::default(),
+            cpu: CpuModel::default(),
+            io: IoModel::default(),
+            eng: NativeEngine,
+        }
+    }
+
+    fn ctx(&self, n_agg: usize) -> CollectiveCtx<'_> {
+        CollectiveCtx {
+            topo: &self.topo,
+            net: &self.net,
+            cpu: &self.cpu,
+            io: &self.io,
+            engine: &self.eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: n_agg,
+        }
+    }
+}
+
+/// Random disjoint-in-file rank views: interleaved, gappy, with
+/// zero-length requests and stripe-straddling lengths (same shape family
+/// as the round-trip suite, so the pool sees realistic merge work).
+fn random_ranks(
+    rng: &mut SplitMix64,
+    nprocs: usize,
+    total_reqs: usize,
+    stripe: u64,
+    seed: u64,
+) -> Vec<(usize, ReqBatch)> {
+    let mut per_rank: Vec<Vec<(u64, u64)>> = vec![Vec::new(); nprocs];
+    let mut cursor = rng.gen_range(stripe.max(2));
+    for _ in 0..total_reqs {
+        let r = rng.gen_range(nprocs as u64) as usize;
+        if rng.gen_bool(0.35) {
+            cursor += rng.gen_range(2 * stripe);
+        }
+        let len = match rng.gen_range(4) {
+            0 => 0,
+            1 => 1 + rng.gen_range(5 * stripe / 2),
+            _ => 1 + rng.gen_range(stripe / 2),
+        };
+        per_rank[r].push((cursor, len));
+        cursor += len;
+    }
+    per_rank
+        .into_iter()
+        .enumerate()
+        .map(|(r, pairs)| {
+            let view = FlatView::from_pairs(pairs).unwrap();
+            let payload = deterministic_payload(seed, r, view.total_bytes());
+            (r, ReqBatch::new(view, payload))
+        })
+        .collect()
+}
+
+/// Everything a width could possibly perturb, flattened for `assert_eq`.
+#[derive(Debug, PartialEq)]
+struct Digest {
+    file_image: Vec<u8>,
+    read_payloads: Vec<(usize, Vec<u8>)>,
+    write_counters: (usize, usize, u64, usize, u64, u64, u64, u64),
+    read_counters: (usize, usize, u64, usize),
+    write_total: f64,
+    read_total: f64,
+}
+
+/// Run one write+read collective at the given pool width (`None` = the
+/// process-global pool) and digest every observable output.
+fn digest_at_width(
+    fx: &Fx,
+    algo: Algorithm,
+    ranks: &[(usize, ReqBatch)],
+    width: Option<usize>,
+) -> Digest {
+    let body = || {
+        let ctx = fx.ctx(4);
+        let mut file = LustreFile::new(LustreConfig::new(64, 4));
+        let wout = run_collective_write(&ctx, algo, ranks.to_vec(), &mut file)
+            .unwrap_or_else(|e| panic!("write {} failed: {e}", algo.name()));
+        let hi = ranks.iter().filter_map(|(_, b)| b.view.max_end()).max().unwrap();
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let (got, rout) = run_collective_read(&ctx, algo, views, &file)
+            .unwrap_or_else(|e| panic!("read {} failed: {e}", algo.name()));
+        let wc = &wout.counters;
+        let rc = &rout.counters;
+        Digest {
+            file_image: file.read_at(0, hi),
+            read_payloads: got,
+            write_counters: (
+                wc.msgs_intra,
+                wc.msgs_inter,
+                wc.rounds,
+                wc.max_in_degree,
+                wc.bytes,
+                wc.reqs_posted,
+                wc.reqs_after_intra,
+                wc.reqs_at_io,
+            ),
+            read_counters: (rc.msgs_intra, rc.msgs_inter, rc.rounds, rc.max_in_degree),
+            write_total: wout.breakdown.total(),
+            read_total: rout.breakdown.total(),
+        }
+    };
+    match width {
+        Some(w) => with_runtime(&Runtime::new(w), body),
+        None => body(),
+    }
+}
+
+/// §Acceptance: serial (width 1), pooled (2/3), and default-width runs
+/// are bit-identical for two-phase, TAM, and tree plans, both directions.
+#[test]
+fn roundtrip_is_bit_identical_across_pool_widths() {
+    let mut rng = SplitMix64::new(0x0DE7_E12);
+    let fx = Fx::flat(2, 8);
+    let algos = [
+        Algorithm::TwoPhase,
+        Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
+        Algorithm::Tree("node=2".parse().unwrap()),
+    ];
+    for (case, algo) in algos.into_iter().enumerate() {
+        let ranks =
+            random_ranks(&mut rng, fx.topo.nprocs(), 150, 64, 0xA0 + case as u64);
+        let baseline = digest_at_width(&fx, algo, &ranks, Some(1));
+        // The serial width must reproduce the rank payloads exactly
+        // before it is promoted to the reference for wider pools.
+        for ((r, payload), (_, want)) in baseline.read_payloads.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "{}: rank {r} read-back", algo.name());
+        }
+        for width in [Some(2), Some(3), None] {
+            let got = digest_at_width(&fx, algo, &ranks, width);
+            assert_eq!(
+                got,
+                baseline,
+                "{} at width {width:?} diverged from serial",
+                algo.name()
+            );
+        }
+    }
+}
+
+/// Depth-2 tree plans on a hierarchical topology push tasks through every
+/// level of the aggregation pipeline (socket gather, node gather, down
+/// scatter); the width matrix must hold there too.
+#[test]
+fn hierarchical_tree_is_bit_identical_across_pool_widths() {
+    let mut rng = SplitMix64::new(0x5_0C4E7);
+    let fx = Fx {
+        topo: Topology::hierarchical(2, 8, 2, 0, RankPlacement::Block),
+        net: NetParams::default(),
+        cpu: CpuModel::default(),
+        io: IoModel::default(),
+        eng: NativeEngine,
+    };
+    let ranks = random_ranks(&mut rng, fx.topo.nprocs(), 160, 64, 0x7E);
+    let algo = Algorithm::Tree("socket=2,node=1".parse().unwrap());
+    let baseline = digest_at_width(&fx, algo, &ranks, Some(1));
+    for width in [Some(2), Some(3), None] {
+        let got = digest_at_width(&fx, algo, &ranks, width);
+        assert_eq!(got, baseline, "tree depth-2 at width {width:?} diverged");
+    }
+}
+
+/// The config→driver plumbing (`experiments::run_once`, plan build,
+/// verify) is also width-invariant: identical verified results and
+/// simulated times at widths 1 and 3.
+#[test]
+fn driver_results_are_width_invariant() {
+    let mut cfg = RunConfig::default();
+    cfg.nodes = 2;
+    cfg.ppn = 4;
+    cfg.workload = WorkloadKind::Strided;
+    cfg.lustre = LustreConfig::new(1 << 12, 4);
+    cfg.verify = true;
+    cfg.direction = DirectionSpec::Both;
+    cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 4 });
+
+    let run = |w: usize| {
+        with_runtime(&Runtime::new(w), || {
+            let results = run_once(&cfg).unwrap();
+            assert_eq!(results.len(), 2);
+            results
+                .into_iter()
+                .map(|(run, verify)| {
+                    let v = verify.expect("verify requested");
+                    assert!(v.passed(), "width {w}: {}/{} ranks", v.ok, v.total);
+                    (run.direction, run.counters.bytes, run.counters.rounds, run.breakdown.total())
+                })
+                .collect::<Vec<_>>()
+        })
+    };
+    assert_eq!(run(1), run(3), "driver results depend on pool width");
+}

@@ -30,6 +30,49 @@ if grep -E '(^|[^0-9])[1-9][0-9]* ignored' "$test_log" >/dev/null; then
     exit 1
 fi
 
+echo "== tier-1: cargo test -q (TAMIO_THREADS=1, serial pool) =="
+# The worker pool must be bit-identical at any width.  The in-process
+# determinism matrix (tests/runtime_determinism.rs) covers widths 1/2/3
+# via overrides; this leg pins the *global* pool's serial path — every
+# test that exercises the default pool re-runs with a width-1 pool.
+TAMIO_THREADS=1 cargo test -q
+
+# --features simd needs nightly `portable_simd`.  Probe by compiling a
+# snippet that uses the exact APIs the kernels use (u64x8, simd_lt,
+# simd_ne, to_bitmask via std::simd::prelude) so toolchain API churn
+# skips the leg instead of failing the gate mid-build.  A clean
+# "unsupported" probe skips with a notice (the scalar fallback is
+# bit-identical and already tested above); under REQUIRE_LINT=1 the
+# probe itself erroring in an unexpected way is a hard failure.
+simd_probe_dir="$(mktemp -d)"
+trap 'rm -f "$test_log"; rm -rf "$simd_probe_dir"' EXIT
+cat > "$simd_probe_dir/probe.rs" <<'EOF'
+#![feature(portable_simd)]
+use std::simd::prelude::*;
+fn main() {
+    let a = u64x8::from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+    let b = u64x8::splat(5);
+    let lt = a.simd_lt(b).to_bitmask().count_ones();
+    let ne = a.simd_ne(b).to_bitmask();
+    assert_eq!((lt, ne & 0x10), (4, 0));
+}
+EOF
+if probe_out="$(rustc --edition 2021 "$simd_probe_dir/probe.rs" \
+        -o "$simd_probe_dir/probe" 2>&1)"; then
+    echo "== tier-1: cargo build/test --features simd =="
+    cargo build --release --features simd
+    cargo test -q --features simd
+elif echo "$probe_out" | grep -qE 'portable_simd|feature.*(nightly|stable)|#!\[feature\]' ; then
+    echo "notice: toolchain lacks portable_simd; skipping --features simd leg" >&2
+elif [ "${REQUIRE_LINT:-0}" = "1" ]; then
+    echo "check.sh: FAIL — REQUIRE_LINT=1 and the simd probe failed unexpectedly:" >&2
+    echo "$probe_out" >&2
+    exit 1
+else
+    echo "warn: simd probe failed unexpectedly; skipping --features simd leg" >&2
+    echo "$probe_out" >&2
+fi
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check
