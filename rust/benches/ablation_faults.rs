@@ -1,0 +1,163 @@
+//! Fault-tolerance ablation at the paper's 16384-rank × 256-node point:
+//! the degradation curve (simulated slowdown × injected fault count) for
+//! aggregation depths 0–2 — two-phase, TAM(P_L=256) and a socket+node
+//! tree — under a cumulative fault schedule: a transient OST failure
+//! (absorbed by retry-with-backoff), a quarter of the OSTs serving at
+//! half rate, and an aggregator dropout repaired mid-collective.  Every
+//! bar is byte-verified, so the curve charts *degraded completions*, not
+//! silent corruption.
+//!
+//! Panel results are spliced into `BENCH_hotpath.json` under an
+//! `"ablation_faults"` key (replaced on re-run; the `hotpath` bench's own
+//! entries survive).
+//!
+//! `cargo bench --bench ablation_faults`
+//! Env: TAMIO_BENCH_BUDGET=N requests (default 150k);
+//!      TAMIO_BENCH_DIRECTION=write|read|both (default both).
+
+use tamio::benchkit::JsonReport;
+use tamio::config::RunConfig;
+use tamio::coordinator::collective::{Algorithm, ExchangeArena};
+use tamio::experiments::{
+    auto_scale, bench_direction_from_env, build_engine_for, plan_cache_for,
+    run_direction_cached,
+};
+use tamio::faults::FaultPlan;
+use tamio::metrics::{breakdown_panels, degraded_summary};
+use tamio::workloads::WorkloadKind;
+
+/// Splice this bench's entries into `BENCH_hotpath.json` under an
+/// `"ablation_faults"` key (same idiom as `engine_micro`: the `hotpath`
+/// bench owns the `"benches"` array, so each side bench replaces only its
+/// own key and both stay re-runnable in any order).
+fn emit_json(report: &JsonReport) {
+    const PATH: &str = "BENCH_hotpath.json";
+    const KEY: &str = ", \"ablation_faults\": [";
+    let mine = report.to_json();
+    let body = mine
+        .strip_prefix("{\"benches\": [")
+        .and_then(|s| s.strip_suffix("]}"))
+        .expect("JsonReport shape");
+    let head = match std::fs::read_to_string(PATH) {
+        Ok(s) if s.starts_with('{') && s.ends_with('}') => match s.find(KEY) {
+            Some(cut) => s[..cut].to_string(),
+            None => s[..s.len() - 1].to_string(),
+        },
+        _ => String::from("{\"benches\": []"),
+    };
+    let merged = format!("{head}{KEY}{body}]}}");
+    std::fs::write(PATH, merged).expect("write BENCH_hotpath.json");
+    println!("\nspliced ablation_faults panels into {PATH}");
+}
+
+fn main() {
+    const NODES: usize = 256;
+    const PPN: usize = 64;
+    let budget: u64 = std::env::var("TAMIO_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150_000);
+    let direction = bench_direction_from_env();
+
+    let mut base = RunConfig::default();
+    base.nodes = NODES;
+    base.ppn = PPN;
+    base.sockets_per_node = 4;
+    base.nodes_per_switch = 16;
+    base.workload = WorkloadKind::E3smG;
+    base.scale = auto_scale(WorkloadKind::E3smG, NODES * PPN, budget);
+    base.direction = direction;
+    base.verify = true;
+    base.fault_seed = 42;
+    // The transient countdown can concentrate on one call site, so the
+    // retry bound must cover it with headroom.
+    base.max_retries = 8;
+    println!(
+        "Fault ablation: e3sm-g @ {NODES} nodes x {PPN} ppn (P={}), \
+         4 sockets/node, 16 nodes/switch, scale 1/{}, direction {direction}, seed {}",
+        NODES * PPN,
+        base.scale,
+        base.fault_seed
+    );
+
+    // Depths 0-2.
+    let algos = ["two-phase", "tam:256", "tree:socket=2,node=2"];
+    // Cumulative schedules: 0 faults (baseline), then +1 clause each.
+    let schedules: [Option<&str>; 4] = [
+        None,
+        Some("ost_fail=?@transient:6"),
+        Some("ost_fail=?@transient:6,ost_slow=0.5x:0-13"),
+        Some("ost_fail=?@transient:6,ost_slow=0.5x:0-13,agg_drop=?"),
+    ];
+
+    let engine = build_engine_for(&base).expect("engine");
+    let mut arena = ExchangeArena::default();
+    let mut cache = plan_cache_for(&base).expect("plan cache");
+    let mut report = JsonReport::new();
+    let mut runs = Vec::new();
+    for &dir in direction.runs() {
+        for name in algos {
+            let mut baseline_total = 0.0f64;
+            for (n_faults, spec) in schedules.iter().enumerate() {
+                let mut cfg = base.clone();
+                cfg.algorithm = name.parse::<Algorithm>().expect("algorithm");
+                cfg.faults = spec.map(|s| s.parse::<FaultPlan>().expect("fault schedule"));
+                let (mut run, verify) =
+                    run_direction_cached(&cfg, engine.as_ref(), dir, &mut arena, &mut cache)
+                        .expect("ablation run");
+                if let Some(v) = verify {
+                    assert!(
+                        v.passed(),
+                        "{name} [{dir}] f{n_faults}: verify {}/{}",
+                        v.ok,
+                        v.total
+                    );
+                }
+                let total = run.breakdown.total();
+                if n_faults == 0 {
+                    baseline_total = total;
+                }
+                let slowdown = total / baseline_total.max(f64::MIN_POSITIVE);
+                assert!(
+                    slowdown >= 1.0 - 1e-9,
+                    "{name} [{dir}] f{n_faults}: degraded run faster than baseline ({slowdown})"
+                );
+                println!(
+                    "{name} [{dir}] faults={n_faults}: {:.3} ms  slowdown {slowdown:.3}x  {}",
+                    total * 1e3,
+                    degraded_summary(&run.counters)
+                );
+                report.add_value(
+                    &format!("faults_slowdown/{name}/{dir}/f{n_faults}"),
+                    slowdown,
+                );
+                run.label = format!("{name} f{n_faults}");
+                runs.push(run);
+            }
+        }
+    }
+    print!("{}", breakdown_panels(&runs));
+
+    // The full schedule includes a half-rate OST range, so every depth's
+    // curve must end strictly above 1x.
+    for &dir in direction.runs() {
+        for name in algos {
+            let label = format!("{name} f{}", schedules.len() - 1);
+            let full = runs
+                .iter()
+                .find(|r| r.direction == dir && r.label == label)
+                .expect("full-schedule bar");
+            let base_bar = runs
+                .iter()
+                .find(|r| r.direction == dir && r.label == format!("{name} f0"))
+                .expect("baseline bar");
+            assert!(
+                full.breakdown.total() > base_bar.breakdown.total(),
+                "{name} [{dir}]: full fault schedule must degrade the run"
+            );
+            assert_eq!(full.counters.repaired_plans, 1, "{name} [{dir}]");
+        }
+    }
+    emit_json(&report);
+    println!("ablation_faults: all degraded bars byte-verified ok");
+}

@@ -8,6 +8,7 @@ use crate::coordinator::breakdown::CpuModel;
 use crate::coordinator::collective::{Algorithm, DirectionSpec};
 use crate::coordinator::placement::GlobalPlacement;
 use crate::error::{Error, Result};
+use crate::faults::{self, FaultPlan};
 use crate::lustre::{IoModel, LustreConfig};
 use crate::netmodel::{NetParams, SendMode};
 use crate::runtime::engine::EngineKind;
@@ -62,6 +63,13 @@ pub struct RunConfig {
     /// and then `available_parallelism()` (resolved in
     /// [`crate::util::runtime::default_threads`]).
     pub threads: Option<usize>,
+    /// Seeded fault schedule (`--faults`); `None` runs fault-free.
+    pub faults: Option<FaultPlan>,
+    /// Seed resolving `?` selectors in the fault schedule (`--fault-seed`).
+    pub fault_seed: u64,
+    /// Retry bound per storage call site under transient faults
+    /// (`--max-retries`).
+    pub max_retries: u32,
 }
 
 impl Default for RunConfig {
@@ -87,6 +95,9 @@ impl Default for RunConfig {
             plan_cache: None,
             plan_cache_size: 8,
             threads: None,
+            faults: None,
+            fault_seed: 0,
+            max_retries: faults::DEFAULT_MAX_RETRIES,
         }
     }
 }
@@ -216,6 +227,13 @@ impl RunConfig {
                 }
                 self.threads = Some(n);
             }
+            "faults" => self.faults = Some(value.parse()?),
+            "fault-seed" | "fault_seed" => self.fault_seed = parse_u64(value)?,
+            "max-retries" | "max_retries" => {
+                self.max_retries = parse_u64(value)?.try_into().map_err(|_| {
+                    Error::config(format!("max-retries {value} exceeds u32 range"))
+                })?;
+            }
             other => {
                 return Err(Error::config(format!("unknown config key '{other}'")));
             }
@@ -337,6 +355,35 @@ mod tests {
         assert!(err.contains("at least 1"), "{err}");
         let garbage = KvMap::from_pairs(vec![("threads".into(), "many".into())]);
         assert!(c.apply(&garbage).is_err(), "non-numeric threads must hard-error");
+    }
+
+    #[test]
+    fn fault_keys_apply_and_reject_garbage() {
+        use crate::faults::{FaultClause, Sel};
+        let mut c = RunConfig::default();
+        assert_eq!(c.faults, None);
+        assert_eq!(c.fault_seed, 0);
+        assert_eq!(c.max_retries, faults::DEFAULT_MAX_RETRIES);
+        let kv = KvMap::from_pairs(vec![
+            ("faults".into(), "ost_fail=?@transient:3,agg_drop=?@level:0".into()),
+            ("fault-seed".into(), "42".into()),
+            ("max-retries".into(), "6".into()),
+        ]);
+        c.apply(&kv).unwrap();
+        let plan = c.faults.as_ref().unwrap();
+        assert_eq!(plan.clauses.len(), 2);
+        assert!(matches!(
+            plan.clauses[0],
+            FaultClause::OstFail { ost: Sel::Random, round: None, transient: Some(3) }
+        ));
+        assert!(plan.has_drops());
+        assert_eq!(c.fault_seed, 42);
+        assert_eq!(c.max_retries, 6);
+        // Malformed schedules hard-error at apply time, not at run time.
+        let bad = KvMap::from_pairs(vec![("faults".into(), "quake=7".into())]);
+        assert!(c.apply(&bad).is_err());
+        let bad = KvMap::from_pairs(vec![("max_retries".into(), "lots".into())]);
+        assert!(c.apply(&bad).is_err());
     }
 
     #[test]

@@ -206,6 +206,16 @@ pub struct Counters {
     pub rounds: u64,
     /// Extent-lock conflicts at the OSTs.
     pub lock_conflicts: u64,
+    /// Storage retries performed under degraded execution (transient OST
+    /// faults absorbed by the bounded retry-with-backoff policy; zero on
+    /// fault-free runs).
+    pub retries: u64,
+    /// Exponential-backoff units paid across all retries (each unit costs
+    /// [`crate::faults::RETRY_BACKOFF_BASE`] simulated seconds, folded
+    /// into `io_phase`).
+    pub backoff_units: u64,
+    /// Collective plans rewritten by the aggregator-dropout repair pass.
+    pub repaired_plans: u64,
 }
 
 #[cfg(test)]

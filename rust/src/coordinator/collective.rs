@@ -30,6 +30,7 @@ use crate::coordinator::tam::{tam_write, TamConfig};
 use crate::coordinator::tree::{tree_read, tree_write, AggregationPlan, TreeSpec};
 use crate::coordinator::twophase::{two_phase_write, CollectiveCtx, ExchangeOutcome};
 use crate::error::{Error, Result};
+use crate::faults;
 use crate::lustre::{LustreConfig, LustreFile, OstStats};
 use crate::mpisim::FlatView;
 use crate::netmodel::phase::{cost_phase, Message, PendingQueue};
@@ -667,6 +668,13 @@ pub fn execute_exchange(
     }
     let mut scratch = std::mem::take(&mut arena.scratch);
     let rt = runtime::current();
+    // Degraded-execution accounting: transient storage faults are absorbed
+    // by a bounded retry-with-backoff at each storage call site (atomics
+    // because the read sites run on the worker pool).  Fault-free runs
+    // never touch the retry path and stay bit-identical.
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let retries_ctr = AtomicU64::new(0);
+    let backoff_ctr = AtomicU64::new(0);
     for round in 0..n_rounds {
         // Stage this round's requests per aggregator: slab slices out of
         // the requester's MyReqs are memcpy'd into the aggregator's
@@ -712,13 +720,27 @@ pub fn execute_exchange(
             )?,
             ExchangeIo::Read(f) => {
                 let file = *f;
+                // Reads never pass through `begin_round` (the file is
+                // shared immutably), so round-armed faults tick here.
+                file.tick_fault_round();
+                let (retries_ctr, backoff_ctr) = (&retries_ctr, &backoff_ctr);
                 rt.try_for_each_mut(
                     &mut scratch,
                     &|agg| format!("read exchange round {round}, aggregator {agg}"),
                     |_, slot| {
                         slot.merge_meta(ctx.engine)?;
                         if !slot.merged.is_empty() {
-                            file.read_view(&slot.merged, &mut slot.payload, &mut slot.stats)?;
+                            let (merged, payload, stats) =
+                                (&slot.merged, &mut slot.payload, &mut slot.stats);
+                            let (out, r) = faults::retrying(file.max_retries(), || {
+                                file.read_view(merged, payload, stats)
+                            });
+                            if r > 0 {
+                                retries_ctr.fetch_add(r as u64, Ordering::Relaxed);
+                                backoff_ctr
+                                    .fetch_add(faults::backoff_units(r), Ordering::Relaxed);
+                            }
+                            out?;
                         }
                         Ok(())
                     },
@@ -742,8 +764,23 @@ pub fn execute_exchange(
                 ExchangeIo::Write(file) => {
                     // The merged batch lies inside this aggregator's round
                     // domain by construction; land the whole coalesced
-                    // batch in one vectored call.
-                    file.write_view(agg_ranks[agg], &slot.merged, &slot.payload)?;
+                    // batch in one vectored call.  Transient OST faults are
+                    // retried with backoff (byte-idempotent: a partial
+                    // write before the fault is simply overwritten); the
+                    // surfaced error carries the failing task's identity
+                    // like the pooled read tasks already do.
+                    let (out, r) = faults::retrying(file.max_retries(), || {
+                        file.write_view(agg_ranks[agg], &slot.merged, &slot.payload)
+                    });
+                    if r > 0 {
+                        retries_ctr.fetch_add(r as u64, Ordering::Relaxed);
+                        backoff_ctr.fetch_add(faults::backoff_units(r), Ordering::Relaxed);
+                    }
+                    out.map_err(|e| {
+                        e.with_context(format!(
+                            "write exchange round {round}, aggregator {agg}"
+                        ))
+                    })?;
                 }
                 ExchangeIo::Read(_) => {
                     // Requester-side assembly: ascending aggregator within
@@ -768,10 +805,10 @@ pub fn execute_exchange(
     // in the per-aggregator scratch stats accumulated across rounds.
     match &io {
         ExchangeIo::Write(file) => {
-            bd.io_phase = ctx.io.phase_time(file.stats());
+            bd.io_phase = ctx.io.phase_time_skewed(file.stats(), file.ost_rates());
             counters.lock_conflicts = file.total_lock_conflicts();
         }
-        ExchangeIo::Read(_) => {
+        ExchangeIo::Read(f) => {
             debug_assert!(
                 arena.reply.fully_assembled(),
                 "reply assembly must fill every requester span exactly"
@@ -783,8 +820,13 @@ pub fn execute_exchange(
                     acc.extents += s.extents;
                 }
             }
-            bd.io_phase = ctx.io.phase_time(&stats);
+            bd.io_phase = ctx.io.phase_time_skewed(&stats, f.ost_rates());
         }
+    }
+    counters.retries = retries_ctr.into_inner();
+    counters.backoff_units = backoff_ctr.into_inner();
+    if counters.backoff_units > 0 {
+        bd.io_phase += faults::backoff_penalty(counters.backoff_units);
     }
 
     // Hand the (still warm) slots back to the arena for the next exchange.

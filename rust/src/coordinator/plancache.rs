@@ -50,8 +50,10 @@ use crate::coordinator::tree::{
 };
 use crate::coordinator::twophase::CollectiveCtx;
 use crate::error::{Error, Result};
+use crate::faults::{FaultPlan, Sel};
 use crate::lustre::{LustreConfig, LustreFile};
 use crate::mpisim::FlatView;
+use crate::util::rng::SplitMix64;
 
 // ---------------------------------------------------------------------------
 // Fingerprint
@@ -70,6 +72,20 @@ pub struct Fp128 {
 impl std::fmt::Display for Fp128 {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+impl Fp128 {
+    /// Salt the fingerprint with a fault-epoch tag
+    /// ([`crate::faults::FaultPlan::cache_salt`]): degraded (repaired)
+    /// plans are keyed apart from fault-free ones so neither can serve
+    /// the other.  Salt 0 is reserved for "no faults" and is the
+    /// identity.
+    pub fn salted(self, salt: u64) -> Fp128 {
+        if salt == 0 {
+            return self;
+        }
+        Fp128 { lo: self.lo ^ salt, hi: self.hi ^ splitmix_mix(salt) }
     }
 }
 
@@ -904,6 +920,279 @@ pub fn run_collective_read_cached(
     tree_read_with(ctx, &plan.agg, Some(&plan.exchange), views, file, arena)
 }
 
+// ---------------------------------------------------------------------------
+// Plan repair (aggregator dropout) + degraded entry points
+// ---------------------------------------------------------------------------
+
+/// Repair a [`CollectivePlan`] after aggregator dropouts: for every
+/// `agg_drop` clause a surviving peer adopts the dropped rank's role, so
+/// the degraded collective completes with byte-identical file content.
+///
+/// * **Global dropout** (`agg_drop=<rank>`, no level): the first
+///   surviving global aggregator adopts the dropped rank's file domains
+///   — `exchange.agg_ranks` entries are rewritten while the
+///   [`FileDomains`] partition never moves, so every domain still
+///   receives exactly its fault-free bytes.
+/// * **Tree-level dropout** (`agg_drop=<rank>@level:<l>`): a
+///   deterministically-chosen non-aggregator member `S` of the dropped
+///   rank `R`'s group at level `l` is promoted in `R`'s place.  `R`'s
+///   members (including `R` itself, demoted to a plain member) re-point
+///   at `S`, while `S`'s own view keeps flowing to its old parent —
+///   every merged view in the repaired tree is therefore exactly a
+///   fault-free merged view, which is what lets a cached exchange plan's
+///   shape validation keep holding.  At level `l+1` (or the top-tier
+///   exchange, when `l` is the outermost level) `S` inherits `R`'s seat.
+///
+/// `?` selectors resolve from `seed`, forked per drop index — the same
+/// determinism discipline as [`FaultPlan::resolve_osts`].  Returns the
+/// number of drops applied; an unrepairable drop (no surviving peer, a
+/// level the plan does not have) is a loud error, never a silent no-op.
+pub fn repair_plan(
+    plan: &mut CollectivePlan,
+    topo: &Topology,
+    drops: &[(Sel, Option<usize>)],
+    seed: u64,
+) -> Result<u64> {
+    let mut root = SplitMix64::new(seed);
+    for (di, (sel, level)) in drops.iter().enumerate() {
+        let mut rng = root.fork(di as u64);
+        match level {
+            None => repair_global_drop(plan, *sel, &mut rng)?,
+            Some(l) => repair_level_drop(plan, topo, *sel, *l, &mut rng)?,
+        }
+    }
+    Ok(drops.len() as u64)
+}
+
+/// Rewrite `exchange.agg_ranks` so a surviving rank serves the dropped
+/// rank's file domains (the domain partition itself is immutable).
+fn repair_global_drop(
+    plan: &mut CollectivePlan,
+    sel: Sel,
+    rng: &mut SplitMix64,
+) -> Result<()> {
+    // Distinct serving ranks, ascending (duplicates appear once an
+    // earlier drop has been repaired on this plan).
+    let mut serving: Vec<usize> = plan.exchange.agg_ranks.clone();
+    serving.sort_unstable();
+    serving.dedup();
+    let dropped = match sel {
+        Sel::Fixed(r) => {
+            if !serving.contains(&r) {
+                return Err(Error::config(format!(
+                    "faults: agg_drop rank {r} is not a serving global aggregator \
+                     (serving ranks: {serving:?})"
+                )));
+            }
+            r
+        }
+        Sel::Random => serving[rng.gen_range(serving.len() as u64) as usize],
+    };
+    let survivor =
+        plan.exchange.agg_ranks.iter().copied().find(|&a| a != dropped).ok_or_else(|| {
+            Error::config(format!(
+                "faults: dropping aggregator rank {dropped} leaves no survivor to adopt \
+                 its file domains"
+            ))
+        })?;
+    for a in plan.exchange.agg_ranks.iter_mut() {
+        if *a == dropped {
+            *a = survivor;
+        }
+    }
+    Ok(())
+}
+
+/// Promote a group peer into a dropped tree-level aggregator's seat (see
+/// [`repair_plan`] for the invariants this preserves).
+fn repair_level_drop(
+    plan: &mut CollectivePlan,
+    topo: &Topology,
+    sel: Sel,
+    l: usize,
+    rng: &mut SplitMix64,
+) -> Result<()> {
+    let depth = plan.agg.levels.len();
+    if l >= depth {
+        return Err(Error::config(format!(
+            "faults: agg_drop level {l} out of range — this plan has {depth} tree \
+             level{} (two-phase has none; level drops need a tam/tree algorithm)",
+            if depth == 1 { "" } else { "s" }
+        )));
+    }
+    let (kind, dropped) = {
+        let level = &plan.agg.levels[l];
+        let dropped = match sel {
+            Sel::Fixed(r) => {
+                if level.ranks.binary_search(&r).is_err() {
+                    return Err(Error::config(format!(
+                        "faults: agg_drop rank {r} is not an aggregator at tree level {l} \
+                         (aggregators: {:?})",
+                        level.ranks
+                    )));
+                }
+                r
+            }
+            Sel::Random => level.ranks[rng.gen_range(level.ranks.len() as u64) as usize],
+        };
+        (level.kind, dropped)
+    };
+    // The substitute: the lowest-ranked member of the dropped rank's
+    // group at this level that is not itself an aggregator here.
+    let group = topo.group_of(kind, dropped);
+    let substitute = {
+        let level = &plan.agg.levels[l];
+        (0..plan.nprocs)
+            .find(|&m| {
+                m != dropped
+                    && level.assignment.get(m).is_some_and(|&a| a != usize::MAX)
+                    && topo.group_of(kind, m) == group
+                    && level.ranks.binary_search(&m).is_err()
+            })
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "faults: agg_drop rank {dropped} at level {l} has no surviving \
+                     non-aggregator peer in its {kind} group to promote"
+                ))
+            })?
+    };
+    {
+        let level = &mut plan.agg.levels[l];
+        let pos = level.ranks.binary_search(&dropped).map_err(|_| {
+            Error::Protocol(format!("plan repair: rank {dropped} vanished from level {l}"))
+        })?;
+        level.ranks.remove(pos);
+        let ins = match level.ranks.binary_search(&substitute) {
+            Ok(i) | Err(i) => i,
+        };
+        level.ranks.insert(ins, substitute);
+        // The dropped rank's members — and the dropped rank itself, now a
+        // plain member — re-point at the substitute.  The substitute's
+        // own assignment is only rewritten when its parent WAS the
+        // dropped rank; otherwise its view keeps flowing to its old
+        // parent, whose merged view must not change shape.
+        for a in level.assignment.iter_mut() {
+            if *a == dropped {
+                *a = substitute;
+            }
+        }
+    }
+    if l + 1 < depth {
+        // The substitute inherits the dropped rank's upstream seat.
+        let up = &mut plan.agg.levels[l + 1];
+        up.assignment[substitute] = up.assignment[dropped];
+        up.assignment[dropped] = usize::MAX;
+    } else {
+        // Top level: the dropped rank was a top-tier requester of the
+        // inter-node exchange; the substitute inherits its classified
+        // request slabs (identical merged view ⇒ identical bytes), and
+        // the requester list returns to rank order to match the
+        // executor's slot ordering.
+        for pr in plan.exchange.reqs.iter_mut() {
+            if pr.rank == dropped {
+                pr.rank = substitute;
+            }
+        }
+        plan.exchange.reqs.sort_by_key(|pr| pr.rank);
+    }
+    Ok(())
+}
+
+/// Degraded twin of [`run_collective_write_cached`]: the plan is built
+/// (or reused) under a fault-epoch-salted fingerprint
+/// ([`Fp128::salted`], [`FaultPlan::cache_salt`]), the schedule's
+/// aggregator drops are repaired into it, and the repaired plan
+/// executes.  With `cache: None` the repaired plan is built fresh per
+/// call.  `counters.repaired_plans` reports the drops applied —
+/// identical for warm and cold executions.
+#[allow(clippy::too_many_arguments)]
+pub fn run_collective_write_degraded(
+    ctx: &CollectiveCtx,
+    algo: Algorithm,
+    ranks: Vec<(usize, ReqBatch)>,
+    file: &mut LustreFile,
+    arena: &mut ExchangeArena,
+    cache: Option<&mut PlanCache>,
+    faults: &FaultPlan,
+    fault_seed: u64,
+) -> Result<CollectiveOutcome> {
+    let file_cfg = *file.config();
+    let fp = fingerprint_collective(
+        ctx,
+        &algo,
+        Direction::Write,
+        &file_cfg,
+        ranks.iter().map(|(r, b)| (*r, &b.view)),
+    )
+    .salted(faults.cache_salt(fault_seed));
+    let drops = faults.drops();
+    let build = || -> Result<CollectivePlan> {
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let mut plan =
+            build_collective_plan(ctx, &algo, Direction::Write, &views, &file_cfg, fp)?;
+        repair_plan(&mut plan, ctx.topo, &drops, fault_seed)?;
+        Ok(plan)
+    };
+    let owned;
+    let plan: &CollectivePlan = match cache {
+        Some(c) => c.get_or_build(fp, build)?,
+        None => {
+            owned = build()?;
+            &owned
+        }
+    };
+    check_topology(plan, ctx.topo)?;
+    let out = tree_write_with(ctx, &plan.agg, Some(&plan.exchange), ranks, file, arena)?;
+    let mut out = CollectiveOutcome { breakdown: out.breakdown, counters: out.counters };
+    out.counters.repaired_plans = drops.len() as u64;
+    Ok(out)
+}
+
+/// Degraded twin of [`run_collective_read_cached`] (see
+/// [`run_collective_write_degraded`] for the contract).
+#[allow(clippy::too_many_arguments)]
+pub fn run_collective_read_degraded(
+    ctx: &CollectiveCtx,
+    algo: Algorithm,
+    views: Vec<(usize, FlatView)>,
+    file: &LustreFile,
+    arena: &mut ExchangeArena,
+    cache: Option<&mut PlanCache>,
+    faults: &FaultPlan,
+    fault_seed: u64,
+) -> Result<(Vec<(usize, Vec<u8>)>, CollectiveOutcome)> {
+    let file_cfg = *file.config();
+    let fp = fingerprint_collective(
+        ctx,
+        &algo,
+        Direction::Read,
+        &file_cfg,
+        views.iter().map(|(r, v)| (*r, v)),
+    )
+    .salted(faults.cache_salt(fault_seed));
+    let drops = faults.drops();
+    let build = || -> Result<CollectivePlan> {
+        let mut plan =
+            build_collective_plan(ctx, &algo, Direction::Read, &views, &file_cfg, fp)?;
+        repair_plan(&mut plan, ctx.topo, &drops, fault_seed)?;
+        Ok(plan)
+    };
+    let owned;
+    let plan: &CollectivePlan = match cache {
+        Some(c) => c.get_or_build(fp, build)?,
+        None => {
+            owned = build()?;
+            &owned
+        }
+    };
+    check_topology(plan, ctx.topo)?;
+    let (bytes, mut out) =
+        tree_read_with(ctx, &plan.agg, Some(&plan.exchange), views, file, arena)?;
+    out.counters.repaired_plans = drops.len() as u64;
+    Ok((bytes, out))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1063,6 +1352,98 @@ mod tests {
         let mid = 36 + (good.len() - 44) / 2;
         bad[mid] ^= 0x40;
         assert!(decode_plan(&bad, fp).is_err());
+    }
+
+    #[test]
+    fn salted_fingerprints_separate_fault_epochs() {
+        let fp = Fp128 { lo: 0x1111, hi: 0x2222 };
+        // Salt 0 is the fault-free identity; any real salt moves both
+        // lanes deterministically.
+        assert_eq!(fp.salted(0), fp);
+        let s = fp.salted(0x1234);
+        assert_ne!(s, fp);
+        assert_eq!(s, fp.salted(0x1234));
+        assert_ne!(fp.salted(1), fp.salted(2));
+    }
+
+    #[test]
+    fn global_drop_repair_reassigns_file_domains() {
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let cfg = LustreConfig::new(64, 4);
+        let vs = views(&topo);
+        let fp = fp_of(&ctx, &Algorithm::TwoPhase, Direction::Write, &cfg, &vs);
+        let mut plan =
+            build_collective_plan(&ctx, &Algorithm::TwoPhase, Direction::Write, &vs, &cfg, fp)
+                .unwrap();
+        let before = plan.exchange.agg_ranks.clone();
+        let dropped = before[0];
+        let n = repair_plan(&mut plan, &topo, &[(Sel::Fixed(dropped), None)], 7).unwrap();
+        assert_eq!(n, 1);
+        // A survivor adopted the dropped rank's domains: same domain
+        // count, dropped rank no longer serves, partition untouched.
+        assert_eq!(plan.exchange.agg_ranks.len(), before.len());
+        assert!(plan.exchange.agg_ranks.iter().all(|&a| a != dropped));
+        assert_eq!(plan.exchange.domains.n_agg, before.len());
+        // A rank that never served is a loud error, as is a level drop
+        // on a depth-0 plan.
+        assert!(repair_plan(&mut plan, &topo, &[(Sel::Fixed(9999), None)], 7).is_err());
+        assert!(repair_plan(&mut plan, &topo, &[(Sel::Fixed(before[1]), Some(0))], 7)
+            .is_err());
+    }
+
+    #[test]
+    fn level_drop_repair_promotes_a_group_peer() {
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        let cfg = LustreConfig::new(64, 4);
+        let vs = views(&topo);
+        let algo: Algorithm = "tam:2".parse().unwrap();
+        let fp = fp_of(&ctx, &algo, Direction::Write, &cfg, &vs);
+        let mut plan =
+            build_collective_plan(&ctx, &algo, Direction::Write, &vs, &cfg, fp).unwrap();
+        let dropped = plan.agg.levels[0].ranks[0];
+        let kind = plan.agg.levels[0].kind;
+        repair_plan(&mut plan, &topo, &[(Sel::Fixed(dropped), Some(0))], 3).unwrap();
+        let level = &plan.agg.levels[0];
+        // The dropped rank left the aggregator set; its seat went to a
+        // same-group peer and the set stayed ascending.
+        assert!(level.ranks.binary_search(&dropped).is_err());
+        assert!(level.ranks.windows(2).all(|w| w[0] < w[1]));
+        let substitute = level.assignment[dropped];
+        assert_ne!(substitute, dropped);
+        assert_eq!(topo.group_of(kind, substitute), topo.group_of(kind, dropped));
+        assert!(level.ranks.binary_search(&substitute).is_ok());
+        // Depth 1 ⇒ the top-tier requester list inherited the seat too,
+        // back in rank order.
+        assert!(plan.exchange.reqs.iter().all(|pr| pr.rank != dropped));
+        assert!(plan.exchange.reqs.iter().any(|pr| pr.rank == substitute));
+        assert!(plan.exchange.reqs.windows(2).all(|w| w[0].rank < w[1].rank));
+        // `?` drops resolve deterministically from the seed.
+        let mut p1 =
+            build_collective_plan(&ctx, &algo, Direction::Write, &vs, &cfg, fp).unwrap();
+        let mut p2 =
+            build_collective_plan(&ctx, &algo, Direction::Write, &vs, &cfg, fp).unwrap();
+        repair_plan(&mut p1, &topo, &[(Sel::Random, Some(0))], 42).unwrap();
+        repair_plan(&mut p2, &topo, &[(Sel::Random, Some(0))], 42).unwrap();
+        assert_eq!(p1.agg.levels[0].ranks, p2.agg.levels[0].ranks);
+        assert_eq!(p1.agg.levels[0].assignment, p2.agg.levels[0].assignment);
     }
 
     #[test]

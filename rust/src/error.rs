@@ -16,6 +16,33 @@ pub enum Error {
     /// Simulated-storage errors (OST bounds, lock conflicts in strict mode).
     Storage(String),
 
+    /// Persistent (fatal) OST failure: the faulting extent can never be
+    /// served again.  Structured so tests and retry policy match on the
+    /// variant, not message substrings.
+    StorageFailed {
+        /// Failing OST index.
+        ost: usize,
+        /// File offset of the faulting piece.
+        offset: u64,
+        /// Length of the faulting piece.
+        len: u64,
+        /// Accumulated `with_context` prefixes (empty = none).
+        ctx: String,
+    },
+
+    /// Transient OST failure: retry-with-backoff is expected to succeed
+    /// once the fault heals (`Error::is_transient` returns true).
+    StorageTransient {
+        /// Failing OST index.
+        ost: usize,
+        /// File offset of the faulting piece.
+        offset: u64,
+        /// Length of the faulting piece.
+        len: u64,
+        /// Accumulated `with_context` prefixes (empty = none).
+        ctx: String,
+    },
+
     /// PJRT/XLA runtime errors (artifact load, compile, execute).
     Runtime(String),
 
@@ -33,6 +60,20 @@ impl std::fmt::Display for Error {
             Error::Workload(msg) => write!(f, "workload error: {msg}"),
             Error::Protocol(msg) => write!(f, "protocol error: {msg}"),
             Error::Storage(msg) => write!(f, "storage error: {msg}"),
+            Error::StorageFailed { ost, offset, len, ctx } => {
+                let pre = if ctx.is_empty() { String::new() } else { format!("{ctx}: ") };
+                write!(
+                    f,
+                    "storage error: {pre}OST {ost} failed (persistent) at offset {offset} len {len}"
+                )
+            }
+            Error::StorageTransient { ost, offset, len, ctx } => {
+                let pre = if ctx.is_empty() { String::new() } else { format!("{ctx}: ") };
+                write!(
+                    f,
+                    "storage error: {pre}OST {ost} failed (transient) at offset {offset} len {len}"
+                )
+            }
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Verify(msg) => write!(f, "verification failed: {msg}"),
             Error::Io(e) => write!(f, "{e}"),
@@ -64,6 +105,23 @@ impl Error {
         Error::Config(msg.into())
     }
 
+    /// Persistent OST failure at a faulting extent.
+    pub fn storage_failed(ost: usize, offset: u64, len: u64) -> Self {
+        Error::StorageFailed { ost, offset, len, ctx: String::new() }
+    }
+
+    /// Transient (retryable) OST failure at a faulting extent.
+    pub fn storage_transient(ost: usize, offset: u64, len: u64) -> Self {
+        Error::StorageTransient { ost, offset, len, ctx: String::new() }
+    }
+
+    /// Whether a bounded retry-with-backoff may clear this error.  Only
+    /// transient storage faults qualify; everything else is fatal and
+    /// must surface immediately.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, Error::StorageTransient { .. })
+    }
+
     /// Prepend context (e.g. a failing task's identity) to the message
     /// while PRESERVING the variant — callers and tests match on the
     /// variant, so context must never rewrap a `Storage` error as
@@ -74,6 +132,18 @@ impl Error {
             Error::Workload(m) => Error::Workload(format!("{ctx}: {m}")),
             Error::Protocol(m) => Error::Protocol(format!("{ctx}: {m}")),
             Error::Storage(m) => Error::Storage(format!("{ctx}: {m}")),
+            Error::StorageFailed { ost, offset, len, ctx: c } => Error::StorageFailed {
+                ost,
+                offset,
+                len,
+                ctx: if c.is_empty() { ctx.to_string() } else { format!("{ctx}: {c}") },
+            },
+            Error::StorageTransient { ost, offset, len, ctx: c } => Error::StorageTransient {
+                ost,
+                offset,
+                len,
+                ctx: if c.is_empty() { ctx.to_string() } else { format!("{ctx}: {c}") },
+            },
             Error::Runtime(m) => Error::Runtime(format!("{ctx}: {m}")),
             Error::Verify(m) => Error::Verify(format!("{ctx}: {m}")),
             Error::Io(e) => {
@@ -109,6 +179,29 @@ mod tests {
         let io = io.with_context("ctx");
         assert!(matches!(io, Error::Io(_)));
         assert_eq!(io.to_string(), "ctx: gone");
+    }
+
+    #[test]
+    fn structured_storage_variants_format_and_keep_identity() {
+        let e = Error::storage_failed(3, 128, 64);
+        assert_eq!(
+            e.to_string(),
+            "storage error: OST 3 failed (persistent) at offset 128 len 64"
+        );
+        assert!(!e.is_transient());
+        let t = Error::storage_transient(5, 0, 32);
+        assert_eq!(
+            t.to_string(),
+            "storage error: OST 5 failed (transient) at offset 0 len 32"
+        );
+        assert!(t.is_transient());
+        // Context nests outermost-first and preserves the variant + fields.
+        let t = t.with_context("round 2, aggregator 7").with_context("read");
+        assert!(matches!(t, Error::StorageTransient { ost: 5, offset: 0, len: 32, .. }));
+        assert_eq!(
+            t.to_string(),
+            "storage error: read: round 2, aggregator 7: OST 5 failed (transient) at offset 0 len 32"
+        );
     }
 
     #[test]

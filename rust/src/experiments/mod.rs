@@ -16,11 +16,13 @@ use crate::coordinator::collective::{
     Direction, DirectionSpec, ExchangeArena,
 };
 use crate::coordinator::plancache::{
-    run_collective_read_cached, run_collective_write_cached, PlanCache, PlanCacheStats,
+    run_collective_read_cached, run_collective_read_degraded, run_collective_write_cached,
+    run_collective_write_degraded, PlanCache, PlanCacheStats,
 };
 use crate::coordinator::tam::TamConfig;
 use crate::coordinator::twophase::CollectiveCtx;
 use crate::error::{Error, Result};
+use crate::faults::{self, FaultPlan};
 use crate::lustre::{LustreFile, OstStats};
 use crate::metrics::{LabelledRun, ScalingSeries, TunerValidation, TunerValidationRow};
 use crate::mpisim::rank::deterministic_payload;
@@ -136,6 +138,24 @@ pub fn run_direction_cached(
     run_direction_impl(cfg, engine, direction, arena, Some(cache))
 }
 
+/// Install the run's fault schedule on a freshly-created file: resolved
+/// OST failures, the per-OST service-rate table, and the retry bound.
+/// The round clock restarts so `@round:r` clauses count collective I/O
+/// rounds from here (read runs call this *after* pre-population, so the
+/// setup writes never consume transient countdowns).  A no-op when the
+/// run is fault-free.
+fn install_faults(cfg: &RunConfig, file: &mut LustreFile) -> Result<()> {
+    let Some(plan) = &cfg.faults else { return Ok(()) };
+    let resolved = plan.resolve_osts(file.config().stripe_count, cfg.fault_seed)?;
+    for f in resolved.fails {
+        file.faults_mut().install(f)?;
+    }
+    file.faults_mut().set_rates(resolved.rates)?;
+    file.faults_mut().set_max_retries(cfg.max_retries);
+    file.reset_fault_rounds();
+    Ok(())
+}
+
 fn run_direction_impl(
     cfg: &RunConfig,
     engine: &dyn SortEngine,
@@ -207,21 +227,37 @@ fn run_direction_impl(
         Direction::Write => {
             let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
             let mut file = LustreFile::new(cfg.lustre);
-            let outcome = match cache {
-                Some(cache) => {
+            install_faults(cfg, &mut file)?;
+            let outcome = match (&cfg.faults, cache) {
+                (Some(plan), cache) => run_collective_write_degraded(
+                    &ctx,
+                    algo,
+                    ranks,
+                    &mut file,
+                    arena,
+                    cache,
+                    plan,
+                    cfg.fault_seed,
+                )?,
+                (None, Some(cache)) => {
                     run_collective_write_cached(&ctx, algo, ranks, &mut file, arena, cache)?
                 }
-                None => run_collective_write_with(&ctx, algo, ranks, &mut file, arena)?,
+                (None, None) => run_collective_write_with(&ctx, algo, ranks, &mut file, arena)?,
             };
             let verify = if cfg.verify {
                 // Vectored read-back through the same storage entry point
                 // the read direction drives (no per-request read_at loop).
+                // Retried like the collective itself: leftover transient
+                // countdowns must not fail an otherwise-correct file.
                 let mut ok = 0;
                 let mut got = Vec::new();
                 let mut stats = vec![OstStats::default(); file.config().stripe_count];
                 for (rank, view) in &views {
                     let want = deterministic_payload(cfg.seed, *rank, view.total_bytes());
-                    file.read_view(view, &mut got, &mut stats)?;
+                    let (out, _) = faults::retrying(file.max_retries(), || {
+                        file.read_view(view, &mut got, &mut stats)
+                    });
+                    out?;
                     if got == want {
                         ok += 1;
                     }
@@ -251,12 +287,23 @@ fn run_direction_impl(
                     file.write_view(*rank, &batch.view, &batch.payload)?;
                 }
             }
+            install_faults(cfg, &mut file)?;
             let views: Vec<_> = ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
-            let (got, outcome) = match cache {
-                Some(cache) => {
+            let (got, outcome) = match (&cfg.faults, cache) {
+                (Some(plan), cache) => run_collective_read_degraded(
+                    &ctx,
+                    algo,
+                    views,
+                    &file,
+                    arena,
+                    cache,
+                    plan,
+                    cfg.fault_seed,
+                )?,
+                (None, Some(cache)) => {
                     run_collective_read_cached(&ctx, algo, views, &file, arena, cache)?
                 }
-                None => run_collective_read_with(&ctx, algo, views, &file, arena)?,
+                (None, None) => run_collective_read_with(&ctx, algo, views, &file, arena)?,
             };
             let mut ok = 0;
             for ((_, payload), (_, want)) in got.iter().zip(ranks.iter()) {
@@ -339,6 +386,49 @@ pub fn breakdown_sweep(base: &RunConfig, pl_values: &[usize]) -> Result<Vec<Labe
         ensure_verified(&run, &verify)?;
         run.label = "two-phase".into();
         runs.push(run);
+    }
+    Ok(runs)
+}
+
+/// `sweep --faults`: the degradation-curve panel.  For each direction, a
+/// fault-free baseline bar followed by one bar per *cumulative prefix* of
+/// the fault schedule, so each clause's marginal penalty is visible in
+/// the label (`+<clause> (<slowdown>x)`).  Every bar goes through the
+/// normal driver — degraded bars take the retry/repair path and are
+/// verified whenever `base.verify` (reads always), so a panel that prints
+/// is a panel whose degraded bytes matched the fault-free ones.
+/// Schedules with a *persistent, never-healing* OST failure fail loudly
+/// instead of producing a panel — there is no degraded completion to
+/// chart.
+pub fn degradation_sweep(base: &RunConfig) -> Result<Vec<LabelledRun>> {
+    let plan = base
+        .faults
+        .clone()
+        .ok_or_else(|| Error::config("degradation sweep needs --faults <schedule>"))?;
+    let engine = build_engine_for(base)?;
+    let mut arena = ExchangeArena::default();
+    let mut cache = plan_cache_for(base)?;
+    let mut runs = Vec::new();
+    for &dir in base.direction.runs() {
+        let mut cfg = base.clone();
+        cfg.faults = None;
+        let (mut run, verify) =
+            run_direction_cached(&cfg, engine.as_ref(), dir, &mut arena, &mut cache)?;
+        ensure_verified(&run, &verify)?;
+        let baseline = run.breakdown.total();
+        run.label = "fault-free".into();
+        runs.push(run);
+        for n in 1..=plan.clauses.len() {
+            let mut cfg = base.clone();
+            cfg.faults = Some(FaultPlan { clauses: plan.clauses[..n].to_vec() });
+            let (mut run, verify) =
+                run_direction_cached(&cfg, engine.as_ref(), dir, &mut arena, &mut cache)?;
+            ensure_verified(&run, &verify)?;
+            let clause = FaultPlan { clauses: vec![plan.clauses[n - 1].clone()] };
+            let slowdown = run.breakdown.total() / baseline.max(f64::MIN_POSITIVE);
+            run.label = format!("+{clause} ({slowdown:.2}x)");
+            runs.push(run);
+        }
     }
     Ok(runs)
 }
@@ -712,6 +802,71 @@ mod tests {
         assert!(runs[3..].iter().all(|r| r.direction == Direction::Read));
         assert_eq!(runs[2].label, "two-phase");
         assert_eq!(runs[5].label, "two-phase");
+    }
+
+    #[test]
+    fn degraded_run_retries_and_repairs_yet_verifies() {
+        let mut cfg = small_cfg();
+        cfg.direction = DirectionSpec::Both;
+        cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 4 });
+        // OST 0 backs the first stripe, so the transient countdown is
+        // guaranteed to fire on either direction's first touch.
+        cfg.faults =
+            Some("ost_fail=0@transient:2,ost_slow=0.5x:0-1,agg_drop=?@level:0".parse().unwrap());
+        cfg.fault_seed = 42;
+        let out = run_once(&cfg).unwrap();
+        assert_eq!(out.len(), 2);
+        for (run, verify) in &out {
+            assert!(
+                verify.as_ref().unwrap().passed(),
+                "degraded {} [{}] must still round-trip bytes",
+                run.label,
+                run.direction
+            );
+            assert!(run.counters.repaired_plans == 1, "one agg_drop clause = one repair");
+        }
+        // The transient countdown sits on a live OST, so at least one
+        // direction pays retries (the strided pattern touches every OST).
+        assert!(out.iter().any(|(r, _)| r.counters.retries > 0));
+    }
+
+    #[test]
+    fn degraded_runs_are_bit_identical_under_a_fixed_seed() {
+        let mut cfg = small_cfg();
+        cfg.faults = Some("ost_fail=?@transient:1,agg_drop=?".parse().unwrap());
+        cfg.fault_seed = 7;
+        let a = run_once(&cfg).unwrap().remove(0).0;
+        let b = run_once(&cfg).unwrap().remove(0).0;
+        assert_eq!(a.breakdown, b.breakdown, "fault schedule must be a pure function of seed");
+        assert_eq!(a.counters.retries, b.counters.retries);
+        assert_eq!(a.counters.backoff_units, b.counters.backoff_units);
+    }
+
+    #[test]
+    fn degradation_sweep_charts_cumulative_prefixes() {
+        let mut cfg = small_cfg();
+        cfg.faults =
+            Some("ost_fail=0@transient:2,ost_slow=0.25x:0-1,agg_drop=?".parse().unwrap());
+        cfg.fault_seed = 42;
+        let runs = degradation_sweep(&cfg).unwrap();
+        assert_eq!(runs.len(), 4, "baseline + one bar per clause");
+        assert_eq!(runs[0].label, "fault-free");
+        let baseline = runs[0].breakdown.total();
+        assert!(runs[1].label.starts_with("+ost_fail="), "{}", runs[1].label);
+        assert!(runs[1].counters.retries > 0, "transient clause must cost retries");
+        assert!(
+            runs[1].breakdown.total() > baseline,
+            "backoff penalty must show in the curve"
+        );
+        assert!(runs[2].label.starts_with("+ost_slow=0.25x:0-1"), "{}", runs[2].label);
+        assert!(
+            runs[2].breakdown.total() > runs[1].breakdown.total(),
+            "a 4x-slower OST must stretch the I/O phase further"
+        );
+        assert_eq!(runs[3].counters.repaired_plans, 1);
+        // No faults configured → loud error, not an empty panel.
+        cfg.faults = None;
+        assert!(degradation_sweep(&cfg).is_err());
     }
 
     #[test]

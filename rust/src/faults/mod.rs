@@ -1,0 +1,711 @@
+//! Seeded fault injection + degraded-execution policy (ROADMAP item 5).
+//!
+//! A [`FaultPlan`] is parsed from the `--faults` clause list and covers
+//! three fault classes:
+//!
+//! | clause                      | class                          | effect |
+//! |-----------------------------|--------------------------------|--------|
+//! | `ost_fail=<ost\|?>[@round:<r>][@transient:<n>]` | OST failure | persistent (fatal) or transient (heals after `n` errors, retried with backoff), optionally armed at round `r` |
+//! | `ost_slow=<f>x:<lo>[-<hi>]` | service-rate skew              | OSTs `lo..=hi` serve at `f`× nominal rate; the I/O phase stretches via [`crate::lustre::IoModel::phase_time_skewed`] |
+//! | `agg_drop=<rank\|?>[@level:<l>]` | aggregator dropout        | the rank's aggregator role at tree level `l` (or the global exchange when absent) is adopted by a survivor via `repair_plan` |
+//!
+//! `?` selectors resolve deterministically from `--fault-seed` through
+//! [`SplitMix64`]: the whole schedule is a pure function of the seed, so a
+//! repeat run is bit-identical (pinned by `tests/degraded_mode.rs`).
+//!
+//! Execution-side state lives in [`OstFaultState`] (owned by
+//! `LustreFile`): persistent flags, transient countdowns (atomic — the
+//! read path probes them concurrently from pool workers), per-OST rate
+//! multipliers and round-armed faults.  The retry policy is
+//! [`retrying`]: bounded attempts with an exponential simulated backoff
+//! penalty ([`backoff_penalty`]) charged to the I/O phase.
+
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::util::rng::SplitMix64;
+
+/// Simulated backoff penalty (seconds) for the first retry; attempt `i`
+/// waits `2^i ×` this, so a site that retried `a` times accrues
+/// `(2^a - 1)` [`backoff_units`].
+pub const RETRY_BACKOFF_BASE: f64 = 1.0e-3;
+
+/// Default `--max-retries`: bounded attempts per storage call site.
+pub const DEFAULT_MAX_RETRIES: u32 = 4;
+
+/// An OST or rank selector: a fixed index, or `?` = pick deterministically
+/// from the fault seed at resolve/repair time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sel {
+    /// Explicit index.
+    Fixed(usize),
+    /// Seeded random pick (`?` in the clause).
+    Random,
+}
+
+impl Sel {
+    /// Resolve against `n` candidates using `rng` (Random) or bounds-check
+    /// the fixed index.  `what` names the domain for error messages.
+    pub fn resolve(self, n: usize, rng: &mut SplitMix64, what: &str) -> Result<usize> {
+        if n == 0 {
+            return Err(Error::config(format!("faults: no {what} to select from")));
+        }
+        match self {
+            Sel::Fixed(i) if i < n => Ok(i),
+            Sel::Fixed(i) => Err(Error::config(format!(
+                "faults: {what} index {i} out of range (have {n})"
+            ))),
+            Sel::Random => Ok(rng.gen_range(n as u64) as usize),
+        }
+    }
+}
+
+/// One parsed `--faults` clause.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultClause {
+    /// `ost_fail=<ost|?>[@round:<r>][@transient:<n>]`.
+    OstFail {
+        /// Which OST fails.
+        ost: Sel,
+        /// Arm at the start of this 0-based I/O round (None = immediately).
+        round: Option<u64>,
+        /// Heal after this many errors (None = persistent/fatal).
+        transient: Option<u64>,
+    },
+    /// `ost_slow=<f>x:<lo>[-<hi>]` — rate multiplier for an OST range.
+    OstSlow {
+        /// Service-rate multiplier (0 < f; < 1 slows the OST down).
+        rate: f64,
+        /// First OST of the range.
+        lo: usize,
+        /// Last OST of the range (inclusive).
+        hi: usize,
+    },
+    /// `agg_drop=<rank|?>[@level:<l>]` — aggregator dropout.
+    AggDrop {
+        /// Which aggregator drops (`?` = seeded pick among the actual
+        /// aggregators of the target level at repair time).
+        rank: Sel,
+        /// Tree level index (None = a global-exchange aggregator slot).
+        level: Option<usize>,
+    },
+}
+
+/// The parsed `--faults` schedule (order-preserving clause list).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Clauses in spec order.
+    pub clauses: Vec<FaultClause>,
+}
+
+impl FaultPlan {
+    /// Whether any clause drops an aggregator (forces the plan-repair path).
+    pub fn has_drops(&self) -> bool {
+        self.clauses.iter().any(|c| matches!(c, FaultClause::AggDrop { .. }))
+    }
+
+    /// Aggregator-drop clauses in spec order.
+    pub fn drops(&self) -> Vec<(Sel, Option<usize>)> {
+        self.clauses
+            .iter()
+            .filter_map(|c| match c {
+                FaultClause::AggDrop { rank, level } => Some((*rank, *level)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// A fingerprint salt for this schedule + seed: degraded plans are
+    /// cached under a fault-epoch-salted key so they can never collide
+    /// with (or pollute) fault-free entries.  Stable across runs — a pure
+    /// function of the clause list and seed.
+    pub fn cache_salt(&self, seed: u64) -> u64 {
+        // FNV-1a over the canonical clause debug forms, then mix the seed.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for c in &self.clauses {
+            for b in format!("{c:?}").bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+        let mut rng = SplitMix64::new(h ^ seed);
+        rng.next_u64() | 1 // never 0: salt 0 is reserved for "no faults"
+    }
+
+    /// Resolve OST-class clauses against `n_osts` OSTs into installable
+    /// form.  `?` OST selectors draw from a [`SplitMix64`] forked per
+    /// clause index, so the schedule is a pure function of `seed`.
+    /// Aggregator drops resolve later (at plan-repair time, when the
+    /// aggregator sets are known) from the same seed.
+    pub fn resolve_osts(&self, n_osts: usize, seed: u64) -> Result<ResolvedOstFaults> {
+        let mut root = SplitMix64::new(seed);
+        let mut out = ResolvedOstFaults { fails: Vec::new(), rates: Vec::new() };
+        for (i, clause) in self.clauses.iter().enumerate() {
+            let mut rng = root.fork(i as u64);
+            match clause {
+                FaultClause::OstFail { ost, round, transient } => {
+                    let ost = ost.resolve(n_osts, &mut rng, "OST")?;
+                    out.fails.push(OstFailure { ost, round: *round, transient: *transient });
+                }
+                FaultClause::OstSlow { rate, lo, hi } => {
+                    if *hi >= n_osts {
+                        return Err(Error::config(format!(
+                            "faults: ost_slow range {lo}-{hi} exceeds OST count {n_osts}"
+                        )));
+                    }
+                    if out.rates.is_empty() {
+                        out.rates = vec![1.0; n_osts];
+                    }
+                    for r in out.rates.iter_mut().take(*hi + 1).skip(*lo) {
+                        *r = *rate;
+                    }
+                }
+                FaultClause::AggDrop { .. } => {}
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One resolved OST failure ready to install.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OstFailure {
+    /// Failing OST index.
+    pub ost: usize,
+    /// Arm at the start of this round (None = immediately).
+    pub round: Option<u64>,
+    /// Heal after this many errors (None = persistent).
+    pub transient: Option<u64>,
+}
+
+/// OST-class faults resolved against a concrete OST count.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ResolvedOstFaults {
+    /// Failures to install.
+    pub fails: Vec<OstFailure>,
+    /// Per-OST service-rate multipliers (empty = uniform 1.0).
+    pub rates: Vec<f64>,
+}
+
+fn bad(clause: &str, why: &str) -> Error {
+    Error::config(format!(
+        "faults: bad clause '{clause}': {why} \
+         (e.g. ost_fail=3@round:2, ost_fail=?@transient:5, ost_slow=0.25x:0-7, agg_drop=?@level:1)"
+    ))
+}
+
+fn parse_sel(s: &str, clause: &str) -> Result<Sel> {
+    if s == "?" {
+        return Ok(Sel::Random);
+    }
+    s.parse::<usize>()
+        .map(Sel::Fixed)
+        .map_err(|_| bad(clause, &format!("'{s}' is not an index or '?'")))
+}
+
+impl FromStr for FaultPlan {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut clauses = Vec::new();
+        for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (name, spec) = clause
+                .split_once('=')
+                .ok_or_else(|| bad(clause, "expected <name>=<spec>"))?;
+            match name.trim() {
+                "ost_fail" => {
+                    let mut parts = spec.split('@');
+                    let ost = parse_sel(parts.next().unwrap_or("").trim(), clause)?;
+                    let (mut round, mut transient) = (None, None);
+                    for part in parts {
+                        let (k, v) = part
+                            .split_once(':')
+                            .ok_or_else(|| bad(clause, "expected @key:value"))?;
+                        let v: u64 = v
+                            .trim()
+                            .parse()
+                            .map_err(|_| bad(clause, &format!("'{v}' is not an integer")))?;
+                        match k.trim() {
+                            "round" => round = Some(v),
+                            "transient" => {
+                                if v == 0 {
+                                    return Err(bad(clause, "transient count must be >= 1"));
+                                }
+                                transient = Some(v);
+                            }
+                            other => {
+                                return Err(bad(clause, &format!("unknown modifier '@{other}:'")))
+                            }
+                        }
+                    }
+                    clauses.push(FaultClause::OstFail { ost, round, transient });
+                }
+                "ost_slow" => {
+                    let (rate, range) = spec
+                        .split_once('x')
+                        .and_then(|(r, rest)| Some((r, rest.strip_prefix(':')?)))
+                        .ok_or_else(|| bad(clause, "expected <factor>x:<lo>[-<hi>]"))?;
+                    let rate: f64 = rate
+                        .trim()
+                        .parse()
+                        .map_err(|_| bad(clause, &format!("'{rate}' is not a number")))?;
+                    if !(rate > 0.0) || !rate.is_finite() {
+                        return Err(bad(clause, "rate factor must be finite and > 0"));
+                    }
+                    let (lo, hi) = match range.split_once('-') {
+                        Some((lo, hi)) => (lo, hi),
+                        None => (range, range),
+                    };
+                    let lo: usize = lo
+                        .trim()
+                        .parse()
+                        .map_err(|_| bad(clause, &format!("'{lo}' is not an OST index")))?;
+                    let hi: usize = hi
+                        .trim()
+                        .parse()
+                        .map_err(|_| bad(clause, &format!("'{hi}' is not an OST index")))?;
+                    if hi < lo {
+                        return Err(bad(clause, "range must be <lo>-<hi> with lo <= hi"));
+                    }
+                    clauses.push(FaultClause::OstSlow { rate, lo, hi });
+                }
+                "agg_drop" => {
+                    let mut parts = spec.split('@');
+                    let rank = parse_sel(parts.next().unwrap_or("").trim(), clause)?;
+                    let mut level = None;
+                    for part in parts {
+                        let (k, v) = part
+                            .split_once(':')
+                            .ok_or_else(|| bad(clause, "expected @level:<l>"))?;
+                        if k.trim() != "level" {
+                            return Err(bad(clause, &format!("unknown modifier '@{k}:'")));
+                        }
+                        level = Some(v.trim().parse::<usize>().map_err(|_| {
+                            bad(clause, &format!("'{v}' is not a level index"))
+                        })?);
+                    }
+                    clauses.push(FaultClause::AggDrop { rank, level });
+                }
+                other => return Err(bad(clause, &format!("unknown fault class '{other}'"))),
+            }
+        }
+        if clauses.is_empty() {
+            return Err(Error::config(
+                "faults: empty spec (expected a comma list of ost_fail/ost_slow/agg_drop clauses)",
+            ));
+        }
+        Ok(FaultPlan { clauses })
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let sel = |s: &Sel| match s {
+            Sel::Fixed(i) => i.to_string(),
+            Sel::Random => "?".to_string(),
+        };
+        for (i, c) in self.clauses.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            match c {
+                FaultClause::OstFail { ost, round, transient } => {
+                    write!(f, "ost_fail={}", sel(ost))?;
+                    if let Some(r) = round {
+                        write!(f, "@round:{r}")?;
+                    }
+                    if let Some(n) = transient {
+                        write!(f, "@transient:{n}")?;
+                    }
+                }
+                FaultClause::OstSlow { rate, lo, hi } => {
+                    write!(f, "ost_slow={rate}x:{lo}-{hi}")?;
+                }
+                FaultClause::AggDrop { rank, level } => {
+                    write!(f, "agg_drop={}", sel(rank))?;
+                    if let Some(l) = level {
+                        write!(f, "@level:{l}")?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-OST execution-side fault state, owned by `LustreFile`.
+///
+/// All probes take `&self`: the read path checks faults concurrently from
+/// pool workers, so transient countdowns are atomic and round-armed
+/// faults sit behind a mutex (touched once per round, off the per-piece
+/// hot path).  The `active` flag keeps the fault-free hot path at a
+/// single branch.
+#[derive(Debug)]
+pub struct OstFaultState {
+    persistent: Vec<AtomicBool>,
+    transient: Vec<AtomicU64>,
+    rates: Vec<f64>,
+    armed: Mutex<Vec<OstFailure>>,
+    rounds_started: AtomicU64,
+    max_retries: u32,
+    active: bool,
+}
+
+impl OstFaultState {
+    /// All-clear state for `n_osts` OSTs.
+    pub fn new(n_osts: usize) -> Self {
+        OstFaultState {
+            persistent: (0..n_osts).map(|_| AtomicBool::new(false)).collect(),
+            transient: (0..n_osts).map(|_| AtomicU64::new(0)).collect(),
+            rates: Vec::new(),
+            armed: Mutex::new(Vec::new()),
+            rounds_started: AtomicU64::new(0),
+            max_retries: DEFAULT_MAX_RETRIES,
+            active: false,
+        }
+    }
+
+    fn bounds(&self, ost: usize) -> Result<()> {
+        let n = self.persistent.len();
+        if ost >= n {
+            return Err(Error::config(format!(
+                "fail_ost: OST index {ost} out of range — this file stripes over {n} OST{} \
+                 (valid indices 0..{n})",
+                if n == 1 { "" } else { "s" }
+            )));
+        }
+        Ok(())
+    }
+
+    /// Install one resolved failure (immediate or round-armed).
+    pub fn install(&mut self, f: OstFailure) -> Result<()> {
+        self.bounds(f.ost)?;
+        self.active = true;
+        if f.round.is_some() {
+            self.armed.get_mut().expect("faults mutex").push(f);
+            return Ok(());
+        }
+        match f.transient {
+            Some(n) => {
+                self.transient[f.ost].fetch_add(n, Ordering::Relaxed);
+            }
+            None => self.persistent[f.ost].store(true, Ordering::Relaxed),
+        }
+        Ok(())
+    }
+
+    /// Set one OST's service-rate multiplier.
+    pub fn set_rate(&mut self, ost: usize, rate: f64) -> Result<()> {
+        self.bounds(ost)?;
+        if !(rate > 0.0) || !rate.is_finite() {
+            return Err(Error::config(format!(
+                "set_ost_rate: rate {rate} must be finite and > 0"
+            )));
+        }
+        if self.rates.is_empty() {
+            self.rates = vec![1.0; self.persistent.len()];
+        }
+        self.rates[ost] = rate;
+        self.active = true;
+        Ok(())
+    }
+
+    /// Replace the whole rate table (empty = uniform 1.0).
+    pub fn set_rates(&mut self, rates: Vec<f64>) -> Result<()> {
+        if !rates.is_empty() && rates.len() != self.persistent.len() {
+            return Err(Error::config(format!(
+                "set_ost_rates: {} rates for {} OSTs",
+                rates.len(),
+                self.persistent.len()
+            )));
+        }
+        if rates.iter().any(|r| !(*r > 0.0) || !r.is_finite()) {
+            return Err(Error::config("set_ost_rates: rates must be finite and > 0"));
+        }
+        self.active = self.active || !rates.is_empty();
+        self.rates = rates;
+        Ok(())
+    }
+
+    /// Bound on retry attempts per storage call site.
+    pub fn max_retries(&self) -> u32 {
+        self.max_retries
+    }
+
+    /// Set the per-site retry bound.
+    pub fn set_max_retries(&mut self, n: u32) {
+        self.max_retries = n;
+    }
+
+    /// Per-OST service rates (empty = uniform 1.0).
+    pub fn rates(&self) -> &[f64] {
+        &self.rates
+    }
+
+    /// Reset the round counter (faults armed `@round:r` count I/O rounds
+    /// from the moment the schedule is installed).
+    pub fn reset_rounds(&mut self) {
+        *self.rounds_started.get_mut() = 0;
+    }
+
+    /// A new I/O round is starting: arm any faults scheduled for it.
+    /// `&self` — the read path calls this without exclusive file access.
+    pub fn tick_round(&self) {
+        let started = self.rounds_started.fetch_add(1, Ordering::Relaxed);
+        if !self.active {
+            return;
+        }
+        let mut armed = self.armed.lock().expect("faults mutex");
+        let mut i = 0;
+        while i < armed.len() {
+            if armed[i].round == Some(started) {
+                let f = armed.swap_remove(i);
+                match f.transient {
+                    Some(n) => {
+                        self.transient[f.ost].fetch_add(n, Ordering::Relaxed);
+                    }
+                    None => self.persistent[f.ost].store(true, Ordering::Relaxed),
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Probe `ost` before serving a `len`-byte piece at `offset`.
+    /// Persistent failures are fatal; a transient failure consumes one
+    /// countdown tick and returns a retryable error.
+    #[inline]
+    pub fn check(&self, ost: usize, offset: u64, len: u64) -> Result<()> {
+        if !self.active {
+            return Ok(());
+        }
+        if self.persistent[ost].load(Ordering::Relaxed) {
+            return Err(Error::storage_failed(ost, offset, len));
+        }
+        let c = &self.transient[ost];
+        loop {
+            let cur = c.load(Ordering::Relaxed);
+            if cur == 0 {
+                return Ok(());
+            }
+            if c.compare_exchange(cur, cur - 1, Ordering::Relaxed, Ordering::Relaxed).is_ok() {
+                return Err(Error::storage_transient(ost, offset, len));
+            }
+        }
+    }
+}
+
+/// Sum of `2^i` for `i in 0..retries` — the exponential-backoff weight a
+/// call site accrues for `retries` retries (saturating far above any
+/// sane `--max-retries`).
+pub fn backoff_units(retries: u32) -> u64 {
+    (1u64 << retries.min(62)) - 1
+}
+
+/// Simulated backoff penalty (seconds) for accumulated [`backoff_units`].
+pub fn backoff_penalty(units: u64) -> f64 {
+    units as f64 * RETRY_BACKOFF_BASE
+}
+
+/// Run `f`, retrying up to `max_retries` times while it returns a
+/// transient error ([`Error::is_transient`]).  Returns the result plus
+/// the number of retries consumed; a fatal error or retry exhaustion
+/// propagates the last error unchanged (variant intact for callers that
+/// match on it).
+pub fn retrying<T>(
+    max_retries: u32,
+    mut f: impl FnMut() -> Result<T>,
+) -> (Result<T>, u32) {
+    let mut retries = 0u32;
+    loop {
+        match f() {
+            Err(e) if e.is_transient() && retries < max_retries => retries += 1,
+            out => return (out, retries),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let p: FaultPlan = "ost_fail=3@round:2,ost_slow=0.25x:0-7,agg_drop=17@level:1"
+            .parse()
+            .unwrap();
+        assert_eq!(
+            p.clauses,
+            vec![
+                FaultClause::OstFail { ost: Sel::Fixed(3), round: Some(2), transient: None },
+                FaultClause::OstSlow { rate: 0.25, lo: 0, hi: 7 },
+                FaultClause::AggDrop { rank: Sel::Fixed(17), level: Some(1) },
+            ]
+        );
+        assert!(p.has_drops());
+        assert_eq!(p.drops(), vec![(Sel::Fixed(17), Some(1))]);
+        // Display round-trips.
+        let back: FaultPlan = p.to_string().parse().unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn parses_selectors_and_modifiers() {
+        let p: FaultPlan = "ost_fail=?@transient:5,agg_drop=?,ost_slow=2x:3".parse().unwrap();
+        assert_eq!(
+            p.clauses,
+            vec![
+                FaultClause::OstFail { ost: Sel::Random, round: None, transient: Some(5) },
+                FaultClause::AggDrop { rank: Sel::Random, level: None },
+                FaultClause::OstSlow { rate: 2.0, lo: 3, hi: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_clauses() {
+        for bad in [
+            "",
+            "ost_fail",
+            "ost_fail=x",
+            "ost_fail=3@round",
+            "ost_fail=3@bogus:1",
+            "ost_fail=3@transient:0",
+            "ost_slow=0.25:0-7",
+            "ost_slow=-1x:0-7",
+            "ost_slow=0x:0-7",
+            "ost_slow=0.5x:7-0",
+            "agg_drop=3@depth:1",
+            "quake=1",
+        ] {
+            assert!(bad.parse::<FaultPlan>().is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn resolve_is_deterministic_and_bounds_checked() {
+        let p: FaultPlan = "ost_fail=?,ost_slow=0.5x:1-2".parse().unwrap();
+        let a = p.resolve_osts(4, 42).unwrap();
+        let b = p.resolve_osts(4, 42).unwrap();
+        assert_eq!(a, b, "same seed must resolve identically");
+        assert!(a.fails[0].ost < 4);
+        assert_eq!(a.rates, vec![1.0, 0.5, 0.5, 1.0]);
+        // A different seed may pick differently but stays in range.
+        let c = p.resolve_osts(4, 7).unwrap();
+        assert!(c.fails[0].ost < 4);
+        // Fixed out-of-range OST / slow range reject loudly.
+        let oob: FaultPlan = "ost_fail=9".parse().unwrap();
+        assert!(oob.resolve_osts(4, 0).is_err());
+        let oob: FaultPlan = "ost_slow=0.5x:0-9".parse().unwrap();
+        assert!(oob.resolve_osts(4, 0).is_err());
+    }
+
+    #[test]
+    fn cache_salt_tracks_schedule_and_seed() {
+        let p: FaultPlan = "ost_fail=1".parse().unwrap();
+        let q: FaultPlan = "ost_fail=2".parse().unwrap();
+        assert_eq!(p.cache_salt(1), p.cache_salt(1));
+        assert_ne!(p.cache_salt(1), p.cache_salt(2));
+        assert_ne!(p.cache_salt(1), q.cache_salt(1));
+        assert_ne!(p.cache_salt(1), 0, "salt 0 is reserved for fault-free");
+    }
+
+    #[test]
+    fn state_persistent_vs_transient() {
+        let mut st = OstFaultState::new(4);
+        assert!(st.check(0, 0, 8).is_ok(), "all-clear state passes");
+        st.install(OstFailure { ost: 1, round: None, transient: Some(2) }).unwrap();
+        st.install(OstFailure { ost: 2, round: None, transient: None }).unwrap();
+        // Transient heals after 2 errors.
+        assert!(st.check(1, 0, 8).unwrap_err().is_transient());
+        assert!(st.check(1, 8, 8).unwrap_err().is_transient());
+        assert!(st.check(1, 16, 8).is_ok());
+        // Persistent never heals and is not transient.
+        for _ in 0..3 {
+            let e = st.check(2, 0, 8).unwrap_err();
+            assert!(matches!(e, Error::StorageFailed { ost: 2, .. }));
+            assert!(!e.is_transient());
+        }
+        // Untouched OSTs stay clear.
+        assert!(st.check(0, 0, 8).is_ok());
+        assert!(st.install(OstFailure { ost: 9, round: None, transient: None }).is_err());
+    }
+
+    #[test]
+    fn round_armed_faults_wait_for_their_round() {
+        let mut st = OstFaultState::new(2);
+        st.install(OstFailure { ost: 0, round: Some(1), transient: Some(1) }).unwrap();
+        st.tick_round(); // round 0 starts
+        assert!(st.check(0, 0, 8).is_ok(), "not armed before round 1");
+        st.tick_round(); // round 1 starts
+        assert!(st.check(0, 0, 8).unwrap_err().is_transient());
+        assert!(st.check(0, 0, 8).is_ok(), "healed after one error");
+        // reset_rounds restarts the clock for a new schedule.
+        st.install(OstFailure { ost: 1, round: Some(0), transient: None }).unwrap();
+        st.reset_rounds();
+        st.tick_round();
+        assert!(st.check(1, 0, 8).is_err());
+    }
+
+    #[test]
+    fn rates_install_and_validate() {
+        let mut st = OstFaultState::new(4);
+        assert!(st.rates().is_empty());
+        st.set_rate(2, 0.25).unwrap();
+        assert_eq!(st.rates(), &[1.0, 1.0, 0.25, 1.0]);
+        assert!(st.set_rate(9, 0.5).is_err());
+        assert!(st.set_rate(0, 0.0).is_err());
+        assert!(st.set_rates(vec![0.5; 3]).is_err(), "length mismatch");
+        st.set_rates(vec![0.5; 4]).unwrap();
+        assert_eq!(st.rates(), &[0.5; 4]);
+    }
+
+    #[test]
+    fn retrying_bounds_and_counts() {
+        // Succeeds on the 3rd attempt: 2 retries consumed.
+        let mut left = 2u32;
+        let (out, retries) = retrying(4, || {
+            if left > 0 {
+                left -= 1;
+                Err(Error::storage_transient(0, 0, 8))
+            } else {
+                Ok(7u32)
+            }
+        });
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(retries, 2);
+        // Exhaustion propagates the transient error unchanged.
+        let (out, retries) = retrying(3, || -> Result<()> {
+            Err(Error::storage_transient(1, 0, 8))
+        });
+        assert!(out.unwrap_err().is_transient());
+        assert_eq!(retries, 3);
+        // Fatal errors never retry.
+        let (out, retries) = retrying(3, || -> Result<()> {
+            Err(Error::storage_failed(1, 0, 8))
+        });
+        assert!(matches!(out.unwrap_err(), Error::StorageFailed { .. }));
+        assert_eq!(retries, 0);
+    }
+
+    #[test]
+    fn backoff_math() {
+        assert_eq!(backoff_units(0), 0);
+        assert_eq!(backoff_units(1), 1);
+        assert_eq!(backoff_units(3), 7);
+        assert_eq!(backoff_penalty(0), 0.0);
+        assert!((backoff_penalty(7) - 7.0 * RETRY_BACKOFF_BASE).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sel_resolve() {
+        let mut rng = SplitMix64::new(1);
+        assert_eq!(Sel::Fixed(2).resolve(4, &mut rng, "OST").unwrap(), 2);
+        assert!(Sel::Fixed(4).resolve(4, &mut rng, "OST").is_err());
+        assert!(Sel::Random.resolve(4, &mut rng, "OST").unwrap() < 4);
+        assert!(Sel::Random.resolve(0, &mut rng, "OST").is_err());
+    }
+}

@@ -13,6 +13,10 @@
 //!   datatype flattening, rank state, phase-structured message exchange.
 //! * [`lustre`] — striped object-store simulator: OSTs, extent locks,
 //!   byte-accurate storage for read-back verification, I/O cost model.
+//! * [`faults`] — seeded fault injection and degraded-execution policy:
+//!   `--faults` schedules (transient/persistent OST failures, per-OST
+//!   service-rate skew, aggregator dropout), bounded retry-with-backoff,
+//!   and the per-OST runtime fault state the storage layer probes.
 //! * [`coordinator`] — the paper's contribution, generalized: N-level
 //!   aggregation trees ([`coordinator::tree`]) of which ROMIO-style
 //!   two-phase I/O ([`coordinator::twophase`], depth 0) and the two-layer
@@ -49,6 +53,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod experiments;
+pub mod faults;
 pub mod lustre;
 pub mod metrics;
 pub mod mpisim;
@@ -74,11 +79,13 @@ pub mod prelude {
         ExchangeArena,
     };
     pub use crate::coordinator::plancache::{
-        fingerprint_collective, run_collective_read_cached, run_collective_write_cached,
-        CollectivePlan, Fp128, PlanCache, PlanCacheStats,
+        fingerprint_collective, repair_plan, run_collective_read_cached,
+        run_collective_read_degraded, run_collective_write_cached,
+        run_collective_write_degraded, CollectivePlan, Fp128, PlanCache, PlanCacheStats,
     };
     pub use crate::coordinator::tam::TamConfig;
     pub use crate::coordinator::tree::{AggregationPlan, TreeSpec};
+    pub use crate::faults::{FaultPlan, OstFaultState};
     pub use crate::lustre::LustreConfig;
     pub use crate::netmodel::{NetParams, SendMode};
     pub use crate::runtime::engine::{EngineKind, SortEngine};

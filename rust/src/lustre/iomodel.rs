@@ -44,6 +44,32 @@ impl IoModel {
         stats.iter().map(|s| self.ost_time(s)).fold(0.0, f64::max)
     }
 
+    /// Time for one OST serving at `rate`× its nominal service rate
+    /// (fault injection: `ost_slow=0.25x` → 4× the nominal time).  Rate
+    /// 1.0 is bit-identical to [`Self::ost_time`].
+    pub fn ost_time_at_rate(&self, s: &OstStats, rate: f64) -> f64 {
+        if rate == 1.0 {
+            self.ost_time(s)
+        } else {
+            self.ost_time(s) / rate
+        }
+    }
+
+    /// I/O-phase time under per-OST service-rate skew: the slowest
+    /// (rate-stretched) OST sets the phase.  An empty `rates` slice means
+    /// uniform 1.0 and is bit-identical to [`Self::phase_time`] — the
+    /// fault-free path costs nothing extra.
+    pub fn phase_time_skewed(&self, stats: &[OstStats], rates: &[f64]) -> f64 {
+        if rates.is_empty() {
+            return self.phase_time(stats);
+        }
+        stats
+            .iter()
+            .enumerate()
+            .map(|(i, s)| self.ost_time_at_rate(s, rates.get(i).copied().unwrap_or(1.0)))
+            .fold(0.0, f64::max)
+    }
+
     /// Aggregate achieved bandwidth for a phase (bytes, time).
     pub fn bandwidth(total_bytes: u64, time: f64) -> f64 {
         if time <= 0.0 {
@@ -83,6 +109,21 @@ mod tests {
     fn lock_conflicts_penalized() {
         let m = IoModel::default();
         assert!(m.ost_time(&st(0, 0, 5)) > m.ost_time(&st(0, 0, 0)));
+    }
+
+    #[test]
+    fn rate_skew_stretches_the_slow_ost() {
+        let m = IoModel::default();
+        let stats = [st(1 << 20, 4, 0), st(1 << 20, 4, 0)];
+        // Uniform rates (or an empty table) are bit-identical to phase_time.
+        assert_eq!(m.phase_time_skewed(&stats, &[]), m.phase_time(&stats));
+        assert_eq!(m.phase_time_skewed(&stats, &[1.0, 1.0]), m.phase_time(&stats));
+        // A 0.25x OST takes exactly 4x its nominal time and sets the phase.
+        let skewed = m.phase_time_skewed(&stats, &[1.0, 0.25]);
+        assert!((skewed - 4.0 * m.ost_time(&stats[1])).abs() < 1e-12);
+        assert!(skewed > m.phase_time(&stats));
+        // A short rate table treats missing entries as 1.0.
+        assert_eq!(m.phase_time_skewed(&stats, &[0.5]), m.ost_time(&stats[0]) / 0.5);
     }
 
     #[test]

@@ -7,7 +7,8 @@
 
 use std::collections::HashMap;
 
-use crate::error::{Error, Result};
+use crate::error::Result;
+use crate::faults::{OstFailure, OstFaultState};
 use crate::mpisim::FlatView;
 
 use super::LustreConfig;
@@ -35,8 +36,9 @@ pub struct LustreFile {
     /// stripe index -> writer rank holding its extent lock this round.
     round_locks: HashMap<u64, usize>,
     stats: Vec<OstStats>,
-    /// Fail-injection hook: OSTs that reject writes (tests).
-    failed_osts: Vec<bool>,
+    /// Fault-injection state: persistent/transient OST failures, per-OST
+    /// service rates, round-armed faults (`crate::faults`).
+    faults: OstFaultState,
 }
 
 impl LustreFile {
@@ -47,7 +49,7 @@ impl LustreFile {
             stripes: HashMap::new(),
             round_locks: HashMap::new(),
             stats: vec![OstStats::default(); cfg.stripe_count],
-            failed_osts: vec![false; cfg.stripe_count],
+            faults: OstFaultState::new(cfg.stripe_count),
         }
     }
 
@@ -56,14 +58,70 @@ impl LustreFile {
         &self.cfg
     }
 
-    /// Mark an OST as failed (failure-injection tests).
-    pub fn fail_ost(&mut self, ost: usize) {
-        self.failed_osts[ost] = true;
+    /// Mark an OST as persistently failed (failure injection).  Rejects
+    /// out-of-range indices with an actionable message instead of
+    /// panicking.
+    pub fn fail_ost(&mut self, ost: usize) -> Result<()> {
+        self.faults.install(OstFailure { ost, round: None, transient: None })
     }
 
-    /// Begin a new I/O round: extent locks from the previous round drop.
+    /// Mark an OST transiently failed: the next `count` touches error
+    /// with [`crate::error::Error::StorageTransient`], then the OST heals.
+    pub fn fail_ost_transient(&mut self, ost: usize, count: u64) -> Result<()> {
+        self.faults.install(OstFailure { ost, round: None, transient: Some(count) })
+    }
+
+    /// Arm a failure at the start of I/O round `round` (0-based, counted
+    /// from the last [`Self::reset_fault_rounds`] / file creation):
+    /// persistent when `transient` is `None`, else healing after that
+    /// many errors.
+    pub fn arm_ost_fault(
+        &mut self,
+        round: u64,
+        ost: usize,
+        transient: Option<u64>,
+    ) -> Result<()> {
+        self.faults.install(OstFailure { ost, round: Some(round), transient })
+    }
+
+    /// Set one OST's service-rate multiplier (consumed by
+    /// [`super::IoModel::phase_time_skewed`] via [`Self::ost_rates`]).
+    pub fn set_ost_rate(&mut self, ost: usize, rate: f64) -> Result<()> {
+        self.faults.set_rate(ost, rate)
+    }
+
+    /// Per-OST service-rate multipliers (empty = uniform 1.0).
+    pub fn ost_rates(&self) -> &[f64] {
+        self.faults.rates()
+    }
+
+    /// Mutable fault state (bulk installation by the experiments driver).
+    pub fn faults_mut(&mut self) -> &mut OstFaultState {
+        &mut self.faults
+    }
+
+    /// Per-site retry bound for transient storage errors.
+    pub fn max_retries(&self) -> u32 {
+        self.faults.max_retries()
+    }
+
+    /// Restart the fault-round clock (round-armed faults count from 0).
+    pub fn reset_fault_rounds(&mut self) {
+        self.faults.reset_rounds();
+    }
+
+    /// Read-side round boundary: arms round-scheduled faults.  `&self` —
+    /// the read path has no exclusive file access (and takes no locks, so
+    /// there is nothing else to reset).
+    pub fn tick_fault_round(&self) {
+        self.faults.tick_round();
+    }
+
+    /// Begin a new I/O round: extent locks from the previous round drop
+    /// and round-scheduled faults arm.
     pub fn begin_round(&mut self) {
         self.round_locks.clear();
+        self.faults.tick_round();
     }
 
     /// Write `data` at `offset` on behalf of `writer` (an aggregator rank).
@@ -104,9 +162,7 @@ impl LustreFile {
             let piece_end = end.min(stripe_hi);
             let piece_len = (piece_end - cur) as usize;
             let ost = self.cfg.ost_of(cur);
-            if self.failed_osts[ost] {
-                return Err(Error::Storage(format!("OST {ost} failed")));
-            }
+            self.faults.check(ost, cur, piece_len as u64)?;
             // Extent-lock accounting (Lustre locks per OST object; with
             // stripe-aligned file domains each stripe has one writer).
             match self.round_locks.get(&stripe) {
@@ -165,9 +221,7 @@ impl LustreFile {
                 let piece_end = end.min(stripe_hi);
                 let piece_len = (piece_end - cur) as usize;
                 let ost = self.cfg.ost_of(cur);
-                if self.failed_osts[ost] {
-                    return Err(Error::Storage(format!("OST {ost} failed")));
-                }
+                self.faults.check(ost, cur, piece_len as u64)?;
                 if let Some(buf) = self.stripes.get(&stripe) {
                     let within = (cur - stripe_lo) as usize;
                     out[cursor..cursor + piece_len]
@@ -288,10 +342,63 @@ mod tests {
     #[test]
     fn failed_ost_rejects() {
         let mut f = LustreFile::new(cfg());
-        f.fail_ost(0);
+        f.fail_ost(0).unwrap();
         f.begin_round();
-        assert!(f.write_at(0, 0, &[0u8; 4]).is_err());
+        let err = f.write_at(0, 0, &[0u8; 4]).unwrap_err();
+        assert!(matches!(err, crate::Error::StorageFailed { ost: 0, offset: 0, len: 4, .. }));
+        assert!(!err.is_transient());
         assert!(f.write_at(0, 64, &[0u8; 4]).is_ok()); // OST 1 fine
+    }
+
+    #[test]
+    fn fail_ost_out_of_range_errors_instead_of_panicking() {
+        let mut f = LustreFile::new(cfg());
+        let err = f.fail_ost(99).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("99") && msg.contains("4"), "unhelpful message: {msg}");
+        assert!(f.fail_ost_transient(99, 1).is_err());
+        assert!(f.set_ost_rate(99, 0.5).is_err());
+        assert!(f.arm_ost_fault(0, 99, None).is_err());
+    }
+
+    #[test]
+    fn transient_ost_heals_after_countdown() {
+        let mut f = LustreFile::new(cfg());
+        f.fail_ost_transient(0, 2).unwrap();
+        f.begin_round();
+        for _ in 0..2 {
+            let err = f.write_at(0, 0, &[1u8; 4]).unwrap_err();
+            assert!(err.is_transient(), "got {err}");
+            assert!(matches!(err, crate::Error::StorageTransient { ost: 0, .. }));
+        }
+        // Healed: the same write now lands.
+        f.write_at(0, 0, &[1u8; 4]).unwrap();
+        assert_eq!(f.read_at(0, 4), vec![1u8; 4]);
+    }
+
+    #[test]
+    fn round_armed_fault_triggers_at_its_round() {
+        let mut f = LustreFile::new(cfg());
+        f.arm_ost_fault(1, 0, Some(1)).unwrap();
+        f.reset_fault_rounds();
+        f.begin_round(); // round 0
+        f.write_at(0, 0, &[1u8; 4]).unwrap();
+        f.begin_round(); // round 1: fault arms
+        assert!(f.write_at(0, 0, &[1u8; 4]).unwrap_err().is_transient());
+        f.write_at(0, 0, &[2u8; 4]).unwrap(); // healed
+        assert_eq!(f.read_at(0, 4), vec![2u8; 4]);
+    }
+
+    #[test]
+    fn ost_rates_default_uniform_and_install() {
+        let mut f = LustreFile::new(cfg());
+        assert!(f.ost_rates().is_empty());
+        f.set_ost_rate(2, 0.25).unwrap();
+        assert_eq!(f.ost_rates(), &[1.0, 1.0, 0.25, 1.0]);
+        // Rate skew never rejects I/O — it only stretches simulated time.
+        f.begin_round();
+        f.write_at(0, 128, &[3u8; 8]).unwrap(); // OST 2
+        assert_eq!(f.read_at(128, 8), vec![3u8; 8]);
     }
 
     #[test]
@@ -332,10 +439,13 @@ mod tests {
     #[test]
     fn write_view_failed_ost_rejects() {
         let mut f = LustreFile::new(cfg());
-        f.fail_ost(1);
+        f.fail_ost(1).unwrap();
         f.begin_round();
         let view = FlatView::from_pairs(vec![(0, 8), (64, 8)]).unwrap();
-        assert!(f.write_view(0, &view, &[1u8; 16]).is_err());
+        assert!(matches!(
+            f.write_view(0, &view, &[1u8; 16]).unwrap_err(),
+            crate::Error::StorageFailed { ost: 1, offset: 64, len: 8, .. }
+        ));
         // The piece before the failed OST landed (same as sequential
         // write_at semantics).
         assert_eq!(f.read_at(0, 8), vec![1u8; 8]);
@@ -397,11 +507,14 @@ mod tests {
         let mut f = LustreFile::new(cfg());
         f.begin_round();
         f.write_at(0, 0, &[1u8; 128]).unwrap();
-        f.fail_ost(1);
+        f.fail_ost(1).unwrap();
         let view = FlatView::from_pairs(vec![(0, 8), (64, 8)]).unwrap();
         let mut out = Vec::new();
         let mut stats = vec![OstStats::default(); f.config().stripe_count];
-        assert!(f.read_view(&view, &mut out, &mut stats).is_err());
+        assert!(matches!(
+            f.read_view(&view, &mut out, &mut stats).unwrap_err(),
+            crate::Error::StorageFailed { ost: 1, .. }
+        ));
         // OST 0 alone is fine.
         let ok = FlatView::from_pairs(vec![(0, 8)]).unwrap();
         f.read_view(&ok, &mut out, &mut stats).unwrap();

@@ -19,8 +19,8 @@ use tamio::coordinator::collective::Algorithm;
 use tamio::error::Result;
 use tamio::experiments;
 use tamio::metrics::{
-    breakdown_panels, breakdown_table, plan_cache_summary, render_table, scaling_table,
-    tuner_validation_table,
+    breakdown_panels, breakdown_table, degraded_summary, plan_cache_summary, render_table,
+    scaling_table, tuner_validation_table,
 };
 use tamio::util::{human_bytes, human_secs};
 use tamio::workloads::WorkloadKind;
@@ -120,11 +120,33 @@ Common flags (RunConfig keys):
                                         TAMIO_THREADS env var, else all
                                         available cores; results are
                                         bit-identical for any width)
+  --faults SPEC                         seeded fault schedule: comma list
+                                        of ost_fail=<ost|?>[@round:<r>]
+                                        [@transient:<n>] (persistent, or
+                                        healing after n errors, optionally
+                                        armed at I/O round r),
+                                        ost_slow=<f>x:<lo>[-<hi>] (OST
+                                        range serves at f x nominal rate),
+                                        agg_drop=<rank|?>[@level:<l>]
+                                        (aggregator dropout repaired by
+                                        promoting a survivor; bytes stay
+                                        identical to the fault-free run)
+  --fault-seed N                        resolves '?' selectors; the whole
+                                        schedule is a pure function of the
+                                        seed (default 0)
+  --max-retries N                       transient-error retry bound per
+                                        storage call site; each retry
+                                        costs exponential simulated
+                                        backoff in io_phase (default 4)
   net tier table: --net.alpha_socket/--net.beta_socket and
   --net.alpha_switch/--net.beta_switch price the extra hierarchy tiers
 
 Subcommand flags:
   sweep:   --pl 16,64,256          breakdown panels (Figures 4-7)
+           --faults SPEC           degradation-curve panel instead: a
+                                   fault-free baseline bar, then one bar
+                                   per cumulative clause prefix with its
+                                   slowdown factor in the label
            --validate-tuner        with --algorithm auto: run the top-4
                                    predicted candidates for real, report
                                    predicted-vs-measured relative error
@@ -167,6 +189,9 @@ fn cmd_run(cfg: &RunConfig) -> Result<()> {
             c.lock_conflicts,
             human_secs(run.breakdown.total()),
         );
+        if cfg.faults.is_some() {
+            println!("{}", degraded_summary(c));
+        }
         if let Some(v) = verify {
             println!(
                 "verify[{}]: {}/{} ranks OK{}",
@@ -228,6 +253,22 @@ fn cmd_sweep(cfg: &RunConfig, pl: Option<&str>, validate_tuner: bool) -> Result<
         );
         let reports = experiments::validate_tuner(cfg, 4)?;
         print!("{}", tuner_validation_table(&reports));
+        return Ok(());
+    }
+    if let Some(plan) = &cfg.faults {
+        println!(
+            "degradation sweep: {} P={} algo={} direction={} faults='{plan}' seed={}",
+            cfg.workload,
+            p,
+            cfg.algorithm.name(),
+            cfg.direction,
+            cfg.fault_seed
+        );
+        let runs = experiments::degradation_sweep(cfg)?;
+        print!("{}", breakdown_panels(&runs));
+        for run in &runs {
+            println!("{} [{}]: {}", run.label, run.direction, degraded_summary(&run.counters));
+        }
         return Ok(());
     }
     let defaults: Vec<usize> = [16, 64, 256, 1024]

@@ -136,6 +136,24 @@ pub fn plan_cache_summary(stats: &PlanCacheStats) -> String {
     )
 }
 
+/// One-line degraded-execution summary for run reports: retries absorbed,
+/// the simulated backoff they cost (folded into `io_phase`), and plans
+/// rewritten by the aggregator-dropout repair pass.  Counters come from
+/// [`Counters`], so the line always agrees with the breakdown table it
+/// prints next to.
+pub fn degraded_summary(counters: &Counters) -> String {
+    format!(
+        "degraded: {} retr{}, {} backoff unit{} ({:.3} ms penalty), {} repaired plan{}",
+        counters.retries,
+        if counters.retries == 1 { "y" } else { "ies" },
+        counters.backoff_units,
+        if counters.backoff_units == 1 { "" } else { "s" },
+        crate::faults::backoff_penalty(counters.backoff_units) * 1e3,
+        counters.repaired_plans,
+        if counters.repaired_plans == 1 { "" } else { "s" },
+    )
+}
+
 /// One row of a tuner-validation report: a candidate the predictor
 /// ranked in its top-k, run for real.
 #[derive(Clone, Copy, Debug)]
@@ -278,6 +296,31 @@ mod tests {
         });
         assert!(one.contains("1 warm hit,"), "{one}");
         assert!(one.contains("1 build ("), "{one}");
+    }
+
+    #[test]
+    fn degraded_summary_reports_retry_and_repair_counters() {
+        let c = Counters {
+            retries: 3,
+            backoff_units: 7,
+            repaired_plans: 2,
+            ..Default::default()
+        };
+        let s = degraded_summary(&c);
+        assert!(s.contains("3 retries"), "{s}");
+        assert!(s.contains("7 backoff units"), "{s}");
+        assert!(s.contains("7.000 ms penalty"), "{s}");
+        assert!(s.contains("2 repaired plans"), "{s}");
+        // Singular forms stay grammatical.
+        let one = degraded_summary(&Counters {
+            retries: 1,
+            backoff_units: 1,
+            repaired_plans: 1,
+            ..Default::default()
+        });
+        assert!(one.contains("1 retry,"), "{one}");
+        assert!(one.contains("1 backoff unit ("), "{one}");
+        assert!(one.contains("1 repaired plan"), "{one}");
     }
 
     #[test]

@@ -3,15 +3,17 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use tamio::cluster::Topology;
+use tamio::cluster::{RankPlacement, Topology};
 use tamio::coordinator::breakdown::CpuModel;
 use tamio::coordinator::collective::{run_collective_read, run_collective_write, Algorithm};
 use tamio::coordinator::merge::{sort_coalesce_pairs, ReqBatch};
 use tamio::coordinator::placement::GlobalPlacement;
 use tamio::coordinator::tam::TamConfig;
+use tamio::coordinator::tree::TreeSpec;
 use tamio::coordinator::twophase::CollectiveCtx;
 use tamio::error::Error;
 use tamio::lustre::{IoModel, LustreConfig, LustreFile};
+use tamio::mpisim::rank::deterministic_payload;
 use tamio::mpisim::{FlatView, RankState};
 use tamio::netmodel::NetParams;
 use tamio::runtime::engine::{NativeEngine, SortEngine};
@@ -48,10 +50,10 @@ fn failed_ost_surfaces_storage_error() {
         n_global_agg: 4,
     };
     let mut file = LustreFile::new(LustreConfig::new(64, 4));
-    file.fail_ost(2);
+    file.fail_ost(2).unwrap();
     let err = run_collective_write(&ctx, Algorithm::TwoPhase, simple_ranks(&topo), &mut file)
         .unwrap_err();
-    assert!(matches!(err, Error::Storage(_)), "got {err}");
+    assert!(matches!(err, Error::StorageFailed { ost: 2, .. }), "got {err}");
 }
 
 #[test]
@@ -67,7 +69,7 @@ fn tam_with_failed_ost_also_fails_cleanly() {
         n_global_agg: 4,
     };
     let mut file = LustreFile::new(LustreConfig::new(64, 4));
-    file.fail_ost(0);
+    file.fail_ost(0).unwrap();
     let algo = Algorithm::Tam(TamConfig { total_local_aggregators: 2 });
     assert!(run_collective_write(&ctx, algo, simple_ranks(&topo), &mut file).is_err());
 }
@@ -164,11 +166,139 @@ fn failed_ost_surfaces_storage_error_on_read() {
     };
     let mut file = LustreFile::new(LustreConfig::new(64, 4));
     run_collective_write(&ctx, Algorithm::TwoPhase, simple_ranks(&topo), &mut file).unwrap();
-    file.fail_ost(2);
+    file.fail_ost(2).unwrap();
     for algo in [Algorithm::TwoPhase, Algorithm::Tam(TamConfig { total_local_aggregators: 2 })] {
         let err = run_collective_read(&ctx, algo, read_views(&topo), &file).unwrap_err();
-        assert!(matches!(err, Error::Storage(_)), "{}: got {err}", algo.name());
+        assert!(matches!(err, Error::StorageFailed { ost: 2, .. }), "{}: got {err}", algo.name());
     }
+}
+
+/// Depth-2 fixture: 2 nodes x 8 ranks over 2 sockets/node, aggregating
+/// socket(2) -> node(1) -> 4 global aggregators.  Fragmented views keep
+/// every stripe populated so any armed OST is hit promptly.
+fn depth2_parts() -> (Topology, NetParams, CpuModel, IoModel, NativeEngine) {
+    (
+        Topology::hierarchical(2, 8, 2, 0, RankPlacement::Block),
+        NetParams::default(),
+        CpuModel::default(),
+        IoModel::default(),
+        NativeEngine,
+    )
+}
+
+fn depth2_spec() -> Algorithm {
+    Algorithm::Tree(TreeSpec { per_socket: 2, per_node: 1, per_switch: 0 })
+}
+
+fn depth2_ranks(topo: &Topology) -> Vec<(usize, ReqBatch)> {
+    (0..topo.nprocs())
+        .map(|r| {
+            let base = r as u64 * 200;
+            let view = FlatView::from_pairs(vec![(base, 120), (base + 150, 30)]).unwrap();
+            (r, ReqBatch::new(view, deterministic_payload(21, r, 150)))
+        })
+        .collect()
+}
+
+/// Round index out of a `... exchange round <r>, aggregator <a> ...` task
+/// label (the worker pool stamps every storage error with its task
+/// identity).
+fn exchange_round_of(msg: &str) -> u64 {
+    let tail = &msg[msg.find("exchange round ").expect("task label") + "exchange round ".len()..];
+    tail.chars()
+        .take_while(char::is_ascii_digit)
+        .collect::<String>()
+        .parse()
+        .expect("round index in task label")
+}
+
+#[test]
+fn depth2_mid_round_write_failure_names_its_task() {
+    let (topo, net, cpu, io, eng) = depth2_parts();
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 4,
+    };
+    // Learn the fault-free round structure first, so "mid-round" is a
+    // checked property of the fixture rather than an assumption.
+    let mut file = LustreFile::new(LustreConfig::new(64, 4));
+    let rounds = run_collective_write(&ctx, depth2_spec(), depth2_ranks(&topo), &mut file)
+        .unwrap()
+        .counters
+        .rounds;
+    assert!(rounds >= 4, "fixture must be multi-round, got {rounds}");
+    // Re-run with OST 1 armed to fail persistently at round 2.
+    let mut file = LustreFile::new(LustreConfig::new(64, 4));
+    file.arm_ost_fault(2, 1, None).unwrap();
+    let err = run_collective_write(&ctx, depth2_spec(), depth2_ranks(&topo), &mut file)
+        .unwrap_err();
+    assert!(matches!(err, Error::StorageFailed { ost: 1, .. }), "got {err}");
+    let msg = err.to_string();
+    assert!(msg.contains("write exchange round "), "no task identity in: {msg}");
+    assert!(msg.contains(", aggregator "), "no aggregator identity in: {msg}");
+    let round = exchange_round_of(&msg);
+    assert!(
+        (2..rounds).contains(&round),
+        "armed at round 2 but failed at round {round} of {rounds}: {msg}"
+    );
+}
+
+#[test]
+fn depth2_mid_round_read_failure_names_its_task() {
+    let (topo, net, cpu, io, eng) = depth2_parts();
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 4,
+    };
+    // Pre-populate with plain per-rank writes (the operation under test
+    // is the collective read), then learn the round structure fault-free.
+    let mut file = LustreFile::new(LustreConfig::new(64, 4));
+    file.begin_round();
+    for (r, batch) in depth2_ranks(&topo) {
+        file.write_view(r, &batch.view, &batch.payload).unwrap();
+    }
+    let views: Vec<_> =
+        depth2_ranks(&topo).into_iter().map(|(r, b)| (r, b.view)).collect();
+    let (_, outcome) = run_collective_read(&ctx, depth2_spec(), views.clone(), &file).unwrap();
+    let rounds = outcome.counters.rounds;
+    assert!(rounds >= 4, "fixture must be multi-round, got {rounds}");
+    // Arm OST 1 at round 2 and restart the round clock — the setup above
+    // must not have consumed the schedule.
+    file.arm_ost_fault(2, 1, None).unwrap();
+    file.reset_fault_rounds();
+    let err = run_collective_read(&ctx, depth2_spec(), views, &file).unwrap_err();
+    assert!(matches!(err, Error::StorageFailed { ost: 1, .. }), "got {err}");
+    let msg = err.to_string();
+    assert!(msg.contains("read exchange round "), "no task identity in: {msg}");
+    assert!(msg.contains(", aggregator "), "no aggregator identity in: {msg}");
+    let round = exchange_round_of(&msg);
+    assert!(
+        (2..rounds).contains(&round),
+        "armed at round 2 but failed at round {round} of {rounds}: {msg}"
+    );
+}
+
+#[test]
+fn fail_ost_rejects_out_of_range_indices() {
+    let mut file = LustreFile::new(LustreConfig::new(64, 4));
+    let err = file.fail_ost(4).unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "got {err}");
+    assert!(err.to_string().contains("0..4"), "{err}");
+    assert!(file.fail_ost_transient(7, 2).is_err());
+    assert!(file.arm_ost_fault(1, 9, None).is_err());
+    assert!(file.set_ost_rate(5, 0.5).is_err());
+    // In-range installs still work after the rejections.
+    file.fail_ost(3).unwrap();
 }
 
 #[test]

@@ -5,6 +5,8 @@
 #   BENCH=1 scripts/check.sh    # additionally regenerate BENCH_hotpath.json
 #   SCALE=1 scripts/check.sh    # additionally smoke the paper's 16384-rank
 #                               # point (verification-gated sweep, ~minutes)
+#   FAULTS=1 scripts/check.sh   # additionally smoke the degraded-mode path
+#                               # (seeded faults, byte-verified sweep + run)
 #
 # fmt/clippy are skipped with a warning when the components are not
 # installed (the offline image ships a bare toolchain).  Set
@@ -95,13 +97,14 @@ fi
 
 # Benches are harness = false and excluded from `cargo test`; compile
 # them unconditionally so bench-only breakage is caught in tier-1 even
-# when BENCH=1 is not set.  The depth-ablation and auto-tune benches are
-# named explicitly so a target-list regression in Cargo.toml cannot
-# silently drop them.
+# when BENCH=1 is not set.  The depth-ablation, auto-tune and fault-
+# ablation benches are named explicitly so a target-list regression in
+# Cargo.toml cannot silently drop them.
 echo "== cargo bench --no-run (bench compile gate) =="
 cargo bench --no-run
 cargo bench --no-run --bench ablation_depth
 cargo bench --no-run --bench ablation_autotune
+cargo bench --no-run --bench ablation_faults
 
 if [ "${BENCH:-0}" = "1" ]; then
     echo "== hot-path bench (writes BENCH_hotpath.json) =="
@@ -126,6 +129,26 @@ if [ "${SCALE:-0}" = "1" ]; then
         --nodes 256 --ppn 64 --workload e3sm-g --scale 1024 \
         --sockets_per_node 4 --nodes_per_switch 16 \
         --algorithm tree:socket=4,node=2 --direction both --verify
+fi
+
+if [ "${FAULTS:-0}" = "1" ]; then
+    # Degraded-mode smoke: seeded fault schedule (transient OST failure,
+    # half-rate OST range, aggregator dropout) at a small scale.  The
+    # sweep charts the cumulative degradation curve; write bars verify by
+    # vectored read-back (--verify), read bars always verify the gathered
+    # bytes — any mismatch or unabsorbed fault fails the gate.
+    echo "== FAULTS=1: degradation-curve sweep (both directions) =="
+    cargo run --release --bin tamio -- sweep \
+        --nodes 2 --ppn 8 --sockets_per_node 2 --workload strided \
+        --algorithm tam:4 --direction both --verify \
+        --faults "ost_fail=0@transient:2,ost_slow=0.5x:0-1,agg_drop=?@level:0" \
+        --fault-seed 42 --max-retries 6
+    # Depth-2 tree with a mid-tree aggregator dropout repaired in place.
+    echo "== FAULTS=1: depth-2 tree under aggregator dropout =="
+    cargo run --release --bin tamio -- run \
+        --nodes 2 --ppn 8 --sockets_per_node 2 --workload strided \
+        --algorithm tree:socket=2,node=1 --direction both --verify \
+        --faults "agg_drop=?@level:1" --fault-seed 42
 fi
 
 echo "check.sh: all gates passed"
