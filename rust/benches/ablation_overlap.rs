@@ -1,0 +1,169 @@
+//! Round-pipelining ablation at the paper's 16384-rank × 256-node point:
+//! `--overlap on` vs `off` for aggregation depths 0–2 — two-phase,
+//! TAM(P_L=256) and a socket+node tree — under both send semantics
+//! (Issend, the default, bounds the achievable overlap by the §V
+//! receiver-posting constraint; Isend does not).  The pipeline is a
+//! schedule-only transform, so every pipelined bar must be byte-verified
+//! with the exact volume counters of its serial twin, charge a strictly
+//! positive `overlap_saved` credit, and total no more than serial —
+//! steady-state rounds cost `max(exchange, io)` instead of the sum.
+//!
+//! Panel results are spliced into `BENCH_hotpath.json` under an
+//! `"ablation_overlap"` key (replaced on re-run; the `hotpath` bench's
+//! own entries survive).
+//!
+//! `cargo bench --bench ablation_overlap`
+//! Env: TAMIO_BENCH_BUDGET=N requests (default 150k);
+//!      TAMIO_BENCH_DIRECTION=write|read|both (default both).
+
+use tamio::benchkit::JsonReport;
+use tamio::config::RunConfig;
+use tamio::coordinator::collective::{Algorithm, ExchangeArena, OverlapMode};
+use tamio::experiments::{
+    auto_scale, bench_direction_from_env, build_engine_for, plan_cache_for,
+    run_direction_cached,
+};
+use tamio::metrics::breakdown_panels;
+use tamio::netmodel::SendMode;
+use tamio::workloads::WorkloadKind;
+
+/// Splice this bench's entries into `BENCH_hotpath.json` under an
+/// `"ablation_overlap"` key (same idiom as `engine_micro`: the `hotpath`
+/// bench owns the `"benches"` array, so each side bench replaces only its
+/// own key and both stay re-runnable in any order).
+fn emit_json(report: &JsonReport) {
+    const PATH: &str = "BENCH_hotpath.json";
+    const KEY: &str = ", \"ablation_overlap\": [";
+    let mine = report.to_json();
+    let body = mine
+        .strip_prefix("{\"benches\": [")
+        .and_then(|s| s.strip_suffix("]}"))
+        .expect("JsonReport shape");
+    let head = match std::fs::read_to_string(PATH) {
+        Ok(s) if s.starts_with('{') && s.ends_with('}') => match s.find(KEY) {
+            Some(cut) => s[..cut].to_string(),
+            None => s[..s.len() - 1].to_string(),
+        },
+        _ => String::from("{\"benches\": []"),
+    };
+    let merged = format!("{head}{KEY}{body}]}}");
+    std::fs::write(PATH, merged).expect("write BENCH_hotpath.json");
+    println!("\nspliced ablation_overlap panels into {PATH}");
+}
+
+fn main() {
+    const NODES: usize = 256;
+    const PPN: usize = 64;
+    let budget: u64 = std::env::var("TAMIO_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150_000);
+    let direction = bench_direction_from_env();
+
+    let mut base = RunConfig::default();
+    base.nodes = NODES;
+    base.ppn = PPN;
+    base.sockets_per_node = 4;
+    base.nodes_per_switch = 16;
+    base.workload = WorkloadKind::E3smG;
+    base.scale = auto_scale(WorkloadKind::E3smG, NODES * PPN, budget);
+    base.direction = direction;
+    base.verify = true;
+    println!(
+        "Overlap ablation: e3sm-g @ {NODES} nodes x {PPN} ppn (P={}), \
+         4 sockets/node, 16 nodes/switch, scale 1/{}, direction {direction}",
+        NODES * PPN,
+        base.scale,
+    );
+
+    // Depths 0-2.
+    let algos = ["two-phase", "tam:256", "tree:socket=2,node=2"];
+    let modes = [("issend", SendMode::Issend), ("isend", SendMode::Isend)];
+
+    let engine = build_engine_for(&base).expect("engine");
+    let mut arena = ExchangeArena::default();
+    let mut cache = plan_cache_for(&base).expect("plan cache");
+    let mut report = JsonReport::new();
+    let mut runs = Vec::new();
+    for &dir in direction.runs() {
+        for (mode_tag, mode) in modes {
+            for name in algos {
+                // Serial baseline, then its pipelined twin through the
+                // same arena + plan cache (overlap is execution-time
+                // only, so the pipelined leg must hit the cached plan).
+                let mut run_leg = |overlap: OverlapMode| {
+                    let mut cfg = base.clone();
+                    cfg.algorithm = name.parse::<Algorithm>().expect("algorithm");
+                    cfg.net.send_mode = mode;
+                    cfg.overlap = overlap;
+                    let (run, verify) = run_direction_cached(
+                        &cfg,
+                        engine.as_ref(),
+                        dir,
+                        &mut arena,
+                        &mut cache,
+                    )
+                    .expect("ablation run");
+                    let v = verify.expect("verified bar");
+                    assert!(
+                        v.passed(),
+                        "{name}/{mode_tag} [{dir}] overlap={overlap}: verify {}/{}",
+                        v.ok,
+                        v.total
+                    );
+                    run
+                };
+                let serial = run_leg(OverlapMode::Off);
+                let piped = run_leg(OverlapMode::On);
+
+                // Schedule-only transform: identical bytes and volume
+                // counters, a positive hidden-I/O credit, and a modeled
+                // total that can only shrink.
+                let s = &serial.counters;
+                let p = &piped.counters;
+                assert_eq!(
+                    (s.bytes, s.rounds, s.reqs_posted, s.reqs_at_io),
+                    (p.bytes, p.rounds, p.reqs_posted, p.reqs_at_io),
+                    "{name}/{mode_tag} [{dir}]: pipelined volume diverged from serial"
+                );
+                assert_eq!(
+                    serial.breakdown.overlap_saved, 0.0,
+                    "{name}/{mode_tag} [{dir}]: serial run must not claim overlap credit"
+                );
+                assert!(
+                    p.rounds >= 2,
+                    "{name}/{mode_tag} [{dir}]: paper-scale point must be multi-round"
+                );
+                assert!(
+                    piped.breakdown.overlap_saved > 0.0,
+                    "{name}/{mode_tag} [{dir}]: pipelined steady rounds hid no I/O"
+                );
+                assert!(
+                    piped.breakdown.total() <= serial.breakdown.total(),
+                    "{name}/{mode_tag} [{dir}]: overlap made the modeled run slower"
+                );
+                let speedup = serial.breakdown.total() / piped.breakdown.total();
+                println!(
+                    "{name}/{mode_tag} [{dir}]: serial {:.3} ms -> overlap {:.3} ms \
+                     (saved {:.3} ms, {speedup:.3}x)",
+                    serial.breakdown.total() * 1e3,
+                    piped.breakdown.total() * 1e3,
+                    piped.breakdown.overlap_saved * 1e3,
+                );
+                report.add_value(
+                    &format!("overlap_saved_ms/{name}/{mode_tag}/{dir}"),
+                    piped.breakdown.overlap_saved * 1e3,
+                );
+                report
+                    .add_value(&format!("overlap_speedup/{name}/{mode_tag}/{dir}"), speedup);
+                for (tag, mut run) in [("serial", serial), ("overlap", piped)] {
+                    run.label = format!("{name} {mode_tag} {tag}");
+                    runs.push(run);
+                }
+            }
+        }
+    }
+    print!("{}", breakdown_panels(&runs));
+    emit_json(&report);
+    println!("ablation_overlap: every pipelined bar byte-verified, bit-identical volume");
+}

@@ -5,7 +5,7 @@ pub mod kv;
 
 use crate::cluster::{RankPlacement, Topology};
 use crate::coordinator::breakdown::CpuModel;
-use crate::coordinator::collective::{Algorithm, DirectionSpec};
+use crate::coordinator::collective::{Algorithm, DirectionSpec, OverlapMode};
 use crate::coordinator::placement::GlobalPlacement;
 use crate::error::{Error, Result};
 use crate::faults::{self, FaultPlan};
@@ -70,6 +70,10 @@ pub struct RunConfig {
     /// Retry bound per storage call site under transient faults
     /// (`--max-retries`).
     pub max_retries: u32,
+    /// Double-buffered round pipelining (`--overlap on|off|auto`).
+    /// Execution-time property only: plans and their cache fingerprints
+    /// are identical across modes.
+    pub overlap: OverlapMode,
 }
 
 impl Default for RunConfig {
@@ -98,6 +102,7 @@ impl Default for RunConfig {
             faults: None,
             fault_seed: 0,
             max_retries: faults::DEFAULT_MAX_RETRIES,
+            overlap: OverlapMode::Off,
         }
     }
 }
@@ -159,6 +164,7 @@ impl RunConfig {
             "scale" => self.scale = parse_u64(value)?,
             "algorithm" | "algo" => self.algorithm = value.parse()?,
             "direction" | "dir" => self.direction = value.parse()?,
+            "overlap" => self.overlap = value.parse()?,
             "engine" => self.engine = value.parse()?,
             "placement" => {
                 self.placement = match value {
@@ -384,6 +390,24 @@ mod tests {
         assert!(c.apply(&bad).is_err());
         let bad = KvMap::from_pairs(vec![("max_retries".into(), "lots".into())]);
         assert!(c.apply(&bad).is_err());
+    }
+
+    #[test]
+    fn overlap_key_applies_and_rejects_garbage() {
+        let mut c = RunConfig::default();
+        // Default off: pipelining never engages unless asked for.
+        assert_eq!(c.overlap, OverlapMode::Off);
+        for (v, want) in
+            [("on", OverlapMode::On), ("auto", OverlapMode::Auto), ("off", OverlapMode::Off)]
+        {
+            let kv = KvMap::from_pairs(vec![("overlap".into(), v.into())]);
+            c.apply(&kv).unwrap();
+            assert_eq!(c.overlap, want);
+        }
+        // Hard error, not silent default substitution (PR 7 policy).
+        let bad = KvMap::from_pairs(vec![("overlap".into(), "sideways".into())]);
+        let err = c.apply(&bad).unwrap_err().to_string();
+        assert!(err.contains("sideways") && err.contains("on|off|auto"), "{err}");
     }
 
     #[test]

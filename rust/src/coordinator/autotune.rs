@@ -41,7 +41,7 @@
 //! [`PlanCache::tuner_choice`]: crate::coordinator::plancache::PlanCache::tuner_choice
 
 use crate::cluster::{RankPlacement, Topology};
-use crate::coordinator::collective::{build_exchange_plan, Direction};
+use crate::coordinator::collective::{build_exchange_plan, Direction, OverlapMode};
 use crate::coordinator::merge::RoundScratch;
 use crate::coordinator::placement::GlobalPlacement;
 use crate::coordinator::plancache::{Fp128, FpHasher};
@@ -51,7 +51,7 @@ use crate::coordinator::twophase::CollectiveCtx;
 use crate::error::Result;
 use crate::lustre::{LustreConfig, OstStats};
 use crate::mpisim::FlatView;
-use crate::netmodel::phase::{cost_phase, Message, PendingQueue};
+use crate::netmodel::phase::{cost_phase, Message, OverlapAccount, PendingQueue};
 
 // ---------------------------------------------------------------------------
 // Candidate grid
@@ -163,10 +163,16 @@ pub struct PredictedCost {
     pub inter_datatype: f64,
     /// I/O phase, assuming the uniform OST spread striping enforces.
     pub io_phase: f64,
+    /// Critical-path credit of the double-buffered round pipeline
+    /// (`--overlap on|auto`): per steady round, the I/O hidden behind
+    /// the next round's exchange, bounded by the Issend synchronization
+    /// rule.  Zero when the candidate was priced with overlap off.
+    pub overlap_saved: f64,
 }
 
 impl PredictedCost {
-    /// End-to-end predicted time — the tuner's objective.
+    /// End-to-end predicted time — the tuner's objective.  Mirrors
+    /// `Breakdown::total`: the phase sum minus the pipeline credit.
     pub fn total(&self) -> f64 {
         self.intra_comm
             + self.intra_sort
@@ -178,6 +184,7 @@ impl PredictedCost {
             + self.inter_sort
             + self.inter_datatype
             + self.io_phase
+            - self.overlap_saved
     }
 }
 
@@ -193,6 +200,7 @@ pub fn predict_spec_cost(
     direction: Direction,
     views: &[(usize, FlatView)],
     file_cfg: &LustreConfig,
+    overlap: OverlapMode,
 ) -> Result<PredictedCost> {
     let agg = AggregationPlan::from_spec(ctx.topo, &spec);
     let mut cost = PredictedCost::default();
@@ -260,10 +268,12 @@ pub fn predict_spec_cost(
     let mut queue = PendingQueue::default();
     let mut agg_items = vec![0u64; n_agg];
     let mut agg_slices = vec![0usize; n_agg];
+    let mut acct = OverlapAccount::default();
     for round in 0..x.n_rounds {
         msgs.clear();
         agg_items.iter_mut().for_each(|c| *c = 0);
         agg_slices.iter_mut().for_each(|c| *c = 0);
+        let mut round_bytes = 0u64;
         for pr in &x.reqs {
             for (a, s) in pr.reqs.slices_in_round_with(round, &[]) {
                 if s.len() == 0 {
@@ -271,6 +281,7 @@ pub fn predict_spec_cost(
                 }
                 agg_items[a] += s.len() as u64;
                 agg_slices[a] += 1;
+                round_bytes += s.bytes;
                 if x.agg_ranks[a] != pr.rank {
                     msgs.push(match direction {
                         Direction::Write => Message::new(pr.rank, x.agg_ranks[a], s.bytes),
@@ -279,7 +290,8 @@ pub fn predict_spec_cost(
                 }
             }
         }
-        cost.round_comm += queue.cost_round(ctx.net, ctx.topo, &msgs).time;
+        let comm = queue.cost_round(ctx.net, ctx.topo, &msgs);
+        cost.round_comm += comm.time;
         let mut sort_max = 0.0f64;
         let mut dt_max = 0.0f64;
         for a in 0..n_agg {
@@ -290,6 +302,14 @@ pub fn predict_spec_cost(
         }
         cost.inter_sort += sort_max;
         cost.inter_datatype += dt_max;
+        // Same per-round triple the executor feeds its account: the full
+        // exchange (comm + merge + datatype), the send-mode sync bound
+        // at this round's busiest receiver, and the round's I/O weight.
+        acct.push_round(
+            comm.time + sort_max + dt_max,
+            ctx.net.overlap_sync_bound(comm.max_in_degree),
+            round_bytes as f64,
+        );
     }
 
     // I/O phase: striping spreads the same bytes over the same OSTs for
@@ -305,6 +325,9 @@ pub fn predict_spec_cost(
         lock_conflicts: 0,
     };
     cost.io_phase = ctx.io.phase_time(&vec![per_ost; osts]);
+    if overlap.pipelines(x.n_rounds) {
+        cost.overlap_saved = acct.finish(cost.io_phase);
+    }
     Ok(cost)
 }
 
@@ -344,6 +367,7 @@ pub fn score_candidates(
     direction: Direction,
     views: &[(usize, FlatView)],
     file_cfg: &LustreConfig,
+    overlap: OverlapMode,
 ) -> Result<Vec<ScoredCandidate>> {
     let mut out = Vec::new();
     for placement in [RankPlacement::Block, RankPlacement::RoundRobin] {
@@ -356,7 +380,7 @@ pub fn score_candidates(
         );
         let pctx = CollectiveCtx { topo: &topo, ..*ctx };
         for spec in candidate_specs(&topo) {
-            let cost = predict_spec_cost(&pctx, spec, direction, views, file_cfg)?;
+            let cost = predict_spec_cost(&pctx, spec, direction, views, file_cfg, overlap)?;
             out.push(ScoredCandidate { spec, placement, cost });
         }
     }
@@ -372,8 +396,9 @@ pub fn tune_collective(
     direction: Direction,
     views: &[(usize, FlatView)],
     file_cfg: &LustreConfig,
+    overlap: OverlapMode,
 ) -> Result<AutoChoice> {
-    let scored = score_candidates(ctx, direction, views, file_cfg)?;
+    let scored = score_candidates(ctx, direction, views, file_cfg, overlap)?;
     let mut best = scored[0];
     for c in &scored[1..] {
         if c.cost.total() < best.cost.total() {
@@ -389,17 +414,20 @@ pub fn tune_collective(
 
 /// The tuner's memo key: the collective's structural fingerprint
 /// *minus the tuned axes*.  Hashes topology shape (but not rank
-/// placement), global-aggregator policy/count, striping, direction and
-/// the requester views — never the algorithm, which is the output.
-/// Its own domain tag keeps it disjoint from plan fingerprints sharing
-/// a [`PlanCache`] directory namespace.
+/// placement), global-aggregator policy/count, striping, direction,
+/// the overlap mode (pipelining changes which candidate wins, so memos
+/// are per-mode — note plan fingerprints deliberately do NOT include
+/// it) and the requester views — never the algorithm, which is the
+/// output.  Its own domain tag keeps it disjoint from plan
+/// fingerprints sharing a [`PlanCache`] directory namespace.
 pub fn fingerprint_autotune<'a>(
     ctx: &CollectiveCtx,
     direction: Direction,
     file_cfg: &LustreConfig,
+    overlap: OverlapMode,
     views: impl Iterator<Item = (usize, &'a FlatView)>,
 ) -> Fp128 {
-    let mut h = FpHasher::new("tamio-autotune-v1");
+    let mut h = FpHasher::new("tamio-autotune-v2");
     h.write_u64(ctx.topo.nodes as u64);
     h.write_u64(ctx.topo.ppn as u64);
     h.write_u64(ctx.topo.sockets_per_node as u64);
@@ -414,6 +442,11 @@ pub fn fingerprint_autotune<'a>(
     h.write_u64(match direction {
         Direction::Write => 0,
         Direction::Read => 1,
+    });
+    h.write_u64(match overlap {
+        OverlapMode::Off => 0,
+        OverlapMode::On => 1,
+        OverlapMode::Auto => 2,
     });
     for (rank, view) in views {
         h.write_u64(rank as u64);
@@ -521,12 +554,42 @@ mod tests {
         let cfg = LustreConfig::new(1024, 4);
         for dir in [Direction::Write, Direction::Read] {
             for spec in candidate_specs(&topo) {
-                let c = predict_spec_cost(&ctx, spec, dir, &vs, &cfg).unwrap();
+                let c = predict_spec_cost(&ctx, spec, dir, &vs, &cfg, OverlapMode::Off).unwrap();
                 assert!(c.total().is_finite(), "{spec} [{dir:?}]");
                 assert!(c.total() > 0.0, "{spec} [{dir:?}]: {c:?}");
                 assert!(c.round_comm > 0.0, "{spec} [{dir:?}]: rounds must cost");
                 assert!(c.io_phase > 0.0, "{spec} [{dir:?}]");
+                assert_eq!(c.overlap_saved, 0.0, "{spec} [{dir:?}]: off prices serially");
             }
+        }
+    }
+
+    #[test]
+    fn predictor_prices_overlap_as_a_bounded_credit() {
+        let fx = Fx::new();
+        let topo = Topology::hierarchical(2, 4, 2, 1, RankPlacement::Block);
+        let ctx = fx.ctx(&topo);
+        let vs = views(topo.nprocs());
+        let cfg = LustreConfig::new(1024, 4);
+        for dir in [Direction::Write, Direction::Read] {
+            for spec in candidate_specs(&topo) {
+                let off = predict_spec_cost(&ctx, spec, dir, &vs, &cfg, OverlapMode::Off).unwrap();
+                let on = predict_spec_cost(&ctx, spec, dir, &vs, &cfg, OverlapMode::On).unwrap();
+                // Overlap only subtracts hidden I/O — every other phase
+                // component is identical to the serial pricing.
+                assert!(on.overlap_saved >= 0.0);
+                assert!(on.overlap_saved <= on.io_phase, "{spec} [{dir:?}]");
+                assert!(
+                    (off.total() - on.total() - on.overlap_saved).abs() < 1e-12,
+                    "{spec} [{dir:?}]: {off:?} vs {on:?}"
+                );
+            }
+            // The multi-round workload must show a real pipelining win for
+            // at least the flat candidate, else `auto` can never prefer it.
+            let on =
+                predict_spec_cost(&ctx, TreeSpec::flat(), dir, &vs, &cfg, OverlapMode::On)
+                    .unwrap();
+            assert!(on.overlap_saved > 0.0, "[{dir:?}]: {on:?}");
         }
     }
 
@@ -537,13 +600,13 @@ mod tests {
         let ctx = fx.ctx(&topo);
         let vs = views(topo.nprocs());
         let cfg = LustreConfig::new(1024, 4);
-        let a = tune_collective(&ctx, Direction::Write, &vs, &cfg).unwrap();
-        let b = tune_collective(&ctx, Direction::Write, &vs, &cfg).unwrap();
+        let a = tune_collective(&ctx, Direction::Write, &vs, &cfg, OverlapMode::Off).unwrap();
+        let b = tune_collective(&ctx, Direction::Write, &vs, &cfg, OverlapMode::Off).unwrap();
         assert_eq!(a.spec, b.spec);
         assert_eq!(a.placement, b.placement);
         assert_eq!(a.cost.total(), b.cost.total());
 
-        let scored = score_candidates(&ctx, Direction::Write, &vs, &cfg).unwrap();
+        let scored = score_candidates(&ctx, Direction::Write, &vs, &cfg, OverlapMode::Off).unwrap();
         let min = scored
             .iter()
             .map(|c| c.cost.total())
@@ -564,7 +627,7 @@ mod tests {
         let vs = views(block.nprocs());
         let fp = |topo: &Topology, dir, vs: &[(usize, FlatView)], cfg: &LustreConfig| {
             let t = fx.ctx(topo);
-            fingerprint_autotune(&t, dir, cfg, vs.iter().map(|(r, v)| (*r, v)))
+            fingerprint_autotune(&t, dir, cfg, OverlapMode::Off, vs.iter().map(|(r, v)| (*r, v)))
         };
         // Rank placement is a tuned axis — it must NOT key the memo.
         assert_eq!(
@@ -591,5 +654,16 @@ mod tests {
             fp(&block, Direction::Write, &vs, &cfg),
             fp(&other, Direction::Write, &vs, &cfg)
         );
+        // Overlap mode keys the memo (the winner can differ per mode) —
+        // unlike plan fingerprints, which must NOT see it.
+        let t = fx.ctx(&block);
+        let fp_on = fingerprint_autotune(
+            &t,
+            Direction::Write,
+            &cfg,
+            OverlapMode::On,
+            vs.iter().map(|(r, v)| (*r, v)),
+        );
+        assert_ne!(fp(&block, Direction::Write, &vs, &cfg), fp_on);
     }
 }

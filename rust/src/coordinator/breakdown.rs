@@ -139,6 +139,17 @@ pub struct Breakdown {
     /// bit-identical to cold runs.
     pub plan: f64,
 
+    // ---- round pipelining ----
+    /// Simulated time the double-buffered round pipeline (`--overlap
+    /// on|auto`) removes from the critical path: per steady round, the
+    /// part of round r's I/O phase hidden behind round r+1's exchange,
+    /// bounded by the send-mode synchronization rule
+    /// ([`crate::netmodel::NetParams::overlap_sync_bound`] — under
+    /// `Issend` round r+1's sends cannot complete before round r's
+    /// receivers post).  Zero on serial runs, so `total()` reduces to
+    /// the classic phase sum.
+    pub overlap_saved: f64,
+
     /// Per-tree-level split of the `intra_*` sums, innermost level first
     /// (empty for depth-0 plans / plain two-phase).  The sums above remain
     /// the totals; this is reporting detail, not a separate cost.
@@ -157,9 +168,12 @@ impl Breakdown {
             + self.inter_comm
     }
 
-    /// End-to-end collective time.
+    /// End-to-end collective time: the phase sum minus whatever the
+    /// round pipeline overlapped away (`overlap_saved` is bounded by
+    /// `io_phase`, so the total never goes negative).
     pub fn total(&self) -> f64 {
         self.intra_total() + self.inter_total() + self.io_phase + self.plan
+            - self.overlap_saved
     }
 
     /// Achieved bandwidth for `bytes` moved end-to-end.
@@ -181,6 +195,7 @@ impl Breakdown {
             ("inter_comm", self.inter_comm),
             ("io_phase", self.io_phase),
             ("plan", self.plan),
+            ("overlap_saved", self.overlap_saved),
         ]
     }
 }
@@ -235,12 +250,14 @@ mod tests {
             inter_comm: 8.0,
             io_phase: 9.0,
             plan: 10.0,
+            overlap_saved: 0.5,
             levels: Vec::new(),
         };
         assert_eq!(b.intra_total(), 6.0);
         assert_eq!(b.inter_total(), 30.0);
-        assert_eq!(b.total(), 55.0);
-        assert_eq!(b.rows().len(), 10);
+        // Pipelined overlap is a critical-path credit, not a phase.
+        assert_eq!(b.total(), 54.5);
+        assert_eq!(b.rows().len(), 11);
     }
 
     #[test]

@@ -33,9 +33,10 @@ use crate::error::{Error, Result};
 use crate::faults;
 use crate::lustre::{LustreConfig, LustreFile, OstStats};
 use crate::mpisim::FlatView;
-use crate::netmodel::phase::{cost_phase, Message, PendingQueue};
+use crate::netmodel::phase::{cost_phase, Message, OverlapAccount, PendingQueue, PhaseCost};
 use crate::util::par_map;
 use crate::util::runtime;
+use std::sync::Mutex;
 
 /// Persistent buffers of the exchange round loop, owned by the caller so
 /// their capacity survives across rounds *and* across `run_*` invocations
@@ -57,6 +58,12 @@ pub struct ExchangeArena {
     /// demand; surplus slots from a larger previous exchange stay warm
     /// and idle).
     pub scratch: Vec<RoundScratch>,
+    /// Second ping/pong bank of per-aggregator round scratch for the
+    /// double-buffered pipeline (`overlap` on/auto): while one bank's
+    /// round is in its storage call, the next round stages and merges
+    /// into the other (DESIGN.md §Round pipelining).  Empty until the
+    /// first pipelined exchange; serial exchanges never touch it.
+    pub scratch2: Vec<RoundScratch>,
     /// Per-round exchange message list.
     pub data_msgs: Vec<Message>,
     /// Pending-send queue (Isend model) + sharded phase-cost scratch.
@@ -77,6 +84,17 @@ pub struct ExchangeArena {
     /// write path's payload home now that cached structural plans carry
     /// no payload slab of their own.
     pub staged: Vec<Vec<u8>>,
+    /// Round-pipelining mode of exchanges run through this arena.
+    /// Drivers copy `RunConfig::overlap` here
+    /// (`experiments::run_direction_*`); the default is
+    /// [`OverlapMode::Off`], so raw entry-point callers keep the serial
+    /// schedule bit-identically.  Execution-time property only: plan
+    /// fingerprints, output bytes and verification never depend on it.
+    pub overlap: OverlapMode,
+    /// Per-round critical-path ledger of the last pipelined exchange
+    /// (capacity reused across exchanges; feeds the `overlap_saved`
+    /// breakdown row).
+    pub overlap_acct: OverlapAccount,
 }
 
 /// Pooled reply storage of one read exchange: requester `i`'s reply bytes
@@ -254,6 +272,65 @@ impl std::str::FromStr for DirectionSpec {
             "both" | "rw" | "wr" => Ok(DirectionSpec::Both),
             other => Err(crate::Error::config(format!(
                 "unknown direction '{other}' (expected write|read|both)"
+            ))),
+        }
+    }
+}
+
+/// Round-pipelining selector (`RunConfig::overlap`, the CLI's
+/// `--overlap` flag): whether [`execute_exchange`] double-buffers its
+/// round loop so round r+1's staging + merge overlaps round r's storage
+/// call (DESIGN.md §Round pipelining).  An execution-schedule property
+/// only — plan fingerprints, file bytes, reply payloads and every
+/// volume counter are bit-identical in all three modes, at any pool
+/// width; only the `overlap_saved` breakdown credit differs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Strictly serial rounds — the classic two-phase schedule, and the
+    /// default so existing runs stay bit-identical.
+    #[default]
+    Off,
+    /// Pipeline whenever the exchange has at least two rounds.
+    On,
+    /// Let the engine decide per exchange.  Today identical to `On`
+    /// (every multi-round exchange benefits under the cost model); a
+    /// distinct mode so drivers can defer to future cost-model gating
+    /// without a flag change.
+    Auto,
+}
+
+impl OverlapMode {
+    /// Whether an exchange of `n_rounds` rounds runs the double-buffered
+    /// pipeline.  Single-round exchanges degenerate to the serial loop —
+    /// there is no next round to overlap with.
+    pub fn pipelines(self, n_rounds: u64) -> bool {
+        match self {
+            OverlapMode::Off => false,
+            OverlapMode::On | OverlapMode::Auto => n_rounds >= 2,
+        }
+    }
+}
+
+impl std::fmt::Display for OverlapMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OverlapMode::Off => write!(f, "off"),
+            OverlapMode::On => write!(f, "on"),
+            OverlapMode::Auto => write!(f, "auto"),
+        }
+    }
+}
+
+impl std::str::FromStr for OverlapMode {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(OverlapMode::Off),
+            "on" => Ok(OverlapMode::On),
+            "auto" => Ok(OverlapMode::Auto),
+            other => Err(crate::Error::config(format!(
+                "unknown overlap mode '{other}' (expected on|off|auto)"
             ))),
         }
     }
@@ -545,6 +622,63 @@ pub fn build_exchange_plan(
     Ok(ExchangePlan { domains, agg_ranks, n_rounds, reqs })
 }
 
+/// Stage round `round`'s requests into one scratch bank and cost the
+/// exchange through the pending queue: per-round slot state is re-zeroed,
+/// slab slices out of each requester's `MyReqs` are memcpy'd into the
+/// bank's staging slabs (capacity-warm after round 0), and the message
+/// list is rebuilt for the [`PendingQueue`] — which MUST be driven in
+/// ascending round order (the Isend pending counts evolve round to
+/// round), which is why the pipelined schedule keeps staging on the
+/// driver thread.  Shared verbatim by the serial and pipelined loops so
+/// their byte movement and accounting cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+fn stage_round_into(
+    ctx: &CollectiveCtx,
+    plan: &ExchangePlan,
+    direction: Direction,
+    staged: &[Vec<u8>],
+    data_msgs: &mut Vec<Message>,
+    pending: &mut PendingQueue,
+    bank: &mut [RoundScratch],
+    round: u64,
+) -> PhaseCost {
+    data_msgs.clear();
+    for slot in bank.iter_mut() {
+        slot.reset_round();
+    }
+    for (i, pr) in plan.reqs.iter().enumerate() {
+        for (agg, s) in pr.reqs.slices_in_round_with(round, &staged[i]) {
+            data_msgs.push(match direction {
+                Direction::Write => Message::new(pr.rank, plan.agg_ranks[agg], s.bytes),
+                Direction::Read => Message::new(plan.agg_ranks[agg], pr.rank, s.bytes),
+            });
+            bank[agg].stage(i, s.offsets, s.lengths, s.payload, s.bytes);
+        }
+    }
+    pending.cost_round(ctx.net, ctx.topo, data_msgs)
+}
+
+/// Lowest-index error collection for heterogeneous pooled batches — the
+/// [`runtime::Runtime::try_for_each_mut`] determinism rule, replicated
+/// for `for_each_index` submissions whose tasks mix roles (the pipelined
+/// I/O + next-round-merge batch).  Whichever lane errors first, the
+/// surviving error is the one with the smallest task index.
+fn record_first_err(slot: &Mutex<Option<(usize, Error)>>, i: usize, e: Error) {
+    let mut slot = slot.lock().unwrap();
+    match &*slot {
+        Some((prev, _)) if *prev <= i => {}
+        _ => *slot = Some((i, e)),
+    }
+}
+
+/// Raw-pointer wrapper so disjoint `&mut` projections can cross a pooled
+/// closure's `Sync` bound (the `util::runtime` idiom, replicated here for
+/// the pipelined batch: the I/O task's `&mut LustreFile` and each merge
+/// task's bank slot).  Soundness arguments live at the use sites.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
 /// Execute one exchange over a borrowed [`ExchangePlan`] — the pure
 /// executor half of the construct-once/execute-many split.  Performs zero
 /// plan construction: the call's requesters are validated against the
@@ -554,6 +688,15 @@ pub fn build_exchange_plan(
 /// positions, and the round loop drains the plan's CSR slabs.  All
 /// simulated times (including `Breakdown::plan`) are computed here from
 /// `ctx`, so a cached execution is bit-identical to a cold one.
+///
+/// With `arena.overlap` on (and ≥ 2 rounds) the round loop runs the
+/// double-buffered pipeline — prologue (round 0 stages + merges),
+/// steady state (round r's storage call and round r+1's staging + merge
+/// in one pooled batch over disjoint ping/pong banks), epilogue (the
+/// last round has nothing left to stage) — with file operations in
+/// exactly the serial order, so results are bit-identical to the serial
+/// schedule at any thread width and only the `overlap_saved` breakdown
+/// credit differs (DESIGN.md §Round pipelining).
 pub fn execute_exchange(
     ctx: &CollectiveCtx,
     plan: &ExchangePlan,
@@ -666,7 +809,27 @@ pub fn execute_exchange(
     for slot in arena.scratch.iter_mut() {
         slot.reset_exchange(n_osts);
     }
+    // Double-buffered pipelining is a schedule property: same plan, same
+    // bytes, same file-operation order — only who computes what *when*
+    // (and the `overlap_saved` accounting credit) differs.  Single-round
+    // exchanges have nothing to overlap and take the serial path.
+    let pipelined = arena.overlap.pipelines(n_rounds);
+    if pipelined {
+        if arena.scratch2.len() < n_agg {
+            arena.scratch2.resize_with(n_agg, RoundScratch::default);
+        }
+        for slot in arena.scratch2.iter_mut() {
+            slot.reset_exchange(n_osts);
+        }
+    }
+    arena.overlap_acct.reset();
     let mut scratch = std::mem::take(&mut arena.scratch);
+    // Bank B stays empty on the serial path, so the end-of-exchange
+    // stats sweep (which covers both banks) sees exactly the serial
+    // state; a stale bank from an earlier pipelined exchange is left
+    // untouched in the arena.
+    let mut scratch2 =
+        if pipelined { std::mem::take(&mut arena.scratch2) } else { Vec::new() };
     let rt = runtime::current();
     // Degraded-execution accounting: transient storage faults are absorbed
     // by a bounded retry-with-backoff at each storage call site (atomics
@@ -675,118 +838,374 @@ pub fn execute_exchange(
     use std::sync::atomic::{AtomicU64, Ordering};
     let retries_ctr = AtomicU64::new(0);
     let backoff_ctr = AtomicU64::new(0);
-    for round in 0..n_rounds {
-        // Stage this round's requests per aggregator: slab slices out of
-        // the requester's MyReqs are memcpy'd into the aggregator's
-        // staging slab (capacity-warm after round 0 — the simulator's
-        // stand-in for the message landing in a receive buffer); on reads
-        // the slice is metadata only and the matching bytes travel back
-        // as the reply.
-        arena.data_msgs.clear();
-        for slot in scratch.iter_mut() {
-            slot.reset_round();
-        }
-        for (i, pr) in plan.reqs.iter().enumerate() {
-            for (agg, s) in pr.reqs.slices_in_round_with(round, &arena.staged[i]) {
-                arena.data_msgs.push(match direction {
-                    Direction::Write => Message::new(pr.rank, agg_ranks[agg], s.bytes),
-                    Direction::Read => Message::new(agg_ranks[agg], pr.rank, s.bytes),
-                });
-                scratch[agg].stage(i, s.offsets, s.lengths, s.payload, s.bytes);
-            }
-        }
-        let comm = arena.pending.cost_round(ctx.net, ctx.topo, &arena.data_msgs);
-        bd.inter_comm += comm.time;
-        counters.msgs_inter += arena.data_msgs.len();
-        counters.max_in_degree = counters.max_in_degree.max(comm.max_in_degree);
+    if !pipelined {
+        // ---- Serial schedule: each round's exchange, merge and storage
+        // call run strictly back-to-back.
+        for round in 0..n_rounds {
+            // Stage this round's requests per aggregator: slab slices out
+            // of the requester's MyReqs are memcpy'd into the aggregator's
+            // staging slab (capacity-warm after round 0 — the simulator's
+            // stand-in for the message landing in a receive buffer); on
+            // reads the slice is metadata only and the matching bytes
+            // travel back as the reply.
+            let comm = stage_round_into(
+                ctx,
+                plan,
+                direction,
+                &arena.staged,
+                &mut arena.data_msgs,
+                &mut arena.pending,
+                &mut scratch,
+                round,
+            );
+            bd.inter_comm += comm.time;
+            counters.msgs_inter += comm.n_messages;
+            counters.max_in_degree = counters.max_in_degree.max(comm.max_in_degree);
 
-        // Aggregator-side merge (+ payload scatter on writes, vectored
-        // file read on reads), concurrent across aggregators → max for
-        // time, real bytes either way.  One fine-grained `(round,
-        // aggregator)` task per slot on the persistent pool: slots are
-        // mutated IN PLACE (no per-round drain/rebuild, so the arena
-        // capacity stays put), workers steal tasks but each task owns
-        // exactly its pre-assigned slot (determinism), and an engine or
-        // storage failure — or a panic — surfaces with the failing
-        // task's round + aggregator identity.
+            // Aggregator-side merge (+ payload scatter on writes, vectored
+            // file read on reads), concurrent across aggregators → max for
+            // time, real bytes either way.  One fine-grained `(round,
+            // aggregator)` task per slot on the persistent pool: slots are
+            // mutated IN PLACE (no per-round drain/rebuild, so the arena
+            // capacity stays put), workers steal tasks but each task owns
+            // exactly its pre-assigned slot (determinism), and an engine or
+            // storage failure — or a panic — surfaces with the failing
+            // task's round + aggregator identity.
+            match &io {
+                ExchangeIo::Write(_) => rt.try_for_each_mut(
+                    &mut scratch,
+                    &|agg| format!("write exchange round {round}, aggregator {agg}"),
+                    |_, slot| {
+                        slot.merge_scatter(ctx.engine)?;
+                        Ok(())
+                    },
+                )?,
+                ExchangeIo::Read(f) => {
+                    let file = *f;
+                    // Reads never pass through `begin_round` (the file is
+                    // shared immutably), so round-armed faults tick here.
+                    file.tick_fault_round();
+                    let (retries_ctr, backoff_ctr) = (&retries_ctr, &backoff_ctr);
+                    rt.try_for_each_mut(
+                        &mut scratch,
+                        &|agg| format!("read exchange round {round}, aggregator {agg}"),
+                        |_, slot| {
+                            slot.merge_meta(ctx.engine)?;
+                            if !slot.merged.is_empty() {
+                                let (merged, payload, stats) =
+                                    (&slot.merged, &mut slot.payload, &mut slot.stats);
+                                let (out, r) = faults::retrying(file.max_retries(), || {
+                                    file.read_view(merged, payload, stats)
+                                });
+                                if r > 0 {
+                                    retries_ctr.fetch_add(r as u64, Ordering::Relaxed);
+                                    backoff_ctr
+                                        .fetch_add(faults::backoff_units(r), Ordering::Relaxed);
+                                }
+                                out?;
+                            }
+                            Ok(())
+                        },
+                    )?;
+                }
+            }
+
+            let mut sort_t: f64 = 0.0;
+            let mut dt_t: f64 = 0.0;
+            if let ExchangeIo::Write(file) = &mut io {
+                file.begin_round();
+            }
+            for (agg, slot) in scratch.iter().enumerate() {
+                if slot.k == 0 {
+                    continue;
+                }
+                sort_t = sort_t.max(ctx.cpu.merge_time(slot.n_items, slot.k));
+                dt_t = dt_t.max(ctx.cpu.datatype_time(slot.n_items, slot.k));
+                counters.reqs_at_io += slot.merged.len() as u64;
+                match &mut io {
+                    ExchangeIo::Write(file) => {
+                        // The merged batch lies inside this aggregator's round
+                        // domain by construction; land the whole coalesced
+                        // batch in one vectored call.  Transient OST faults are
+                        // retried with backoff (byte-idempotent: a partial
+                        // write before the fault is simply overwritten); the
+                        // surfaced error carries the failing task's identity
+                        // like the pooled read tasks already do.
+                        let (out, r) = faults::retrying(file.max_retries(), || {
+                            file.write_view(agg_ranks[agg], &slot.merged, &slot.payload)
+                        });
+                        if r > 0 {
+                            retries_ctr.fetch_add(r as u64, Ordering::Relaxed);
+                            backoff_ctr.fetch_add(faults::backoff_units(r), Ordering::Relaxed);
+                        }
+                        out.map_err(|e| {
+                            e.with_context(format!(
+                                "write exchange round {round}, aggregator {agg}"
+                            ))
+                        })?;
+                    }
+                    ExchangeIo::Read(_) => {
+                        // Requester-side assembly: ascending aggregator within
+                        // the round, ascending rounds overall ⇒ straight
+                        // concatenation into each requester's slab span,
+                        // gathered per staged stream slice.
+                        for s in 0..slot.k {
+                            let i = slot.owners[s];
+                            let (vo, vl) = slot.stream(s);
+                            let n = slot.stream_bytes(s);
+                            let dst = arena.reply.append_slot(i, n);
+                            gather_slices_from_buf(&slot.merged, &slot.payload, vo, vl, dst);
+                        }
+                    }
+                }
+            }
+            bd.inter_sort += sort_t;
+            bd.inter_datatype += dt_t;
+        }
+    } else {
+        // ---- Double-buffered pipeline (DESIGN.md §Round pipelining).
+        // Invariant at the top of steady iteration r: `scratch` (bank A)
+        // holds round r staged AND merged; `scratch2` (bank B) is free.
+        // The iteration stages round r+1 on the driver (ascending round
+        // order — the pending queue and every accounting row evolve
+        // exactly as in the serial loop), then runs round r's storage
+        // call and round r+1's merges in ONE pooled batch over the
+        // disjoint banks, so a transient-OST retry in round r can never
+        // touch round r+1's already-staged bank.  File operations keep
+        // the serial order: begin_round(r)/tick(r) → round-r views in
+        // ascending aggregator order → round r+1's.  Rolling per-round
+        // communication rows (time, in-degree) feed the `overlap_saved`
+        // ledger.
+        let mut comm_info = [(0.0f64, 0usize); 2];
+
+        // Prologue: round 0 stages and merges with no pipeline depth yet.
+        let comm = stage_round_into(
+            ctx,
+            plan,
+            direction,
+            &arena.staged,
+            &mut arena.data_msgs,
+            &mut arena.pending,
+            &mut scratch,
+            0,
+        );
+        bd.inter_comm += comm.time;
+        counters.msgs_inter += comm.n_messages;
+        counters.max_in_degree = counters.max_in_degree.max(comm.max_in_degree);
+        comm_info[0] = (comm.time, comm.max_in_degree);
         match &io {
             ExchangeIo::Write(_) => rt.try_for_each_mut(
                 &mut scratch,
-                &|agg| format!("write exchange round {round}, aggregator {agg}"),
+                &|agg| format!("write exchange round 0, aggregator {agg}"),
                 |_, slot| {
                     slot.merge_scatter(ctx.engine)?;
                     Ok(())
                 },
             )?,
-            ExchangeIo::Read(f) => {
-                let file = *f;
-                // Reads never pass through `begin_round` (the file is
-                // shared immutably), so round-armed faults tick here.
-                file.tick_fault_round();
-                let (retries_ctr, backoff_ctr) = (&retries_ctr, &backoff_ctr);
-                rt.try_for_each_mut(
-                    &mut scratch,
-                    &|agg| format!("read exchange round {round}, aggregator {agg}"),
-                    |_, slot| {
-                        slot.merge_meta(ctx.engine)?;
-                        if !slot.merged.is_empty() {
-                            let (merged, payload, stats) =
-                                (&slot.merged, &mut slot.payload, &mut slot.stats);
-                            let (out, r) = faults::retrying(file.max_retries(), || {
-                                file.read_view(merged, payload, stats)
-                            });
-                            if r > 0 {
-                                retries_ctr.fetch_add(r as u64, Ordering::Relaxed);
-                                backoff_ctr
-                                    .fetch_add(faults::backoff_units(r), Ordering::Relaxed);
-                            }
-                            out?;
-                        }
-                        Ok(())
-                    },
-                )?;
-            }
+            ExchangeIo::Read(_) => rt.try_for_each_mut(
+                &mut scratch,
+                &|agg| format!("read exchange round 0, aggregator {agg}"),
+                |_, slot| {
+                    slot.merge_meta(ctx.engine)?;
+                    Ok(())
+                },
+            )?,
         }
 
-        let mut sort_t: f64 = 0.0;
-        let mut dt_t: f64 = 0.0;
-        if let ExchangeIo::Write(file) = &mut io {
-            file.begin_round();
-        }
-        for (agg, slot) in scratch.iter().enumerate() {
-            if slot.k == 0 {
-                continue;
+        for round in 0..n_rounds {
+            let have_next = round + 1 < n_rounds;
+            if have_next {
+                let comm = stage_round_into(
+                    ctx,
+                    plan,
+                    direction,
+                    &arena.staged,
+                    &mut arena.data_msgs,
+                    &mut arena.pending,
+                    &mut scratch2,
+                    round + 1,
+                );
+                bd.inter_comm += comm.time;
+                counters.msgs_inter += comm.n_messages;
+                counters.max_in_degree = counters.max_in_degree.max(comm.max_in_degree);
+                comm_info[((round + 1) % 2) as usize] = (comm.time, comm.max_in_degree);
             }
-            sort_t = sort_t.max(ctx.cpu.merge_time(slot.n_items, slot.k));
-            dt_t = dt_t.max(ctx.cpu.datatype_time(slot.n_items, slot.k));
-            counters.reqs_at_io += slot.merged.len() as u64;
+            // One heterogeneous pooled batch: the round-r I/O task plus
+            // round r+1's per-slot merges (absent on the epilogue
+            // round).  Lowest-index error wins, and the I/O task's index
+            // sorts before every merge index — exactly the order the
+            // serial loop surfaces errors in.
+            let first_err: Mutex<Option<(usize, Error)>> = Mutex::new(None);
             match &mut io {
                 ExchangeIo::Write(file) => {
-                    // The merged batch lies inside this aggregator's round
-                    // domain by construction; land the whole coalesced
-                    // batch in one vectored call.  Transient OST faults are
-                    // retried with backoff (byte-idempotent: a partial
-                    // write before the fault is simply overwritten); the
-                    // surfaced error carries the failing task's identity
-                    // like the pooled read tasks already do.
-                    let (out, r) = faults::retrying(file.max_retries(), || {
-                        file.write_view(agg_ranks[agg], &slot.merged, &slot.payload)
-                    });
-                    if r > 0 {
-                        retries_ctr.fetch_add(r as u64, Ordering::Relaxed);
-                        backoff_ctr.fetch_add(faults::backoff_units(r), Ordering::Relaxed);
-                    }
-                    out.map_err(|e| {
-                        e.with_context(format!(
-                            "write exchange round {round}, aggregator {agg}"
-                        ))
-                    })?;
+                    // Round r's lock epoch opens before its writes, which
+                    // all precede round r+1's (serial file-op order).
+                    file.begin_round();
+                    let fp = SendPtr(&mut **file as *mut LustreFile);
+                    let bank_a = &scratch[..];
+                    let next = SendPtr(scratch2.as_mut_ptr());
+                    let n_jobs = 1 + if have_next { n_agg } else { 0 };
+                    rt.for_each_index(
+                        n_jobs,
+                        &|i| {
+                            if i == 0 {
+                                format!("write exchange round {round}, I/O stage")
+                            } else {
+                                format!(
+                                    "write exchange round {}, aggregator {}",
+                                    round + 1,
+                                    i - 1
+                                )
+                            }
+                        },
+                        |i| {
+                            if i == 0 {
+                                // SAFETY: index 0 is handed out exactly once
+                                // and the driver does not touch the file
+                                // while the batch runs, so this is the only
+                                // live `&mut` to the file.
+                                let file = unsafe { &mut *fp.0 };
+                                for (agg, slot) in bank_a.iter().enumerate() {
+                                    if slot.k == 0 {
+                                        continue;
+                                    }
+                                    let (out, r) = faults::retrying(file.max_retries(), || {
+                                        file.write_view(
+                                            agg_ranks[agg],
+                                            &slot.merged,
+                                            &slot.payload,
+                                        )
+                                    });
+                                    if r > 0 {
+                                        retries_ctr.fetch_add(r as u64, Ordering::Relaxed);
+                                        backoff_ctr.fetch_add(
+                                            faults::backoff_units(r),
+                                            Ordering::Relaxed,
+                                        );
+                                    }
+                                    if let Err(e) = out {
+                                        record_first_err(
+                                            &first_err,
+                                            0,
+                                            e.with_context(format!(
+                                                "write exchange round {round}, \
+                                                 aggregator {agg}"
+                                            )),
+                                        );
+                                        break;
+                                    }
+                                }
+                            } else {
+                                // SAFETY: merge index i owns exactly bank-B
+                                // slot i-1; indices are handed out once and
+                                // the driver does not touch bank B during
+                                // the batch.
+                                let slot = unsafe { &mut *next.0.add(i - 1) };
+                                if let Err(e) = slot.merge_scatter(ctx.engine) {
+                                    record_first_err(
+                                        &first_err,
+                                        i,
+                                        e.with_context(format!(
+                                            "write exchange round {}, aggregator {}",
+                                            round + 1,
+                                            i - 1
+                                        )),
+                                    );
+                                }
+                            }
+                        },
+                    );
                 }
-                ExchangeIo::Read(_) => {
-                    // Requester-side assembly: ascending aggregator within
-                    // the round, ascending rounds overall ⇒ straight
-                    // concatenation into each requester's slab span,
-                    // gathered per staged stream slice.
+                ExchangeIo::Read(f) => {
+                    let file: &LustreFile = f;
+                    // Round-armed faults tick for round r before its
+                    // vectored reads, after round r-1's — serial order.
+                    file.tick_fault_round();
+                    let bank_a = SendPtr(scratch.as_mut_ptr());
+                    let next = SendPtr(scratch2.as_mut_ptr());
+                    let n_jobs = n_agg + if have_next { n_agg } else { 0 };
+                    let (retries_ctr, backoff_ctr) = (&retries_ctr, &backoff_ctr);
+                    rt.for_each_index(
+                        n_jobs,
+                        &|i| {
+                            if i < n_agg {
+                                format!("read exchange round {round}, aggregator {i}")
+                            } else {
+                                format!(
+                                    "read exchange round {}, aggregator {}",
+                                    round + 1,
+                                    i - n_agg
+                                )
+                            }
+                        },
+                        |i| {
+                            if i < n_agg {
+                                // SAFETY: read index i owns bank-A slot i
+                                // (merged last iteration; only `payload`
+                                // and `stats` are written here).
+                                let slot = unsafe { &mut *bank_a.0.add(i) };
+                                if slot.merged.is_empty() {
+                                    return;
+                                }
+                                let (merged, payload, stats) =
+                                    (&slot.merged, &mut slot.payload, &mut slot.stats);
+                                let (out, r) = faults::retrying(file.max_retries(), || {
+                                    file.read_view(merged, payload, stats)
+                                });
+                                if r > 0 {
+                                    retries_ctr.fetch_add(r as u64, Ordering::Relaxed);
+                                    backoff_ctr
+                                        .fetch_add(faults::backoff_units(r), Ordering::Relaxed);
+                                }
+                                if let Err(e) = out {
+                                    record_first_err(
+                                        &first_err,
+                                        i,
+                                        e.with_context(format!(
+                                            "read exchange round {round}, aggregator {i}"
+                                        )),
+                                    );
+                                }
+                            } else {
+                                // SAFETY: merge index i owns exactly bank-B
+                                // slot i-n_agg.
+                                let slot = unsafe { &mut *next.0.add(i - n_agg) };
+                                if let Err(e) = slot.merge_meta(ctx.engine) {
+                                    record_first_err(
+                                        &first_err,
+                                        i,
+                                        e.with_context(format!(
+                                            "read exchange round {}, aggregator {}",
+                                            round + 1,
+                                            i - n_agg
+                                        )),
+                                    );
+                                }
+                            }
+                        },
+                    );
+                }
+            }
+            if let Some((_, e)) = first_err.into_inner().unwrap() {
+                return Err(e);
+            }
+
+            // Round r's CPU accounting and (on reads) reply assembly —
+            // driver-side, ascending aggregator order, identical to the
+            // serial schedule.  `round_bytes` apportions the exchange's
+            // I/O phase across rounds for the overlap ledger.
+            let mut sort_t: f64 = 0.0;
+            let mut dt_t: f64 = 0.0;
+            let mut round_bytes: u64 = 0;
+            for slot in scratch.iter() {
+                if slot.k == 0 {
+                    continue;
+                }
+                sort_t = sort_t.max(ctx.cpu.merge_time(slot.n_items, slot.k));
+                dt_t = dt_t.max(ctx.cpu.datatype_time(slot.n_items, slot.k));
+                counters.reqs_at_io += slot.merged.len() as u64;
+                round_bytes += slot.merged.total_bytes();
+                if direction == Direction::Read {
                     for s in 0..slot.k {
                         let i = slot.owners[s];
                         let (vo, vl) = slot.stream(s);
@@ -796,9 +1215,19 @@ pub fn execute_exchange(
                     }
                 }
             }
+            bd.inter_sort += sort_t;
+            bd.inter_datatype += dt_t;
+            let (comm_t, in_deg) = comm_info[(round % 2) as usize];
+            arena.overlap_acct.push_round(
+                comm_t + sort_t + dt_t,
+                ctx.net.overlap_sync_bound(in_deg),
+                round_bytes as f64,
+            );
+
+            // Hand the banks over: bank B (round r+1, staged + merged)
+            // becomes next iteration's bank A.
+            std::mem::swap(&mut scratch, &mut scratch2);
         }
-        bd.inter_sort += sort_t;
-        bd.inter_datatype += dt_t;
     }
 
     // ---- I/O phase time: writes account in the file's OST stats, reads
@@ -813,8 +1242,11 @@ pub fn execute_exchange(
                 arena.reply.fully_assembled(),
                 "reply assembly must fill every requester span exactly"
             );
+            // Pipelined reads alternate banks round to round, so the
+            // per-OST accumulation lives across both; bank B is empty on
+            // the serial path and contributes nothing.
             let mut stats = vec![OstStats::default(); io.file_config().stripe_count];
-            for slot in &scratch {
+            for slot in scratch.iter().chain(scratch2.iter()) {
                 for (acc, s) in stats.iter_mut().zip(&slot.stats) {
                     acc.bytes += s.bytes;
                     acc.extents += s.extents;
@@ -822,6 +1254,12 @@ pub fn execute_exchange(
             }
             bd.io_phase = ctx.io.phase_time_skewed(&stats, f.ost_rates());
         }
+    }
+    // The overlap credit is taken against the fault-free I/O phase:
+    // retry backoff (below) is synchronization the pipeline can never
+    // hide, so it still charges `io_phase` in full.
+    if pipelined {
+        bd.overlap_saved = arena.overlap_acct.finish(bd.io_phase);
     }
     counters.retries = retries_ctr.into_inner();
     counters.backoff_units = backoff_ctr.into_inner();
@@ -831,6 +1269,9 @@ pub fn execute_exchange(
 
     // Hand the (still warm) slots back to the arena for the next exchange.
     arena.scratch = scratch;
+    if pipelined {
+        arena.scratch2 = scratch2;
+    }
 
     Ok((views, ExchangeOutcome { breakdown: bd, counters }))
 }
@@ -1301,6 +1742,117 @@ mod tests {
         assert!(outcome.breakdown.intra_comm > 0.0, "tree read has intra traffic");
         assert_eq!(outcome.breakdown.levels.len(), 1);
         assert_eq!(outcome.breakdown.levels[0].label, "node");
+    }
+
+    #[test]
+    fn overlap_mode_parses_and_gates() {
+        assert_eq!("off".parse::<OverlapMode>().unwrap(), OverlapMode::Off);
+        assert_eq!("on".parse::<OverlapMode>().unwrap(), OverlapMode::On);
+        assert_eq!("auto".parse::<OverlapMode>().unwrap(), OverlapMode::Auto);
+        assert_eq!(OverlapMode::default(), OverlapMode::Off);
+        // PR 7 policy: bad values hard-error, naming the bad input and
+        // the accepted set — never silently substitute the default.
+        let err = "sideways".parse::<OverlapMode>().unwrap_err().to_string();
+        assert!(err.contains("sideways") && err.contains("on|off|auto"), "{err}");
+        assert!(!OverlapMode::Off.pipelines(8));
+        assert!(OverlapMode::On.pipelines(2));
+        assert!(OverlapMode::Auto.pipelines(2));
+        // Single-round exchanges have nothing to overlap with.
+        assert!(!OverlapMode::On.pipelines(1));
+        assert!(!OverlapMode::Auto.pipelines(0));
+        let shown =
+            format!("{} {} {}", OverlapMode::Off, OverlapMode::On, OverlapMode::Auto);
+        assert_eq!(shown, "off on auto");
+    }
+
+    #[test]
+    fn pipelined_exchange_is_bit_identical_to_serial() {
+        // The same multi-round exchange driven serially and through the
+        // double-buffered pipeline: file bytes, reply payloads and every
+        // counter/phase row must agree exactly — only the pipeline's
+        // `overlap_saved` credit (and thus the total) differs.
+        let (topo, net, cpu, io, eng) = fixture();
+        let ctx = CollectiveCtx {
+            topo: &topo,
+            net: &net,
+            cpu: &cpu,
+            io: &io,
+            engine: &eng,
+            placement: GlobalPlacement::Spread,
+            n_global_agg: 4,
+        };
+        // 8 ranks × 256 contiguous bytes = 32 stripes over 4 aggs → 8 rounds.
+        let ranks: Vec<(usize, ReqBatch)> = (0..topo.nprocs())
+            .map(|r| {
+                let view = FlatView::from_pairs(vec![(r as u64 * 256, 256)]).unwrap();
+                (r, ReqBatch::new(view, deterministic_payload(3, r, 256)))
+            })
+            .collect();
+        let mut f_serial = LustreFile::new(LustreConfig::new(64, 4));
+        let mut a_serial = ExchangeArena::default();
+        let (_, w_serial) =
+            run_exchange(&ctx, ranks.clone(), ExchangeIo::Write(&mut f_serial), &mut a_serial)
+                .unwrap();
+        let mut f_pipe = LustreFile::new(LustreConfig::new(64, 4));
+        let mut a_pipe = ExchangeArena::default();
+        a_pipe.overlap = OverlapMode::On;
+        let (_, w_pipe) =
+            run_exchange(&ctx, ranks.clone(), ExchangeIo::Write(&mut f_pipe), &mut a_pipe)
+                .unwrap();
+        let total = topo.nprocs() as u64 * 256;
+        assert_eq!(f_serial.read_at(0, total), f_pipe.read_at(0, total));
+        assert_eq!(w_serial.counters.rounds, w_pipe.counters.rounds);
+        assert_eq!(w_serial.counters.msgs_inter, w_pipe.counters.msgs_inter);
+        assert_eq!(w_serial.counters.reqs_at_io, w_pipe.counters.reqs_at_io);
+        assert_eq!(w_serial.counters.max_in_degree, w_pipe.counters.max_in_degree);
+        assert_eq!(w_serial.counters.lock_conflicts, w_pipe.counters.lock_conflicts);
+        assert_eq!(w_serial.breakdown.inter_comm, w_pipe.breakdown.inter_comm);
+        assert_eq!(w_serial.breakdown.inter_sort, w_pipe.breakdown.inter_sort);
+        assert_eq!(w_serial.breakdown.inter_datatype, w_pipe.breakdown.inter_datatype);
+        assert_eq!(w_serial.breakdown.io_phase, w_pipe.breakdown.io_phase);
+        assert_eq!(w_serial.breakdown.overlap_saved, 0.0);
+        assert!(
+            w_pipe.breakdown.overlap_saved > 0.0,
+            "multi-round pipelined write must credit overlap"
+        );
+        assert!(w_pipe.breakdown.overlap_saved <= w_pipe.breakdown.io_phase);
+        assert!(w_pipe.breakdown.total() < w_serial.breakdown.total());
+        // Read direction through the same (now warm) arenas.
+        let readers: Vec<(usize, ReqBatch)> = ranks
+            .iter()
+            .map(|(r, b)| (*r, ReqBatch::new(b.view.clone(), Vec::new())))
+            .collect();
+        let (_, r_serial) =
+            run_exchange(&ctx, readers.clone(), ExchangeIo::Read(&f_serial), &mut a_serial)
+                .unwrap();
+        let serial_replies: Vec<Vec<u8>> =
+            (0..ranks.len()).map(|i| a_serial.reply.of(i).to_vec()).collect();
+        let (_, r_pipe) =
+            run_exchange(&ctx, readers, ExchangeIo::Read(&f_pipe), &mut a_pipe).unwrap();
+        for (i, (_, want)) in ranks.iter().enumerate() {
+            assert_eq!(a_pipe.reply.of(i), &want.payload[..], "pipelined read rank {i}");
+            assert_eq!(a_pipe.reply.of(i), &serial_replies[i][..]);
+        }
+        assert_eq!(r_serial.counters.rounds, r_pipe.counters.rounds);
+        assert_eq!(r_serial.counters.msgs_inter, r_pipe.counters.msgs_inter);
+        assert_eq!(r_serial.counters.reqs_at_io, r_pipe.counters.reqs_at_io);
+        assert_eq!(r_serial.breakdown.inter_comm, r_pipe.breakdown.inter_comm);
+        assert_eq!(r_serial.breakdown.io_phase, r_pipe.breakdown.io_phase);
+        assert!(r_pipe.breakdown.overlap_saved > 0.0, "pipelined read credits overlap");
+        // One-round exchanges degenerate to the serial schedule even
+        // with overlap on: nothing to pipeline, zero credit.
+        let one: Vec<(usize, ReqBatch)> = vec![(
+            0usize,
+            ReqBatch::new(
+                FlatView::from_pairs(vec![(0, 64)]).unwrap(),
+                deterministic_payload(7, 0, 64),
+            ),
+        )];
+        let mut f_one = LustreFile::new(LustreConfig::new(64, 4));
+        let (_, w_one) =
+            run_exchange(&ctx, one, ExchangeIo::Write(&mut f_one), &mut a_pipe).unwrap();
+        assert_eq!(w_one.counters.rounds, 1);
+        assert_eq!(w_one.breakdown.overlap_saved, 0.0);
     }
 
     #[test]

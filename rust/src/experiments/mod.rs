@@ -167,6 +167,10 @@ fn run_direction_impl(
     let workload = cfg.workload.build(cfg.scale);
     let ranks = workload.generate(&topo, cfg.seed)?;
 
+    // Round pipelining is an execution-time property carried on the
+    // arena: plans and their cache fingerprints never see it.
+    arena.overlap = cfg.overlap;
+
     // `--algorithm auto`: resolve to a concrete tree + rank placement
     // before dispatch.  The tuner memo in the plan cache short-circuits
     // the candidate sweep on repeated structurally-identical runs; the
@@ -188,6 +192,7 @@ fn run_direction_impl(
                 &tune_ctx,
                 direction,
                 &cfg.lustre,
+                cfg.overlap,
                 ranks.iter().map(|(r, b)| (*r, &b.view)),
             );
             match cache.as_deref().and_then(|c| c.tuner_choice(fp)) {
@@ -195,7 +200,8 @@ fn run_direction_impl(
                 None => {
                     let views: Vec<_> =
                         ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
-                    let choice = tune_collective(&tune_ctx, direction, &views, &cfg.lustre)?;
+                    let choice =
+                        tune_collective(&tune_ctx, direction, &views, &cfg.lustre, cfg.overlap)?;
                     if let Some(c) = cache.as_deref_mut() {
                         c.remember_tuner_choice(fp, choice.spec, choice.placement);
                     }
@@ -649,7 +655,7 @@ pub fn validate_tuner(cfg: &RunConfig, k: usize) -> Result<Vec<TunerValidation>>
             placement: cfg.placement,
             n_global_agg: cfg.lustre.stripe_count,
         };
-        let mut scored = score_candidates(&ctx, dir, &views, &cfg.lustre)?;
+        let mut scored = score_candidates(&ctx, dir, &views, &cfg.lustre, cfg.overlap)?;
         // Stable sort keeps the tuner's first-in-grid tie-break, so
         // row 0 is exactly what `--algorithm auto` would execute.
         scored.sort_by(|a, b| a.cost.total().partial_cmp(&b.cost.total()).unwrap());
@@ -867,6 +873,36 @@ mod tests {
         // No faults configured → loud error, not an empty panel.
         cfg.faults = None;
         assert!(degradation_sweep(&cfg).is_err());
+    }
+
+    #[test]
+    fn run_once_overlap_on_is_verified_and_no_slower() {
+        use crate::coordinator::collective::OverlapMode;
+        let mut cfg = small_cfg();
+        cfg.direction = DirectionSpec::Both;
+        cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 4 });
+        let serial = run_once(&cfg).unwrap();
+        cfg.overlap = OverlapMode::On;
+        let piped = run_once(&cfg).unwrap();
+        assert_eq!(serial.len(), piped.len());
+        for ((s, _), (p, pv)) in serial.iter().zip(piped.iter()) {
+            // Pipelining is a schedule, not a result: bytes still verify
+            // and every structural counter matches the serial run.
+            assert!(pv.as_ref().unwrap().passed(), "{} [{}]", p.label, p.direction);
+            assert_eq!(s.counters.rounds, p.counters.rounds);
+            assert_eq!(s.counters.bytes, p.counters.bytes);
+            assert_eq!(s.counters.reqs_at_io, p.counters.reqs_at_io);
+            assert_eq!(s.breakdown.io_phase, p.breakdown.io_phase);
+            assert_eq!(s.breakdown.overlap_saved, 0.0, "serial runs earn no credit");
+            if p.counters.rounds >= 2 {
+                assert!(
+                    p.breakdown.overlap_saved > 0.0,
+                    "multi-round pipelined run must hide some I/O [{}]",
+                    p.direction
+                );
+            }
+            assert!(p.breakdown.total() <= s.breakdown.total());
+        }
     }
 
     #[test]

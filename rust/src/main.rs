@@ -72,7 +72,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "scaling" => cmd_scaling(&cfg, procs_list.as_deref(), budget),
         "table1" => cmd_table1(&cfg, budget),
         "congest" => cmd_congest(&cfg),
-        "info" => cmd_info(),
+        "info" => cmd_info(&cfg),
         _ => {
             print!("{HELP}");
             Ok(())
@@ -110,6 +110,17 @@ Common flags (RunConfig keys):
   --rank_placement block|round-robin    rank->socket / node->switch layout
   --scale S --stripe_size B --stripe_count K --send_mode isend|issend
   --placement spread|cray --seed S --verify --config file.toml
+  --overlap on|off|auto                 double-buffered round pipelining:
+                                        round r+1's exchange/merge runs
+                                        while round r's storage call
+                                        executes, so the steady-state
+                                        round costs max(exchange, io)
+                                        instead of the sum (issend bounds
+                                        the win: a round's sends cannot
+                                        complete before its receivers
+                                        post).  Bytes and verification
+                                        are bit-identical to serial;
+                                        default off
   --plan-cache DIR                      persist aggregation plans to DIR;
                                         repeat invocations with the same
                                         shape skip plan construction
@@ -158,7 +169,7 @@ Subcommand flags:
 fn cmd_run(cfg: &RunConfig) -> Result<()> {
     let topo = cfg.topology();
     println!(
-        "run: {} on {} nodes x {} ppn (P={}), algo={}, engine={}, direction={}, stripes {}x{}",
+        "run: {} on {} nodes x {} ppn (P={}), algo={}, engine={}, direction={}, stripes {}x{}, overlap={}",
         cfg.workload,
         cfg.nodes,
         cfg.ppn,
@@ -168,6 +179,7 @@ fn cmd_run(cfg: &RunConfig) -> Result<()> {
         cfg.direction,
         cfg.lustre.stripe_count,
         human_bytes(cfg.lustre.stripe_size),
+        cfg.overlap,
     );
     let t0 = std::time::Instant::now();
     let engine = experiments::build_engine_for(cfg)?;
@@ -328,7 +340,7 @@ fn cmd_congest(cfg: &RunConfig) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(cfg: &RunConfig) -> Result<()> {
     println!("tamio {} — TAM collective-I/O reproduction", env!("CARGO_PKG_VERSION"));
     println!(
         "worker pool: {} threads (override: --threads / TAMIO_THREADS)",
@@ -338,6 +350,8 @@ fn cmd_info() -> Result<()> {
         "simd kernels: {}",
         if cfg!(feature = "simd") { "std::simd (u64x8 lanes)" } else { "scalar fallback" }
     );
+    println!("send_mode: {} (override: --send_mode isend|issend)", cfg.net.send_mode);
+    println!("overlap: {} (override: --overlap on|off|auto)", cfg.overlap);
     match tamio::runtime::PjrtRuntime::load_default() {
         Ok(rt) => {
             println!("artifacts: {} (platform {})", rt.artifacts_dir().display(), rt.platform());

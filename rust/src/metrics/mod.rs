@@ -265,7 +265,8 @@ mod tests {
             counters: Counters { bytes: 1 << 20, ..Default::default() },
         };
         let t = breakdown_table(&[run]);
-        for name in ["intra_comm", "io_phase", "plan", "end_to_end", "bandwidth"] {
+        for name in ["intra_comm", "io_phase", "plan", "overlap_saved", "end_to_end", "bandwidth"]
+        {
             assert!(t.contains(name), "missing {name} in:\n{t}");
         }
         assert!(t.contains("P_L=4"));

@@ -156,6 +156,22 @@ impl NetParams {
     pub fn carries_pending(&self) -> bool {
         matches!(self.send_mode, SendMode::Isend)
     }
+
+    /// Synchronization bound of the double-buffered round pipeline: the
+    /// part of round r+1's exchange that can NOT be hidden behind round
+    /// r's I/O phase.  Under [`SendMode::Issend`] a send completes only
+    /// once its receive is posted, and an aggregator still draining
+    /// round r posts round r+1's receives late — so the pipeline eats
+    /// at least the receiver's serialized per-message matching,
+    /// `in_degree · recv_overhead` (§V of the paper: synchronous sends
+    /// order the rounds).  `Isend` buffers eagerly and has no such
+    /// bound (it pays through the pending-queue penalty instead).
+    pub fn overlap_sync_bound(&self, in_degree: usize) -> f64 {
+        match self.send_mode {
+            SendMode::Isend => 0.0,
+            SendMode::Issend => self.recv_overhead * in_degree as f64,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -212,5 +228,16 @@ mod tests {
         let mut p2 = p;
         p2.send_mode = SendMode::Isend;
         assert!(p2.carries_pending());
+    }
+
+    #[test]
+    fn overlap_sync_bound_follows_send_mode() {
+        let p = NetParams::default(); // Issend
+        assert_eq!(p.overlap_sync_bound(0), 0.0);
+        assert_eq!(p.overlap_sync_bound(64), p.recv_overhead * 64.0);
+        let mut p2 = p;
+        p2.send_mode = SendMode::Isend;
+        // Eager sends never block on the next round's receives.
+        assert_eq!(p2.overlap_sync_bound(64), 0.0);
     }
 }

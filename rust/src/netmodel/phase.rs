@@ -393,6 +393,71 @@ impl PendingQueue {
     }
 }
 
+/// Critical-path ledger of the double-buffered round pipeline
+/// (`--overlap on|auto`): one row per executed round, folded into the
+/// `overlap_saved` breakdown credit at end of exchange.
+///
+/// Per steady round the pipeline hides round r's I/O phase behind round
+/// r+1's exchange (staging + merge + the costed communication), so the
+/// hidden time is `min(io_r, exchange_{r+1} − sync_{r+1})`: `io_r` is
+/// round r's share of the exchange's I/O phase (apportioned by the
+/// bytes its storage call moved — the I/O model prices the phase as a
+/// whole, per OST, not per round), and `sync_{r+1}` is the send-mode
+/// synchronization bound
+/// ([`crate::netmodel::NetParams::overlap_sync_bound`]) that keeps
+/// Issend rounds partially ordered.  The last round's I/O has no next
+/// exchange to hide behind and is never credited.  All three columns
+/// keep their capacity in the persistent `ExchangeArena`.
+#[derive(Debug, Default)]
+pub struct OverlapAccount {
+    /// Per-round exchange time (communication + merge sort + datatype).
+    exchange: Vec<f64>,
+    /// Per-round synchronization bound (0 under Isend).
+    sync: Vec<f64>,
+    /// Per-round I/O weight (bytes the round's storage call moved).
+    weight: Vec<f64>,
+}
+
+impl OverlapAccount {
+    /// Clear the rows for a new exchange, keeping capacity.
+    pub fn reset(&mut self) {
+        self.exchange.clear();
+        self.sync.clear();
+        self.weight.clear();
+    }
+
+    /// Record one executed round.
+    pub fn push_round(&mut self, exchange: f64, sync: f64, weight: f64) {
+        self.exchange.push(exchange);
+        self.sync.push(sync);
+        self.weight.push(weight);
+    }
+
+    /// Rounds recorded since the last [`Self::reset`].
+    pub fn rounds(&self) -> usize {
+        self.exchange.len()
+    }
+
+    /// The critical-path credit for an exchange whose I/O phase summed
+    /// to `io_phase` seconds: Σ over steady rounds of
+    /// `min(io_r, max(0, exchange_{r+1} − sync_{r+1}))`.  Bounded above
+    /// by `io_phase` (each round's I/O share is credited at most once),
+    /// and 0 for serial or single-round exchanges.
+    pub fn finish(&self, io_phase: f64) -> f64 {
+        let total_w: f64 = self.weight.iter().sum();
+        if self.exchange.len() < 2 || total_w <= 0.0 || io_phase <= 0.0 {
+            return 0.0;
+        }
+        let mut saved = 0.0;
+        for r in 0..self.exchange.len() - 1 {
+            let io_r = io_phase * self.weight[r] / total_w;
+            let hideable = (self.exchange[r + 1] - self.sync[r + 1]).max(0.0);
+            saved += io_r.min(hideable);
+        }
+        saved
+    }
+}
+
 /// The pre-sharding pending update, kept verbatim as the golden oracle
 /// for [`PhaseScratch::add_in_degree_to`].
 #[cfg(test)]
@@ -703,5 +768,36 @@ mod tests {
         let h = in_degree_by_rank(&msgs);
         assert_eq!(h[&0], 2);
         assert_eq!(h[&5], 1);
+    }
+
+    #[test]
+    fn overlap_account_credits_hidden_io_only() {
+        let mut a = OverlapAccount::default();
+        // Fewer than two rounds: nothing to pipeline.
+        a.push_round(1.0, 0.0, 100.0);
+        assert_eq!(a.finish(5.0), 0.0);
+        // Two equal-weight rounds, exchange longer than each round's
+        // I/O share: round 0's whole share (2.5 s) hides behind round
+        // 1's 4.0 s exchange; round 1's share has no next round.
+        a.push_round(4.0, 0.0, 100.0);
+        assert_eq!(a.rounds(), 2);
+        assert!((a.finish(5.0) - 2.5).abs() < 1e-12);
+        // The sync bound shrinks what round 1's exchange can hide.
+        a.reset();
+        a.push_round(1.0, 0.0, 100.0);
+        a.push_round(4.0, 3.0, 100.0);
+        assert!((a.finish(5.0) - 1.0).abs() < 1e-12);
+        // A sync bound exceeding the exchange clamps to zero, never
+        // goes negative.
+        a.reset();
+        a.push_round(1.0, 0.0, 100.0);
+        a.push_round(2.0, 9.0, 100.0);
+        assert_eq!(a.finish(5.0), 0.0);
+        // Degenerate ledgers credit nothing.
+        a.reset();
+        assert_eq!(a.finish(5.0), 0.0);
+        a.push_round(1.0, 0.0, 0.0);
+        a.push_round(1.0, 0.0, 0.0);
+        assert_eq!(a.finish(5.0), 0.0);
     }
 }

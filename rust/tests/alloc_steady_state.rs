@@ -15,7 +15,7 @@ use tamio::cluster::Topology;
 use tamio::coordinator::breakdown::CpuModel;
 use tamio::coordinator::collective::{
     run_collective_read_with, run_collective_write_with, Algorithm, Direction, ExchangeArena,
-    ReplySlab,
+    OverlapMode, ReplySlab,
 };
 use tamio::coordinator::filedomain::FileDomains;
 use tamio::coordinator::merge::{gather_slices_from_buf, ReqBatch, RoundScratch};
@@ -445,6 +445,80 @@ fn warm_arena_beats_cold(algo: Algorithm, label: &str) {
     );
 }
 
+/// Double-bank satellite pin: with overlap on the arena carries two
+/// ping/pong `RoundScratch` banks per aggregator slot.  A cold pipelined
+/// exchange sizes both banks; a warm repeat must then allocate no more
+/// than the warm serial loop does (within a small slack) — the second
+/// bank is capacity reuse across collectives, never per-round heap
+/// traffic, in both directions.
+fn warm_double_bank_pipeline_allocates_like_serial() {
+    let topo = Topology::new(2, 8);
+    let net = NetParams::default();
+    let cpu = CpuModel::default();
+    let io = IoModel::default();
+    let eng = NativeEngine;
+    let ctx = CollectiveCtx {
+        topo: &topo,
+        net: &net,
+        cpu: &cpu,
+        io: &io,
+        engine: &eng,
+        placement: GlobalPlacement::Spread,
+        n_global_agg: 4,
+    };
+    let algo =
+        Algorithm::Tam(tamio::coordinator::tam::TamConfig { total_local_aggregators: 4 });
+    let ranks: Vec<(usize, ReqBatch)> = (0..topo.nprocs())
+        .map(|r| {
+            let base = r as u64 * 2048;
+            let view = FlatView::from_pairs(
+                (0..8).map(|i| (base + i * 256, 200)).collect(),
+            )
+            .unwrap();
+            (r, ReqBatch::new(view, deterministic_payload(17, r, 1600)))
+        })
+        .collect();
+
+    // Identical measurement closure for both modes, so per-call costs
+    // (rank clones, calc_my_req slabs, plan build) cancel out and the
+    // comparison isolates the pipeline's own steady-state traffic.
+    let measure = |overlap: OverlapMode| {
+        let mut arena = ExchangeArena::default();
+        arena.overlap = overlap;
+        let mut file = LustreFile::new(LustreConfig::new(256, 4));
+        run_collective_write_with(&ctx, algo, ranks.clone(), &mut file, &mut arena).unwrap();
+        let t = allocs();
+        let out =
+            run_collective_write_with(&ctx, algo, ranks.clone(), &mut file, &mut arena)
+                .unwrap();
+        let warm_write = allocs() - t;
+        assert!(out.counters.rounds >= 2, "need a multi-round exchange to pipeline");
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        run_collective_read_with(&ctx, algo, views.clone(), &file, &mut arena).unwrap();
+        let t = allocs();
+        let (got, _) =
+            run_collective_read_with(&ctx, algo, views, &file, &mut arena).unwrap();
+        let warm_read = allocs() - t;
+        for ((r, payload), (_, want)) in got.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "{overlap} rank {r} read-back");
+        }
+        (warm_write, warm_read)
+    };
+    let (serial_write, serial_read) = measure(OverlapMode::Off);
+    let (pipe_write, pipe_read) = measure(OverlapMode::On);
+    assert!(
+        pipe_write <= serial_write + 16,
+        "warm pipelined write allocated {pipe_write} vs serial {serial_write} \
+         (the double bank must be capacity reuse, not per-round traffic)"
+    );
+    assert!(
+        pipe_read <= serial_read + 16,
+        "warm pipelined read allocated {pipe_read} vs serial {serial_read} \
+         (the double bank must be capacity reuse, not per-round traffic)"
+    );
+}
+
 #[test]
 fn arena_keeps_steady_state_rounds_allocation_free() {
     steady_state_rounds_allocate_nothing();
@@ -462,4 +536,5 @@ fn arena_keeps_steady_state_rounds_allocation_free() {
         ),
         "tree",
     );
+    warm_double_bank_pipeline_allocates_like_serial();
 }

@@ -34,6 +34,50 @@ fn run_with_verify_succeeds_and_prints_breakdown() {
 }
 
 #[test]
+fn run_with_overlap_on_verifies_both_directions() {
+    let out = tamio()
+        .args([
+            "run", "--nodes", "2", "--ppn", "4", "--workload", "strided",
+            "--algorithm", "tam:2", "--stripe_size", "4096", "--stripe_count", "4",
+            "--direction", "both", "--verify", "--overlap", "on",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("overlap=on"), "run header must echo the mode:\n{text}");
+    assert!(text.contains("overlap_saved"), "breakdown row missing:\n{text}");
+    // Pipelining is a schedule, not a result: bytes still round-trip.
+    assert!(text.contains("verify[write]: 8/8 ranks OK"), "{text}");
+    assert!(text.contains("verify[read]: 8/8 ranks OK"), "{text}");
+}
+
+#[test]
+fn garbage_overlap_fails_instead_of_substituting_the_default() {
+    let out = tamio()
+        .args(["run", "--overlap", "sideways"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "a typo'd overlap mode must not silently default");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("sideways"), "error must quote the bad value: {err}");
+    assert!(err.contains("on|off|auto"), "error must list the valid modes: {err}");
+}
+
+#[test]
+fn info_reports_send_mode_and_overlap() {
+    let out = tamio()
+        .args(["info", "--send_mode", "isend", "--overlap", "auto"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("worker pool:"), "{text}");
+    assert!(text.contains("send_mode: isend"), "{text}");
+    assert!(text.contains("overlap: auto"), "{text}");
+}
+
+#[test]
 fn run_direction_read_verifies_two_phase_and_tam() {
     for algo in ["two-phase", "tam:4"] {
         let out = tamio()

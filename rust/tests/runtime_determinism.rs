@@ -18,7 +18,8 @@ use tamio::cluster::{RankPlacement, Topology};
 use tamio::config::RunConfig;
 use tamio::coordinator::breakdown::CpuModel;
 use tamio::coordinator::collective::{
-    run_collective_read, run_collective_write, Algorithm, DirectionSpec,
+    run_collective_read, run_collective_read_with, run_collective_write,
+    run_collective_write_with, Algorithm, DirectionSpec, ExchangeArena, OverlapMode,
 };
 use tamio::coordinator::merge::ReqBatch;
 use tamio::coordinator::placement::GlobalPlacement;
@@ -208,6 +209,187 @@ fn hierarchical_tree_is_bit_identical_across_pool_widths() {
     for width in [Some(2), Some(3), None] {
         let got = digest_at_width(&fx, algo, &ranks, width);
         assert_eq!(got, baseline, "tree depth-2 at width {width:?} diverged");
+    }
+}
+
+/// Like [`Digest`], but for the overlap matrix: the breakdown is kept as
+/// raw component rows *minus* the `overlap_saved` credit, so a pipelined
+/// run digests bit-identically to the serial one (pipelining reorders
+/// the schedule, never the bytes or the per-phase charges).
+#[derive(Debug, PartialEq)]
+struct PipeDigest {
+    file_image: Vec<u8>,
+    read_payloads: Vec<(usize, Vec<u8>)>,
+    write_counters: (usize, usize, u64, usize, u64, u64, u64, u64),
+    read_counters: (usize, usize, u64, usize),
+    write_rows: Vec<(&'static str, f64)>,
+    read_rows: Vec<(&'static str, f64)>,
+}
+
+/// Run one write+read collective through arenas pinned to `overlap` at
+/// the given pool width; returns the digest plus the write/read
+/// `overlap_saved` credits (excluded from the digest, asserted apart).
+fn digest_overlap(
+    fx: &Fx,
+    algo: Algorithm,
+    ranks: &[(usize, ReqBatch)],
+    width: Option<usize>,
+    overlap: OverlapMode,
+) -> (PipeDigest, f64, f64) {
+    let body = || {
+        let ctx = fx.ctx(4);
+        let mut arena = ExchangeArena::default();
+        arena.overlap = overlap;
+        let mut file = LustreFile::new(LustreConfig::new(64, 4));
+        let wout =
+            run_collective_write_with(&ctx, algo, ranks.to_vec(), &mut file, &mut arena)
+                .unwrap_or_else(|e| panic!("write {} failed: {e}", algo.name()));
+        let hi = ranks.iter().filter_map(|(_, b)| b.view.max_end()).max().unwrap();
+        let views: Vec<(usize, FlatView)> =
+            ranks.iter().map(|(r, b)| (*r, b.view.clone())).collect();
+        let (got, rout) = run_collective_read_with(&ctx, algo, views, &file, &mut arena)
+            .unwrap_or_else(|e| panic!("read {} failed: {e}", algo.name()));
+        let wc = &wout.counters;
+        let rc = &rout.counters;
+        let rows = |b: &tamio::coordinator::breakdown::Breakdown| {
+            b.rows().into_iter().filter(|(n, _)| *n != "overlap_saved").collect::<Vec<_>>()
+        };
+        let digest = PipeDigest {
+            file_image: file.read_at(0, hi),
+            read_payloads: got,
+            write_counters: (
+                wc.msgs_intra,
+                wc.msgs_inter,
+                wc.rounds,
+                wc.max_in_degree,
+                wc.bytes,
+                wc.reqs_posted,
+                wc.reqs_after_intra,
+                wc.reqs_at_io,
+            ),
+            read_counters: (rc.msgs_intra, rc.msgs_inter, rc.rounds, rc.max_in_degree),
+            write_rows: rows(&wout.breakdown),
+            read_rows: rows(&rout.breakdown),
+        };
+        (digest, wout.breakdown.overlap_saved, rout.breakdown.overlap_saved)
+    };
+    match width {
+        Some(w) => with_runtime(&Runtime::new(w), body),
+        None => body(),
+    }
+}
+
+/// §Tentpole acceptance: `--overlap on` must be a pure schedule change —
+/// file bytes, gathered payloads, counters, and every per-phase charge
+/// bit-identical to the serial loop at any pool width; only the
+/// `overlap_saved` credit (and therefore the total) differs, and on
+/// multi-round exchanges it must actually be earned.
+#[test]
+fn pipelined_roundtrip_is_bit_identical_to_serial_across_widths() {
+    let mut rng = SplitMix64::new(0x07E1_4AB);
+    let fx = Fx::flat(2, 8);
+    let algos = [
+        Algorithm::TwoPhase,
+        Algorithm::Tam(TamConfig { total_local_aggregators: 4 }),
+    ];
+    for (case, algo) in algos.into_iter().enumerate() {
+        let ranks =
+            random_ranks(&mut rng, fx.topo.nprocs(), 150, 64, 0xB0 + case as u64);
+        let (serial, s_ws, s_rs) =
+            digest_overlap(&fx, algo, &ranks, Some(1), OverlapMode::Off);
+        assert_eq!((s_ws, s_rs), (0.0, 0.0), "{}: serial runs earn no credit", algo.name());
+        for ((r, payload), (_, want)) in serial.read_payloads.iter().zip(ranks.iter()) {
+            assert_eq!(payload, &want.payload, "{}: rank {r} read-back", algo.name());
+        }
+        for width in [Some(1), Some(2), None] {
+            let (piped, ws, rs) = digest_overlap(&fx, algo, &ranks, width, OverlapMode::On);
+            assert_eq!(
+                piped,
+                serial,
+                "{} pipelined at width {width:?} diverged from serial",
+                algo.name()
+            );
+            let rounds = piped.write_counters.2;
+            if rounds >= 2 {
+                assert!(ws > 0.0, "{} [{width:?}]: write credit missing", algo.name());
+                assert!(rs > 0.0, "{} [{width:?}]: read credit missing", algo.name());
+            }
+        }
+    }
+}
+
+/// The overlap matrix on a depth-2 aggregation tree: level folds feed the
+/// same double-buffered exchange, so the pipelined digests must match the
+/// serial one there too.
+#[test]
+fn pipelined_hierarchical_tree_matches_serial_across_widths() {
+    let mut rng = SplitMix64::new(0x0517_EE7);
+    let fx = Fx {
+        topo: Topology::hierarchical(2, 8, 2, 0, RankPlacement::Block),
+        net: NetParams::default(),
+        cpu: CpuModel::default(),
+        io: IoModel::default(),
+        eng: NativeEngine,
+    };
+    let ranks = random_ranks(&mut rng, fx.topo.nprocs(), 160, 64, 0x9C);
+    let algo = Algorithm::Tree("socket=2,node=1".parse().unwrap());
+    let (serial, _, _) = digest_overlap(&fx, algo, &ranks, Some(1), OverlapMode::Off);
+    for width in [Some(1), Some(2), None] {
+        let (piped, ws, _) = digest_overlap(&fx, algo, &ranks, width, OverlapMode::On);
+        assert_eq!(piped, serial, "tree depth-2 pipelined at width {width:?} diverged");
+        if piped.write_counters.2 >= 2 {
+            assert!(ws > 0.0, "[{width:?}]: tree write credit missing");
+        }
+    }
+}
+
+/// Degraded mode through the pipeline: a transient-OST retry in round r
+/// must not corrupt round r+1's already-staged bank, and the retry/
+/// backoff accounting must match the serial run exactly (backoff is
+/// synchronization the pipeline can never hide).
+#[test]
+fn pipelined_degraded_runs_match_serial_and_still_retry() {
+    let mut cfg = RunConfig::default();
+    cfg.nodes = 2;
+    cfg.ppn = 4;
+    cfg.workload = WorkloadKind::Strided;
+    cfg.lustre = LustreConfig::new(1 << 12, 4);
+    cfg.verify = true;
+    cfg.direction = DirectionSpec::Both;
+    cfg.algorithm = Algorithm::Tam(TamConfig { total_local_aggregators: 4 });
+    // OST 0 backs the first stripe, so the countdown fires on the first
+    // touch of either direction.
+    cfg.faults = Some("ost_fail=0@transient:2".parse().unwrap());
+    cfg.fault_seed = 42;
+    let run = |w: usize, overlap: OverlapMode| {
+        with_runtime(&Runtime::new(w), || {
+            let mut c = cfg.clone();
+            c.overlap = overlap;
+            run_once(&c)
+                .unwrap()
+                .into_iter()
+                .map(|(run, verify)| {
+                    let v = verify.expect("verify requested");
+                    assert!(v.passed(), "width {w} {overlap}: {}/{} ranks", v.ok, v.total);
+                    (
+                        run.direction,
+                        run.counters.bytes,
+                        run.counters.rounds,
+                        run.counters.retries,
+                        run.counters.backoff_units,
+                        run.breakdown.io_phase,
+                    )
+                })
+                .collect::<Vec<_>>()
+        })
+    };
+    let serial = run(1, OverlapMode::Off);
+    assert!(
+        serial.iter().any(|t| t.3 > 0),
+        "the transient fault must cost retries: {serial:?}"
+    );
+    for w in [1, 2] {
+        assert_eq!(run(w, OverlapMode::On), serial, "width {w} degraded pipeline diverged");
     }
 }
 

@@ -7,6 +7,9 @@
 #                               # point (verification-gated sweep, ~minutes)
 #   FAULTS=1 scripts/check.sh   # additionally smoke the degraded-mode path
 #                               # (seeded faults, byte-verified sweep + run)
+#   OVERLAP=1 scripts/check.sh  # additionally re-run the test suite with
+#                               # round pipelining forced on plus a verified
+#                               # 16384-rank sweep under --overlap on
 #
 # fmt/clippy are skipped with a warning when the components are not
 # installed (the offline image ships a bare toolchain).  Set
@@ -97,14 +100,16 @@ fi
 
 # Benches are harness = false and excluded from `cargo test`; compile
 # them unconditionally so bench-only breakage is caught in tier-1 even
-# when BENCH=1 is not set.  The depth-ablation, auto-tune and fault-
-# ablation benches are named explicitly so a target-list regression in
-# Cargo.toml cannot silently drop them.
+# when BENCH=1 is not set.  Every ablation bench is named explicitly so
+# a target-list regression in Cargo.toml cannot silently drop one.
 echo "== cargo bench --no-run (bench compile gate) =="
 cargo bench --no-run
 cargo bench --no-run --bench ablation_depth
 cargo bench --no-run --bench ablation_autotune
 cargo bench --no-run --bench ablation_faults
+cargo bench --no-run --bench ablation_issend
+cargo bench --no-run --bench ablation_placement
+cargo bench --no-run --bench ablation_overlap
 
 if [ "${BENCH:-0}" = "1" ]; then
     echo "== hot-path bench (writes BENCH_hotpath.json) =="
@@ -129,6 +134,30 @@ if [ "${SCALE:-0}" = "1" ]; then
         --nodes 256 --ppn 64 --workload e3sm-g --scale 1024 \
         --sockets_per_node 4 --nodes_per_switch 16 \
         --algorithm tree:socket=4,node=2 --direction both --verify
+fi
+
+if [ "${OVERLAP:-0}" = "1" ]; then
+    # Round-pipelining smoke: the whole suite again with the double-
+    # buffered round loop forced on via config default override is not
+    # possible (overlap defaults off by design), so the determinism
+    # matrix in tests/runtime_determinism.rs carries the suite-level
+    # coverage; this leg drives the binary end-to-end at the paper's
+    # 16384-rank point with --overlap on.  Write bars verify by vectored
+    # read-back, read bars always verify the gathered bytes — pipelined
+    # output must be bit-identical to serial, so any mismatch fails the
+    # gate.
+    echo "== OVERLAP=1: pipelined test-suite leg (overlap determinism matrix) =="
+    cargo test -q --test runtime_determinism
+    echo "== OVERLAP=1: 16384-rank sweep smoke with --overlap on =="
+    cargo run --release --bin tamio -- sweep \
+        --nodes 256 --ppn 64 --workload e3sm-g --scale 1024 \
+        --pl 256 --direction both --verify --overlap on
+    # Issend bounds the achievable overlap; isend must also round-trip.
+    echo "== OVERLAP=1: isend variant under --overlap on =="
+    cargo run --release --bin tamio -- run \
+        --nodes 256 --ppn 64 --workload e3sm-g --scale 1024 \
+        --algorithm tam:256 --send_mode isend --direction both \
+        --verify --overlap on
 fi
 
 if [ "${FAULTS:-0}" = "1" ]; then
